@@ -1,0 +1,101 @@
+//! Design-choice ablations (DESIGN.md §7): sensitivity of ElasticMM to
+//! its scheduler knobs on a bursty multimodal workload —
+//!
+//! * the preemption penalty factor `w` (Eq. 2/3): low w = aggressive
+//!   preemption, high w = conservative;
+//! * the proactive rebalance interval (§3.1);
+//! * the decode scale-up batch threshold (§3.2 offline profiling).
+
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::model::CostModel;
+use elasticmm::util::rng::Rng;
+use elasticmm::util::stats::render_table;
+use elasticmm::workload::arrival::{concentrate_multimodal_in_bursts, BurstyProcess};
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+
+const GPUS: usize = 8;
+
+fn trace(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+    let p = BurstyProcess {
+        base_qps: 8.0,
+        burst_qps: 26.0,
+        mean_quiet_s: 30.0,
+        mean_burst_s: 10.0,
+    };
+    let bursts = p.stamp(&mut rng, &mut reqs);
+    concentrate_multimodal_in_bursts(&mut reqs, &bursts);
+    reqs
+}
+
+fn run(sched: SchedulerConfig, t: &[Request]) -> (f64, f64, u64, u64) {
+    let cost = CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+    let mut sys = EmpSystem::new(cost, sched, GPUS, EmpOptions::full(GPUS));
+    let rep = sys.run(t);
+    (
+        rep.mean_ttft(),
+        rep.p_ttft(90.0),
+        sys.stats.prefill_preemptions + sys.stats.decode_scale_ups,
+        sys.stats.migrated_seqs,
+    )
+}
+
+fn main() {
+    let t = trace(350, 0xAB1);
+
+    println!("=== Ablation: preemption penalty w (Eq. 2/3) ===");
+    let mut rows = Vec::new();
+    for w in [0.1, 0.5, 1.0, 2.0, 10.0] {
+        let sched = SchedulerConfig { preempt_penalty_w: w, ..Default::default() };
+        let (ttft, p90, preempts, migrated) = run(sched, &t);
+        rows.push(vec![
+            format!("{w}"),
+            format!("{ttft:.3}"),
+            format!("{p90:.3}"),
+            format!("{preempts}"),
+            format!("{migrated}"),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["w", "mean ttft s", "p90 ttft s", "preemptions", "migrated seqs"],
+            &rows
+        )
+    );
+
+    println!("=== Ablation: proactive rebalance interval (Eq. 1 cadence) ===");
+    let mut rows = Vec::new();
+    for interval in [0.5, 2.0, 8.0, 30.0] {
+        let sched = SchedulerConfig { rebalance_interval_s: interval, ..Default::default() };
+        let (ttft, p90, _, _) = run(sched, &t);
+        rows.push(vec![format!("{interval}s"), format!("{ttft:.3}"), format!("{p90:.3}")]);
+    }
+    println!(
+        "{}",
+        render_table(&["interval", "mean ttft s", "p90 ttft s"], &rows)
+    );
+
+    println!("=== Ablation: decode scale-up batch threshold ===");
+    let mut rows = Vec::new();
+    for thresh in [32, 96, 192, 512] {
+        let sched = SchedulerConfig { decode_scale_up_batch: thresh, ..Default::default() };
+        let (ttft, p90, scale_events, _) = run(sched, &t);
+        rows.push(vec![
+            format!("{thresh}"),
+            format!("{ttft:.3}"),
+            format!("{p90:.3}"),
+            format!("{scale_events}"),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["threshold", "mean ttft s", "p90 ttft s", "elastic events"],
+            &rows
+        )
+    );
+}

@@ -1,0 +1,132 @@
+//! Fig 1 (a,b,c) + Table 1: MLLM inference overhead and workload
+//! complexity, from the analytical A800 cost model.
+//!
+//! (a) per-stage latency breakdown for a multimodal request,
+//! (b) computational complexity (FLOPs) MLLM vs text-only,
+//! (c) context-length distribution, text vs multimodal requests,
+//! plus the Table 1 model-configuration table.
+
+use elasticmm::config::{presets, GpuSpec};
+use elasticmm::model::{CostModel, PrefillItem};
+use elasticmm::util::rng::Rng;
+use elasticmm::util::stats::{self, render_table};
+use elasticmm::workload::datasets::DatasetSpec;
+
+fn main() {
+    println!("=== Table 1: model configurations (input image 904x904) ===");
+    let rows: Vec<Vec<String>> = presets::all_models()
+        .iter()
+        .map(|m| {
+            vec![
+                m.name.clone(),
+                m.arch.name().into(),
+                format!("{:.0}M", m.encoder.params() as f64 / 1e6),
+                format!("{}", m.image_tokens(904, 904)),
+                format!("{:.1}B", m.llm.params() as f64 / 1e9),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["model", "architecture", "encoder params", "image tokens", "llm backend"],
+            &rows
+        )
+    );
+
+    println!("=== Fig 1a: stage latency breakdown (1 image + 128-token prompt) ===");
+    let mut rows = Vec::new();
+    for m in [presets::llama32_vision_11b(), presets::qwen25_vl_7b()] {
+        let cm = CostModel::new(m.clone(), GpuSpec::a800_80g());
+        let vis = m.image_tokens(904, 904);
+        let pre = cm.preprocess_time(904, 904);
+        let enc = cm.encode_time(vis, cm.min_tp());
+        let prefill = cm.single_prefill_time(128, vis);
+        let prefill_text = cm.single_prefill_time(128, 0);
+        rows.push(vec![
+            m.name.clone(),
+            format!("{:.1}", pre * 1e3),
+            format!("{:.1}", enc * 1e3),
+            format!("{:.1}", prefill * 1e3),
+            format!("{:.1}", prefill_text * 1e3),
+            format!("{:.1}x", (pre + enc) / prefill_text),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &[
+                "model",
+                "preprocess ms",
+                "encode ms",
+                "mm prefill ms",
+                "text prefill ms",
+                "(pre+enc)/text-prefill"
+            ],
+            &rows
+        )
+    );
+
+    println!("=== Fig 1b: computational complexity (GFLOPs per request) ===");
+    let mut rows = Vec::new();
+    for m in [presets::llama32_vision_11b(), presets::qwen25_vl_7b()] {
+        let cm = CostModel::new(m.clone(), GpuSpec::a800_80g());
+        let vis = m.image_tokens(904, 904);
+        let enc_flops = cm.encode_flops(vis);
+        let mm_item = PrefillItem {
+            new_tokens: match m.arch {
+                elasticmm::config::Architecture::DecoderOnly => 128 + vis,
+                elasticmm::config::Architecture::EncoderDecoder => 128,
+            },
+            cached_tokens: 0,
+            vision_tokens: vis,
+        };
+        let txt_item = PrefillItem { new_tokens: 128, cached_tokens: 0, vision_tokens: 0 };
+        let mm_flops = cm.prefill_flops(&[mm_item]) + enc_flops;
+        let txt_flops = cm.prefill_flops(&[txt_item]);
+        rows.push(vec![
+            m.name.clone(),
+            format!("{:.0}", txt_flops / 1e9),
+            format!("{:.0}", mm_flops / 1e9),
+            format!("{:.1}x", mm_flops / txt_flops),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["model", "text-only GFLOPs", "multimodal GFLOPs", "ratio"], &rows)
+    );
+
+    println!("=== Fig 1c: context length distribution (ShareGPT-4o-like) ===");
+    let mut rng = Rng::new(1);
+    let model = presets::llama32_vision_11b();
+    let reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 8000);
+    let (mut txt, mut mm) = (Vec::new(), Vec::new());
+    for r in &reqs {
+        let len = r.input_len(&model) as f64;
+        if r.images.is_empty() {
+            txt.push(len)
+        } else {
+            mm.push(len)
+        }
+    }
+    let row = |name: &str, v: &[f64]| {
+        vec![
+            name.to_string(),
+            format!("{:.0}", stats::mean(v)),
+            format!("{:.0}", stats::percentile(v, 50.0)),
+            format!("{:.0}", stats::percentile(v, 90.0)),
+            format!("{:.0}", stats::percentile(v, 99.0)),
+        ]
+    };
+    println!(
+        "{}",
+        render_table(
+            &["request class", "mean ctx", "p50", "p90", "p99"],
+            &vec![row("text-only", &txt), row("multimodal", &mm)]
+        )
+    );
+    println!(
+        "multimodal/text mean context ratio: {:.1}x",
+        stats::mean(&mm) / stats::mean(&txt)
+    );
+}

@@ -1,0 +1,101 @@
+//! Fig 7: throughput impact of resource allocation. ElasticMM (full EMP)
+//! vs three *static* allocation policies — text-dominant (6:2), equal
+//! (4:4), multimodal-dominant (2:6) — all with the §3.3 optimizations
+//! enabled, on a bursty image-heavy ShareGPT-4o-like workload. Metric:
+//! P90 effective throughput (goodput) under scaled SLOs.
+//!
+//! Flags: --requests N (default 300).
+
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::{Report, Slo};
+use elasticmm::model::CostModel;
+use elasticmm::util::cli::Args;
+use elasticmm::util::rng::Rng;
+use elasticmm::util::stats::render_table;
+use elasticmm::workload::arrival::{concentrate_multimodal_in_bursts, BurstyProcess};
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+
+const GPUS: usize = 8;
+
+fn bursty_trace(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+    // Phase-shifting load: quiet phases are text-heavy at a rate no
+    // small text group can absorb; bursts are image-heavy. Any fixed
+    // split must lose in one of the two phases (the paper's argument).
+    let p = BurstyProcess {
+        base_qps: 16.0,
+        burst_qps: 30.0,
+        mean_quiet_s: 35.0,
+        mean_burst_s: 12.0,
+    };
+    let bursts = p.stamp(&mut rng, &mut reqs);
+    concentrate_multimodal_in_bursts(&mut reqs, &bursts);
+    reqs
+}
+
+fn run(opts: EmpOptions, trace: &[Request]) -> Report {
+    let cost = CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+    EmpSystem::new(cost, SchedulerConfig::default(), GPUS, opts).run(trace)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 300);
+    let reqs = bursty_trace(n, 0x716);
+    // Base SLO from a light-load elastic run.
+    let light = run(EmpOptions::full(GPUS), &bursty_trace(60, 0x717));
+    let base = Slo::from_light_load(
+        light.p_norm_input(90.0),
+        light.p_norm_output(90.0),
+        1.0,
+    );
+    println!(
+        "=== Fig 7: P90 effective throughput under scaled SLOs (bursty ShareGPT-4o) ==="
+    );
+    let policies: Vec<(&str, EmpOptions)> = vec![
+        ("ElasticMM (EMP)", EmpOptions::full(GPUS)),
+        ("static text-dominant 6:2", EmpOptions::static_split(6)),
+        ("static equal 4:4", EmpOptions::static_split(4)),
+        ("static mm-dominant 2:6", EmpOptions::static_split(2)),
+    ];
+    let reports: Vec<(&str, Report)> =
+        policies.into_iter().map(|(name, o)| (name, run(o, &reqs))).collect();
+    let mut rows = Vec::new();
+    for scale in [1.0, 2.0, 3.0, 4.0, 5.0] {
+        let slo = base.scaled(scale);
+        let mut cells = vec![format!("{scale}x")];
+        for (_, rep) in &reports {
+            cells.push(format!("{:.2}", rep.goodput_rps(&slo)));
+        }
+        // EMP vs best static.
+        let emp = reports[0].1.goodput_rps(&slo);
+        let best_static = reports[1..]
+            .iter()
+            .map(|(_, r)| r.goodput_rps(&slo))
+            .fold(0.0f64, f64::max);
+        cells.push(if best_static > 0.0 {
+            format!("{:.2}x", emp / best_static)
+        } else {
+            "inf".into()
+        });
+        rows.push(cells);
+    }
+    println!(
+        "{}",
+        render_table(
+            &[
+                "SLO scale",
+                "EMP goodput",
+                "text-dom 6:2",
+                "equal 4:4",
+                "mm-dom 2:6",
+                "EMP/best-static"
+            ],
+            &rows
+        )
+    );
+    println!("(paper: EMP 1.8x [Qwen] / 2.3x [Llama] over static allocation)");
+}

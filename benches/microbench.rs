@@ -1,0 +1,117 @@
+//! L3 coordinator micro-benchmarks — the §Perf hot paths:
+//! event-queue ops, radix-tree prefix matching, paged-KV churn,
+//! gain/cost evaluation, cost-model queries, and a full simulated
+//! serving iteration. Used to drive the performance pass; before/after
+//! numbers live in EXPERIMENTS.md §Perf.
+
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::gain_cost::{self, DecodeSet, PrefillSet};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::kvcache::paged::PagedKvCache;
+use elasticmm::kvcache::radix::RadixTree;
+use elasticmm::model::{CostModel, DecodeItem, PrefillItem};
+use elasticmm::sim::engine::EventQueue;
+use elasticmm::util::bench::Bench;
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+
+fn main() {
+    let b = Bench::default();
+    println!("=== L3 coordinator microbenchmarks ===");
+
+    // Event queue: push+pop churn at simulation scale.
+    let r = b.run("event_queue push/pop x1000", || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..1000u64 {
+            q.push((i % 97) as f64, i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, e)) = q.pop() {
+            acc = acc.wrapping_add(e);
+        }
+        acc
+    });
+    println!("{}", r.line());
+
+    // Radix tree: prefix insert/match on realistic unified sequences.
+    let mut rng = Rng::new(3);
+    let seqs: Vec<Vec<u32>> = (0..256)
+        .map(|i| {
+            let stem = (i % 16) as u32;
+            let len = 64 + rng.below(192) as usize;
+            (0..len)
+                .map(|j| if j < 32 { stem * 1000 + j as u32 } else { rng.below(4096) as u32 })
+                .collect()
+        })
+        .collect();
+    let r = b.run("radix_tree insert+match x256 seqs", || {
+        let mut t = RadixTree::new(20_000);
+        let mut hits = 0usize;
+        for s in &seqs {
+            let (_, m) = t.insert(s);
+            t.release(&m);
+            let q = t.match_prefix(s);
+            hits += q.matched_tokens;
+            t.release(&q);
+        }
+        hits
+    });
+    println!("{}", r.line());
+
+    // Paged KV: allocate/extend/release churn.
+    let r = b.run("paged_kv alloc/extend/release x512", || {
+        let mut kv = PagedKvCache::new(600_000, 16);
+        for i in 0..512u64 {
+            kv.allocate(i, 500 + (i as usize % 1500)).unwrap();
+        }
+        for i in 0..512u64 {
+            kv.extend(i, 32).unwrap();
+        }
+        for i in 0..512u64 {
+            kv.release(i).unwrap();
+        }
+        kv.free_blocks()
+    });
+    println!("{}", r.line());
+
+    // Gain/cost model evaluation (Eq. 2) — runs on every dispatch.
+    let cost = CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+    let rp = PrefillSet {
+        items: (0..16)
+            .map(|_| PrefillItem { new_tokens: 4096, cached_tokens: 0, vision_tokens: 0 })
+            .collect(),
+    };
+    let victim = DecodeSet {
+        items: (0..64).map(|_| DecodeItem { context_len: 1024, vision_tokens: 0 }).collect(),
+        remaining_out: vec![128; 64],
+    };
+    let merged: Vec<DecodeItem> =
+        (0..128).map(|_| DecodeItem { context_len: 1024, vision_tokens: 0 }).collect();
+    let r = b.run("gain_cost eq2 evaluation", || {
+        gain_cost::prefill_preemption(&cost, &rp, 3, &victim, &merged, &merged[..64], 1, 1.0)
+            .net()
+    });
+    println!("{}", r.line());
+
+    // Cost model: decode step estimation for a large batch.
+    let batch: Vec<DecodeItem> =
+        (0..256).map(|i| DecodeItem { context_len: 512 + i, vision_tokens: 0 }).collect();
+    let r = b.run("cost_model decode_step_time b=256", || {
+        cost.decode_step_time(&batch, 1)
+    });
+    println!("{}", r.line());
+
+    // End-to-end: full EMP simulation of a 120-request trace.
+    let mut rng = Rng::new(5);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 120);
+    poisson_arrivals(&mut rng, &mut reqs, 8.0);
+    let r = b.run("emp_system full sim 120 reqs", || {
+        let cost = CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+        EmpSystem::new(cost, SchedulerConfig::default(), 8, EmpOptions::full(8))
+            .run(&reqs)
+            .records
+            .len()
+    });
+    println!("{}", r.line());
+}

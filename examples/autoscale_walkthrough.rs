@@ -1,0 +1,52 @@
+//! Fig 4 walkthrough: elastic auto-scaling on a small cluster. A
+//! multimodal burst arrives mid-run; the modality-aware balancer and the
+//! stage-level auto-scaler react, and we print what moved.
+//!
+//!     cargo run --release --example autoscale_walkthrough
+
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::model::CostModel;
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::{concentrate_multimodal_in_bursts, BurstyProcess};
+use elasticmm::workload::datasets::DatasetSpec;
+
+fn main() {
+    let cost = CostModel::new(presets::llama32_vision_11b(), GpuSpec::a800_80g());
+    let sched = SchedulerConfig::default();
+    let mut rng = Rng::new(99);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 300);
+    let process = BurstyProcess {
+        base_qps: 2.0,
+        burst_qps: 20.0,
+        mean_quiet_s: 30.0,
+        mean_burst_s: 12.0,
+    };
+    let bursts = process.stamp(&mut rng, &mut reqs);
+    concentrate_multimodal_in_bursts(&mut reqs, &bursts);
+    println!(
+        "trace: {} requests, {} burst windows of image-heavy traffic",
+        reqs.len(),
+        bursts.len()
+    );
+
+    let mut sys = EmpSystem::new(cost, sched, 8, EmpOptions::full(8));
+    println!("initial group sizes [text, multimodal]: {:?}", sys.group_sizes());
+    let report = sys.run(&reqs);
+    println!("final group sizes   [text, multimodal]: {:?}", sys.group_sizes());
+    println!("\nelasticity events during the run:");
+    println!("  prefill preemptions (Eq.2):  {}", sys.stats.prefill_preemptions);
+    println!("  decode scale-ups (Eq.3):     {}", sys.stats.decode_scale_ups);
+    println!("  decode scale-downs:          {}", sys.stats.decode_scale_downs);
+    println!("  inter-group instance moves:  {}", sys.stats.group_moves);
+    println!("  KV migrations (sequences):   {}", sys.stats.migrated_seqs);
+    println!("  DP prefill iterations:       {}", sys.stats.dp_prefill_iters);
+    println!("  encode cache hits:           {}", sys.stats.encode_cache_hits);
+    let (txt, mm) = report.split_by_modality();
+    println!(
+        "\nmean TTFT: text {:.3}s, multimodal {:.3}s; p90 multimodal {:.3}s",
+        txt.mean_ttft(),
+        mm.mean_ttft(),
+        mm.p_ttft(90.0)
+    );
+}

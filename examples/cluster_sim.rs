@@ -1,0 +1,50 @@
+//! Full 8-GPU cluster simulation: a miniature Fig 5 sweep comparing
+//! ElasticMM against vLLM and vLLM-Decouple on a ShareGPT-4o-like
+//! workload (Qwen2.5-VL-7B cost model).
+//!
+//!     cargo run --release --example cluster_sim -- --requests 300
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::model::CostModel;
+use elasticmm::util::cli::Args;
+use elasticmm::util::rng::Rng;
+use elasticmm::util::stats::render_table;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 300);
+    let gpus = args.get_usize("gpus", 8);
+    let cost = || CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+    let sched = SchedulerConfig::default;
+
+    let mut rows = Vec::new();
+    for &qps in &[2.0, 6.0, 10.0, 14.0] {
+        let mut rng = Rng::new(1234);
+        let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+        poisson_arrivals(&mut rng, &mut reqs, qps);
+        let emp = EmpSystem::new(cost(), sched(), gpus, EmpOptions::full(gpus)).run(&reqs);
+        let vllm = CoupledVllm::new(cost(), sched(), gpus).run(&reqs);
+        let dec = DecoupledStatic::new(cost(), sched(), gpus).run(&reqs);
+        for (name, rep) in [("ElasticMM", &emp), ("vLLM", &vllm), ("vLLM-Decouple", &dec)] {
+            rows.push(vec![
+                format!("{qps}"),
+                name.to_string(),
+                format!("{:.4}", rep.mean_norm_input_latency()),
+                format!("{:.4}", rep.mean_norm_output_latency()),
+                format!("{:.2}", rep.mean_ttft()),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["qps", "system", "norm input s/tok", "norm output s/tok", "ttft s"],
+            &rows
+        )
+    );
+}

@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT tiny MLLM and serve a handful of mixed
+//! text/multimodal requests through the real PJRT path.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use elasticmm::runtime::Runtime;
+use elasticmm::serving::{Engine, ServeRequest};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    println!("loading artifacts from {} ...", dir.display());
+    let mut engine = Engine::load(&dir, true)?;
+    println!(
+        "tiny MLLM: vocab={} d_model={} layers={} ({} params)",
+        engine.rt.meta.vocab,
+        engine.rt.meta.d_model,
+        engine.rt.meta.dec_layers,
+        engine.rt.store.total_params(),
+    );
+
+    let requests = vec![
+        ServeRequest {
+            id: 0,
+            prompt: "Describe this image in detail.".into(),
+            image: Some(1),
+            max_new: 12,
+        },
+        ServeRequest {
+            id: 1,
+            prompt: "Write a haiku about serving systems.".into(),
+            image: None,
+            max_new: 12,
+        },
+        ServeRequest {
+            id: 2,
+            prompt: "Describe this image in detail.".into(),
+            image: Some(1), // same image -> unified-cache hit, no re-encode
+            max_new: 12,
+        },
+    ];
+
+    for req in &requests {
+        let res = engine.serve_sequential(req)?;
+        println!(
+            "req {} ({}) | encode {:6.2}ms prefill {:6.2}ms decode {:6.2}ms ttft {:6.2}ms",
+            res.id,
+            if req.image.is_some() { "multimodal" } else { "text-only " },
+            res.encode_s * 1e3,
+            res.prefill_s * 1e3,
+            res.decode_s * 1e3,
+            res.ttft_s * 1e3,
+        );
+        println!("    generated {:?}", res.text);
+    }
+    let cache = engine.image_cache.as_ref().unwrap();
+    println!(
+        "image cache: {} hits / {} misses (repeated image skipped re-encoding)",
+        cache.hits, cache.misses
+    );
+    Ok(())
+}

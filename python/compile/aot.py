@@ -1,0 +1,145 @@
+"""AOT export: lower the tiny MLLM to HLO *text* + dump weights.
+
+Python runs only at build time (`make artifacts`); the Rust engine loads
+`artifacts/*.hlo.txt` via `HloModuleProto::from_text_file` and executes
+through PJRT. HLO text (not serialized protos) is the interchange format:
+jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs in --out-dir:
+  encode.hlo.txt        (weights..., image[32,32,3])        -> (vis,)
+  prefill_mm.hlo.txt    (weights..., vis, tokens[48])       -> (logits, kv)
+  prefill_text.hlo.txt  (weights..., tokens[64])            -> (logits, kv)
+  decode.hlo.txt        (weights..., kv, token, pos)        -> (logits, kv)
+  weights.bin           all parameters (name/shape/f32 data)
+  manifest.json         per-graph ordered argument lists
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, params: dict) -> None:
+    """weights.bin: magic, count, then per tensor:
+    u32 name_len, name bytes, u32 ndim, u64 dims..., f32 data (LE)."""
+    with open(path, "wb") as f:
+        f.write(b"EMMW")
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            arr = params[name]
+            data = bytes(jnp.asarray(arr, jnp.float32).tobytes())
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(data)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.init_params(args.seed)
+    names = sorted(params)
+    spec = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)  # noqa: E731
+    # Per-graph parameter subsets: each graph receives exactly the
+    # weights it uses, so JAX's dead-argument elimination cannot change
+    # the exported signature out from under the Rust loader.
+    enc_names = sorted(k for k in params if k.startswith(("enc_", "proj_")))
+    dec_names = sorted(k for k in params if k.startswith(("dec_", "lm_")))
+    enc_spec = {k: spec(params[k]) for k in enc_names}
+    dec_spec = {k: spec(params[k]) for k in dec_names}
+
+    vis_spec = jax.ShapeDtypeStruct((model.N_VIS, model.D_MODEL), jnp.float32)
+    img_spec = jax.ShapeDtypeStruct((model.IMG_SIZE, model.IMG_SIZE, 3), jnp.float32)
+    tok_mm_spec = jax.ShapeDtypeStruct((model.MAX_PROMPT,), jnp.int32)
+    tok_text_spec = jax.ShapeDtypeStruct((model.S_TEXT,), jnp.int32)
+    kv_spec = jax.ShapeDtypeStruct(
+        (model.DEC_LAYERS, 2, model.MAX_TOTAL, model.N_HEADS, model.HEAD_DIM),
+        jnp.float32,
+    )
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+    graphs = {
+        "encode": (
+            lambda p, image: (model.encode_image(p, image),),
+            (enc_spec, img_spec),
+            enc_names,
+            ["image"],
+        ),
+        "prefill_mm": (
+            lambda p, vis, toks: model.prefill_mm(p, vis, toks),
+            (dec_spec, vis_spec, tok_mm_spec),
+            dec_names,
+            ["vis", "tokens"],
+        ),
+        "prefill_text": (
+            lambda p, toks: model.prefill_text(p, toks),
+            (dec_spec, tok_text_spec),
+            dec_names,
+            ["tokens"],
+        ),
+        "decode": (
+            lambda p, kv, token, pos: model.decode_step(p, kv, token, pos),
+            (dec_spec, kv_spec, i32, i32),
+            dec_names,
+            ["kv", "token", "pos"],
+        ),
+    }
+
+    manifest = {
+        "model": {
+            "vocab": model.VOCAB,
+            "d_model": model.D_MODEL,
+            "n_heads": model.N_HEADS,
+            "dec_layers": model.DEC_LAYERS,
+            "n_vis": model.N_VIS,
+            "max_prompt": model.MAX_PROMPT,
+            "s_text": model.S_TEXT,
+            "s_pref": model.S_PREF,
+            "max_total": model.MAX_TOTAL,
+            "img_size": model.IMG_SIZE,
+            "seed": args.seed,
+        },
+        "weights_order": names,
+        "graphs": {},
+    }
+
+    for gname, (fn, specs, weight_names, extra) in graphs.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{gname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["graphs"][gname] = {"args": weight_names + extra}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    write_weights(os.path.join(args.out_dir, "weights.bin"), params)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote weights.bin + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

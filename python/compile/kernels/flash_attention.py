@@ -1,0 +1,114 @@
+"""L1: Pallas flash-attention kernel (tiled online-softmax attention).
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): where the GPU
+FlashAttention schedules threadblocks over (batch, head, q-tile) with K/V
+streamed through shared memory, this kernel expresses the same insight in
+TPU idioms — the grid iterates (head, q-block), `BlockSpec` index maps
+stage the q block plus the full per-head K/V panel HBM→VMEM, and the
+kernel loops over K blocks carrying the online-softmax state (m, l, acc)
+in f32 registers/VMEM. Block shapes default to MXU-friendly multiples.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering under interpret produces plain HLO that runs on
+any backend (see /opt/xla-example/README.md). Real-TPU VMEM/MXU estimates
+for these block shapes are recorded in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+                  q_offset_blocks: int):
+    """One (head, q-block) grid cell.
+
+    q_ref: [block_q, d] — this cell's query tile (VMEM)
+    k_ref, v_ref: [s, d] — the head's full K/V panels (VMEM)
+    o_ref: [block_q, d] — output tile
+    """
+    block_q, d = q_ref.shape
+    s = k_ref.shape[0]
+    qi = pl.program_id(1)  # q-block index within the head
+    scale = 1.0 / (d ** 0.5)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    # Online-softmax running state.
+    m = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    # Global row ids of this q tile (for the causal mask).
+    rows = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    num_kb = pl.cdiv(s, block_k)
+    for kb in range(num_kb):
+        k_blk = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        logits = q @ k_blk.T  # [block_q, block_k]
+        cols = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        if causal:
+            mask = cols[None, :] <= rows[:, None]
+            logits = jnp.where(mask, logits, NEG_INF)
+        # Online-softmax update.
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        m = m_new
+
+    # Padded fully-masked rows have l == 0; guard the division.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    del q_offset_blocks  # reserved for chunked-prefill variants
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 32,
+                    block_k: int = 32):
+    """Tiled attention. q, k, v: [H, S, D]; returns [H, S, D].
+
+    S must be a multiple of block_q (callers pad); K-side handles ragged
+    final blocks via pl.dslice clamping in interpret mode.
+    """
+    h, s, d = q.shape
+    assert k.shape == (h, s, d) and v.shape == (h, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0, f"S={s} not a multiple of block_q={block_q}"
+    assert s % block_k == 0, f"S={s} not a multiple of block_k={block_k}"
+
+    grid = (h, s // block_q)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_k=block_k, causal=causal, q_offset_blocks=0
+        ),
+        grid=grid,
+        in_specs=[
+            # q: one tile per grid cell.
+            pl.BlockSpec((None, block_q, d), lambda hd, qb: (hd, qb, 0)),
+            # k/v: the head's whole panel (VMEM-resident per cell).
+            pl.BlockSpec((None, s, d), lambda hd, qb: (hd, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hd, qb: (hd, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hd, qb: (hd, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_bytes_estimate(s: int, d: int, block_q: int, block_k: int,
+                        dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate per grid cell for EXPERIMENTS.md §Perf:
+    q tile + K/V panels + accumulator state."""
+    q_tile = block_q * d * dtype_bytes
+    kv_panel = 2 * s * d * dtype_bytes
+    state = block_q * (d + 2) * 4  # acc + m + l in f32
+    out = block_q * d * dtype_bytes
+    return q_tile + kv_panel + state + out

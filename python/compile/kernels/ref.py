@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel.
+
+Reference semantics: scaled dot-product attention over [H, S, D] tensors
+with optional causal masking, computed the naive O(S^2)-memory way. The
+Pallas kernel must match this closely (f32 rtol 1e-5).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Naive attention. q, k, v: [H, S, D] (heads, sequence, head dim)."""
+    h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        row = jnp.arange(s)[:, None]
+        col = jnp.arange(s)[None, :]
+        logits = jnp.where(col <= row, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

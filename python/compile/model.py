@@ -1,0 +1,250 @@
+"""L2: the tiny MLLM used by the real serving path.
+
+A decoder-only vision-language model in the Qwen-VL architectural mold
+(Table 1): a ViT-style patch encoder produces vision tokens that are
+concatenated in front of the text tokens, and a causal decoder LM
+generates from the unified sequence. Prefill attention runs through the
+L1 Pallas flash-attention kernel so the kernel lowers into the exported
+HLO; decode uses a masked single-position attention over the KV cache.
+
+Fixed shapes (PJRT CPU AOT requires static shapes; the Rust engine pads):
+  image:       32x32x3, 8x8 patches -> N_VIS=16 vision tokens
+  prompt:      MAX_PROMPT text tokens (byte-level vocab)
+  prefill seq: S_PREF = N_VIS + MAX_PROMPT = 64 (mm) or 64 text-only
+  KV cache:    MAX_TOTAL = 96 positions (32 generatable tokens)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+
+# --- configuration ----------------------------------------------------------
+
+VOCAB = 256          # byte-level tokenizer
+D_MODEL = 128
+N_HEADS = 4
+HEAD_DIM = D_MODEL // N_HEADS
+FFN = 256
+DEC_LAYERS = 2
+ENC_LAYERS = 2
+IMG_SIZE = 32
+PATCH = 8
+N_VIS = (IMG_SIZE // PATCH) ** 2            # 16
+PATCH_DIM = PATCH * PATCH * 3               # 192
+MAX_PROMPT = 48
+S_PREF = N_VIS + MAX_PROMPT                 # 64, multiple of 32
+S_TEXT = 64                                 # text-only prefill length
+MAX_TOTAL = 96
+MAX_NEW = MAX_TOTAL - S_PREF                # 32
+
+
+# --- parameters -------------------------------------------------------------
+
+def init_params(seed: int = 0):
+    """Random-but-fixed weights; returns a flat {name: array} dict.
+
+    Per-layer weights are stacked along a leading layer axis so the HLO
+    argument list stays small.
+    """
+    key = jax.random.PRNGKey(seed)
+
+    def nrm(key, shape, scale=0.02):
+        return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    keys = iter(jax.random.split(key, 32))
+    p = {}
+    # Vision encoder.
+    p["enc_patch_w"] = nrm(next(keys), (PATCH_DIM, D_MODEL))
+    p["enc_patch_b"] = jnp.zeros((D_MODEL,), jnp.float32)
+    p["enc_qkvo"] = nrm(next(keys), (ENC_LAYERS, 4, D_MODEL, D_MODEL))
+    p["enc_ffn1"] = nrm(next(keys), (ENC_LAYERS, D_MODEL, FFN))
+    p["enc_ffn2"] = nrm(next(keys), (ENC_LAYERS, FFN, D_MODEL))
+    p["enc_ln"] = jnp.tile(
+        jnp.stack([jnp.ones((D_MODEL,)), jnp.zeros((D_MODEL,))]),
+        (ENC_LAYERS, 2, 1, 1),
+    ).astype(jnp.float32)  # [L, 2(ln1/ln2), 2(g/b), D]
+    p["enc_lnf"] = jnp.stack(
+        [jnp.ones((D_MODEL,)), jnp.zeros((D_MODEL,))]
+    ).astype(jnp.float32)
+    p["proj_w"] = nrm(next(keys), (D_MODEL, D_MODEL))
+    p["proj_b"] = jnp.zeros((D_MODEL,), jnp.float32)
+    # Decoder LM.
+    p["dec_embed"] = nrm(next(keys), (VOCAB, D_MODEL))
+    p["dec_qkvo"] = nrm(next(keys), (DEC_LAYERS, 4, D_MODEL, D_MODEL))
+    p["dec_ffn1"] = nrm(next(keys), (DEC_LAYERS, D_MODEL, FFN))
+    p["dec_ffn2"] = nrm(next(keys), (DEC_LAYERS, FFN, D_MODEL))
+    p["dec_ln"] = jnp.tile(
+        jnp.stack([jnp.ones((D_MODEL,)), jnp.zeros((D_MODEL,))]),
+        (DEC_LAYERS, 2, 1, 1),
+    ).astype(jnp.float32)
+    p["dec_lnf"] = jnp.stack(
+        [jnp.ones((D_MODEL,)), jnp.zeros((D_MODEL,))]
+    ).astype(jnp.float32)
+    p["lm_head"] = nrm(next(keys), (D_MODEL, VOCAB))
+    return p
+
+
+# --- building blocks ---------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def sincos_positions(n, offset=0):
+    """Sinusoidal position embeddings [n, D_MODEL]."""
+    pos = jnp.arange(offset, offset + n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(D_MODEL // 2)[None, :].astype(jnp.float32)
+    freq = jnp.exp(-jnp.log(10000.0) * 2.0 * dim / D_MODEL)
+    ang = pos * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _split_heads(x):
+    # [S, D] -> [H, S, Dh]
+    s = x.shape[0]
+    return x.reshape(s, N_HEADS, HEAD_DIM).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    # [H, S, Dh] -> [S, D]
+    return x.transpose(1, 0, 2).reshape(x.shape[1], D_MODEL)
+
+
+def _block(x, qkvo, ffn1, ffn2, ln, causal, kv_sink=None, layer=None):
+    """Pre-LN transformer block over [S, D]; attention via the Pallas
+    kernel. If kv_sink is given, writes this layer's K/V into it."""
+    wq, wk, wv, wo = qkvo[0], qkvo[1], qkvo[2], qkvo[3]
+    h = layer_norm(x, ln[0, 0], ln[0, 1])
+    q, k, v = h @ wq, h @ wk, h @ wv
+    qh, kh, vh = _split_heads(q), _split_heads(k), _split_heads(v)
+    attn = flash_attention(qh, kh, vh, causal=causal)
+    x = x + _merge_heads(attn) @ wo
+    h2 = layer_norm(x, ln[1, 0], ln[1, 1])
+    x = x + jax.nn.gelu(h2 @ ffn1) @ ffn2
+    if kv_sink is not None:
+        kv_sink.append((kh, vh))
+    return x
+
+
+# --- public model functions (AOT entry points) -------------------------------
+
+def encode_image(params, image):
+    """ViT encoder: [32,32,3] f32 image -> [N_VIS, D_MODEL] vision tokens."""
+    patches = image.reshape(
+        IMG_SIZE // PATCH, PATCH, IMG_SIZE // PATCH, PATCH, 3
+    ).transpose(0, 2, 1, 3, 4).reshape(N_VIS, PATCH_DIM)
+    x = patches @ params["enc_patch_w"] + params["enc_patch_b"]
+    x = x + sincos_positions(N_VIS)
+    for l in range(ENC_LAYERS):
+        x = _block(
+            x,
+            params["enc_qkvo"][l],
+            params["enc_ffn1"][l],
+            params["enc_ffn2"][l],
+            params["enc_ln"][l],
+            causal=False,
+        )
+    x = layer_norm(x, params["enc_lnf"][0], params["enc_lnf"][1])
+    return x @ params["proj_w"] + params["proj_b"]
+
+
+def _prefill(params, x, seq_len_static):
+    """Shared prefill body over embedded sequence x: [S, D]. Returns
+    (last-token logits, kv cache [L, 2, MAX_TOTAL, H, Dh])."""
+    s = x.shape[0]
+    kv_pairs = []
+    for l in range(DEC_LAYERS):
+        x = _block(
+            x,
+            params["dec_qkvo"][l],
+            params["dec_ffn1"][l],
+            params["dec_ffn2"][l],
+            params["dec_ln"][l],
+            causal=True,
+            kv_sink=kv_pairs,
+            layer=l,
+        )
+    x = layer_norm(x, params["dec_lnf"][0], params["dec_lnf"][1])
+    logits = x[seq_len_static - 1] @ params["lm_head"]
+    kv = jnp.zeros((DEC_LAYERS, 2, MAX_TOTAL, N_HEADS, HEAD_DIM), jnp.float32)
+    for l, (kh, vh) in enumerate(kv_pairs):
+        # [H, S, Dh] -> [S, H, Dh]
+        kv = kv.at[l, 0, :s].set(kh.transpose(1, 0, 2))
+        kv = kv.at[l, 1, :s].set(vh.transpose(1, 0, 2))
+    del s
+    return logits, kv
+
+
+def prefill_mm(params, vis, tokens):
+    """Multimodal prefill: vision tokens + MAX_PROMPT text tokens."""
+    emb = params["dec_embed"][tokens]
+    x = jnp.concatenate([vis, emb], axis=0) + sincos_positions(S_PREF)
+    return _prefill(params, x, S_PREF)
+
+
+def prefill_text(params, tokens):
+    """Text-only prefill over S_TEXT tokens."""
+    emb = params["dec_embed"][tokens]
+    x = emb + sincos_positions(S_TEXT)
+    return _prefill(params, x, S_TEXT)
+
+
+def decode_step(params, kv, token, pos):
+    """One decode step: append `token` at position `pos`, return logits
+    for the next token and the updated cache. Masked attention over the
+    static MAX_TOTAL window (cols > pos contribute nothing)."""
+    x = params["dec_embed"][token]
+    # Position embedding at `pos` (dynamic): compute sin/cos directly.
+    posf = pos.astype(jnp.float32)
+    dim = jnp.arange(D_MODEL // 2).astype(jnp.float32)
+    freq = jnp.exp(-jnp.log(10000.0) * 2.0 * dim / D_MODEL)
+    ang = posf * freq
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+    for l in range(DEC_LAYERS):
+        qkvo = params["dec_qkvo"][l]
+        ln = params["dec_ln"][l]
+        h = layer_norm(x, ln[0, 0], ln[0, 1])
+        q = (h @ qkvo[0]).reshape(N_HEADS, HEAD_DIM)
+        k_new = (h @ qkvo[1]).reshape(N_HEADS, HEAD_DIM)
+        v_new = (h @ qkvo[2]).reshape(N_HEADS, HEAD_DIM)
+        kv = kv.at[l, 0, pos].set(k_new)
+        kv = kv.at[l, 1, pos].set(v_new)
+        keys = kv[l, 0]    # [MAX_TOTAL, H, Dh]
+        vals = kv[l, 1]
+        logits = jnp.einsum("hd,thd->ht", q, keys) / (HEAD_DIM ** 0.5)
+        mask = jnp.arange(MAX_TOTAL)[None, :] <= pos
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("ht,thd->hd", probs, vals).reshape(D_MODEL)
+        x = x + attn @ qkvo[3]
+        h2 = layer_norm(x, ln[1, 0], ln[1, 1])
+        x = x + jax.nn.gelu(h2 @ params["dec_ffn1"][l]) @ params["dec_ffn2"][l]
+
+    x = layer_norm(x, params["dec_lnf"][0], params["dec_lnf"][1])
+    return x @ params["lm_head"], kv
+
+
+# --- reference generation (used by tests + equivalence checks) ---------------
+
+def generate_greedy(params, vis, tokens, n_new):
+    """Greedy generation via prefill + decode_step (the oracle the Rust
+    engine must reproduce bit-for-bit)."""
+    if vis is not None:
+        logits, kv = prefill_mm(params, vis, tokens)
+        pos = S_PREF
+    else:
+        logits, kv = prefill_text(params, tokens)
+        pos = S_TEXT
+    out = []
+    for i in range(n_new):
+        nxt = jnp.argmax(logits).astype(jnp.int32)
+        out.append(int(nxt))
+        if i + 1 == n_new:
+            break
+        logits, kv = decode_step(params, kv, nxt, jnp.int32(pos))
+        pos += 1
+    return out

@@ -1,0 +1,86 @@
+"""L1 kernel correctness: the Pallas flash-attention kernel against the
+pure-jnp oracle, including hypothesis sweeps over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import flash_attention, vmem_bytes_estimate
+from compile.kernels.ref import attention_ref
+
+
+def rand_qkv(seed, h, s, d, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return [jax.random.normal(k, (h, s, d), dtype=dtype) for k in ks]
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,s,d", [(1, 32, 16), (4, 64, 32), (2, 96, 32), (8, 128, 64)])
+def test_matches_reference(causal, h, s, d):
+    q, k, v = rand_qkv(0, h, s, d)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_first_row_attends_only_itself_when_causal():
+    q, k, v = rand_qkv(1, 2, 64, 32)
+    out = flash_attention(q, k, v, causal=True)
+    # Row 0 of causal attention is exactly v[0].
+    np.testing.assert_allclose(np.array(out[:, 0]), np.array(v[:, 0]), rtol=1e-5, atol=1e-6)
+
+
+def test_block_shape_invariance():
+    """Different tilings must compute the same function."""
+    q, k, v = rand_qkv(2, 2, 128, 32)
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    b = flash_attention(q, k, v, causal=True, block_q=64, block_k=16)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-5, atol=2e-5)
+
+
+def test_uniform_values_give_mean():
+    # With identical K rows and uniform V, attention returns V rows.
+    h, s, d = 2, 32, 16
+    q = jnp.ones((h, s, d))
+    k = jnp.ones((h, s, d))
+    v = jnp.broadcast_to(jnp.arange(d, dtype=jnp.float32), (h, s, d))
+    out = flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.array(out[0, 0]), np.arange(d), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(h, s_blocks, d, causal, seed):
+    s = 32 * s_blocks
+    q, k, v = rand_qkv(seed, h, s, d)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_hypothesis_bf16_tolerance(seed):
+    """bf16 inputs: kernel accumulates in f32, so it should stay within
+    bf16-level error of the f32 reference."""
+    q, k, v = rand_qkv(seed, 2, 64, 32, dtype=jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True).astype(jnp.float32)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), causal=True
+    )
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=0.05, atol=0.05)
+
+
+def test_vmem_estimate_reasonable():
+    # The (s=64, d=32) config must fit comfortably in a 16 MiB VMEM.
+    bytes_ = vmem_bytes_estimate(64, 32, 32, 32)
+    assert bytes_ < 16 * 1024 * 1024
+    assert bytes_ > 0

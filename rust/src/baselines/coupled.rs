@@ -1,0 +1,318 @@
+//! The **coupled** serving baseline: a faithful policy model of vLLM
+//! v0.6.6 serving an MLLM (the paper's primary baseline, §4.1).
+//!
+//! Characteristics the paper attributes to this architecture:
+//! * no modality separation — text and multimodal requests share
+//!   instances and batches (mixed batches keep cross-attention active
+//!   for EncDec models);
+//! * no stage decoupling — image preprocessing + encoding run *inline*
+//!   on the serving instance, blocking prefill/decode (Fig 1a);
+//! * continuous batching with prefill priority (ORCA-style), FCFS
+//!   admission gated on free KV slots;
+//! * static data-parallel replicas behind a least-outstanding-work
+//!   router; no elasticity.
+
+use crate::config::SchedulerConfig;
+use crate::metrics::{Report, RequestRecord};
+use crate::model::{CostModel, DecodeItem, PrefillItem};
+use crate::sim::engine::EventQueue;
+use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
+use crate::workload::Request;
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Debug)]
+enum Ev {
+    Arrive(usize),
+    IterDone(usize),
+}
+
+#[derive(Debug, Clone)]
+enum Iter {
+    Prefill(Vec<u64>),
+    Decode(Vec<u64>),
+}
+
+/// Coupled vLLM-style serving simulator.
+pub struct CoupledVllm {
+    pub cost: CostModel,
+    pub sched: SchedulerConfig,
+    instances: Vec<Instance>,
+    waiting: Vec<VecDeque<u64>>,
+    current: Vec<Option<Iter>>,
+    requests: HashMap<u64, SimRequest>,
+    finished: Vec<RequestRecord>,
+    /// Prefill-token budget per iteration (vLLM max_num_batched_tokens).
+    pub prefill_token_budget: usize,
+}
+
+impl CoupledVllm {
+    pub fn new(cost: CostModel, sched: SchedulerConfig, num_gpus: usize) -> Self {
+        let tp = cost.min_tp();
+        let n_inst = (num_gpus / tp).max(1);
+        let kv_tokens = cost.kv_pool_tokens(tp, sched.kv_memory_fraction);
+        let instances = (0..n_inst)
+            .map(|i| Instance::new(i, tp, StageRole::Unified, GroupId::Multimodal, kv_tokens))
+            .collect();
+        CoupledVllm {
+            cost,
+            sched,
+            instances: instances,
+            waiting: (0..n_inst).map(|_| VecDeque::new()).collect(),
+            current: (0..n_inst).map(|_| None).collect(),
+            requests: HashMap::new(),
+            finished: Vec::new(),
+            prefill_token_budget: 8192,
+        }
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Outstanding token load on an instance (router heuristic).
+    fn load(&self, inst: usize) -> usize {
+        let queued: usize = self.waiting[inst]
+            .iter()
+            .map(|id| self.requests[id].input_len + self.requests[id].req.output_tokens)
+            .sum();
+        let running: usize = self.instances[inst]
+            .decoding
+            .iter()
+            .map(|id| self.requests[id].context_len())
+            .sum();
+        queued + running
+    }
+
+    fn route(&self, _req: &SimRequest) -> usize {
+        (0..self.instances.len())
+            .min_by_key(|&i| self.load(i))
+            .expect("at least one instance")
+    }
+
+    /// Try to start an iteration on an idle instance.
+    fn schedule(&mut self, inst: usize, q: &mut EventQueue<Ev>) {
+        let now = q.now();
+        if !self.instances[inst].idle_at(now) || self.current[inst].is_some() {
+            return;
+        }
+        // 1) Prefill-priority admission (FCFS while KV + token budget allow).
+        let mut batch_ids = Vec::new();
+        let mut batch_items = Vec::new();
+        let mut encode_s = 0.0;
+        let mut tokens = 0usize;
+        while let Some(&id) = self.waiting[inst].front() {
+            let r = &self.requests[&id];
+            let reserve = r.input_len + r.req.output_tokens;
+            if batch_ids.len() >= self.sched.max_prefill_batch
+                || (tokens > 0 && tokens + r.input_len > self.prefill_token_budget)
+            {
+                break;
+            }
+            if !self.instances[inst].kv.can_allocate(reserve) {
+                break; // head-of-line blocks (vLLM FCFS)
+            }
+            self.instances[inst].kv.allocate(id, reserve).expect("checked");
+            tokens += r.input_len;
+            // Inline (blocking) encoding for each image still pending.
+            for img in &r.req.images {
+                encode_s += self.cost.preprocess_time(img.width, img.height);
+                let vt = self.cost.model.image_tokens(img.width, img.height);
+                encode_s += self.cost.encode_time(vt, self.instances[inst].tp);
+            }
+            batch_items.push(PrefillItem {
+                new_tokens: r.input_len,
+                cached_tokens: 0,
+                vision_tokens: r.vision_tokens,
+            });
+            batch_ids.push(id);
+            self.waiting[inst].pop_front();
+        }
+        if !batch_ids.is_empty() {
+            for &id in &batch_ids {
+                let r = self.requests.get_mut(&id).unwrap();
+                r.phase = Phase::Prefilling;
+            }
+            let dur = encode_s
+                + self.cost.prefill_time(&batch_items, self.instances[inst].tp);
+            let done = self.instances[inst].start_iteration(now, dur);
+            self.current[inst] = Some(Iter::Prefill(batch_ids));
+            q.push(done, Ev::IterDone(inst));
+            return;
+        }
+        // 2) Decode step for resident sequences.
+        if !self.instances[inst].decoding.is_empty() {
+            let ids: Vec<u64> = self.instances[inst]
+                .decoding
+                .iter()
+                .take(self.sched.max_decode_batch)
+                .copied()
+                .collect();
+            let items: Vec<DecodeItem> = ids
+                .iter()
+                .map(|id| {
+                    let r = &self.requests[id];
+                    DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+                })
+                .collect();
+            let dur = self.cost.decode_step_time(&items, self.instances[inst].tp);
+            let done = self.instances[inst].start_iteration(now, dur);
+            self.current[inst] = Some(Iter::Decode(ids));
+            q.push(done, Ev::IterDone(inst));
+        }
+    }
+
+    fn complete_iteration(&mut self, inst: usize, q: &mut EventQueue<Ev>) {
+        let now = q.now();
+        let iter = self.current[inst].take().expect("iteration in flight");
+        match iter {
+            Iter::Prefill(ids) => {
+                for id in ids {
+                    let r = self.requests.get_mut(&id).unwrap();
+                    r.t_encode_done = now;
+                    r.t_first_token = now;
+                    r.prefill_done = r.prefill_target;
+                    r.decoded = 1;
+                    if r.decoded >= r.req.output_tokens {
+                        r.t_finish = now;
+                        r.phase = Phase::Finished;
+                        self.instances[inst].kv.release(id).expect("allocated");
+                        self.finished.push(RequestRecord::from_sim(r));
+                    } else {
+                        r.phase = Phase::Decoding;
+                        r.home = Some(inst);
+                        self.instances[inst].decoding.push(id);
+                    }
+                }
+            }
+            Iter::Decode(ids) => {
+                for id in ids {
+                    let r = self.requests.get_mut(&id).unwrap();
+                    r.decoded += 1;
+                    self.instances[inst].tokens_processed += 1;
+                    if r.decoded >= r.req.output_tokens {
+                        r.t_finish = now;
+                        r.phase = Phase::Finished;
+                        self.instances[inst].kv.release(id).expect("allocated");
+                        self.instances[inst].decoding.retain(|&d| d != id);
+                        self.finished.push(RequestRecord::from_sim(r));
+                    }
+                }
+            }
+        }
+        self.schedule(inst, q);
+    }
+
+    /// Run a trace to completion; returns the metrics report.
+    pub fn run(&mut self, trace: &[Request]) -> Report {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for (i, r) in trace.iter().enumerate() {
+            q.push(r.arrival, Ev::Arrive(i));
+        }
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Ev::Arrive(i) => {
+                    let req = trace[i].clone();
+                    let vis = req.vision_tokens(&self.cost.model);
+                    let mut sr = SimRequest::new(req, vis);
+                    // Coupled system has no separate encode queue.
+                    if sr.phase == Phase::WaitEncode {
+                        sr.phase = Phase::WaitPrefill;
+                    }
+                    let id = sr.req.id;
+                    let inst = self.route(&sr);
+                    self.requests.insert(id, sr);
+                    self.waiting[inst].push_back(id);
+                    self.schedule(inst, &mut q);
+                }
+                Ev::IterDone(inst) => self.complete_iteration(inst, &mut q),
+            }
+        }
+        Report::new(std::mem::take(&mut self.finished))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, GpuSpec, SchedulerConfig};
+    use crate::util::rng::Rng;
+    use crate::workload::arrival::poisson_arrivals;
+    use crate::workload::datasets::DatasetSpec;
+
+    fn system(gpus: usize) -> CoupledVllm {
+        let cost = CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+        CoupledVllm::new(cost, SchedulerConfig::default(), gpus)
+    }
+
+    fn trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+        poisson_arrivals(&mut rng, &mut reqs, qps);
+        reqs
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut sys = system(8);
+        let t = trace(200, 5.0, 1);
+        let rep = sys.run(&t);
+        assert_eq!(rep.records.len(), 200);
+        for r in &rep.records {
+            assert!(r.first_token >= r.arrival, "ttft must be non-negative");
+            assert!(r.finish >= r.first_token);
+        }
+    }
+
+    #[test]
+    fn kv_fully_released_after_run() {
+        let mut sys = system(4);
+        let t = trace(100, 10.0, 2);
+        sys.run(&t);
+        for inst in &sys.instances {
+            assert_eq!(inst.kv.num_seqs(), 0);
+            assert_eq!(inst.kv.used_tokens(), 0);
+            inst.kv.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_load() {
+        let light = system(8).run(&trace(150, 0.5, 3));
+        let heavy = system(8).run(&trace(150, 20.0, 3));
+        assert!(
+            heavy.mean_ttft() > 2.0 * light.mean_ttft(),
+            "heavy {} vs light {}",
+            heavy.mean_ttft(),
+            light.mean_ttft()
+        );
+    }
+
+    #[test]
+    fn more_gpus_reduce_latency() {
+        let small = system(2).run(&trace(150, 6.0, 4));
+        let big = system(8).run(&trace(150, 6.0, 4));
+        assert!(big.mean_ttft() < small.mean_ttft());
+    }
+
+    #[test]
+    fn multimodal_requests_suffer_encode_inline() {
+        // At light load, TTFT of a multimodal request must include
+        // encode time; text-only must not.
+        let mut sys = system(8);
+        let rep = sys.run(&trace(120, 0.2, 5));
+        let (txt, mm) = rep.split_by_modality();
+        assert!(!txt.records.is_empty() && !mm.records.is_empty());
+        assert!(mm.mean_ttft() > txt.mean_ttft());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let t = trace(100, 5.0, 6);
+        let a = system(4).run(&t);
+        let b = system(4).run(&t);
+        assert_eq!(a.records.len(), b.records.len());
+        let fa: Vec<f64> = a.records.iter().map(|r| r.finish).collect();
+        let fb: Vec<f64> = b.records.iter().map(|r| r.finish).collect();
+        assert_eq!(fa, fb);
+    }
+}

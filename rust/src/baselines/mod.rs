@@ -1,0 +1,8 @@
+//! Baseline serving systems the paper compares against (§4.1):
+//! [`coupled`] = vLLM v0.6.6-style, [`decoupled`] = vLLM-Decouple.
+//! The Fig 7 *static allocation* policies (text-dominant / equal /
+//! multimodal-dominant) are ElasticMM variants with elasticity disabled
+//! and are constructed via `coordinator::EmpSystem::with_static_split`.
+
+pub mod coupled;
+pub mod decoupled;

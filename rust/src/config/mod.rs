@@ -1,0 +1,357 @@
+//! Configuration system: model architectures (Table 1 of the paper),
+//! GPU/cluster specs, scheduler knobs, and workload descriptions.
+//! Everything is JSON-loadable (see [`crate::util::json`]) and ships with
+//! presets matching the paper's experimental setup.
+
+pub mod presets;
+
+use crate::util::json::{Json, JsonError};
+
+/// How vision tokens enter the language model (paper §2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Architecture {
+    /// Vision tokens concatenated with text tokens; they participate in
+    /// every self-attention layer (Qwen-VL, LLaVA, InternVL...).
+    DecoderOnly,
+    /// Vision tokens interact only through interleaved cross-attention
+    /// layers (LLaMA-3.2 Vision, NVLM-X, Flamingo...).
+    EncoderDecoder,
+}
+
+impl Architecture {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Architecture::DecoderOnly => "Decoder-only",
+            Architecture::EncoderDecoder => "Encoder-Decoder",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, JsonError> {
+        match s {
+            "decoder_only" | "Decoder-only" => Ok(Architecture::DecoderOnly),
+            "encoder_decoder" | "Encoder-Decoder" => Ok(Architecture::EncoderDecoder),
+            _ => Err(JsonError::Type { expected: "architecture name", got: "string" }),
+        }
+    }
+}
+
+/// Transformer shape parameters (enough to compute FLOPs and KV bytes).
+#[derive(Debug, Clone)]
+pub struct TransformerShape {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+}
+
+impl TransformerShape {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Parameter count (weights only, no embeddings sharing tricks).
+    pub fn params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let kvh = (self.kv_heads * self.head_dim()) as u64;
+        let per_layer =
+            // q proj + o proj
+            2 * h * h
+            // k,v projections (GQA-aware)
+            + 2 * h * kvh
+            // gated FFN (gate, up, down)
+            + 3 * h * self.ffn_hidden as u64;
+        per_layer * self.layers as u64 + 2 * h * self.vocab as u64
+    }
+
+    /// KV cache bytes per token (fp16).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.layers * self.kv_heads * self.head_dim() * 2) as u64
+    }
+}
+
+/// A full MLLM configuration (one row of Table 1).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: Architecture,
+    /// LLM backend shape.
+    pub llm: TransformerShape,
+    /// Vision encoder shape (ViT).
+    pub encoder: TransformerShape,
+    /// Cross-attention layers inserted in the backend (EncDec only).
+    pub cross_attn_layers: usize,
+    /// Vision tokens produced per image tile.
+    pub tokens_per_tile: usize,
+    /// Tile edge in pixels (images are resized + tiled, §2.1).
+    pub tile_pixels: usize,
+    /// Max tiles per image.
+    pub max_tiles: usize,
+    /// Bytes per parameter for serving precision (2 = fp16/bf16).
+    pub bytes_per_param: u64,
+}
+
+impl ModelConfig {
+    /// Total vision tokens for an image of `w`×`h` pixels.
+    pub fn image_tokens(&self, w: usize, h: usize) -> usize {
+        let tiles_w = w.div_ceil(self.tile_pixels);
+        let tiles_h = h.div_ceil(self.tile_pixels);
+        let tiles = (tiles_w * tiles_h).clamp(1, self.max_tiles);
+        tiles * self.tokens_per_tile
+    }
+
+    /// Backend weight bytes (what a GPU must hold to serve the LLM).
+    pub fn llm_weight_bytes(&self) -> u64 {
+        let mut p = self.llm.params();
+        if self.arch == Architecture::EncoderDecoder {
+            // Cross-attention adds q/k/v/o projections per inserted layer.
+            let h = self.llm.hidden as u64;
+            p += (self.cross_attn_layers as u64) * 4 * h * h;
+        }
+        p * self.bytes_per_param
+    }
+
+    pub fn encoder_weight_bytes(&self) -> u64 {
+        self.encoder.params() * self.bytes_per_param
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "arch",
+                Json::str(match self.arch {
+                    Architecture::DecoderOnly => "decoder_only",
+                    Architecture::EncoderDecoder => "encoder_decoder",
+                }),
+            ),
+            ("llm", shape_to_json(&self.llm)),
+            ("encoder", shape_to_json(&self.encoder)),
+            ("cross_attn_layers", Json::num(self.cross_attn_layers as f64)),
+            ("tokens_per_tile", Json::num(self.tokens_per_tile as f64)),
+            ("tile_pixels", Json::num(self.tile_pixels as f64)),
+            ("max_tiles", Json::num(self.max_tiles as f64)),
+            ("bytes_per_param", Json::num(self.bytes_per_param as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig, JsonError> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            arch: Architecture::from_str(j.get("arch")?.as_str()?)?,
+            llm: shape_from_json(j.get("llm")?)?,
+            encoder: shape_from_json(j.get("encoder")?)?,
+            cross_attn_layers: j.get("cross_attn_layers")?.as_usize()?,
+            tokens_per_tile: j.get("tokens_per_tile")?.as_usize()?,
+            tile_pixels: j.get("tile_pixels")?.as_usize()?,
+            max_tiles: j.get("max_tiles")?.as_usize()?,
+            bytes_per_param: j.get("bytes_per_param")?.as_u64()?,
+        })
+    }
+}
+
+fn shape_to_json(s: &TransformerShape) -> Json {
+    Json::obj(vec![
+        ("layers", Json::num(s.layers as f64)),
+        ("hidden", Json::num(s.hidden as f64)),
+        ("heads", Json::num(s.heads as f64)),
+        ("kv_heads", Json::num(s.kv_heads as f64)),
+        ("ffn_hidden", Json::num(s.ffn_hidden as f64)),
+        ("vocab", Json::num(s.vocab as f64)),
+    ])
+}
+
+fn shape_from_json(j: &Json) -> Result<TransformerShape, JsonError> {
+    Ok(TransformerShape {
+        layers: j.get("layers")?.as_usize()?,
+        hidden: j.get("hidden")?.as_usize()?,
+        heads: j.get("heads")?.as_usize()?,
+        kv_heads: j.get("kv_heads")?.as_usize()?,
+        ffn_hidden: j.get("ffn_hidden")?.as_usize()?,
+        vocab: j.get("vocab")?.as_usize()?,
+    })
+}
+
+/// GPU hardware spec used by the analytical cost model.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Dense fp16/bf16 tensor throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bandwidth: f64,
+    /// Memory capacity, bytes.
+    pub hbm_capacity: u64,
+    /// Interconnect (NVLink) bandwidth between any two GPUs, bytes/s.
+    pub interconnect_bandwidth: f64,
+    /// Achievable fraction of peak FLOPs for large GEMMs.
+    pub mfu: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A800-80GB, the paper's testbed GPU: A100-class compute with
+    /// 400 GB/s NVLink (the A800's reduced NVLink figure, matching §4.1).
+    pub fn a800_80g() -> GpuSpec {
+        GpuSpec {
+            name: "A800-80GB".to_string(),
+            peak_flops: 312e12,
+            hbm_bandwidth: 2.039e12,
+            hbm_capacity: 80 * (1 << 30),
+            interconnect_bandwidth: 400e9,
+            mfu: 0.55,
+        }
+    }
+}
+
+/// Cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub gpu: GpuSpec,
+    pub num_gpus: usize,
+}
+
+impl ClusterConfig {
+    /// Paper testbed: 8×A800.
+    pub fn paper_testbed() -> ClusterConfig {
+        ClusterConfig { gpu: GpuSpec::a800_80g(), num_gpus: 8 }
+    }
+}
+
+/// Scheduler knobs for the EMP coordinator (defaults follow the paper's
+/// described behaviour; w is the preemption-aggressiveness penalty from
+/// Eq. 2/3).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Penalty factor w in the gain/cost models.
+    pub preempt_penalty_w: f64,
+    /// EWMA smoothing for the load monitor.
+    pub load_ewma_alpha: f64,
+    /// Re-run proactive allocation every this many sim seconds.
+    pub rebalance_interval_s: f64,
+    /// Fraction of HBM reserved for weights/activations (rest is KV pool).
+    pub kv_memory_fraction: f64,
+    /// Max requests admitted to a prefill batch.
+    pub max_prefill_batch: usize,
+    /// Max sequences in a decode batch per instance.
+    pub max_decode_batch: usize,
+    /// Decode batch-size threshold that triggers scale-up (offline
+    /// profiling in the paper; we derive it from the cost model).
+    pub decode_scale_up_batch: usize,
+    /// Enable unified multimodal prefix cache (§3.3).
+    pub unified_prefix_cache: bool,
+    /// Enable non-blocking encoding (§3.3).
+    pub non_blocking_encode: bool,
+    /// Token budget per chunked-prefill iteration.
+    pub chunked_prefill_tokens: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            preempt_penalty_w: 1.0,
+            load_ewma_alpha: 0.3,
+            rebalance_interval_s: 2.0,
+            kv_memory_fraction: 0.55,
+            max_prefill_batch: 16,
+            max_decode_batch: 256,
+            decode_scale_up_batch: 192,
+            unified_prefix_cache: true,
+            non_blocking_encode: true,
+            chunked_prefill_tokens: 2048,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama8b_params_about_8b() {
+        let m = presets::llama32_vision_11b();
+        let p = m.llm.params();
+        assert!(
+            (7.0e9..9.0e9).contains(&(p as f64)),
+            "llama-3.1-8B backend params = {p}"
+        );
+    }
+
+    #[test]
+    fn qwen7b_params_about_7b() {
+        let m = presets::qwen25_vl_7b();
+        let p = m.llm.params() as f64;
+        assert!((6.0e9..8.5e9).contains(&p), "qwen2.5-7B params = {p}");
+    }
+
+    #[test]
+    fn llama70b_params_about_70b() {
+        let m = presets::llama32_vision_90b();
+        let p = m.llm.params() as f64;
+        assert!((65e9..75e9).contains(&p), "llama-3.1-70B params = {p}");
+    }
+
+    #[test]
+    fn encoder_params_match_table1() {
+        // Table 1: ViT-H/14 ~630M (llama), ViT ~670M (qwen).
+        let l = presets::llama32_vision_11b();
+        let q = presets::qwen25_vl_7b();
+        let lp = l.encoder.params() as f64;
+        let qp = q.encoder.params() as f64;
+        assert!((0.5e9..0.8e9).contains(&lp), "llama encoder params = {lp}");
+        assert!((0.5e9..0.8e9).contains(&qp), "qwen encoder params = {qp}");
+    }
+
+    #[test]
+    fn image_tokens_match_table1() {
+        // Table 1 is for a 904x904 input image.
+        let l = presets::llama32_vision_11b();
+        let q = presets::qwen25_vl_7b();
+        let lt = l.image_tokens(904, 904);
+        let qt = q.image_tokens(904, 904);
+        assert!((5800..7200).contains(&lt), "llama 904x904 tokens = {lt}");
+        assert!((6600..8200).contains(&qt), "qwen 904x904 tokens = {qt}");
+    }
+
+    #[test]
+    fn image_tokens_clamped_to_max_tiles() {
+        let l = presets::llama32_vision_11b();
+        let huge = l.image_tokens(10_000, 10_000);
+        assert_eq!(huge, l.max_tiles * l.tokens_per_tile);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_sane() {
+        let m = presets::llama32_vision_11b();
+        // 32 layers * 8 kv heads * 128 dim * 2 (k+v) * 2 bytes = 131072
+        assert_eq!(m.llm.kv_bytes_per_token(), 131072);
+    }
+
+    #[test]
+    fn model_config_json_roundtrip() {
+        for m in presets::all_models() {
+            let j = m.to_json();
+            let back = ModelConfig::from_json(&j).unwrap();
+            assert_eq!(back.name, m.name);
+            assert_eq!(back.arch, m.arch);
+            assert_eq!(back.llm.params(), m.llm.params());
+            assert_eq!(back.image_tokens(904, 904), m.image_tokens(904, 904));
+        }
+    }
+
+    #[test]
+    fn encdec_weights_include_cross_attn() {
+        let m = presets::llama32_vision_11b();
+        let base = m.llm.params() * m.bytes_per_param;
+        assert!(m.llm_weight_bytes() > base);
+    }
+
+    #[test]
+    fn a800_fits_7b_not_70b() {
+        let gpu = GpuSpec::a800_80g();
+        let small = presets::qwen25_vl_7b();
+        let big = presets::qwen25_vl_72b();
+        assert!(small.llm_weight_bytes() < gpu.hbm_capacity);
+        assert!(big.llm_weight_bytes() > gpu.hbm_capacity);
+    }
+}

@@ -1,0 +1,157 @@
+//! Preset model configurations reproducing Table 1 of the paper.
+//!
+//! Shapes follow the published architectures (Llama-3.1-8B/70B backends,
+//! Qwen2.5-7B/72B backends, ViT-H/14-class encoders). For encoders with a
+//! *non-gated* 2-matrix MLP we store the "gated-equivalent" `ffn_hidden`
+//! (×2/3 of the real MLP width) so [`TransformerShape::params`] — which
+//! assumes a 3-matrix gated FFN, as all the LLM backends use — lands on
+//! the published parameter count.
+
+use super::{Architecture, ModelConfig, TransformerShape};
+
+/// LLaMA3.2-Vision-11B: encoder-decoder, ViT-H/14 (~630M), Llama-3.1-8B
+/// backend with 8 interleaved cross-attention layers; 6516 vision tokens
+/// for a 904×904 image (4 tiles × 1629 tokens).
+pub fn llama32_vision_11b() -> ModelConfig {
+    ModelConfig {
+        name: "Llama3.2-Vision-11B".to_string(),
+        arch: Architecture::EncoderDecoder,
+        llm: TransformerShape {
+            layers: 32,
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 8,
+            ffn_hidden: 14336,
+            vocab: 128256,
+        },
+        encoder: TransformerShape {
+            layers: 32,
+            hidden: 1280,
+            heads: 16,
+            kv_heads: 16,
+            // gated-equivalent of the real 5120-wide 2-matrix MLP
+            ffn_hidden: 3413,
+            vocab: 0,
+        },
+        cross_attn_layers: 8,
+        tokens_per_tile: 1629,
+        tile_pixels: 560,
+        max_tiles: 4,
+        bytes_per_param: 2,
+    }
+}
+
+/// LLaMA3.2-Vision-90B: same encoder, Llama-3.1-70B backend (20 cross-
+/// attention layers).
+pub fn llama32_vision_90b() -> ModelConfig {
+    let mut m = llama32_vision_11b();
+    m.name = "Llama3.2-Vision-90B".to_string();
+    m.llm = TransformerShape {
+        layers: 80,
+        hidden: 8192,
+        heads: 64,
+        kv_heads: 8,
+        ffn_hidden: 28672,
+        vocab: 128256,
+    };
+    m.cross_attn_layers = 20;
+    m
+}
+
+/// Qwen2.5-VL-7B: decoder-only, ~670M ViT, Qwen2.5-7B backend; 7408
+/// vision tokens for a 904×904 image.
+pub fn qwen25_vl_7b() -> ModelConfig {
+    ModelConfig {
+        name: "Qwen2.5-VL-7B".to_string(),
+        arch: Architecture::DecoderOnly,
+        llm: TransformerShape {
+            layers: 28,
+            hidden: 3584,
+            heads: 28,
+            kv_heads: 4,
+            ffn_hidden: 18944,
+            vocab: 152064,
+        },
+        encoder: TransformerShape {
+            layers: 32,
+            hidden: 1280,
+            heads: 16,
+            kv_heads: 16,
+            ffn_hidden: 3776,
+            vocab: 0,
+        },
+        cross_attn_layers: 0,
+        tokens_per_tile: 463,
+        tile_pixels: 226,
+        max_tiles: 64,
+        bytes_per_param: 2,
+    }
+}
+
+/// Qwen2.5-VL-72B: same encoder, Qwen2.5-72B backend.
+pub fn qwen25_vl_72b() -> ModelConfig {
+    let mut m = qwen25_vl_7b();
+    m.name = "Qwen2.5-VL-72B".to_string();
+    m.llm = TransformerShape {
+        layers: 80,
+        hidden: 8192,
+        heads: 64,
+        kv_heads: 8,
+        ffn_hidden: 29568,
+        vocab: 152064,
+    };
+    m
+}
+
+/// The four Table-1 rows.
+pub fn all_models() -> Vec<ModelConfig> {
+    vec![
+        llama32_vision_11b(),
+        llama32_vision_90b(),
+        qwen25_vl_7b(),
+        qwen25_vl_72b(),
+    ]
+}
+
+/// Look up a preset by (case-insensitive, separator-insensitive) name.
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    let norm = |s: &str| {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect::<String>()
+            .to_ascii_lowercase()
+    };
+    let target = norm(name);
+    all_models().into_iter().find(|m| norm(&m.name) == target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_matches_loose_spellings() {
+        assert!(by_name("qwen2.5-vl-7b").is_some());
+        assert!(by_name("Qwen2.5 VL 7B").is_some());
+        assert!(by_name("llama3.2-vision-11b").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn table1_image_token_counts() {
+        // Paper's Table 1 at 904×904: 6516 (llama), 7410 (qwen, ±1 tile
+        // rounding — our tiling lands on 7408).
+        assert_eq!(llama32_vision_11b().image_tokens(904, 904), 6516);
+        let q = qwen25_vl_7b().image_tokens(904, 904);
+        assert!((q as i64 - 7410).unsigned_abs() < 32, "qwen tokens {q}");
+    }
+
+    #[test]
+    fn all_models_have_distinct_names() {
+        let names: Vec<_> = all_models().iter().map(|m| m.name.clone()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+}

@@ -1,0 +1,251 @@
+//! Gain/cost models for elastic preemption decisions — Eq. (2) and
+//! Eq. (3) of the paper.
+//!
+//! * Eq. 2 (prefill acquisition): adding decode instance `e_max` to the
+//!   prefill set `E_p` accelerates the pending prefill batch `R_p`; the
+//!   cost is migrating `e_max`'s KV plus the slowdown of the remaining
+//!   decode set.
+//! * Eq. 3 (decode scale-up): adding `e_max` to the decode set relieves
+//!   a decode bottleneck; the cost is the slowdown of the prefill set
+//!   that loses the instance.
+//!
+//! Both normalize per-token (gain by `input_len`, cost by `output_len`)
+//! and weight the performance-impact term with the tunable penalty `w`.
+
+use crate::model::{CostModel, DecodeItem, PrefillItem};
+
+/// Description of a pending prefill batch (R_p).
+#[derive(Debug, Clone)]
+pub struct PrefillSet {
+    pub items: Vec<PrefillItem>,
+}
+
+impl PrefillSet {
+    pub fn total_input_len(&self) -> usize {
+        self.items.iter().map(|i| i.new_tokens + i.cached_tokens).sum()
+    }
+}
+
+/// Description of a decode instance's resident batch (B_d on e_max).
+#[derive(Debug, Clone)]
+pub struct DecodeSet {
+    pub items: Vec<DecodeItem>,
+    /// Remaining output tokens per sequence (for per-token normalization
+    /// and slowdown horizon).
+    pub remaining_out: Vec<usize>,
+}
+
+impl DecodeSet {
+    pub fn resident_tokens(&self) -> usize {
+        self.items.iter().map(|i| i.context_len).sum()
+    }
+
+    pub fn avg_remaining(&self) -> f64 {
+        if self.remaining_out.is_empty() {
+            return 0.0;
+        }
+        self.remaining_out.iter().sum::<usize>() as f64 / self.remaining_out.len() as f64
+    }
+}
+
+/// Eq. 2 — should prefill preempt decode instance `e_max`?
+///
+/// `r_p`: pending prefill batch; `e_p`: current prefill DP width;
+/// `victim`: the batch resident on `e_max` (its sequences migrate to the
+/// surviving decode instances, whose merged batch is `merged_after`).
+pub fn prefill_preemption(
+    cost: &CostModel,
+    r_p: &PrefillSet,
+    e_p: usize,
+    victim: &DecodeSet,
+    merged_after: &[DecodeItem],
+    merged_before: &[DecodeItem],
+    tp: usize,
+    w: f64,
+) -> GainCost {
+    // Gain: batch-level speedup, normalized by total input length.
+    let t_now = cost.prefill_time_dp(&r_p.items, e_p.max(1), tp);
+    let t_more = cost.prefill_time_dp(&r_p.items, e_p + 1, tp);
+    let speedup = (t_now - t_more).max(0.0);
+    let gain = r_p
+        .items
+        .iter()
+        .map(|it| speedup / (it.new_tokens + it.cached_tokens).max(1) as f64)
+        .sum::<f64>();
+
+    // Cost: migration of e_max's KV + slowdown L of the preempted
+    // computation over its remaining horizon.
+    let m = cost.migration_time(victim.resident_tokens());
+    let step_before = cost.decode_step_time(merged_before, tp);
+    let step_after = cost.decode_step_time(merged_after, tp);
+    let l = (step_after - step_before).max(0.0) * victim.avg_remaining();
+    let c = victim
+        .remaining_out
+        .iter()
+        .map(|&out| (m + w * l) / out.max(1) as f64)
+        .sum::<f64>();
+    GainCost { gain, cost: c }
+}
+
+/// Eq. 3 — should decode scale up by taking `e_max` from prefill?
+///
+/// `b_d`: the bottlenecked decode batch; `avg_lat_d`: its current
+/// per-step latency; `e_d`: current decode width (the candidate joins
+/// it); `r_p_remaining`: prefill work that loses an instance (width
+/// `e_p` → `e_p - 1`).
+pub fn decode_scale_up(
+    cost: &CostModel,
+    b_d: &DecodeSet,
+    avg_lat_d: f64,
+    e_d: usize,
+    r_p_remaining: &PrefillSet,
+    e_p: usize,
+    tp: usize,
+    w: f64,
+) -> GainCost {
+    // Gain: splitting the decode batch over e_d+1 instances.
+    let split: Vec<DecodeItem> = {
+        // Model post-scale batch: e_max takes 1/(e_d+1) of the sequences.
+        let keep = b_d.items.len() - b_d.items.len() / (e_d + 1);
+        b_d.items.iter().take(keep.max(1)).copied().collect()
+    };
+    let t_after = cost.decode_step_time(&split, tp);
+    let speedup = (avg_lat_d - t_after).max(0.0) * b_d.avg_remaining();
+    let gain = b_d
+        .remaining_out
+        .iter()
+        .map(|&out| speedup / out.max(1) as f64)
+        .sum::<f64>();
+
+    // Cost: migration of the moved share + prefill slowdown.
+    let moved = b_d.items.len() / (e_d + 1);
+    let moved_tokens: usize =
+        b_d.items.iter().rev().take(moved).map(|i| i.context_len).sum();
+    let m = cost.migration_time(moved_tokens);
+    let t_now = cost.prefill_time_dp(&r_p_remaining.items, e_p.max(1), tp);
+    let t_less = cost.prefill_time_dp(&r_p_remaining.items, (e_p - 1).max(1), tp);
+    let l = (t_less - t_now).max(0.0);
+    let c = r_p_remaining
+        .items
+        .iter()
+        .map(|it| (m + w * l) / (it.new_tokens + it.cached_tokens).max(1) as f64)
+        .sum::<f64>();
+    GainCost { gain, cost: c }
+}
+
+/// A gain/cost verdict.
+#[derive(Debug, Clone, Copy)]
+pub struct GainCost {
+    pub gain: f64,
+    pub cost: f64,
+}
+
+impl GainCost {
+    pub fn net(&self) -> f64 {
+        self.gain - self.cost
+    }
+
+    pub fn beneficial(&self) -> bool {
+        self.gain > self.cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, GpuSpec};
+
+    fn cost() -> CostModel {
+        CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+    }
+
+    fn prefill_set(n: usize, tokens: usize) -> PrefillSet {
+        PrefillSet {
+            items: (0..n)
+                .map(|_| PrefillItem {
+                    new_tokens: tokens,
+                    cached_tokens: 0,
+                    vision_tokens: 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn decode_set(n: usize, ctx: usize, remaining: usize) -> DecodeSet {
+        DecodeSet {
+            items: (0..n)
+                .map(|_| DecodeItem { context_len: ctx, vision_tokens: 0 })
+                .collect(),
+            remaining_out: vec![remaining; n],
+        }
+    }
+
+    #[test]
+    fn big_prefill_backlog_justifies_preemption() {
+        let c = cost();
+        // Heavy prefill queue, tiny decode victim with long runway left.
+        let rp = prefill_set(8, 8192);
+        let victim = decode_set(2, 256, 4);
+        let before: Vec<DecodeItem> = decode_set(8, 512, 32).items;
+        let mut after = before.clone();
+        after.extend(&victim.items);
+        let gc = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 1.0);
+        assert!(gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
+    }
+
+    #[test]
+    fn small_prefill_does_not_justify_preemption() {
+        let c = cost();
+        let rp = prefill_set(1, 64);
+        let victim = decode_set(64, 2048, 512);
+        let before: Vec<DecodeItem> = decode_set(64, 2048, 512).items;
+        let mut after = before.clone();
+        after.extend(&victim.items);
+        let gc = prefill_preemption(&c, &rp, 2, &victim, &after, &before, 1, 1.0);
+        assert!(!gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
+    }
+
+    #[test]
+    fn penalty_w_dampens_preemption() {
+        let c = cost();
+        let rp = prefill_set(4, 4096);
+        let victim = decode_set(16, 1024, 64);
+        let before: Vec<DecodeItem> = decode_set(32, 1024, 64).items;
+        let mut after = before.clone();
+        after.extend(&victim.items);
+        let low_w = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 0.1);
+        let high_w = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 10.0);
+        assert!(low_w.net() > high_w.net());
+    }
+
+    #[test]
+    fn overloaded_decode_wants_scale_up() {
+        let c = cost();
+        // 256 long sequences on one decode instance, almost no prefill
+        // work left: scale-up should win.
+        let bd = decode_set(256, 2048, 256);
+        let step = c.decode_step_time(&bd.items, 1);
+        let rp = prefill_set(1, 128);
+        let gc = decode_scale_up(&c, &bd, step, 1, &rp, 3, 1, 1.0);
+        assert!(gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
+    }
+
+    #[test]
+    fn light_decode_does_not_scale_up() {
+        let c = cost();
+        let bd = decode_set(2, 128, 4);
+        let step = c.decode_step_time(&bd.items, 1);
+        let rp = prefill_set(8, 8192);
+        let gc = decode_scale_up(&c, &bd, step, 1, &rp, 2, 1, 1.0);
+        assert!(!gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
+    }
+
+    #[test]
+    fn gain_cost_net_and_verdict_consistent() {
+        let gc = GainCost { gain: 2.0, cost: 1.0 };
+        assert!(gc.beneficial());
+        assert!((gc.net() - 1.0).abs() < 1e-12);
+        let gc2 = GainCost { gain: 1.0, cost: 2.0 };
+        assert!(!gc2.beneficial());
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's contribution: Elastic Multimodal Parallelism.
+//!
+//! * [`modality`] — modality-aware load balancing (Eq. 1, §3.1),
+//! * [`gain_cost`] — the Eq. 2 / Eq. 3 preemption economics (§3.2),
+//! * [`system`] — the ElasticMM serving system tying modality groups,
+//!   stage partition scheduling, the unified multimodal prefix cache and
+//!   non-blocking encoding together on the cluster simulator.
+
+pub mod gain_cost;
+pub mod modality;
+pub mod system;
+
+pub use system::{EmpOptions, EmpStats, EmpSystem};

@@ -1,0 +1,271 @@
+//! Modality-aware load balancing (§3.1): the modality-level manager's
+//! *proactive* allocation via burst tolerance (Eq. 1) and the decision
+//! logic for *reactive* inter-group scaling.
+//!
+//! These are pure functions over observed load so they can be unit- and
+//! property-tested independently of the event loop in `system.rs`.
+
+use crate::util::stats::Ewma;
+use std::collections::VecDeque;
+
+/// Sliding-window load monitor for one modality group. Tracks arrival
+/// rate (EWMA-smoothed) and the *GPU demand* of arriving requests
+/// (instance-seconds of work per second of wall time).
+#[derive(Debug)]
+pub struct LoadMonitor {
+    /// (arrival time, estimated instance-seconds of work) per request.
+    window: VecDeque<(f64, f64)>,
+    pub window_s: f64,
+    pub rate: Ewma,
+    pub demand: Ewma,
+    last_update: f64,
+}
+
+impl LoadMonitor {
+    pub fn new(window_s: f64, alpha: f64) -> Self {
+        LoadMonitor {
+            window: VecDeque::new(),
+            window_s,
+            rate: Ewma::new(alpha),
+            demand: Ewma::new(alpha),
+            last_update: 0.0,
+        }
+    }
+
+    pub fn record_arrival(&mut self, now: f64, work_s: f64) {
+        self.window.push_back((now, work_s));
+        self.expire(now);
+    }
+
+    fn expire(&mut self, now: f64) {
+        while let Some(&(t, _)) = self.window.front() {
+            if now - t > self.window_s {
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Refresh the EWMAs; call periodically (e.g. each rebalance tick).
+    pub fn tick(&mut self, now: f64) {
+        self.expire(now);
+        let span = self.window_s.min(now.max(1e-9));
+        let rate = self.window.len() as f64 / span;
+        let demand: f64 = self.window.iter().map(|&(_, w)| w).sum::<f64>() / span;
+        self.rate.update(rate);
+        self.demand.update(demand);
+        self.last_update = now;
+    }
+
+    /// Average instance demand N_avg: GPU-seconds of arriving work per
+    /// wall second = number of busy instances needed on average.
+    pub fn avg_instances_needed(&self) -> f64 {
+        self.demand.get().max(1e-6)
+    }
+
+    /// Peak demand over the window (un-smoothed max over sub-buckets),
+    /// the numerator's driver in Eq. 1.
+    pub fn peak_instances_needed(&self) -> f64 {
+        if self.window.is_empty() {
+            return self.avg_instances_needed();
+        }
+        // Bucket the window into 1-second cells and take the max cell.
+        let t0 = self.window.front().unwrap().0;
+        let mut buckets: Vec<f64> = Vec::new();
+        for &(t, w) in &self.window {
+            let idx = (t - t0).floor() as usize;
+            if idx >= buckets.len() {
+                buckets.resize(idx + 1, 0.0);
+            }
+            buckets[idx] += w;
+        }
+        buckets.iter().fold(0.0f64, |a, &b| a.max(b)).max(self.avg_instances_needed())
+    }
+}
+
+/// Burst tolerance (Eq. 1): peak-available over average-required
+/// instances for a group. `allocated` counts the instances the group
+/// can use at peak (its current allocation); `avg_needed` is N_avg.
+pub fn burst_tolerance(allocated: usize, avg_needed: f64) -> f64 {
+    allocated as f64 / avg_needed.max(1e-6)
+}
+
+/// Proactive allocation (§3.1): greedily assign `total` instances so the
+/// *minimum* burst tolerance across groups is maximized — each instance
+/// goes to the group with the lowest current bt. Every group always
+/// receives at least `min_per_group`.
+pub fn proactive_allocation(
+    total: usize,
+    avg_needed: &[f64],
+    min_per_group: usize,
+) -> Vec<usize> {
+    let g = avg_needed.len();
+    assert!(g > 0 && total >= g * min_per_group);
+    let mut alloc = vec![min_per_group; g];
+    for _ in 0..(total - g * min_per_group) {
+        // Lowest burst tolerance gets the next instance.
+        let target = (0..g)
+            .min_by(|&a, &b| {
+                burst_tolerance(alloc[a], avg_needed[a])
+                    .partial_cmp(&burst_tolerance(alloc[b], avg_needed[b]))
+                    .unwrap()
+            })
+            .unwrap();
+        alloc[target] += 1;
+    }
+    alloc
+}
+
+/// Reactive-scaling decision (§3.1): given current allocations and
+/// demands, should `needy` preempt an instance from `donor` right now?
+/// True when the needy group is under-provisioned (bt < 1) while the
+/// donor retains slack even after losing one instance.
+pub fn should_preempt_inter_group(
+    needy_alloc: usize,
+    needy_avg: f64,
+    donor_alloc: usize,
+    donor_avg: f64,
+    min_per_group: usize,
+) -> bool {
+    if donor_alloc <= min_per_group {
+        return false;
+    }
+    let bt_needy = burst_tolerance(needy_alloc, needy_avg);
+    let bt_donor_after = burst_tolerance(donor_alloc - 1, donor_avg);
+    bt_needy < 1.0 && bt_donor_after > bt_needy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn monitor_tracks_rate() {
+        let mut m = LoadMonitor::new(10.0, 1.0);
+        for i in 0..50 {
+            m.record_arrival(i as f64 * 0.2, 0.1);
+        }
+        m.tick(10.0);
+        // 5 arrivals/s * 0.1 inst-s each = 0.5 instances needed.
+        assert!((m.avg_instances_needed() - 0.5).abs() < 0.1);
+        assert!(m.peak_instances_needed() >= m.avg_instances_needed());
+    }
+
+    #[test]
+    fn monitor_expires_old_entries() {
+        let mut m = LoadMonitor::new(5.0, 1.0);
+        m.record_arrival(0.0, 1.0);
+        m.record_arrival(100.0, 1.0);
+        m.tick(100.0);
+        assert_eq!(m.window.len(), 1);
+    }
+
+    #[test]
+    fn proactive_favors_needier_group() {
+        // Group 1 needs 3x the capacity of group 0.
+        let alloc = proactive_allocation(8, &[1.0, 3.0], 1);
+        assert_eq!(alloc.iter().sum::<usize>(), 8);
+        assert!(alloc[1] > alloc[0]);
+        // Burst tolerances end up roughly equal.
+        let bt0 = burst_tolerance(alloc[0], 1.0);
+        let bt1 = burst_tolerance(alloc[1], 3.0);
+        assert!((bt0 - bt1).abs() < 1.01, "bt0={bt0} bt1={bt1}");
+    }
+
+    #[test]
+    fn proactive_respects_minimum() {
+        let alloc = proactive_allocation(8, &[0.0001, 10.0], 1);
+        assert_eq!(alloc[0], 1, "idle group keeps its minimum");
+        assert_eq!(alloc[1], 7);
+    }
+
+    #[test]
+    fn equal_demand_splits_evenly() {
+        let alloc = proactive_allocation(8, &[2.0, 2.0], 1);
+        assert_eq!(alloc, vec![4, 4]);
+    }
+
+    #[test]
+    fn preemption_requires_real_shortage() {
+        // Needy group at bt 0.5, donor with slack: preempt.
+        assert!(should_preempt_inter_group(2, 4.0, 6, 2.0, 1));
+        // Needy group fine (bt >= 1): no preemption.
+        assert!(!should_preempt_inter_group(4, 2.0, 4, 2.0, 1));
+        // Donor at minimum: never.
+        assert!(!should_preempt_inter_group(1, 10.0, 1, 0.1, 1));
+        // Donor would become worse off than the needy group: no.
+        assert!(!should_preempt_inter_group(3, 4.0, 2, 8.0, 1));
+    }
+
+    #[test]
+    fn prop_allocation_total_and_minimums_hold() {
+        check(
+            0xA110C,
+            300,
+            |g| {
+                let groups = g.usize_in(2, 4);
+                let total = g.usize_in(groups, 16);
+                let demands: Vec<f64> =
+                    (0..groups).map(|_| g.f64_in(0.01, 10.0)).collect();
+                (total, demands)
+            },
+            |(total, demands)| {
+                let alloc = proactive_allocation(*total, demands, 1);
+                if alloc.iter().sum::<usize>() != *total {
+                    return Err("allocation total mismatch".into());
+                }
+                if alloc.iter().any(|&a| a < 1) {
+                    return Err("minimum violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_allocation_maximizes_min_bt_greedily() {
+        // Moving one instance from the highest-bt group to the lowest-bt
+        // group must not improve the minimum bt (greedy local optimum).
+        check(
+            0xB7,
+            200,
+            |g| {
+                let demands: Vec<f64> = (0..3).map(|_| g.f64_in(0.1, 5.0)).collect();
+                let total = g.usize_in(4, 14);
+                (total, demands)
+            },
+            |(total, demands)| {
+                let alloc = proactive_allocation(*total, demands, 1);
+                let bt: Vec<f64> = alloc
+                    .iter()
+                    .zip(demands)
+                    .map(|(&a, &d)| burst_tolerance(a, d))
+                    .collect();
+                let min_bt = bt.iter().cloned().fold(f64::INFINITY, f64::min);
+                for from in 0..alloc.len() {
+                    for to in 0..alloc.len() {
+                        if from == to || alloc[from] <= 1 {
+                            continue;
+                        }
+                        let mut trial = alloc.clone();
+                        trial[from] -= 1;
+                        trial[to] += 1;
+                        let trial_min = trial
+                            .iter()
+                            .zip(demands)
+                            .map(|(&a, &d)| burst_tolerance(a, d))
+                            .fold(f64::INFINITY, f64::min);
+                        if trial_min > min_bt + 1e-9 {
+                            return Err(format!(
+                                "move {from}->{to} improves min bt: {trial_min} > {min_bt}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Image-hash → vision-token cache: the first pool of the Unified
+//! Multimodal Prefix Cache (§3.3). "When a multimodal input is received,
+//! we generate a hash. If the hash matches an existing entry, we skip
+//! re-encoding and use the cached tokens." LRU-evicted under a token
+//! budget like the prefix pool.
+
+use std::collections::HashMap;
+
+/// FNV-1a — the deterministic content hash for image payloads. The
+/// simulator hashes `(content_id, w, h, model tiling)`; the real path
+/// hashes actual pixel bytes.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash an image descriptor (simulation path).
+pub fn hash_image_desc(content_id: u64, width: usize, height: usize) -> u64 {
+    let mut buf = [0u8; 24];
+    buf[..8].copy_from_slice(&content_id.to_le_bytes());
+    buf[8..16].copy_from_slice(&(width as u64).to_le_bytes());
+    buf[16..24].copy_from_slice(&(height as u64).to_le_bytes());
+    fnv1a(&buf)
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Vision-token count held by this entry (cost accounting).
+    tokens: usize,
+    last_access: u64,
+    hits: u64,
+    /// Opaque payload: the simulator stores nothing; the real engine
+    /// stores an artifact key for the encoded literal.
+    pub payload: Option<u64>,
+}
+
+/// LRU vision-token cache with a token-count budget.
+#[derive(Debug)]
+pub struct ImageCache {
+    map: HashMap<u64, Entry>,
+    clock: u64,
+    cached_tokens: usize,
+    pub capacity_tokens: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ImageCache {
+    pub fn new(capacity_tokens: usize) -> Self {
+        ImageCache {
+            map: HashMap::new(),
+            clock: 0,
+            cached_tokens: 0,
+            capacity_tokens,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn cached_tokens(&self) -> usize {
+        self.cached_tokens
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up an image hash; `Some(payload)` on hit (skip re-encoding).
+    pub fn lookup(&mut self, hash: u64) -> Option<Option<u64>> {
+        self.clock += 1;
+        if let Some(e) = self.map.get_mut(&hash) {
+            e.last_access = self.clock;
+            e.hits += 1;
+            self.hits += 1;
+            Some(e.payload)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Insert encoded tokens for a hash, evicting LRU entries if needed.
+    pub fn insert(&mut self, hash: u64, tokens: usize, payload: Option<u64>) {
+        self.clock += 1;
+        if let Some(old) = self.map.remove(&hash) {
+            self.cached_tokens -= old.tokens;
+        }
+        if self.capacity_tokens > 0 {
+            while self.cached_tokens + tokens > self.capacity_tokens && !self.map.is_empty()
+            {
+                self.evict_one();
+            }
+            if tokens > self.capacity_tokens {
+                return; // single entry larger than the pool: don't cache
+            }
+        }
+        self.cached_tokens += tokens;
+        self.map.insert(
+            hash,
+            Entry { tokens, last_access: self.clock, hits: 0, payload },
+        );
+    }
+
+    fn evict_one(&mut self) {
+        if let Some((&h, _)) =
+            self.map.iter().min_by_key(|(_, e)| e.last_access)
+        {
+            let e = self.map.remove(&h).unwrap();
+            self.cached_tokens -= e.tokens;
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_distinguishes_inputs() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+        assert_ne!(hash_image_desc(1, 904, 904), hash_image_desc(1, 905, 904));
+        assert_ne!(hash_image_desc(1, 904, 904), hash_image_desc(2, 904, 904));
+        assert_eq!(hash_image_desc(3, 448, 448), hash_image_desc(3, 448, 448));
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = ImageCache::new(100_000);
+        let h = hash_image_desc(42, 904, 904);
+        assert!(c.lookup(h).is_none());
+        c.insert(h, 6516, Some(7));
+        assert_eq!(c.lookup(h), Some(Some(7)));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let mut c = ImageCache::new(10_000);
+        c.insert(1, 6000, None);
+        c.insert(2, 3000, None);
+        // Touch 1 so 2 becomes the LRU victim.
+        c.lookup(1);
+        c.insert(3, 5000, None); // must evict 2 (and possibly more)
+        assert!(c.cached_tokens() <= 10_000);
+        assert!(c.lookup(2).is_none());
+    }
+
+    #[test]
+    fn oversized_entry_not_cached() {
+        let mut c = ImageCache::new(1000);
+        c.insert(9, 5000, None);
+        assert_eq!(c.cached_tokens(), 0);
+        assert!(c.lookup(9).is_none());
+    }
+
+    #[test]
+    fn reinsert_updates_size() {
+        let mut c = ImageCache::new(100_000);
+        c.insert(5, 1000, None);
+        c.insert(5, 2000, None);
+        assert_eq!(c.cached_tokens(), 2000);
+        assert_eq!(c.len(), 1);
+    }
+}

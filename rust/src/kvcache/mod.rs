@@ -1,0 +1,16 @@
+//! KV-cache subsystem (§3.3 and Appendix A of the paper):
+//!
+//! * [`paged`] — PagedAttention-style block allocator managing each
+//!   instance's KV pool at token granularity.
+//! * [`radix`] — radix (prefix) tree over token sequences with reference
+//!   counts and LRU eviction; backs the "prefix tokens from unified
+//!   sequences" cache pool.
+//! * [`image_cache`] — hash → vision-token cache; backs the "tokens
+//!   encoded from multimodal inputs" pool.
+//! * [`unified`] — the Unified Multimodal Prefix Cache combining both
+//!   pools behind one lookup/insert API.
+
+pub mod paged;
+pub mod radix;
+pub mod image_cache;
+pub mod unified;

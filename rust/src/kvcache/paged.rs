@@ -1,0 +1,316 @@
+//! Paged KV-cache block allocator.
+//!
+//! Mirrors vLLM's PagedAttention bookkeeping (the paper builds on vLLM
+//! v0.6.6 and manages "the KV cache pool ... at the granularity of a
+//! single token", Appendix A): the pool is divided into fixed-size
+//! blocks; a sequence owns a chain of blocks; blocks are copy-on-write
+//! refcounted so prefix sharing costs nothing.
+
+use std::collections::HashMap;
+
+pub type SeqId = u64;
+
+/// Block-level allocator. Only bookkeeping — the simulator never
+/// materializes tensors, and the real path stores literals elsewhere.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pub block_tokens: usize,
+    pub total_blocks: usize,
+    free: Vec<u32>,
+    refcount: Vec<u32>,
+    /// Per-sequence block table + token count.
+    tables: HashMap<SeqId, SeqEntry>,
+}
+
+#[derive(Debug, Clone)]
+struct SeqEntry {
+    blocks: Vec<u32>,
+    tokens: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KvError {
+    #[error("out of KV blocks (need {need}, free {free})")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(SeqId),
+    #[error("sequence {0} already exists")]
+    DuplicateSeq(SeqId),
+}
+
+impl PagedKvCache {
+    pub fn new(total_tokens: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = total_tokens / block_tokens;
+        PagedKvCache {
+            block_tokens,
+            total_blocks,
+            free: (0..total_blocks as u32).rev().collect(),
+            refcount: vec![0; total_blocks],
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * self.block_tokens
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.tables.values().map(|e| e.tokens).sum()
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|e| e.tokens)
+    }
+
+    /// Blocks needed to extend a sequence by `new_tokens`.
+    pub fn blocks_needed(&self, seq: SeqId, new_tokens: usize) -> usize {
+        let current = self.tables.get(&seq).map(|e| e.tokens).unwrap_or(0);
+        let have = self.tables.get(&seq).map(|e| e.blocks.len()).unwrap_or(0);
+        (current + new_tokens).div_ceil(self.block_tokens).saturating_sub(have)
+    }
+
+    /// Can the pool hold a *new* sequence of `tokens`?
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        tokens.div_ceil(self.block_tokens) <= self.free.len()
+    }
+
+    /// Register a new sequence with `tokens` already computed (prefill).
+    pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> Result<(), KvError> {
+        if self.tables.contains_key(&seq) {
+            return Err(KvError::DuplicateSeq(seq));
+        }
+        let need = tokens.div_ceil(self.block_tokens);
+        if need > self.free.len() {
+            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b as usize] = 1;
+            blocks.push(b);
+        }
+        self.tables.insert(seq, SeqEntry { blocks, tokens });
+        Ok(())
+    }
+
+    /// Append `new_tokens` to an existing sequence (decode growth).
+    pub fn extend(&mut self, seq: SeqId, new_tokens: usize) -> Result<(), KvError> {
+        let need = self.blocks_needed(seq, new_tokens);
+        if need > self.free.len() {
+            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let entry = self.tables.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b as usize] = 1;
+            entry.blocks.push(b);
+        }
+        entry.tokens += new_tokens;
+        Ok(())
+    }
+
+    /// Fork: `child` shares `parent`'s blocks copy-on-write (prefix
+    /// reuse). Only whole shared-prefix blocks are shared; the tail
+    /// block is duplicated conservatively.
+    pub fn fork(&mut self, parent: SeqId, child: SeqId, prefix_tokens: usize) -> Result<(), KvError> {
+        if self.tables.contains_key(&child) {
+            return Err(KvError::DuplicateSeq(child));
+        }
+        let parent_entry =
+            self.tables.get(&parent).ok_or(KvError::UnknownSeq(parent))?.clone();
+        let prefix = prefix_tokens.min(parent_entry.tokens);
+        let shared_blocks = prefix / self.block_tokens;
+        let mut blocks = Vec::new();
+        for &b in parent_entry.blocks.iter().take(shared_blocks) {
+            self.refcount[b as usize] += 1;
+            blocks.push(b);
+        }
+        self.tables.insert(
+            child,
+            SeqEntry { blocks, tokens: shared_blocks * self.block_tokens },
+        );
+        Ok(())
+    }
+
+    /// Release a sequence, returning blocks whose refcount reached zero.
+    pub fn release(&mut self, seq: SeqId) -> Result<usize, KvError> {
+        let entry = self.tables.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let mut freed = 0;
+        for b in entry.blocks {
+            let rc = &mut self.refcount[b as usize];
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+                freed += 1;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Internal consistency check (used by property tests): every block
+    /// is either free with rc=0 or owned with rc = number of owners.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut owners = vec![0u32; self.total_blocks];
+        for e in self.tables.values() {
+            for &b in &e.blocks {
+                owners[b as usize] += 1;
+            }
+        }
+        for (i, (&rc, &own)) in self.refcount.iter().zip(&owners).enumerate() {
+            if rc != own {
+                return Err(format!("block {i}: refcount {rc} != owners {own}"));
+            }
+        }
+        let free_set: std::collections::HashSet<u32> = self.free.iter().copied().collect();
+        if free_set.len() != self.free.len() {
+            return Err("duplicate blocks in free list".into());
+        }
+        for &b in &self.free {
+            if self.refcount[b as usize] != 0 {
+                return Err(format!("free block {b} has nonzero refcount"));
+            }
+        }
+        if free_set.len() + owners.iter().filter(|&&o| o > 0).count() != self.total_blocks
+        {
+            return Err("block leak: free + owned != total".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        assert_eq!(kv.free_blocks(), 64);
+        kv.allocate(1, 100).unwrap();
+        assert_eq!(kv.free_blocks(), 64 - 7);
+        assert_eq!(kv.seq_tokens(1), Some(100));
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 64);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_grows_blocks_lazily() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        kv.allocate(1, 16).unwrap();
+        assert_eq!(kv.free_blocks(), 63);
+        // 15 more tokens fit in... no: 16 used exactly fills block 0.
+        kv.extend(1, 1).unwrap();
+        assert_eq!(kv.free_blocks(), 62);
+        // 14 more tokens fill up block 1 (15+... 17 -> 31 within 2 blocks)
+        kv.extend(1, 14).unwrap();
+        assert_eq!(kv.free_blocks(), 62);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_blocks_is_clean_error() {
+        let mut kv = PagedKvCache::new(64, 16);
+        kv.allocate(1, 64).unwrap();
+        assert!(matches!(kv.allocate(2, 1), Err(KvError::OutOfBlocks { .. })));
+        assert!(matches!(kv.extend(1, 1), Err(KvError::OutOfBlocks { .. })));
+        // Failed ops must not corrupt state.
+        kv.check_invariants().unwrap();
+        kv.release(1).unwrap();
+        kv.allocate(2, 64).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_and_unknown_seq_errors() {
+        let mut kv = PagedKvCache::new(256, 16);
+        kv.allocate(1, 10).unwrap();
+        assert_eq!(kv.allocate(1, 10), Err(KvError::DuplicateSeq(1)));
+        assert_eq!(kv.release(99), Err(KvError::UnknownSeq(99)));
+        assert_eq!(kv.extend(99, 1), Err(KvError::UnknownSeq(99)));
+    }
+
+    #[test]
+    fn fork_shares_whole_blocks() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        kv.allocate(1, 100).unwrap(); // 7 blocks
+        let before = kv.free_blocks();
+        kv.fork(1, 2, 64).unwrap(); // 4 whole blocks shared
+        assert_eq!(kv.free_blocks(), before); // no new blocks
+        assert_eq!(kv.seq_tokens(2), Some(64));
+        // Parent release keeps shared blocks alive.
+        kv.release(1).unwrap();
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.seq_tokens(2), Some(64));
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_blocks(), 64);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_then_extend_is_cow_safe() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        kv.allocate(1, 64).unwrap();
+        kv.fork(1, 2, 64).unwrap();
+        kv.extend(2, 32).unwrap();
+        assert_eq!(kv.seq_tokens(2), Some(96));
+        assert_eq!(kv.seq_tokens(1), Some(64));
+        kv.check_invariants().unwrap();
+    }
+
+    /// Property: any interleaving of allocate/extend/fork/release keeps
+    /// the allocator's block accounting exact.
+    #[test]
+    fn prop_block_accounting_exact() {
+        #[derive(Debug, Clone)]
+        enum Op {
+            Alloc(u64, usize),
+            Extend(u64, usize),
+            Fork(u64, u64, usize),
+            Release(u64),
+        }
+        check(
+            0xE1A5,
+            300,
+            |g| {
+                let n = g.usize_in(5, 40);
+                (0..n)
+                    .map(|i| match g.usize_in(0, 3) {
+                        0 => Op::Alloc(g.usize_in(0, 8) as u64, g.usize_in(1, 200)),
+                        1 => Op::Extend(g.usize_in(0, 8) as u64, g.usize_in(1, 64)),
+                        2 => Op::Fork(
+                            g.usize_in(0, 8) as u64,
+                            (10 + i) as u64,
+                            g.usize_in(0, 128),
+                        ),
+                        _ => Op::Release(g.usize_in(0, 8) as u64),
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut kv = PagedKvCache::new(2048, 16);
+                for op in ops {
+                    // Errors are fine; corruption is not.
+                    let _ = match *op {
+                        Op::Alloc(s, t) => kv.allocate(s, t).err(),
+                        Op::Extend(s, t) => kv.extend(s, t).err(),
+                        Op::Fork(p, c, t) => kv.fork(p, c, t).err(),
+                        Op::Release(s) => kv.release(s).map(|_| ()).err(),
+                    };
+                    kv.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,294 @@
+//! The Unified Multimodal Prefix Cache (§3.3): one lookup/insert API
+//! over two pools —
+//!
+//! 1. the [`ImageCache`] pool for tokens encoded from multimodal inputs
+//!    (hash hit ⇒ skip re-encoding), and
+//! 2. the [`RadixTree`] pool for KV prefixes of *unified* sequences
+//!    (vision tokens merged with text tokens ⇒ longest-prefix hit skips
+//!    that much prefill).
+//!
+//! For the simulator, a request's "unified sequence" is synthesized
+//! deterministically from its shared-prefix id, its images' content
+//! hashes, and its own id, so two requests share cached tokens exactly
+//! when the paper's hashing scheme would say they do.
+
+use super::image_cache::{hash_image_desc, ImageCache};
+use super::radix::{MatchResult, RadixTree};
+use crate::config::ModelConfig;
+use crate::workload::Request;
+
+/// What the cache did for one request.
+#[derive(Debug)]
+pub struct CacheOutcome {
+    /// Vision tokens per image that must actually be encoded (misses).
+    pub images_to_encode: Vec<usize>,
+    /// Vision tokens served from the image pool.
+    pub vision_tokens_cached: usize,
+    /// Unified-sequence prefix found in the KV pool (skips prefill).
+    pub prefix_hit_tokens: usize,
+    /// Total unified sequence length (text + vision tokens).
+    pub total_tokens: usize,
+    /// Pin on the radix path; release via [`UnifiedCache::release`].
+    pub kv_path: MatchResult,
+}
+
+impl CacheOutcome {
+    /// Tokens that still need prefill computation.
+    pub fn prefill_tokens(&self) -> usize {
+        self.total_tokens - self.prefix_hit_tokens
+    }
+}
+
+/// Unified two-pool cache.
+#[derive(Debug)]
+pub struct UnifiedCache {
+    pub image_pool: ImageCache,
+    pub kv_pool: RadixTree,
+    /// When false the whole cache is a no-op (ablation: ElasticMM-EMP).
+    pub enabled: bool,
+}
+
+impl UnifiedCache {
+    pub fn new(image_pool_tokens: usize, kv_pool_tokens: usize) -> Self {
+        UnifiedCache {
+            image_pool: ImageCache::new(image_pool_tokens),
+            kv_pool: RadixTree::new(kv_pool_tokens),
+            enabled: true,
+        }
+    }
+
+    pub fn disabled() -> Self {
+        let mut c = UnifiedCache::new(0, 0);
+        c.enabled = false;
+        c
+    }
+
+    /// Build the unified token sequence for a request. Layout:
+    /// `[shared prefix tokens][image tokens][unique tail tokens]` —
+    /// matching the paper's "merge vision tokens with text tokens, then
+    /// check the prefix tree" order. Token values are synthesized ids:
+    /// real token identity is irrelevant to scheduling, only *equality
+    /// structure* matters.
+    pub fn unified_sequence(&self, req: &Request, model: &ModelConfig) -> Vec<u32> {
+        let mut seq = Vec::new();
+        // Shared text prefix (system prompt etc.).
+        if req.prefix_id != 0 {
+            let base = 0x1000_0000u32 + (req.prefix_id as u32) * 0x10000;
+            for i in 0..req.prefix_tokens {
+                seq.push(base + i as u32);
+            }
+        }
+        // Vision tokens, identified by content hash so identical images
+        // in different requests produce identical token runs.
+        for img in &req.images {
+            let h = hash_image_desc(img.content_id, img.width, img.height);
+            let n = model.image_tokens(img.width, img.height);
+            let base = 0x4000_0000u32 | ((h as u32) & 0x0FFF_FFFF);
+            for i in 0..n {
+                seq.push(base ^ (i as u32).rotate_left(8) | 0x4000_0000);
+            }
+        }
+        // Unique per-request tail (the rest of the prompt).
+        let tail = req.prompt_tokens - req.prefix_tokens.min(req.prompt_tokens);
+        let base = 0x8000_0000u32 | ((req.id as u32) << 12);
+        for i in 0..tail {
+            seq.push(base.wrapping_add(i as u32));
+        }
+        seq
+    }
+
+    /// Process a request through both pools. On return:
+    /// * `images_to_encode` lists vision-token counts needing encoding,
+    /// * `prefix_hit_tokens` of prefill can be skipped,
+    /// * the request's unified sequence has been inserted (so subsequent
+    ///   identical requests hit) and pinned until [`release`].
+    pub fn process(&mut self, req: &Request, model: &ModelConfig) -> CacheOutcome {
+        let vision_total: usize = req.vision_tokens(model);
+        if !self.enabled {
+            return CacheOutcome {
+                images_to_encode: req
+                    .images
+                    .iter()
+                    .map(|i| model.image_tokens(i.width, i.height))
+                    .collect(),
+                vision_tokens_cached: 0,
+                prefix_hit_tokens: 0,
+                total_tokens: req.prompt_tokens + vision_total,
+                kv_path: MatchResult { matched_tokens: 0, path: vec![] },
+            };
+        }
+        // Pool 1: image hash lookups.
+        let mut images_to_encode = Vec::new();
+        let mut vision_tokens_cached = 0;
+        for img in &req.images {
+            let h = hash_image_desc(img.content_id, img.width, img.height);
+            let n = model.image_tokens(img.width, img.height);
+            if self.image_pool.lookup(h).is_some() {
+                vision_tokens_cached += n;
+            } else {
+                images_to_encode.push(n);
+                self.image_pool.insert(h, n, None);
+            }
+        }
+        // Pool 2: unified-sequence prefix.
+        let seq = self.unified_sequence(req, model);
+        let (_new_tokens, kv_path) = self.kv_pool.insert(&seq);
+        let prefix_hit_tokens = seq.len() - _new_tokens;
+        CacheOutcome {
+            images_to_encode,
+            vision_tokens_cached,
+            prefix_hit_tokens,
+            total_tokens: seq.len(),
+            kv_path,
+        }
+    }
+
+    /// Release the KV pins once the request finishes prefill (its blocks
+    /// then live in the instance's paged pool; the tree entry remains as
+    /// reusable cache).
+    pub fn release(&mut self, outcome: &CacheOutcome) {
+        self.kv_pool.release(&outcome.kv_path);
+    }
+
+    /// Combined hit statistics (for the Fig 8 ablation report).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            image_hits: self.image_pool.hits,
+            image_misses: self.image_pool.misses,
+            kv_cached_tokens: self.kv_pool.cached_tokens(),
+            image_cached_tokens: self.image_pool.cached_tokens(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CacheStats {
+    pub image_hits: u64,
+    pub image_misses: u64,
+    pub kv_cached_tokens: usize,
+    pub image_cached_tokens: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workload::ImageRef;
+
+    fn mm_request(id: u64, content_id: u64, prefix_id: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens: 200,
+            output_tokens: 10,
+            images: vec![ImageRef { width: 904, height: 904, content_id }],
+            prefix_id,
+            prefix_tokens: if prefix_id != 0 { 100 } else { 0 },
+        }
+    }
+
+    #[test]
+    fn repeated_image_skips_encoding() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let r1 = mm_request(1, 77, 0);
+        let r2 = mm_request(2, 77, 0);
+        let o1 = c.process(&r1, &model);
+        assert_eq!(o1.images_to_encode.len(), 1);
+        c.release(&o1);
+        let o2 = c.process(&r2, &model);
+        assert!(o2.images_to_encode.is_empty(), "second occurrence must hit");
+        assert!(o2.vision_tokens_cached > 6000);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn different_images_both_encode() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let o1 = c.process(&mm_request(1, 10, 0), &model);
+        let o2 = c.process(&mm_request(2, 11, 0), &model);
+        assert_eq!(o1.images_to_encode.len(), 1);
+        assert_eq!(o2.images_to_encode.len(), 1);
+        c.release(&o1);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn shared_text_prefix_skips_prefill() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let mut r1 = mm_request(1, 5, 3);
+        let mut r2 = mm_request(2, 6, 3);
+        r1.images.clear();
+        r2.images.clear();
+        let o1 = c.process(&r1, &model);
+        assert_eq!(o1.prefix_hit_tokens, 0);
+        c.release(&o1);
+        let o2 = c.process(&r2, &model);
+        // Shares the 100 prefix tokens; tails are unique.
+        assert_eq!(o2.prefix_hit_tokens, 100);
+        assert_eq!(o2.total_tokens, 200);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn identical_request_full_prefix_hit() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let r1 = mm_request(1, 5, 3);
+        let o1 = c.process(&r1, &model);
+        c.release(&o1);
+        // Same id => identical synthesized tail => full sequence hit
+        // (models a retried/duplicated request).
+        let o2 = c.process(&r1, &model);
+        assert_eq!(o2.prefix_hit_tokens, o2.total_tokens);
+        assert_eq!(o2.prefill_tokens(), 0);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn prefix_and_image_cache_compose() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let r1 = mm_request(1, 5, 3);
+        let r2 = mm_request(2, 5, 3); // same image, same text prefix
+        let o1 = c.process(&r1, &model);
+        c.release(&o1);
+        let o2 = c.process(&r2, &model);
+        assert!(o2.images_to_encode.is_empty());
+        // Hits prefix tokens + all vision tokens (tail differs).
+        let vis = model.image_tokens(904, 904);
+        assert_eq!(o2.prefix_hit_tokens, 100 + vis);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn disabled_cache_is_noop() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::disabled();
+        let r = mm_request(1, 5, 3);
+        for _ in 0..3 {
+            let o = c.process(&r, &model);
+            assert_eq!(o.images_to_encode.len(), 1);
+            assert_eq!(o.prefix_hit_tokens, 0);
+            c.release(&o);
+        }
+    }
+
+    #[test]
+    fn unified_sequence_is_deterministic() {
+        let model = presets::qwen25_vl_7b();
+        let c = UnifiedCache::new(0, 0);
+        let r = mm_request(7, 9, 2);
+        assert_eq!(c.unified_sequence(&r, &model), c.unified_sequence(&r, &model));
+    }
+
+    #[test]
+    fn sequence_length_matches_input_len() {
+        let model = presets::qwen25_vl_7b();
+        let c = UnifiedCache::new(0, 0);
+        let r = mm_request(7, 9, 2);
+        assert_eq!(c.unified_sequence(&r, &model).len(), r.input_len(&model));
+    }
+}

@@ -1,0 +1,36 @@
+//! # ElasticMM
+//!
+//! A reproduction of *"ElasticMM: Efficient Multimodal LLMs Serving with
+//! Elastic Multimodal Parallelism"* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`coordinator`] — the paper's contribution: modality-aware load
+//!   balancing, elastic partition scheduling (request dispatch, elastic
+//!   instance allocation, elastic auto-scaling), gain/cost models.
+//! * [`sim`] — a discrete-event cluster simulator standing in for the
+//!   paper's 8×A800 testbed (see DESIGN.md §Substitutions).
+//! * [`kvcache`] — paged KV cache, radix-tree prefix cache, image-hash
+//!   cache and the unified multimodal prefix cache.
+//! * [`workload`] — synthetic ShareGPT-4o / VisualWebInstruct request
+//!   generators, Poisson and bursty arrival processes.
+//! * [`model`] — analytical FLOPs/bandwidth cost models for the four
+//!   MLLMs of Table 1 on A800-class GPUs.
+//! * [`baselines`] — vLLM-style coupled serving and the static
+//!   vLLM-Decouple variant used as paper baselines.
+//! * [`serving`] + [`runtime`] — a *real* execution path: a tiny MLLM
+//!   AOT-compiled from JAX/Pallas to HLO and executed via PJRT CPU.
+//! * [`util`] — in-repo substrates (PRNG, JSON, statistics, CLI).
+
+pub mod util;
+pub mod config;
+pub mod model;
+pub mod workload;
+pub mod kvcache;
+pub mod sim;
+pub mod coordinator;
+pub mod baselines;
+pub mod metrics;
+pub mod runtime;
+pub mod serving;

@@ -1,0 +1,204 @@
+//! `elasticmm` launcher.
+//!
+//! Subcommands:
+//!   serve      — serve a synthetic mixed workload on the real tiny MLLM
+//!                (sequential or staged/non-blocking pipeline)
+//!   simulate   — run a serving-system simulation on the A800 cluster
+//!                model (systems: elasticmm | vllm | vllm-decouple | static)
+//!   gen-trace  — generate a workload trace JSON
+//!   models     — print the Table-1 model presets
+//!
+//! Examples:
+//!   elasticmm simulate --system elasticmm --model qwen --dataset sharegpt \
+//!       --qps 8 --requests 400 --gpus 8
+//!   elasticmm serve --requests 8 --staged
+//!   elasticmm gen-trace --dataset vwi --requests 1000 --qps 5 --out trace.json
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::Report;
+use elasticmm::model::CostModel;
+use elasticmm::runtime::Runtime;
+use elasticmm::serving::{serve_sequential_batch, serve_staged, ServeRequest};
+use elasticmm::util::cli::Args;
+use elasticmm::util::rng::Rng;
+use elasticmm::util::stats::render_table;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::trace;
+use elasticmm::workload::Request;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("serve-http") => cmd_serve_http(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("gen-trace") => cmd_gen_trace(&args),
+        Some("models") => cmd_models(),
+        _ => {
+            eprintln!(
+                "usage: elasticmm <serve|serve-http|simulate|gen-trace|models> [--options]\n\
+                 run with a subcommand; see rust/src/main.rs header for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn dataset(args: &Args) -> DatasetSpec {
+    match args.get_or("dataset", "sharegpt").as_str() {
+        "vwi" | "visualwebinstruct" => DatasetSpec::visualwebinstruct(),
+        _ => DatasetSpec::sharegpt4o(),
+    }
+}
+
+fn cost_model(args: &Args) -> CostModel {
+    let name = args.get_or("model", "qwen");
+    let model = match name.as_str() {
+        "qwen" => presets::qwen25_vl_7b(),
+        "qwen72" => presets::qwen25_vl_72b(),
+        "llama" => presets::llama32_vision_11b(),
+        "llama90" => presets::llama32_vision_90b(),
+        other => presets::by_name(other)
+            .unwrap_or_else(|| panic!("unknown model {other}")),
+    };
+    CostModel::new(model, GpuSpec::a800_80g())
+}
+
+fn make_trace(args: &Args) -> Vec<Request> {
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    let n = args.get_usize("requests", 300);
+    let qps = args.get_f64("qps", 6.0);
+    let mut reqs = dataset(args).generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cost = cost_model(args);
+    let sched = SchedulerConfig::default();
+    let gpus = args.get_usize("gpus", 8);
+    let t = make_trace(args);
+    let system = args.get_or("system", "elasticmm");
+    let report: Report = match system.as_str() {
+        "vllm" => CoupledVllm::new(cost, sched, gpus).run(&t),
+        "vllm-decouple" => DecoupledStatic::new(cost, sched, gpus).run(&t),
+        "static" => {
+            let text = args.get_usize("text-instances", gpus / 2);
+            EmpSystem::new(cost, sched, gpus, EmpOptions::static_split(text)).run(&t)
+        }
+        _ => EmpSystem::new(cost, sched, gpus, EmpOptions::full(gpus)).run(&t),
+    };
+    let (txt, mm) = report.split_by_modality();
+    println!("system={system} gpus={gpus} requests={}", report.records.len());
+    let row = |name: &str, r: &Report| {
+        vec![
+            name.to_string(),
+            format!("{:.4}", r.mean_norm_input_latency()),
+            format!("{:.4}", r.mean_norm_output_latency()),
+            format!("{:.3}", r.mean_ttft()),
+            format!("{:.3}", r.p_ttft(90.0)),
+            format!("{:.2}", r.throughput_rps()),
+        ]
+    };
+    let rows = vec![row("all", &report), row("text", &txt), row("multimodal", &mm)];
+    println!(
+        "{}",
+        render_table(
+            &["class", "norm_in s/tok", "norm_out s/tok", "ttft s", "p90 ttft", "rps"],
+            &rows
+        )
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote records to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    let n = args.get_usize("requests", 6);
+    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let reqs: Vec<ServeRequest> = (0..n as u64)
+        .map(|id| ServeRequest {
+            id,
+            prompt: format!("Request {id}: describe what you see."),
+            image: rng.chance(0.5).then(|| rng.below(4)),
+            max_new: args.get_usize("max-new", 8),
+        })
+        .collect();
+    let staged = args.has_flag("staged");
+    let (results, wall) = if staged {
+        serve_staged(&dir, &reqs, true)?
+    } else {
+        serve_sequential_batch(&dir, &reqs, true)?
+    };
+    for r in &results {
+        println!(
+            "req {:>2}  ttft {:>7.2}ms  total {:>7.2}ms  -> {:?}",
+            r.id,
+            r.ttft_s * 1e3,
+            r.total_s * 1e3,
+            r.text
+        );
+    }
+    println!(
+        "mode={} wall={:.2}ms throughput={:.1} req/s",
+        if staged { "staged(non-blocking)" } else { "sequential" },
+        wall * 1e3,
+        results.len() as f64 / wall
+    );
+    Ok(())
+}
+
+/// OpenAI-compatible HTTP frontend (paper Appendix A) over the real
+/// tiny-MLLM engine: `elasticmm serve-http --port 8000`.
+fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    let port = args.get_usize("port", 8000) as u16;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+    println!(
+        "listening on http://127.0.0.1:{port} — POST /v1/completions, /v1/chat/completions"
+    );
+    elasticmm::serving::http::serve(
+        listener,
+        &Runtime::default_dir(),
+        Arc::new(AtomicBool::new(false)),
+    )
+}
+
+fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
+    let t = make_trace(args);
+    let path = args.get_or("out", "trace.json");
+    trace::save_trace(std::path::Path::new(&path), &t)?;
+    println!("wrote {} requests to {path}", t.len());
+    Ok(())
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    let rows: Vec<Vec<String>> = presets::all_models()
+        .iter()
+        .map(|m| {
+            vec![
+                m.name.clone(),
+                m.arch.name().to_string(),
+                format!("{:.0}M", m.encoder.params() as f64 / 1e6),
+                format!("{}", m.image_tokens(904, 904)),
+                format!("{:.1}B", m.llm.params() as f64 / 1e9),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["model", "architecture", "encoder", "img tokens @904px", "LLM backend"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,259 @@
+//! Service-quality metrics (paper §4.1 *Metrics*):
+//!
+//! * **normalized input latency** — average prefill time (TTFT) divided
+//!   by input length,
+//! * **normalized output latency** — average decode time divided by
+//!   output length,
+//! * **SLO attainment / max goodput under SLO** — the Fig 6/7 metric,
+//! * P90 effective throughput for the ablations.
+
+use crate::sim::instance::SimRequest;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Timing record for one completed request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub multimodal: bool,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub arrival: f64,
+    pub first_token: f64,
+    pub finish: f64,
+}
+
+impl RequestRecord {
+    pub fn from_sim(r: &SimRequest) -> RequestRecord {
+        RequestRecord {
+            id: r.req.id,
+            multimodal: r.vision_tokens > 0,
+            input_len: r.input_len,
+            output_len: r.req.output_tokens,
+            arrival: r.t_arrival,
+            first_token: r.t_first_token,
+            finish: r.t_finish,
+        }
+    }
+
+    /// Time to first token.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Input latency normalized by input length (s/token).
+    pub fn norm_input_latency(&self) -> f64 {
+        self.ttft() / self.input_len.max(1) as f64
+    }
+
+    /// Output latency normalized by output length (s/token).
+    pub fn norm_output_latency(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.finish - self.first_token) / (self.output_len - 1).max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("multimodal", Json::Bool(self.multimodal)),
+            ("input_len", Json::num(self.input_len as f64)),
+            ("output_len", Json::num(self.output_len as f64)),
+            ("arrival", Json::num(self.arrival)),
+            ("first_token", Json::num(self.first_token)),
+            ("finish", Json::num(self.finish)),
+        ])
+    }
+}
+
+/// Aggregate report over a run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub records: Vec<RequestRecord>,
+}
+
+impl Report {
+    pub fn new(records: Vec<RequestRecord>) -> Report {
+        Report { records }
+    }
+
+    pub fn mean_norm_input_latency(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.norm_input_latency()).collect::<Vec<_>>())
+    }
+
+    pub fn mean_norm_output_latency(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.norm_output_latency()).collect::<Vec<_>>())
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>())
+    }
+
+    pub fn p_ttft(&self, q: f64) -> f64 {
+        stats::percentile(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>(), q)
+    }
+
+    pub fn p_norm_input(&self, q: f64) -> f64 {
+        stats::percentile(
+            &self.records.iter().map(|r| r.norm_input_latency()).collect::<Vec<_>>(),
+            q,
+        )
+    }
+
+    pub fn p_norm_output(&self, q: f64) -> f64 {
+        stats::percentile(
+            &self.records.iter().map(|r| r.norm_output_latency()).collect::<Vec<_>>(),
+            q,
+        )
+    }
+
+    /// Requests completed per second over the active span.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let start = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        let end = self.records.iter().map(|r| r.finish).fold(0.0, f64::max);
+        self.records.len() as f64 / (end - start).max(1e-9)
+    }
+
+    /// Output tokens per second.
+    pub fn token_throughput(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let start = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        let end = self.records.iter().map(|r| r.finish).fold(0.0, f64::max);
+        self.records.iter().map(|r| r.output_len as f64).sum::<f64>()
+            / (end - start).max(1e-9)
+    }
+
+    /// Fraction of requests meeting an SLO on *both* normalized input and
+    /// output latency (the paper's uniform SLO).
+    pub fn slo_attainment(&self, slo: &Slo) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let ok = self
+            .records
+            .iter()
+            .filter(|r| {
+                r.norm_input_latency() <= slo.norm_input_s
+                    && r.norm_output_latency() <= slo.norm_output_s
+            })
+            .count();
+        ok as f64 / self.records.len() as f64
+    }
+
+    /// "Effective throughput": completed requests per second counting
+    /// only SLO-satisfying requests (goodput).
+    pub fn goodput_rps(&self, slo: &Slo) -> f64 {
+        self.throughput_rps() * self.slo_attainment(slo)
+    }
+
+    pub fn split_by_modality(&self) -> (Report, Report) {
+        let (mm, txt): (Vec<_>, Vec<_>) =
+            self.records.iter().cloned().partition(|r| r.multimodal);
+        (Report::new(txt), Report::new(mm))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.records.iter().map(|r| r.to_json()).collect())
+    }
+}
+
+/// A service-level objective on normalized latencies. The paper sets the
+/// SLO to 10× the light-load latency, then scales it 1×–5×.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub norm_input_s: f64,
+    pub norm_output_s: f64,
+}
+
+impl Slo {
+    /// Paper methodology: measure light-load latency, multiply by 10,
+    /// then apply `scale`.
+    pub fn from_light_load(light_input: f64, light_output: f64, scale: f64) -> Slo {
+        Slo {
+            norm_input_s: 10.0 * light_input * scale,
+            norm_output_s: 10.0 * light_output * scale,
+        }
+    }
+
+    pub fn scaled(&self, k: f64) -> Slo {
+        Slo { norm_input_s: self.norm_input_s * k, norm_output_s: self.norm_output_s * k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: f64, finish: f64, input: usize, output: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            multimodal: false,
+            input_len: input,
+            output_len: output,
+            arrival,
+            first_token: first,
+            finish,
+        }
+    }
+
+    #[test]
+    fn normalized_latencies() {
+        let r = rec(0.0, 2.0, 12.0, 100, 11);
+        assert!((r.ttft() - 2.0).abs() < 1e-12);
+        assert!((r.norm_input_latency() - 0.02).abs() < 1e-12);
+        assert!((r.norm_output_latency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_attainment_counts_both_dimensions() {
+        let slo = Slo { norm_input_s: 0.05, norm_output_s: 0.5 };
+        let recs = vec![
+            rec(0.0, 1.0, 2.0, 100, 11),   // in: 0.01 ok, out: 0.1 ok
+            rec(0.0, 10.0, 11.0, 100, 11), // in: 0.1 fail
+            rec(0.0, 1.0, 100.0, 100, 11), // out: 9.9 fail
+        ];
+        let rep = Report::new(recs);
+        assert!((rep.slo_attainment(&slo) - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_over_span() {
+        let recs = vec![rec(0.0, 1.0, 2.0, 10, 5), rec(1.0, 2.0, 10.0, 10, 5)];
+        let rep = Report::new(recs);
+        assert!((rep.throughput_rps() - 0.2).abs() < 1e-9);
+        assert!((rep.token_throughput() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_scales_with_attainment() {
+        let slo = Slo { norm_input_s: 1e9, norm_output_s: 1e9 };
+        let recs = vec![rec(0.0, 1.0, 2.0, 10, 5); 10];
+        let rep = Report::new(recs);
+        assert!((rep.goodput_rps(&slo) - rep.throughput_rps()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modality_split() {
+        let mut a = rec(0.0, 1.0, 2.0, 10, 5);
+        a.multimodal = true;
+        let b = rec(0.0, 1.0, 2.0, 10, 5);
+        let rep = Report::new(vec![a, b]);
+        let (txt, mm) = rep.split_by_modality();
+        assert_eq!(txt.records.len(), 1);
+        assert_eq!(mm.records.len(), 1);
+        assert!(mm.records[0].multimodal);
+    }
+
+    #[test]
+    fn slo_from_light_load() {
+        let slo = Slo::from_light_load(0.01, 0.05, 2.0);
+        assert!((slo.norm_input_s - 0.2).abs() < 1e-12);
+        assert!((slo.norm_output_s - 1.0).abs() < 1e-12);
+    }
+}

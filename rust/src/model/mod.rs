@@ -1,0 +1,493 @@
+//! Analytical roofline cost model for MLLM inference stages on A800-class
+//! GPUs. This is the simulator's substitute for the paper's real 8×A800
+//! testbed (DESIGN.md §Substitutions): every stage latency is derived
+//! from FLOPs and bytes moved, so the *relative* behaviour the paper
+//! exploits emerges naturally —
+//!
+//! * encoding and prefill are compute-bound and scale near-linearly with
+//!   data parallelism,
+//! * decode is bound by weight + KV reads, so replicating it across more
+//!   GPUs barely helps (each replica still reads all the weights), which
+//!   is exactly the paper's "decode scales poorly" premise (§3.2),
+//! * EncDec cross-attention adds per-token cost to *every* request in a
+//!   mixed batch, reproducing the paper's mixed-batch inefficiency.
+
+use crate::config::{Architecture, GpuSpec, ModelConfig};
+
+/// One request's contribution to a prefill batch.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillItem {
+    /// New tokens to prefill this iteration (chunked prefill may make
+    /// this smaller than the full prompt).
+    pub new_tokens: usize,
+    /// Tokens already in context before this chunk (cached prefix).
+    pub cached_tokens: usize,
+    /// Vision tokens attached to the request (0 for text-only).
+    pub vision_tokens: usize,
+}
+
+/// One sequence's contribution to a decode batch.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeItem {
+    /// Current context length (text + vision tokens).
+    pub context_len: usize,
+    /// Vision tokens (cross-attended in EncDec models).
+    pub vision_tokens: usize,
+}
+
+/// Latency model over (model, gpu). All times in seconds.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub model: ModelConfig,
+    pub gpu: GpuSpec,
+    /// Per-kernel-launch / framework overhead per iteration (s).
+    pub iter_overhead: f64,
+    /// Tensor-parallel communication efficiency penalty per extra rank.
+    pub tp_comm_penalty: f64,
+    /// Fixed CPU-side image preprocessing seconds per tile (resize/tile).
+    pub preprocess_per_tile: f64,
+    /// Fixed migration handshake latency (s).
+    pub migration_rtt: f64,
+}
+
+impl CostModel {
+    pub fn new(model: ModelConfig, gpu: GpuSpec) -> CostModel {
+        CostModel {
+            model,
+            gpu,
+            iter_overhead: 2.0e-3,
+            tp_comm_penalty: 0.08,
+            preprocess_per_tile: 4.0e-3,
+            migration_rtt: 1.0e-3,
+        }
+    }
+
+    /// Effective FLOP/s with `tp` tensor-parallel ranks.
+    fn flops_rate(&self, tp: usize) -> f64 {
+        let eff = 1.0 / (1.0 + self.tp_comm_penalty * (tp.saturating_sub(1)) as f64);
+        self.gpu.peak_flops * self.gpu.mfu * tp as f64 * eff
+    }
+
+    /// Effective HBM bytes/s with `tp` ranks (weights are sharded, so
+    /// bandwidth aggregates almost linearly for weight reads).
+    fn hbm_rate(&self, tp: usize) -> f64 {
+        self.gpu.hbm_bandwidth * tp as f64 * 0.85
+    }
+
+    /// Minimum tensor-parallel degree needed just to hold the backend
+    /// weights + some activation headroom.
+    pub fn min_tp(&self) -> usize {
+        let per_gpu_budget = self.gpu.hbm_capacity as f64 * 0.85;
+        let w = self.model.llm_weight_bytes() as f64;
+        (w / per_gpu_budget).ceil().max(1.0) as usize
+    }
+
+    // --- encoding -------------------------------------------------------
+
+    /// CPU preprocessing time for an image (resize + tiling, §2.1).
+    pub fn preprocess_time(&self, image_w: usize, image_h: usize) -> f64 {
+        let tiles_w = image_w.div_ceil(self.model.tile_pixels);
+        let tiles_h = image_h.div_ceil(self.model.tile_pixels);
+        let tiles = (tiles_w * tiles_h).clamp(1, self.model.max_tiles);
+        self.preprocess_per_tile * tiles as f64
+    }
+
+    /// ViT encoding FLOPs for `vision_tokens` tokens.
+    pub fn encode_flops(&self, vision_tokens: usize) -> f64 {
+        let e = &self.model.encoder;
+        let n = vision_tokens as f64;
+        let h = e.hidden as f64;
+        // GEMM work: 2 * params * tokens, plus quadratic attention term.
+        let gemm = 2.0 * e.params() as f64 * n;
+        let attn = 4.0 * n * n * h * e.layers as f64;
+        gemm + attn
+    }
+
+    /// Encode latency for one image with `vision_tokens`, on `dp`
+    /// data-parallel encoder replicas *per image* it is 1 (a single image
+    /// can't be split), so `dp` only helps across images — callers model
+    /// that at the batch level. `tp` is intra-instance parallelism.
+    pub fn encode_time(&self, vision_tokens: usize, tp: usize) -> f64 {
+        let flops = self.encode_flops(vision_tokens);
+        let weight_bytes = self.model.encoder_weight_bytes() as f64;
+        let compute = flops / self.flops_rate(tp);
+        let memory = weight_bytes / self.hbm_rate(tp);
+        compute.max(memory) + self.iter_overhead
+    }
+
+    // --- prefill ----------------------------------------------------------
+
+    /// Prefill FLOPs for a batch.
+    pub fn prefill_flops(&self, batch: &[PrefillItem]) -> f64 {
+        let l = &self.model.llm;
+        let h = l.hidden as f64;
+        let mut flops = 0.0;
+        for it in batch {
+            let t = it.new_tokens as f64;
+            let ctx = (it.cached_tokens + it.new_tokens) as f64;
+            // Dense GEMMs: 2 * params * new_tokens.
+            flops += 2.0 * l.params() as f64 * t;
+            // Self-attention: each new token attends to ~ctx keys.
+            flops += 4.0 * t * ctx * h * l.layers as f64 * 0.5;
+            match self.model.arch {
+                Architecture::DecoderOnly => {
+                    // Vision tokens are part of the sequence (already in
+                    // new/cached counts); nothing extra.
+                }
+                Architecture::EncoderDecoder => {
+                    // Cross-attention: projections + attention over the
+                    // vision tokens at every inserted layer.
+                    let xl = self.model.cross_attn_layers as f64;
+                    let v = it.vision_tokens as f64;
+                    flops += xl * (8.0 * h * h * t + 4.0 * t * v * h);
+                }
+            }
+        }
+        flops
+    }
+
+    /// Prefill batch latency on one instance with `tp` ranks.
+    pub fn prefill_time(&self, batch: &[PrefillItem], tp: usize) -> f64 {
+        self.prefill_time_flags(batch, tp, true)
+    }
+
+    /// Prefill latency with explicit cross-attention control. A
+    /// *modality-pure text* batch on an EncDec model can skip the
+    /// cross-attention layers entirely (`cross_attn = false`) — this is
+    /// the benefit ElasticMM's modality groups unlock and mixed batches
+    /// forfeit (§2.3 Architectural Problem).
+    pub fn prefill_time_flags(&self, batch: &[PrefillItem], tp: usize, cross_attn: bool) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let mut flops = self.prefill_flops(batch);
+        if !cross_attn && self.model.arch == Architecture::EncoderDecoder {
+            // Remove the projection cost charged to vision-free items.
+            let l = &self.model.llm;
+            let h = l.hidden as f64;
+            let xl = self.model.cross_attn_layers as f64;
+            for it in batch {
+                if it.vision_tokens == 0 {
+                    flops -= xl * 8.0 * h * h * it.new_tokens as f64;
+                }
+            }
+        }
+        let weight_bytes = self.model.llm_weight_bytes() as f64;
+        let compute = flops / self.flops_rate(tp);
+        let memory = weight_bytes / self.hbm_rate(tp);
+        compute.max(memory) + self.iter_overhead
+    }
+
+    /// Prefill latency for a batch data-parallel over `dp` instances
+    /// (each with `tp` ranks): greedy LPT split by tokens, time = the
+    /// slowest shard. This is T(R_p, E_p) in Eq. 2.
+    pub fn prefill_time_dp(&self, batch: &[PrefillItem], dp: usize, tp: usize) -> f64 {
+        if batch.is_empty() || dp == 0 {
+            return 0.0;
+        }
+        if dp == 1 {
+            return self.prefill_time(batch, tp);
+        }
+        // LPT: sort descending by new_tokens, assign to least-loaded shard.
+        let mut idx: Vec<usize> = (0..batch.len()).collect();
+        idx.sort_by(|&a, &b| batch[b].new_tokens.cmp(&batch[a].new_tokens));
+        let mut shards: Vec<Vec<PrefillItem>> = vec![Vec::new(); dp];
+        let mut loads = vec![0usize; dp];
+        for i in idx {
+            let s = loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &l)| l)
+                .map(|(k, _)| k)
+                .unwrap();
+            loads[s] += batch[i].new_tokens;
+            shards[s].push(batch[i]);
+        }
+        shards
+            .iter()
+            .map(|s| self.prefill_time(s, tp))
+            .fold(0.0, f64::max)
+    }
+
+    // --- decode -----------------------------------------------------------
+
+    /// One decode step (one token per sequence) for a batch.
+    pub fn decode_step_time(&self, batch: &[DecodeItem], tp: usize) -> f64 {
+        self.decode_step_time_flags(batch, tp, true)
+    }
+
+    /// Decode step with explicit cross-attention control (see
+    /// [`Self::prefill_time_flags`]).
+    pub fn decode_step_time_flags(&self, batch: &[DecodeItem], tp: usize, cross_attn: bool) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let cross_attn_active =
+            cross_attn && self.model.arch == Architecture::EncoderDecoder;
+        let l = &self.model.llm;
+        let h = l.hidden as f64;
+        let b = batch.len() as f64;
+        // FLOPs: GEMVs against all weights per sequence + attention reads.
+        let mut flops = 2.0 * l.params() as f64 * b;
+        let mut kv_bytes = 0.0;
+        for it in batch {
+            flops += 4.0 * it.context_len as f64 * h * l.layers as f64;
+            kv_bytes +=
+                (it.context_len as f64) * l.kv_bytes_per_token() as f64;
+            if cross_attn_active {
+                let xl = self.model.cross_attn_layers as f64;
+                flops += xl * (8.0 * h * h + 4.0 * it.vision_tokens as f64 * h);
+                // Cross-attn KV for vision tokens is read each step too.
+                kv_bytes += it.vision_tokens as f64
+                    * (2 * self.model.cross_attn_layers * l.kv_heads * l.head_dim() * 2)
+                        as f64
+                    / l.layers as f64
+                    * 1.0;
+            }
+        }
+        let weight_bytes = self.model.llm_weight_bytes() as f64;
+        let compute = flops / self.flops_rate(tp);
+        // Decode reads every weight once per step regardless of batch
+        // size — this is why decode throughput scales with batch, but
+        // decode *latency* barely improves with more instances.
+        let memory = (weight_bytes + kv_bytes) / self.hbm_rate(tp);
+        compute.max(memory) + self.iter_overhead
+    }
+
+    /// The batch size at which decode flips from memory-bound (weights
+    /// dominate) to compute-bound — the paper's offline-profiled
+    /// "scaling threshold" for elastic auto-scaling (§3.2).
+    pub fn decode_compute_bound_batch(&self, avg_context: usize) -> usize {
+        for b in 1..=4096usize {
+            let batch: Vec<DecodeItem> = (0..b)
+                .map(|_| DecodeItem { context_len: avg_context, vision_tokens: 0 })
+                .collect();
+            let l = &self.model.llm;
+            let flops = 2.0 * l.params() as f64 * b as f64
+                + 4.0 * (b * avg_context) as f64 * l.hidden as f64 * l.layers as f64;
+            let bytes = self.model.llm_weight_bytes() as f64
+                + batch
+                    .iter()
+                    .map(|it| it.context_len as f64 * l.kv_bytes_per_token() as f64)
+                    .sum::<f64>();
+            if flops / self.flops_rate(1) > bytes / self.hbm_rate(1) {
+                return b;
+            }
+        }
+        4096
+    }
+
+    // --- memory / migration ------------------------------------------------
+
+    /// KV pool capacity in tokens for an instance with `tp` ranks holding
+    /// this model, given the fraction of HBM dedicated to KV.
+    pub fn kv_pool_tokens(&self, tp: usize, kv_fraction: f64) -> usize {
+        let total = self.gpu.hbm_capacity as f64 * tp as f64;
+        let weights = self.model.llm_weight_bytes() as f64;
+        let pool = (total - weights).max(0.0) * kv_fraction;
+        (pool / self.model.llm.kv_bytes_per_token() as f64) as usize
+    }
+
+    /// Time to migrate `tokens` of KV cache between instances over
+    /// NVLink (Eq. 2/3's M(e) term).
+    pub fn migration_time(&self, tokens: usize) -> f64 {
+        let bytes = tokens as f64 * self.model.llm.kv_bytes_per_token() as f64;
+        self.migration_rtt + bytes / self.gpu.interconnect_bandwidth
+    }
+
+    /// Full prefill latency for a single request (used for Fig 1 style
+    /// stage breakdowns).
+    pub fn single_prefill_time(&self, prompt_tokens: usize, vision_tokens: usize) -> f64 {
+        let seq = match self.model.arch {
+            Architecture::DecoderOnly => prompt_tokens + vision_tokens,
+            Architecture::EncoderDecoder => prompt_tokens,
+        };
+        self.prefill_time(
+            &[PrefillItem { new_tokens: seq, cached_tokens: 0, vision_tokens }],
+            self.min_tp(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, GpuSpec};
+
+    fn qwen() -> CostModel {
+        CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+    }
+
+    fn llama() -> CostModel {
+        CostModel::new(presets::llama32_vision_11b(), GpuSpec::a800_80g())
+    }
+
+    #[test]
+    fn encode_dominates_prefill_for_image_heavy_request() {
+        // Paper Fig 1a: encoding can take >5x prefill for image requests.
+        let m = llama();
+        let vis = m.model.image_tokens(904, 904);
+        let enc = m.encode_time(vis, 1);
+        let pre = m.prefill_time(
+            &[PrefillItem { new_tokens: 128, cached_tokens: 0, vision_tokens: vis }],
+            1,
+        );
+        assert!(enc > pre, "encode {enc} should exceed short-prompt prefill {pre}");
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly_with_context() {
+        let m = qwen();
+        let t1 = m.prefill_time(
+            &[PrefillItem { new_tokens: 1024, cached_tokens: 0, vision_tokens: 0 }],
+            1,
+        );
+        let t2 = m.prefill_time(
+            &[PrefillItem { new_tokens: 4096, cached_tokens: 0, vision_tokens: 0 }],
+            1,
+        );
+        assert!(t2 > 3.5 * t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn decode_latency_weight_bound_at_small_batch() {
+        let m = qwen();
+        let one = m.decode_step_time(&[DecodeItem { context_len: 512, vision_tokens: 0 }], 1);
+        let eight: Vec<DecodeItem> =
+            (0..8).map(|_| DecodeItem { context_len: 512, vision_tokens: 0 }).collect();
+        let t8 = m.decode_step_time(&eight, 1);
+        // Same weight read amortized: 8x batch should cost << 8x latency.
+        assert!(t8 < 2.0 * one, "one={one} t8={t8}");
+    }
+
+    #[test]
+    fn decode_tp_scaling_is_sublinear() {
+        let m = qwen();
+        let batch: Vec<DecodeItem> =
+            (0..64).map(|_| DecodeItem { context_len: 1024, vision_tokens: 0 }).collect();
+        let t1 = m.decode_step_time(&batch, 1);
+        let t4 = m.decode_step_time(&batch, 4);
+        let speedup = t1 / t4;
+        assert!(speedup < 3.9, "decode 4-way speedup {speedup} should be sublinear");
+    }
+
+    #[test]
+    fn prefill_tp_scaling_is_near_linear() {
+        let m = qwen();
+        let batch = [PrefillItem { new_tokens: 8192, cached_tokens: 0, vision_tokens: 0 }];
+        let t1 = m.prefill_time(&batch, 1);
+        let t4 = m.prefill_time(&batch, 4);
+        let speedup = t1 / t4;
+        assert!(speedup > 2.8, "prefill 4-way speedup {speedup}");
+    }
+
+    #[test]
+    fn encdec_cross_attention_costs_extra() {
+        let l = llama();
+        let with_vis = l.prefill_time(
+            &[PrefillItem { new_tokens: 512, cached_tokens: 0, vision_tokens: 6516 }],
+            1,
+        );
+        let without = l.prefill_time(
+            &[PrefillItem { new_tokens: 512, cached_tokens: 0, vision_tokens: 0 }],
+            1,
+        );
+        assert!(with_vis > without);
+    }
+
+    #[test]
+    fn min_tp_one_for_7b_multi_for_72b() {
+        let small = qwen();
+        assert_eq!(small.min_tp(), 1);
+        let big = CostModel::new(presets::qwen25_vl_72b(), GpuSpec::a800_80g());
+        assert!(big.min_tp() >= 2, "72B needs tp>=2, got {}", big.min_tp());
+    }
+
+    #[test]
+    fn kv_pool_is_positive_and_bounded() {
+        let m = qwen();
+        let pool = m.kv_pool_tokens(1, 0.55);
+        assert!(pool > 100_000, "pool={pool}");
+        // Must fit in HBM: tokens * kv_bytes < capacity.
+        let bytes = pool as u64 * m.model.llm.kv_bytes_per_token();
+        assert!(bytes < m.gpu.hbm_capacity);
+    }
+
+    #[test]
+    fn migration_time_linear_in_tokens() {
+        let m = qwen();
+        let t1 = m.migration_time(10_000);
+        let t2 = m.migration_time(20_000);
+        assert!(t2 > t1);
+        let var = (t2 - m.migration_rtt) / (t1 - m.migration_rtt);
+        assert!((var - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_compute_bound_batch_reasonable() {
+        let m = qwen();
+        let b = m.decode_compute_bound_batch(1024);
+        // A 7B model on A800 flips to compute-bound at O(100) batch.
+        assert!((8..2048).contains(&b), "tipping batch = {b}");
+    }
+
+    #[test]
+    fn cached_tokens_reduce_prefill_time() {
+        let m = qwen();
+        let cold = m.prefill_time(
+            &[PrefillItem { new_tokens: 4096, cached_tokens: 0, vision_tokens: 0 }],
+            1,
+        );
+        let warm = m.prefill_time(
+            &[PrefillItem { new_tokens: 1024, cached_tokens: 3072, vision_tokens: 0 }],
+            1,
+        );
+        assert!(warm < cold * 0.5, "cold={cold} warm={warm}");
+    }
+
+    #[test]
+    fn preprocess_time_scales_with_tiles() {
+        let m = llama();
+        assert!(m.preprocess_time(1120, 1120) > m.preprocess_time(500, 500));
+    }
+
+    #[test]
+    fn pure_text_batch_skips_cross_attn_on_encdec() {
+        let l = llama();
+        let batch = [PrefillItem { new_tokens: 2048, cached_tokens: 0, vision_tokens: 0 }];
+        let mixed = l.prefill_time_flags(&batch, 1, true);
+        let pure = l.prefill_time_flags(&batch, 1, false);
+        assert!(pure < mixed, "pure={pure} mixed={mixed}");
+        // Decoder-only model: flag makes no difference.
+        let q = qwen();
+        assert_eq!(
+            q.prefill_time_flags(&batch, 1, true),
+            q.prefill_time_flags(&batch, 1, false)
+        );
+    }
+
+    #[test]
+    fn decode_pure_text_flag_helps_encdec() {
+        let l = llama();
+        let batch: Vec<DecodeItem> =
+            (0..32).map(|_| DecodeItem { context_len: 512, vision_tokens: 0 }).collect();
+        let mixed = l.decode_step_time_flags(&batch, 1, true);
+        let pure = l.decode_step_time_flags(&batch, 1, false);
+        assert!(pure <= mixed);
+    }
+
+    #[test]
+    fn prefill_dp_splits_work() {
+        let m = qwen();
+        let batch: Vec<PrefillItem> = (0..8)
+            .map(|_| PrefillItem { new_tokens: 2048, cached_tokens: 0, vision_tokens: 0 })
+            .collect();
+        let t1 = m.prefill_time_dp(&batch, 1, 1);
+        let t4 = m.prefill_time_dp(&batch, 4, 1);
+        assert!(t4 < t1 * 0.4, "t1={t1} t4={t4}");
+        // With dp >= batch size, time approaches single-item time.
+        let t8 = m.prefill_time_dp(&batch, 8, 1);
+        let single = m.prefill_time(&batch[..1], 1);
+        assert!((t8 - single).abs() / single < 0.01);
+    }
+}

@@ -1,0 +1,167 @@
+//! weights.bin reader — the counterpart of `python/compile/aot.py`'s
+//! `write_weights`: magic "EMMW", u32 count, then per tensor
+//! u32 name_len / name / u32 ndim / u64 dims... / f32 data (LE).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// All model weights, by name, plus literal conversion.
+pub struct WeightStore {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("weights.bin truncated at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {} — run `make artifacts`", path.display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightStore> {
+        let mut r = Reader { b: bytes, pos: 0 };
+        if r.take(4)? != b"EMMW" {
+            bail!("bad magic in weights.bin");
+        }
+        let count = r.u32()? as usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let nlen = r.u32()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec())?;
+            let ndim = r.u32()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(4 * n)?;
+            let mut data = vec![0f32; n];
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.insert(name.clone(), Tensor { name, dims, data });
+        }
+        if r.pos != bytes.len() {
+            bail!("trailing bytes in weights.bin");
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing weight tensor {name}"))
+    }
+
+    /// Convert a tensor to an XLA literal (f32, row-major).
+    pub fn literal(&self, name: &str) -> Result<xla::Literal> {
+        let t = self.get(name)?;
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"EMMW");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": shape [2, 3]
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(b"a");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u64.to_le_bytes());
+        b.extend_from_slice(&3u64.to_le_bytes());
+        for i in 0..6 {
+            b.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        // tensor "b": scalar-ish shape [1]
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(b"b");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u64.to_le_bytes());
+        b.extend_from_slice(&7.5f32.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn parses_valid_file() {
+        let ws = WeightStore::parse(&sample_bytes()).unwrap();
+        assert_eq!(ws.tensors.len(), 2);
+        let a = ws.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(a.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(ws.get("b").unwrap().data, vec![7.5]);
+        assert_eq!(ws.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_bytes();
+        b[0] = b'X';
+        assert!(WeightStore::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let b = sample_bytes();
+        assert!(WeightStore::parse(&b[..b.len() - 2]).is_err());
+        let mut c = b.clone();
+        c.push(0);
+        assert!(WeightStore::parse(&c).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let ws = WeightStore::parse(&sample_bytes()).unwrap();
+        assert!(ws.get("nope").is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! OpenAI-compatible HTTP frontend (paper Appendix A: "The frontend of
+//! ElasticMM uses the OpenAI API format, identical to vLLM, allowing
+//! users who have previously used vLLM to send requests ... without any
+//! modifications").
+//!
+//! A std-only HTTP/1.1 server (the offline vendor set has no tokio/hyper)
+//! exposing:
+//!   POST /v1/completions        {"prompt": "...", "max_tokens": N,
+//!                                "image": <content-id int, optional>}
+//!   POST /v1/chat/completions   {"messages":[{"role":"user","content":"..."}]}
+//!   GET  /v1/models
+//!   GET  /health
+//!
+//! Requests are served by the real AOT engine; the router thread owns the
+//! engine and workers feed it through a channel (Python never runs here).
+
+use crate::serving::engine::{Engine, ServeRequest};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Parsed HTTP request line + headers + body.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request from a stream (Content-Length framing).
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
+}
+
+/// Write an HTTP/1.1 response.
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}
+
+/// Translate an OpenAI-format JSON body into a [`ServeRequest`].
+/// `/v1/completions` uses `prompt`; `/v1/chat/completions` concatenates
+/// user-message contents. A nonstandard `image` field (integer content
+/// id) attaches a synthetic image — the tiny model has no real image
+/// upload path, so images are referenced by content id as in the trace
+/// format.
+pub fn parse_openai_request(path: &str, body: &str, id: u64) -> Result<ServeRequest> {
+    let j = Json::parse(body).map_err(|e| anyhow!("invalid JSON: {e}"))?;
+    let prompt = if path.ends_with("/chat/completions") {
+        let msgs = j.get("messages")?.as_arr()?;
+        let mut buf = String::new();
+        for m in msgs {
+            if m.get("role")?.as_str()? == "user" {
+                buf.push_str(m.get("content")?.as_str()?);
+                buf.push(' ');
+            }
+        }
+        buf.trim_end().to_string()
+    } else {
+        j.get("prompt")?.as_str()?.to_string()
+    };
+    let max_new = j.get_usize_or("max_tokens", 16);
+    let image = j.opt("image").and_then(|v| v.as_u64().ok());
+    Ok(ServeRequest { id, prompt, image, max_new })
+}
+
+/// Build the OpenAI-format completion response.
+pub fn completion_response(req_id: u64, model: &str, text: &str, n_tokens: usize) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(format!("cmpl-{req_id}"))),
+        ("object", Json::str("text_completion")),
+        ("model", Json::str(model)),
+        (
+            "choices",
+            Json::Arr(vec![Json::obj(vec![
+                ("index", Json::num(0.0)),
+                ("text", Json::str(text)),
+                ("finish_reason", Json::str("length")),
+            ])]),
+        ),
+        (
+            "usage",
+            Json::obj(vec![("completion_tokens", Json::num(n_tokens as f64))]),
+        ),
+    ])
+}
+
+/// Serve until `stop` flips. Single-threaded accept loop feeding the
+/// engine (adequate for the tiny model; the heavy-duty scheduling story
+/// lives in the simulator).
+pub fn serve(
+    listener: TcpListener,
+    artifacts: &PathBuf,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut engine = Engine::load(artifacts, true)?;
+    let next_id = AtomicU64::new(0);
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let resp = handle(&mut stream, &mut engine, &next_id);
+                if let Err(e) = resp {
+                    let _ = write_response(
+                        &mut stream,
+                        400,
+                        &Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+                    );
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn handle(stream: &mut TcpStream, engine: &mut Engine, next_id: &AtomicU64) -> Result<()> {
+    let req = read_request(stream)?;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => write_response(stream, 200, r#"{"status":"ok"}"#),
+        ("GET", "/v1/models") => {
+            let body = Json::obj(vec![
+                ("object", Json::str("list")),
+                (
+                    "data",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("id", Json::str("elasticmm-tiny-mllm")),
+                        ("object", Json::str("model")),
+                    ])]),
+                ),
+            ]);
+            write_response(stream, 200, &body.to_string())
+        }
+        ("POST", p) if p == "/v1/completions" || p == "/v1/chat/completions" => {
+            let id = next_id.fetch_add(1, Ordering::Relaxed);
+            let sreq = parse_openai_request(p, &req.body, id)?;
+            let res = engine.serve_sequential(&sreq)?;
+            let body =
+                completion_response(id, "elasticmm-tiny-mllm", &res.text, res.tokens.len());
+            write_response(stream, 200, &body.to_string())
+        }
+        _ => write_response(stream, 404, r#"{"error":"not found"}"#),
+    }
+}
+
+/// Spawn the server on an ephemeral port; returns (port, stop flag,
+/// join handle). Used by tests and the `elasticmm serve-http` command.
+pub fn spawn(
+    artifacts: PathBuf,
+) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<Result<()>>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let port = listener.local_addr()?.port();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || serve(listener, &artifacts, stop2));
+    Ok((port, stop, handle))
+}
+
+/// Minimal HTTP client for tests / CLI smoke checks.
+pub fn http_post(port: u16, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(("127.0.0.1", port))?;
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("bad response"))?;
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_completions_body() {
+        let r = parse_openai_request(
+            "/v1/completions",
+            r#"{"prompt": "hello", "max_tokens": 4, "image": 3}"#,
+            7,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, "hello");
+        assert_eq!(r.max_new, 4);
+        assert_eq!(r.image, Some(3));
+        assert_eq!(r.id, 7);
+    }
+
+    #[test]
+    fn parses_chat_body_concatenating_user_turns() {
+        let r = parse_openai_request(
+            "/v1/chat/completions",
+            r#"{"messages": [
+                {"role": "system", "content": "be brief"},
+                {"role": "user", "content": "hi"},
+                {"role": "user", "content": "there"}
+            ]}"#,
+            0,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, "hi there");
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.image, None);
+    }
+
+    #[test]
+    fn rejects_invalid_json() {
+        assert!(parse_openai_request("/v1/completions", "{nope", 0).is_err());
+        assert!(parse_openai_request("/v1/completions", r#"{"x": 1}"#, 0).is_err());
+    }
+
+    #[test]
+    fn completion_response_shape() {
+        let j = completion_response(5, "m", "out", 3);
+        assert_eq!(j.get("id").unwrap().as_str().unwrap(), "cmpl-5");
+        let choices = j.get("choices").unwrap().as_arr().unwrap();
+        assert_eq!(choices[0].get("text").unwrap().as_str().unwrap(), "out");
+    }
+
+    #[test]
+    fn end_to_end_http_serving() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let (port, stop, handle) = spawn(dir).unwrap();
+        // Wait for the engine to come up, then issue OpenAI-format calls.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let (code, body) = (|| -> Result<(u16, String)> {
+            for _ in 0..50 {
+                match http_post(
+                    port,
+                    "/v1/completions",
+                    r#"{"prompt": "describe", "max_tokens": 4, "image": 1}"#,
+                ) {
+                    Ok(r) => return Ok(r),
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+                }
+            }
+            Err(anyhow!("server never came up"))
+        })()
+        .unwrap();
+        assert_eq!(code, 200, "body: {body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(
+            j.get("usage").unwrap().get("completion_tokens").unwrap().as_usize().unwrap(),
+            4
+        );
+        let (code2, body2) = http_post(
+            port,
+            "/v1/chat/completions",
+            r#"{"messages": [{"role":"user","content":"hello"}], "max_tokens": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(code2, 200, "body: {body2}");
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+//! Real execution path: the AOT tiny MLLM served from Rust via PJRT,
+//! with sequential and staged (non-blocking-encode) pipelines.
+
+pub mod engine;
+pub mod http;
+pub mod tokenizer;
+
+pub use engine::{
+    serve_sequential_batch, serve_staged, synth_image, Engine, ServeRequest, ServeResult,
+};

@@ -1,0 +1,56 @@
+//! Byte-level tokenizer for the tiny MLLM (vocab = 256 = raw bytes).
+//! Prompts are padded/truncated to the model's fixed prompt length —
+//! PJRT AOT artifacts have static shapes (see python/compile/model.py).
+
+/// Pad byte (ASCII space).
+pub const PAD: i32 = 32;
+
+/// Encode a prompt into exactly `len` byte tokens.
+pub fn encode(prompt: &str, len: usize) -> Vec<i32> {
+    let mut toks: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
+    toks.truncate(len);
+    while toks.len() < len {
+        toks.push(PAD);
+    }
+    toks
+}
+
+/// Decode tokens back into a (lossy) string.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .map(|&t| t.clamp(0, 255) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_to_length() {
+        let t = encode("hi", 5);
+        assert_eq!(t, vec![104, 105, 32, 32, 32]);
+    }
+
+    #[test]
+    fn truncates_to_length() {
+        let t = encode("hello world", 5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(decode(&t), "hello");
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "What is in this image?";
+        let t = encode(s, 48);
+        assert!(decode(&t).starts_with(s));
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        // 300 -> 0xFF (invalid UTF-8 alone -> replacement char), -5 -> 0.
+        assert_eq!(decode(&[300, -5]), "\u{fffd}\u{0}");
+    }
+}

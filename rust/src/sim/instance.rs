@@ -1,0 +1,230 @@
+//! Simulated elastic instances and per-request lifecycle state shared by
+//! every serving system (ElasticMM and baselines).
+//!
+//! An *elastic instance* (paper Fig 2/3) is the schedulable unit: one
+//! model replica on `tp` GPUs. Within a stage the paper prioritizes data
+//! parallelism, so for the 7B/11B models of the evaluation each instance
+//! occupies exactly `CostModel::min_tp()` GPUs (=1), and elasticity =
+//! moving instances between modality groups and stages.
+
+use crate::kvcache::paged::PagedKvCache;
+use crate::workload::Request;
+
+/// Which inference stage an instance currently serves (stage-level
+/// disaggregation, §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageRole {
+    /// Vision encoder replica.
+    Encode,
+    /// LLM prefill replica.
+    Prefill,
+    /// LLM decode replica.
+    Decode,
+    /// Coupled baseline: everything on one replica.
+    Unified,
+}
+
+/// Which modality group owns an instance (modality-level separation, §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupId {
+    Text,
+    Multimodal,
+}
+
+/// A simulated elastic instance.
+#[derive(Debug)]
+pub struct Instance {
+    pub id: usize,
+    pub tp: usize,
+    pub role: StageRole,
+    pub group: GroupId,
+    /// Busy with the current iteration until this sim time.
+    pub busy_until: f64,
+    /// Sequences currently resident for decode (request ids).
+    pub decoding: Vec<u64>,
+    /// Paged KV pool (token-granular accounting, Appendix A).
+    pub kv: PagedKvCache,
+    /// Tokens decoded on this instance (utilization accounting).
+    pub tokens_processed: u64,
+    /// Total busy seconds (utilization accounting).
+    pub busy_time: f64,
+}
+
+impl Instance {
+    pub fn new(id: usize, tp: usize, role: StageRole, group: GroupId, kv_tokens: usize) -> Self {
+        Instance {
+            id,
+            tp,
+            role,
+            group,
+            busy_until: 0.0,
+            decoding: Vec::new(),
+            kv: PagedKvCache::new(kv_tokens, 16),
+            tokens_processed: 0,
+            busy_time: 0.0,
+        }
+    }
+
+    pub fn idle_at(&self, now: f64) -> bool {
+        self.busy_until <= now
+    }
+
+    /// Begin an iteration of `duration`; returns its completion time.
+    pub fn start_iteration(&mut self, now: f64, duration: f64) -> f64 {
+        debug_assert!(self.idle_at(now), "instance {} double-booked", self.id);
+        self.busy_until = now + duration;
+        self.busy_time += duration;
+        self.busy_until
+    }
+
+    pub fn kv_free_tokens(&self) -> usize {
+        self.kv.free_tokens()
+    }
+}
+
+/// Request lifecycle phase in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for preprocessing/encoding capacity (multimodal only).
+    WaitEncode,
+    /// Image encoding in flight.
+    Encoding,
+    /// Encoded (or text-only); waiting for prefill admission.
+    WaitPrefill,
+    /// Prefill in flight (possibly chunked across iterations).
+    Prefilling,
+    /// KV migrating between instances (paused).
+    Migrating,
+    /// Generating tokens.
+    Decoding,
+    Finished,
+}
+
+/// Per-request simulation state + timing record.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub req: Request,
+    pub phase: Phase,
+    /// Vision tokens for the chosen model.
+    pub vision_tokens: usize,
+    /// Full input context (prompt + vision tokens).
+    pub input_len: usize,
+    /// Vision tokens that still need encoding (after image-cache hits).
+    pub encode_pending: Vec<usize>,
+    /// Prefill tokens skipped via unified prefix cache.
+    pub cached_prefix: usize,
+    /// Prefill tokens completed so far (excluding cached prefix).
+    pub prefill_done: usize,
+    /// Prefill tokens required (input_len - cached_prefix).
+    pub prefill_target: usize,
+    /// Output tokens generated so far.
+    pub decoded: usize,
+    /// Instance currently holding this request's KV (decode home).
+    pub home: Option<usize>,
+    // --- timing record -------------------------------------------------
+    pub t_arrival: f64,
+    pub t_encode_done: f64,
+    pub t_first_token: f64,
+    pub t_finish: f64,
+}
+
+impl SimRequest {
+    pub fn new(req: Request, vision_tokens: usize) -> Self {
+        let input_len = req.prompt_tokens + vision_tokens;
+        let phase = if vision_tokens > 0 { Phase::WaitEncode } else { Phase::WaitPrefill };
+        let t_arrival = req.arrival;
+        SimRequest {
+            req,
+            phase,
+            vision_tokens,
+            input_len,
+            encode_pending: Vec::new(),
+            cached_prefix: 0,
+            prefill_done: 0,
+            prefill_target: input_len,
+            decoded: 0,
+            home: None,
+            t_arrival,
+            t_encode_done: f64::NAN,
+            t_first_token: f64::NAN,
+            t_finish: f64::NAN,
+        }
+    }
+
+    pub fn prefill_remaining(&self) -> usize {
+        self.prefill_target.saturating_sub(self.prefill_done)
+    }
+
+    /// Context length while decoding (input + generated so far).
+    pub fn context_len(&self) -> usize {
+        self.input_len + self.decoded
+    }
+
+    pub fn finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ImageRef;
+
+    fn request(images: usize) -> Request {
+        Request {
+            id: 1,
+            arrival: 2.5,
+            prompt_tokens: 100,
+            output_tokens: 20,
+            images: (0..images)
+                .map(|i| ImageRef { width: 448, height: 448, content_id: i as u64 })
+                .collect(),
+            prefix_id: 0,
+            prefix_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn text_request_skips_encode_phase() {
+        let r = SimRequest::new(request(0), 0);
+        assert_eq!(r.phase, Phase::WaitPrefill);
+        assert_eq!(r.input_len, 100);
+    }
+
+    #[test]
+    fn multimodal_request_starts_in_encode() {
+        let r = SimRequest::new(request(1), 1000);
+        assert_eq!(r.phase, Phase::WaitEncode);
+        assert_eq!(r.input_len, 1100);
+        assert_eq!(r.t_arrival, 2.5);
+    }
+
+    #[test]
+    fn prefill_remaining_accounts_progress() {
+        let mut r = SimRequest::new(request(0), 0);
+        r.cached_prefix = 30;
+        r.prefill_target = 70;
+        r.prefill_done = 50;
+        assert_eq!(r.prefill_remaining(), 20);
+        r.prefill_done = 70;
+        assert_eq!(r.prefill_remaining(), 0);
+    }
+
+    #[test]
+    fn instance_iteration_accounting() {
+        let mut inst = Instance::new(0, 1, StageRole::Unified, GroupId::Text, 1600);
+        assert!(inst.idle_at(0.0));
+        let done = inst.start_iteration(1.0, 0.5);
+        assert_eq!(done, 1.5);
+        assert!(!inst.idle_at(1.2));
+        assert!(inst.idle_at(1.5));
+        assert!((inst.busy_time - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn context_len_grows_with_decode() {
+        let mut r = SimRequest::new(request(0), 0);
+        r.decoded = 7;
+        assert_eq!(r.context_len(), 107);
+    }
+}

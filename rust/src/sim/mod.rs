@@ -1,0 +1,7 @@
+//! Discrete-event cluster simulator — the testbed substitute
+//! (DESIGN.md §Substitutions). [`engine`] provides the clock/queue,
+//! [`instance`] the elastic-instance and request state shared by the
+//! EMP coordinator and all baselines.
+
+pub mod engine;
+pub mod instance;

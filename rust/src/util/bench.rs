@@ -1,0 +1,113 @@
+//! Bench timing harness (no `criterion` in the offline vendor set).
+//!
+//! `Bench::run` warms up, then runs timed iterations until both a minimum
+//! iteration count and a minimum wall-time are reached, and reports
+//! mean / p50 / p99 per-iteration latency. Used by every `benches/*.rs`
+//! binary (declared with `harness = false`).
+
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { min_iters: 10, min_time: Duration::from_millis(300), warmup: 2 }
+    }
+}
+
+impl Bench {
+    /// Time `f` repeatedly; the closure should perform one full iteration
+    /// and return a value (kept via `std::hint::black_box` to defeat DCE).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples_ns.len() < self.min_iters || start.elapsed() < self.min_time {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 100_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile_sorted(&samples_ns, 50.0),
+            p99_ns: stats::percentile_sorted(&samples_ns, 99.0),
+            min_ns: samples_ns.first().copied().unwrap_or(f64::NAN),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { min_iters: 5, min_time: Duration::from_millis(5), warmup: 1 };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Used by the `elasticmm` launcher, the examples, and every bench binary
+//! (so bench parameters can be overridden from the command line).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass
+    /// `std::env::args().skip(1)` in binaries.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Subcommand = first positional arg.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_mixture() {
+        let a = parse(&["serve", "--qps", "4.5", "--verbose", "--out=x.json", "trace.json"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get_f64("qps", 0.0), 4.5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert_eq!(a.positional[1], "trace.json");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("gpus", 8), 8);
+        assert_eq!(a.subcommand(), None);
+        assert!(!a.has_flag("anything"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--w -1" : "-1" doesn't start with "--", so it's a value.
+        let a = parse(&["--w", "-1"]);
+        assert_eq!(a.get_f64("w", 0.0), -1.0);
+    }
+}

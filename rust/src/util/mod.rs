@@ -1,0 +1,10 @@
+//! In-repo substrates: the offline vendor set lacks `rand`, `serde`,
+//! `clap`, `criterion`, and `proptest`, so this module provides the
+//! equivalents the rest of the system is built on.
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod cli;
+pub mod proptest;
+pub mod bench;

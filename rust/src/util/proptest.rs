@@ -1,0 +1,122 @@
+//! Minimal property-testing harness (the vendor set has no `proptest`).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs a bounded greedy
+//! shrink (re-generating with smaller "size" budgets) and panics with the
+//! smallest failing case it found plus the reproducing seed.
+//!
+//! Coordinator invariants (routing, batching, allocation, cache
+//! consistency) are tested through this module.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Generation context: wraps the RNG with a size budget that shrinking
+/// reduces.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Size budget in [0, 100]; generators should scale collection sizes
+    /// and magnitudes by it so shrinking produces smaller cases.
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// A "natural" length in [0, max], scaled by the size budget.
+    pub fn len(&mut self, max: usize) -> usize {
+        let cap = (max * self.size / 100).max(1);
+        self.rng.below_usize(cap + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics (with seed and the
+/// smallest failing input found) if the property returns `Err`.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut generate: G, mut prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let mut g = Gen { rng: &mut case_rng, size: 100 };
+        let input = generate(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Shrink: regenerate from the same stream seed with smaller
+            // size budgets; keep the smallest size that still fails.
+            let mut best: (usize, T, String) = (100, input, msg);
+            for size in [50usize, 25, 10, 5, 2, 1] {
+                let mut srng = Rng::new(case_seed);
+                let mut sg = Gen { rng: &mut srng, size };
+                let candidate = generate(&mut sg);
+                if let Err(m) = prop(&candidate) {
+                    best = (size, candidate, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case_idx}, case_seed={case_seed}, \
+                 shrunk_size={}):\n  input: {:?}\n  error: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            200,
+            |g| {
+                let n = g.len(50);
+                (0..n).map(|_| g.usize_in(0, 99)).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut sorted = v.clone();
+                sorted.sort();
+                if sorted.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("sort changed length".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            2,
+            100,
+            |g| g.usize_in(0, 1000),
+            |&n| if n < 900 { Ok(()) } else { Err(format!("{n} too big")) },
+        );
+    }
+
+    #[test]
+    fn gen_len_respects_size() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng, size: 1 };
+        for _ in 0..100 {
+            assert!(g.len(100) <= 1);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Arrival processes. The paper (§4.1) drives load with Poisson arrivals
+//! at a target QPS, shaped by real-world production traces; §3.1 observes
+//! that *aggregate* traffic is smooth/diurnal while multimodal traffic
+//! shows pronounced bursts. We provide all three shapes:
+//!
+//! * [`poisson_arrivals`] — constant-rate Poisson (the QPS sweeps).
+//! * [`BurstyProcess`] — Markov-modulated Poisson (quiet/burst states),
+//!   used to stress the reactive scaling path.
+//! * [`DiurnalProcess`] — sinusoidal day/night rate for the proactive
+//!   allocator's long-horizon predictability.
+
+use super::{Modality, Request};
+use crate::util::rng::Rng;
+
+/// Stamp Poisson arrival times (rate `qps`) onto `requests` in order.
+pub fn poisson_arrivals(rng: &mut Rng, requests: &mut [Request], qps: f64) {
+    let mut t = 0.0;
+    for r in requests.iter_mut() {
+        t += rng.exp(qps);
+        r.arrival = t;
+    }
+}
+
+/// Two-state Markov-modulated Poisson process: a quiet state at
+/// `base_qps` and a burst state at `burst_qps`, with exponential state
+/// holding times. Matches the paper's "sudden spikes in image inputs".
+#[derive(Debug, Clone)]
+pub struct BurstyProcess {
+    pub base_qps: f64,
+    pub burst_qps: f64,
+    /// Mean seconds spent in quiet state.
+    pub mean_quiet_s: f64,
+    /// Mean seconds spent in burst state.
+    pub mean_burst_s: f64,
+}
+
+impl BurstyProcess {
+    /// Stamp arrivals; returns the burst intervals for assertions/plots.
+    pub fn stamp(&self, rng: &mut Rng, requests: &mut [Request]) -> Vec<(f64, f64)> {
+        let mut bursts = Vec::new();
+        let mut t = 0.0;
+        let mut in_burst = false;
+        // Next state-flip time.
+        let mut flip = t + rng.exp(1.0 / self.mean_quiet_s);
+        let mut burst_start = 0.0;
+        for r in requests.iter_mut() {
+            loop {
+                let rate = if in_burst { self.burst_qps } else { self.base_qps };
+                let gap = rng.exp(rate);
+                if t + gap <= flip {
+                    t += gap;
+                    break;
+                }
+                // Cross the state boundary: advance to flip, switch state.
+                t = flip;
+                in_burst = !in_burst;
+                if in_burst {
+                    burst_start = t;
+                    flip = t + rng.exp(1.0 / self.mean_burst_s);
+                } else {
+                    bursts.push((burst_start, t));
+                    flip = t + rng.exp(1.0 / self.mean_quiet_s);
+                }
+            }
+            r.arrival = t;
+        }
+        if in_burst {
+            bursts.push((burst_start, t));
+        }
+        bursts
+    }
+}
+
+/// Sinusoidal diurnal rate: `qps(t) = mean * (1 + amplitude*sin(2πt/period))`.
+#[derive(Debug, Clone)]
+pub struct DiurnalProcess {
+    pub mean_qps: f64,
+    pub amplitude: f64,
+    pub period_s: f64,
+}
+
+impl DiurnalProcess {
+    pub fn rate_at(&self, t: f64) -> f64 {
+        self.mean_qps
+            * (1.0 + self.amplitude * (2.0 * std::f64::consts::PI * t / self.period_s).sin())
+                .max(0.01)
+    }
+
+    /// Stamp arrivals via thinning (Lewis–Shedler).
+    pub fn stamp(&self, rng: &mut Rng, requests: &mut [Request]) {
+        let lambda_max = self.mean_qps * (1.0 + self.amplitude.abs());
+        let mut t = 0.0;
+        for r in requests.iter_mut() {
+            loop {
+                t += rng.exp(lambda_max);
+                if rng.f64() < self.rate_at(t) / lambda_max {
+                    break;
+                }
+            }
+            r.arrival = t;
+        }
+    }
+}
+
+/// Make bursts *multimodal-heavy*: reorder requests so that multimodal
+/// ones cluster inside the burst windows (the paper's bursty image
+/// streams), preserving every request's arrival stamp.
+pub fn concentrate_multimodal_in_bursts(
+    requests: &mut [Request],
+    bursts: &[(f64, f64)],
+) {
+    let arrivals: Vec<f64> = requests.iter().map(|r| r.arrival).collect();
+    let in_burst =
+        |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
+    // Partition request payloads: multimodal payloads go to burst slots.
+    let mut mm: Vec<Request> =
+        requests.iter().filter(|r| r.modality() == Modality::Multimodal).cloned().collect();
+    let mut txt: Vec<Request> =
+        requests.iter().filter(|r| r.modality() == Modality::TextOnly).cloned().collect();
+    for (i, &t) in arrivals.iter().enumerate() {
+        let pick_mm = in_burst(t) && !mm.is_empty();
+        let payload = if pick_mm || txt.is_empty() {
+            mm.pop()
+        } else {
+            txt.pop()
+        };
+        if let Some(mut p) = payload {
+            p.arrival = t;
+            requests[i] = p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::datasets::DatasetSpec;
+
+    fn gen(n: usize, seed: u64) -> (Rng, Vec<Request>) {
+        let mut rng = Rng::new(seed);
+        let reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+        (rng, reqs)
+    }
+
+    #[test]
+    fn poisson_rate_matches() {
+        let (mut rng, mut reqs) = gen(20_000, 1);
+        poisson_arrivals(&mut rng, &mut reqs, 5.0);
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 5.0).abs() < 0.2, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let (mut rng, mut reqs) = gen(1000, 2);
+        poisson_arrivals(&mut rng, &mut reqs, 10.0);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn bursty_process_has_bursts_and_monotone_times() {
+        let (mut rng, mut reqs) = gen(20_000, 3);
+        let p = BurstyProcess {
+            base_qps: 2.0,
+            burst_qps: 30.0,
+            mean_quiet_s: 60.0,
+            mean_burst_s: 10.0,
+        };
+        let bursts = p.stamp(&mut rng, &mut reqs);
+        assert!(!bursts.is_empty());
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // Rate inside bursts should be much higher than outside.
+        let in_burst = |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
+        let burst_time: f64 = bursts.iter().map(|&(a, b)| b - a).sum();
+        let total = reqs.last().unwrap().arrival;
+        let n_in = reqs.iter().filter(|r| in_burst(r.arrival)).count() as f64;
+        let n_out = reqs.len() as f64 - n_in;
+        let rate_in = n_in / burst_time.max(1e-9);
+        let rate_out = n_out / (total - burst_time).max(1e-9);
+        assert!(rate_in > 4.0 * rate_out, "in={rate_in} out={rate_out}");
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates() {
+        let p = DiurnalProcess { mean_qps: 10.0, amplitude: 0.5, period_s: 100.0 };
+        assert!(p.rate_at(25.0) > 14.0); // peak
+        assert!(p.rate_at(75.0) < 6.0); // trough
+        let (mut rng, mut reqs) = gen(5000, 4);
+        p.stamp(&mut rng, &mut reqs);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn concentrate_multimodal_preserves_stamps_and_counts() {
+        let (mut rng, mut reqs) = gen(5000, 5);
+        let p = BurstyProcess {
+            base_qps: 2.0,
+            burst_qps: 40.0,
+            mean_quiet_s: 50.0,
+            mean_burst_s: 8.0,
+        };
+        let bursts = p.stamp(&mut rng, &mut reqs);
+        let stamps: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
+        let n_mm = reqs.iter().filter(|r| !r.images.is_empty()).count();
+        concentrate_multimodal_in_bursts(&mut reqs, &bursts);
+        let stamps2: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
+        assert_eq!(stamps, stamps2);
+        assert_eq!(reqs.iter().filter(|r| !r.images.is_empty()).count(), n_mm);
+        // Multimodal fraction inside bursts should exceed outside.
+        let in_burst = |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
+        let frac = |inside: bool| {
+            let sel: Vec<&Request> =
+                reqs.iter().filter(|r| in_burst(r.arrival) == inside).collect();
+            sel.iter().filter(|r| !r.images.is_empty()).count() as f64
+                / sel.len().max(1) as f64
+        };
+        assert!(frac(true) > frac(false));
+    }
+}

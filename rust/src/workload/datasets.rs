@@ -1,0 +1,287 @@
+//! Synthetic stand-ins for the paper's two evaluation datasets
+//! (DESIGN.md §Substitutions):
+//!
+//! * **ShareGPT-4o-like** — 50K-image-style conversational data:
+//!   *higher-resolution images*, moderate text prompts. The paper uses
+//!   this as its visually-intensive workload.
+//! * **VisualWebInstruct-like** — web-scraped instruction data: *longer
+//!   text inputs*, smaller images.
+//!
+//! Both mix text-only and multimodal requests; image content and text
+//! prefixes are drawn from Zipf-distributed pools so real-world
+//! redundancy (repeated images, shared system prompts) is present for
+//! the unified-prefix-cache experiments.
+
+use super::{ImageRef, Request};
+use crate::util::rng::Rng;
+
+/// Distributional description of a dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// Fraction of requests that carry >=1 image.
+    pub multimodal_fraction: f64,
+    /// Text prompt length ~ LogNormal(mu, sigma), clamped.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub prompt_max: usize,
+    /// Output length ~ LogNormal(mu, sigma), clamped.
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    pub output_max: usize,
+    /// Image edge ~ LogNormal(mu, sigma) pixels, clamped.
+    pub image_edge_mu: f64,
+    pub image_edge_sigma: f64,
+    pub image_edge_min: usize,
+    pub image_edge_max: usize,
+    /// P(second image | multimodal), applied repeatedly (geometric).
+    pub extra_image_p: f64,
+    /// Distinct image pool size + Zipf exponent (content redundancy).
+    pub image_pool: usize,
+    pub image_zipf_s: f64,
+    /// Distinct shared-prefix pool + prefix token length range.
+    pub prefix_pool: usize,
+    pub prefix_zipf_s: f64,
+    pub prefix_tokens_range: (usize, usize),
+    /// Fraction of requests that start with a shared prefix.
+    pub shared_prefix_fraction: f64,
+}
+
+impl DatasetSpec {
+    /// ShareGPT-4o-like: high-resolution images, moderate text.
+    /// Medians: prompt ≈ 150 tokens, output ≈ 180, image edge ≈ 900 px.
+    pub fn sharegpt4o() -> DatasetSpec {
+        DatasetSpec {
+            name: "ShareGPT-4o".to_string(),
+            multimodal_fraction: 0.55,
+            prompt_mu: 5.0,
+            prompt_sigma: 0.9,
+            prompt_max: 4096,
+            output_mu: 5.2,
+            output_sigma: 0.8,
+            output_max: 2048,
+            image_edge_mu: 6.8,
+            image_edge_sigma: 0.35,
+            image_edge_min: 336,
+            image_edge_max: 2048,
+            extra_image_p: 0.15,
+            image_pool: 2000,
+            image_zipf_s: 1.05,
+            prefix_pool: 24,
+            prefix_zipf_s: 1.2,
+            prefix_tokens_range: (64, 512),
+            shared_prefix_fraction: 0.45,
+        }
+    }
+
+    /// VisualWebInstruct-like: long text inputs, smaller images.
+    /// Medians: prompt ≈ 500 tokens, output ≈ 250, image edge ≈ 550 px.
+    pub fn visualwebinstruct() -> DatasetSpec {
+        DatasetSpec {
+            name: "VisualWebInstruct".to_string(),
+            multimodal_fraction: 0.45,
+            prompt_mu: 6.2,
+            prompt_sigma: 1.0,
+            prompt_max: 8192,
+            output_mu: 5.5,
+            output_sigma: 0.7,
+            output_max: 2048,
+            image_edge_mu: 6.3,
+            image_edge_sigma: 0.4,
+            image_edge_min: 224,
+            image_edge_max: 1344,
+            extra_image_p: 0.25,
+            image_pool: 4000,
+            image_zipf_s: 1.0,
+            prefix_pool: 40,
+            prefix_zipf_s: 1.1,
+            prefix_tokens_range: (128, 768),
+            shared_prefix_fraction: 0.5,
+        }
+    }
+
+    /// 50/50 mixture used by the Fig 8 ablation ("sampling from a mixed
+    /// dataset composed of two distinct sources").
+    pub fn mixed() -> (DatasetSpec, DatasetSpec) {
+        (DatasetSpec::sharegpt4o(), DatasetSpec::visualwebinstruct())
+    }
+
+    fn sample_len(rng: &mut Rng, mu: f64, sigma: f64, max: usize) -> usize {
+        (rng.lognormal(mu, sigma).round() as usize).clamp(4, max)
+    }
+
+    /// Draw one request (arrival time filled by the arrival process).
+    pub fn sample(&self, rng: &mut Rng, id: u64) -> Request {
+        let prompt_tokens =
+            Self::sample_len(rng, self.prompt_mu, self.prompt_sigma, self.prompt_max);
+        let output_tokens =
+            Self::sample_len(rng, self.output_mu, self.output_sigma, self.output_max);
+        let mut images = Vec::new();
+        if rng.chance(self.multimodal_fraction) {
+            loop {
+                let content_id = rng.zipf(self.image_pool, self.image_zipf_s) as u64;
+                // Dimensions are a *deterministic property of the image
+                // content* (repeated transmissions of the same image have
+                // the same pixels), drawn from the dataset's resolution
+                // distribution via a content-seeded stream.
+                let mut irng =
+                    Rng::new(content_id ^ ((self.image_pool as u64) << 32) ^ 0x1A6E);
+                let edge = (irng
+                    .lognormal(self.image_edge_mu, self.image_edge_sigma)
+                    .round() as usize)
+                    .clamp(self.image_edge_min, self.image_edge_max);
+                // Mild aspect-ratio variation, also content-determined.
+                let h = ((edge as f64) * irng.range_f64(0.75, 1.3)) as usize;
+                images.push(ImageRef {
+                    width: edge,
+                    height: h.clamp(self.image_edge_min, self.image_edge_max),
+                    content_id,
+                });
+                if images.len() >= 8 || !rng.chance(self.extra_image_p) {
+                    break;
+                }
+            }
+        }
+        let (prefix_id, prefix_tokens) = if rng.chance(self.shared_prefix_fraction) {
+            let pid = rng.zipf(self.prefix_pool, self.prefix_zipf_s) as u64;
+            // Deterministic per-prefix length so identical ids share an
+            // identical token span (required for cache correctness).
+            let (lo, hi) = self.prefix_tokens_range;
+            let span = lo + (pid as usize * 2654435761 % (hi - lo + 1));
+            (pid + 1, span.min(prompt_tokens))
+        } else {
+            (0, 0)
+        };
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens,
+            output_tokens,
+            images,
+            prefix_id,
+            prefix_tokens,
+        }
+    }
+
+    /// Generate `n` requests (arrivals at 0; combine with an arrival
+    /// process from [`super::arrival`]).
+    pub fn generate(&self, rng: &mut Rng, n: usize) -> Vec<Request> {
+        (0..n).map(|i| self.sample(rng, i as u64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::stats;
+
+    #[test]
+    fn sharegpt_has_higher_resolution_images() {
+        let mut rng = Rng::new(1);
+        let sg = DatasetSpec::sharegpt4o().generate(&mut rng, 4000);
+        let vw = DatasetSpec::visualwebinstruct().generate(&mut rng, 4000);
+        let avg_edge = |rs: &[Request]| {
+            let e: Vec<f64> = rs
+                .iter()
+                .flat_map(|r| r.images.iter().map(|i| i.width as f64))
+                .collect();
+            stats::mean(&e)
+        };
+        assert!(
+            avg_edge(&sg) > avg_edge(&vw) + 100.0,
+            "sharegpt {} vs vwi {}",
+            avg_edge(&sg),
+            avg_edge(&vw)
+        );
+    }
+
+    #[test]
+    fn visualwebinstruct_has_longer_text() {
+        let mut rng = Rng::new(2);
+        let sg = DatasetSpec::sharegpt4o().generate(&mut rng, 4000);
+        let vw = DatasetSpec::visualwebinstruct().generate(&mut rng, 4000);
+        let avg = |rs: &[Request]| {
+            stats::mean(&rs.iter().map(|r| r.prompt_tokens as f64).collect::<Vec<_>>())
+        };
+        assert!(avg(&vw) > 1.5 * avg(&sg));
+    }
+
+    #[test]
+    fn multimodal_fraction_close_to_spec() {
+        let mut rng = Rng::new(3);
+        let spec = DatasetSpec::sharegpt4o();
+        let rs = spec.generate(&mut rng, 8000);
+        let frac = rs.iter().filter(|r| !r.images.is_empty()).count() as f64
+            / rs.len() as f64;
+        assert!((frac - spec.multimodal_fraction).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn multimodal_context_longer_than_text_only() {
+        // Paper Fig 1c: multimodal requests have much longer contexts.
+        let mut rng = Rng::new(4);
+        let model = presets::qwen25_vl_7b();
+        let rs = DatasetSpec::sharegpt4o().generate(&mut rng, 4000);
+        let (mut mm, mut txt) = (Vec::new(), Vec::new());
+        for r in &rs {
+            let len = r.input_len(&model) as f64;
+            if r.images.is_empty() {
+                txt.push(len);
+            } else {
+                mm.push(len);
+            }
+        }
+        assert!(stats::mean(&mm) > 4.0 * stats::mean(&txt));
+    }
+
+    #[test]
+    fn image_content_redundancy_exists() {
+        let mut rng = Rng::new(5);
+        let rs = DatasetSpec::sharegpt4o().generate(&mut rng, 3000);
+        let ids: Vec<u64> =
+            rs.iter().flat_map(|r| r.images.iter().map(|i| i.content_id)).collect();
+        let mut uniq = ids.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert!(
+            uniq.len() < ids.len() / 2,
+            "expected heavy reuse: {} unique of {}",
+            uniq.len(),
+            ids.len()
+        );
+    }
+
+    #[test]
+    fn shared_prefixes_deterministic_per_id() {
+        let mut rng = Rng::new(6);
+        let spec = DatasetSpec::sharegpt4o();
+        let rs = spec.generate(&mut rng, 5000);
+        let mut seen = 0;
+        for r in rs.iter().filter(|r| r.prefix_id != 0) {
+            // Span is a pure function of prefix_id, clamped by the prompt.
+            let (lo, hi) = spec.prefix_tokens_range;
+            let pid = r.prefix_id - 1;
+            let expected =
+                (lo + (pid as usize * 2654435761 % (hi - lo + 1))).min(r.prompt_tokens);
+            assert_eq!(r.prefix_tokens, expected, "prefix span mismatch");
+            seen += 1;
+        }
+        assert!(seen > 100);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let mut rng = Rng::new(7);
+        for spec in [DatasetSpec::sharegpt4o(), DatasetSpec::visualwebinstruct()] {
+            for r in spec.generate(&mut rng, 2000) {
+                assert!(r.prompt_tokens <= spec.prompt_max);
+                assert!(r.output_tokens <= spec.output_max);
+                for img in &r.images {
+                    assert!(img.width >= spec.image_edge_min);
+                    assert!(img.width <= spec.image_edge_max);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Workload layer: request model, dataset-like generators, arrival
+//! processes, and trace serialization.
+
+pub mod datasets;
+pub mod arrival;
+pub mod trace;
+
+/// Request modality (the paper's two modality groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Modality {
+    TextOnly,
+    Multimodal,
+}
+
+impl Modality {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Modality::TextOnly => "text",
+            Modality::Multimodal => "multimodal",
+        }
+    }
+}
+
+/// An image attached to a request. `content_id` identifies the pixel
+/// content (requests repeating the same image share an id — this is what
+/// the image-hash pool of the unified prefix cache keys on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImageRef {
+    pub width: usize,
+    pub height: usize,
+    pub content_id: u64,
+}
+
+/// A serving request as it enters the frontend.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+    /// Text prompt length in tokens.
+    pub prompt_tokens: usize,
+    /// Output length (ground truth for the simulator; a real run decides
+    /// by sampling / EOS).
+    pub output_tokens: usize,
+    pub images: Vec<ImageRef>,
+    /// Shared-prefix identity: requests with the same `prefix_id` share
+    /// their first `prefix_tokens` prompt tokens (system prompts etc.) —
+    /// exercised by the unified prefix cache.
+    pub prefix_id: u64,
+    pub prefix_tokens: usize,
+}
+
+impl Request {
+    pub fn modality(&self) -> Modality {
+        if self.images.is_empty() {
+            Modality::TextOnly
+        } else {
+            Modality::Multimodal
+        }
+    }
+
+    /// Vision token count for a given model config.
+    pub fn vision_tokens(&self, model: &crate::config::ModelConfig) -> usize {
+        self.images
+            .iter()
+            .map(|img| model.image_tokens(img.width, img.height))
+            .sum()
+    }
+
+    /// Full input context length (text + vision) for a model.
+    pub fn input_len(&self, model: &crate::config::ModelConfig) -> usize {
+        self.prompt_tokens + self.vision_tokens(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn req(images: Vec<ImageRef>) -> Request {
+        Request {
+            id: 1,
+            arrival: 0.0,
+            prompt_tokens: 100,
+            output_tokens: 50,
+            images,
+            prefix_id: 0,
+            prefix_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn modality_from_images() {
+        assert_eq!(req(vec![]).modality(), Modality::TextOnly);
+        assert_eq!(
+            req(vec![ImageRef { width: 448, height: 448, content_id: 7 }]).modality(),
+            Modality::Multimodal
+        );
+    }
+
+    #[test]
+    fn input_len_includes_vision_tokens() {
+        let m = presets::qwen25_vl_7b();
+        let r = req(vec![ImageRef { width: 904, height: 904, content_id: 7 }]);
+        assert_eq!(r.input_len(&m), 100 + m.image_tokens(904, 904));
+    }
+
+    #[test]
+    fn multiple_images_sum() {
+        let m = presets::qwen25_vl_7b();
+        let img = ImageRef { width: 452, height: 452, content_id: 1 };
+        let r1 = req(vec![img]);
+        let r2 = req(vec![img, img]);
+        assert_eq!(r2.vision_tokens(&m), 2 * r1.vision_tokens(&m));
+    }
+}

@@ -1,0 +1,114 @@
+//! Trace serialization: request streams round-trip through JSON so
+//! experiments are replayable and shareable between the simulator, the
+//! real serving engine, and the bench harnesses.
+
+use super::{ImageRef, Request};
+use crate::util::json::{Json, JsonError};
+use std::path::Path;
+
+pub fn request_to_json(r: &Request) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("arrival", Json::num(r.arrival)),
+        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+        ("output_tokens", Json::num(r.output_tokens as f64)),
+        (
+            "images",
+            Json::Arr(
+                r.images
+                    .iter()
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("w", Json::num(i.width as f64)),
+                            ("h", Json::num(i.height as f64)),
+                            ("content_id", Json::num(i.content_id as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("prefix_id", Json::num(r.prefix_id as f64)),
+        ("prefix_tokens", Json::num(r.prefix_tokens as f64)),
+    ])
+}
+
+pub fn request_from_json(j: &Json) -> Result<Request, JsonError> {
+    let images = j
+        .get("images")?
+        .as_arr()?
+        .iter()
+        .map(|i| {
+            Ok(ImageRef {
+                width: i.get("w")?.as_usize()?,
+                height: i.get("h")?.as_usize()?,
+                content_id: i.get("content_id")?.as_u64()?,
+            })
+        })
+        .collect::<Result<Vec<_>, JsonError>>()?;
+    Ok(Request {
+        id: j.get("id")?.as_u64()?,
+        arrival: j.get("arrival")?.as_f64()?,
+        prompt_tokens: j.get("prompt_tokens")?.as_usize()?,
+        output_tokens: j.get("output_tokens")?.as_usize()?,
+        images,
+        prefix_id: j.get("prefix_id")?.as_u64()?,
+        prefix_tokens: j.get("prefix_tokens")?.as_usize()?,
+    })
+}
+
+pub fn trace_to_json(requests: &[Request]) -> Json {
+    Json::Arr(requests.iter().map(request_to_json).collect())
+}
+
+pub fn trace_from_json(j: &Json) -> Result<Vec<Request>, JsonError> {
+    j.as_arr()?.iter().map(request_from_json).collect()
+}
+
+pub fn save_trace(path: &Path, requests: &[Request]) -> anyhow::Result<()> {
+    std::fs::write(path, trace_to_json(requests).to_string())?;
+    Ok(())
+}
+
+pub fn load_trace(path: &Path) -> anyhow::Result<Vec<Request>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(trace_from_json(&Json::parse(&text)?)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::arrival::poisson_arrivals;
+    use crate::workload::datasets::DatasetSpec;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut rng = Rng::new(1);
+        let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 200);
+        poisson_arrivals(&mut rng, &mut reqs, 3.0);
+        let j = trace_to_json(&reqs);
+        let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.images, b.images);
+            assert_eq!(a.prefix_id, b.prefix_id);
+            assert_eq!(a.prefix_tokens, b.prefix_tokens);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(2);
+        let reqs = DatasetSpec::visualwebinstruct().generate(&mut rng, 50);
+        let dir = std::env::temp_dir().join("elasticmm_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        save_trace(&path, &reqs).unwrap();
+        let back = load_trace(&path).unwrap();
+        assert_eq!(back.len(), reqs.len());
+    }
+}

@@ -1,0 +1,121 @@
+//! Cross-module integration tests: the full systems (EMP + baselines)
+//! on shared traces, trace round-trips feeding the simulators, and the
+//! paper's headline orderings.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::Slo;
+use elasticmm::model::CostModel;
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::{trace, Request};
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn mk_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+#[test]
+fn all_three_systems_complete_same_trace() {
+    let t = mk_trace(200, 8.0, 1);
+    let emp = EmpSystem::new(cost(), SchedulerConfig::default(), 8, EmpOptions::full(8)).run(&t);
+    let vllm = CoupledVllm::new(cost(), SchedulerConfig::default(), 8).run(&t);
+    let dec = DecoupledStatic::new(cost(), SchedulerConfig::default(), 8).run(&t);
+    for rep in [&emp, &vllm, &dec] {
+        assert_eq!(rep.records.len(), t.len());
+    }
+}
+
+#[test]
+fn headline_ordering_under_load() {
+    // ElasticMM <= vLLM-Decouple <= vLLM on normalized input latency
+    // under a heavy multimodal workload (Fig 5's qualitative ordering;
+    // we assert the two paper-critical inequalities).
+    let t = mk_trace(300, 12.0, 2);
+    let emp = EmpSystem::new(cost(), SchedulerConfig::default(), 8, EmpOptions::full(8)).run(&t);
+    let vllm = CoupledVllm::new(cost(), SchedulerConfig::default(), 8).run(&t);
+    let dec = DecoupledStatic::new(cost(), SchedulerConfig::default(), 8).run(&t);
+    assert!(
+        emp.mean_norm_input_latency() < vllm.mean_norm_input_latency(),
+        "ElasticMM must beat vLLM on input latency"
+    );
+    assert!(
+        emp.mean_norm_input_latency() <= dec.mean_norm_input_latency() * 1.05,
+        "ElasticMM must not lose to static decoupling"
+    );
+    assert!(
+        emp.mean_norm_output_latency() < vllm.mean_norm_output_latency(),
+        "decode isolation must beat coupled output latency"
+    );
+}
+
+#[test]
+fn slo_goodput_ordering() {
+    let t = mk_trace(250, 10.0, 3);
+    let emp = EmpSystem::new(cost(), SchedulerConfig::default(), 8, EmpOptions::full(8)).run(&t);
+    let vllm = CoupledVllm::new(cost(), SchedulerConfig::default(), 8).run(&t);
+    let slo = Slo { norm_input_s: 0.002, norm_output_s: 0.05 };
+    assert!(emp.goodput_rps(&slo) >= vllm.goodput_rps(&slo));
+}
+
+#[test]
+fn trace_roundtrip_feeds_simulator() {
+    let t = mk_trace(120, 5.0, 4);
+    let dir = std::env::temp_dir().join("elasticmm_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    trace::save_trace(&path, &t).unwrap();
+    let loaded = trace::load_trace(&path).unwrap();
+    let a = EmpSystem::new(cost(), SchedulerConfig::default(), 8, EmpOptions::full(8)).run(&t);
+    let b =
+        EmpSystem::new(cost(), SchedulerConfig::default(), 8, EmpOptions::full(8)).run(&loaded);
+    let fa: Vec<f64> = a.records.iter().map(|r| r.finish).collect();
+    let fb: Vec<f64> = b.records.iter().map(|r| r.finish).collect();
+    assert_eq!(fa, fb, "serialized trace must replay identically");
+}
+
+#[test]
+fn encdec_mixed_batch_penalty_visible() {
+    // The EncDec architecture problem (§2.3): under a coupled system the
+    // text requests pay cross-attention in mixed batches; ElasticMM's
+    // text group avoids it. Compare text-class output latency.
+    let llama = CostModel::new(presets::llama32_vision_11b(), GpuSpec::a800_80g());
+    let t = mk_trace(250, 8.0, 5);
+    let emp = EmpSystem::new(llama.clone(), SchedulerConfig::default(), 8, EmpOptions::full(8))
+        .run(&t);
+    let vllm = CoupledVllm::new(llama, SchedulerConfig::default(), 8).run(&t);
+    let (txt_emp, _) = emp.split_by_modality();
+    let (txt_vllm, _) = vllm.split_by_modality();
+    assert!(
+        txt_emp.mean_norm_output_latency() < txt_vllm.mean_norm_output_latency(),
+        "modality-pure text batches must decode faster on EncDec"
+    );
+}
+
+#[test]
+fn elasticity_stats_populated_under_bursts() {
+    use elasticmm::workload::arrival::{concentrate_multimodal_in_bursts, BurstyProcess};
+    let mut rng = Rng::new(6);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 300);
+    let p = BurstyProcess {
+        base_qps: 10.0,
+        burst_qps: 30.0,
+        mean_quiet_s: 30.0,
+        mean_burst_s: 10.0,
+    };
+    let bursts = p.stamp(&mut rng, &mut reqs);
+    concentrate_multimodal_in_bursts(&mut reqs, &bursts);
+    let mut sys = EmpSystem::new(cost(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    sys.run(&reqs);
+    sys.check_invariants().unwrap();
+    assert!(sys.stats.role_flips > 0, "stage elasticity should trigger: {:?}", sys.stats);
+}
