@@ -11,6 +11,7 @@ use elasticmm::config::{presets, GpuSpec, ModelConfig, SchedulerConfig};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::metrics::{Report, Slo};
 use elasticmm::model::CostModel;
+use elasticmm::ServingSystem;
 use elasticmm::util::cli::Args;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;

@@ -12,6 +12,7 @@
 use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::model::CostModel;
+use elasticmm::ServingSystem;
 use elasticmm::util::cli::Args;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;

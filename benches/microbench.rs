@@ -10,6 +10,7 @@ use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::kvcache::paged::PagedKvCache;
 use elasticmm::kvcache::radix::RadixTree;
 use elasticmm::model::{CostModel, DecodeItem, PrefillItem};
+use elasticmm::ServingSystem;
 use elasticmm::sim::engine::EventQueue;
 use elasticmm::util::bench::Bench;
 use elasticmm::util::rng::Rng;

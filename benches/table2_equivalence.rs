@@ -12,7 +12,7 @@ use elasticmm::util::cli::Args;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> elasticmm::util::error::Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("requests", 40);
     let dir = Runtime::default_dir();

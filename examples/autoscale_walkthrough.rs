@@ -7,6 +7,7 @@
 use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::model::CostModel;
+use elasticmm::ServingSystem;
 use elasticmm::util::rng::Rng;
 use elasticmm::workload::arrival::{concentrate_multimodal_in_bursts, BurstyProcess};
 use elasticmm::workload::datasets::DatasetSpec;

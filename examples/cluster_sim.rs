@@ -9,6 +9,7 @@ use elasticmm::baselines::decoupled::DecoupledStatic;
 use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::model::CostModel;
+use elasticmm::ServingSystem;
 use elasticmm::util::cli::Args;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;

@@ -6,7 +6,7 @@
 use elasticmm::runtime::Runtime;
 use elasticmm::serving::{Engine, ServeRequest};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> elasticmm::util::error::Result<()> {
     let dir = Runtime::default_dir();
     println!("loading artifacts from {} ...", dir.display());
     let mut engine = Engine::load(&dir, true)?;

@@ -39,7 +39,7 @@ fn summarize(name: &str, results: &[elasticmm::serving::ServeResult], wall: f64)
     );
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> elasticmm::util::error::Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("requests", 24);
     let dir = Runtime::default_dir();

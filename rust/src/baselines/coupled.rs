@@ -11,18 +11,25 @@
 //!   admission gated on free KV slots;
 //! * static data-parallel replicas behind a least-outstanding-work
 //!   router; no elasticity.
+//!
+//! The event loop lives in the shared driver
+//! ([`crate::sim::driver::run_trace`]); this module only implements the
+//! coupled scheduling policy. Its internal methods are generic over an
+//! event-wrapping function so [`super::decoupled::DecoupledStatic`] can
+//! compose two coupled fleets inside one event queue.
 
 use crate::config::SchedulerConfig;
-use crate::metrics::{Report, RequestRecord};
+use crate::metrics::RequestRecord;
 use crate::model::{CostModel, DecodeItem, PrefillItem};
-use crate::sim::engine::EventQueue;
+use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
 use crate::workload::Request;
 use std::collections::{HashMap, VecDeque};
 
-#[derive(Debug)]
-enum Ev {
-    Arrive(usize),
+/// Events of the coupled system: iteration completions only (arrivals
+/// are injected by the driver).
+#[derive(Debug, Clone, Copy)]
+pub enum CoupledEv {
     IterDone(usize),
 }
 
@@ -56,7 +63,7 @@ impl CoupledVllm {
         CoupledVllm {
             cost,
             sched,
-            instances: instances,
+            instances,
             waiting: (0..n_inst).map(|_| VecDeque::new()).collect(),
             current: (0..n_inst).map(|_| None).collect(),
             requests: HashMap::new(),
@@ -83,14 +90,40 @@ impl CoupledVllm {
         queued + running
     }
 
-    fn route(&self, _req: &SimRequest) -> usize {
+    fn pick_instance(&self, _req: &SimRequest) -> usize {
         (0..self.instances.len())
             .min_by_key(|&i| self.load(i))
             .expect("at least one instance")
     }
 
+    /// Admit a request to the least-loaded instance's FCFS queue. `wrap`
+    /// lifts this fleet's events into the enclosing system's event type.
+    pub(crate) fn admit<E>(
+        &mut self,
+        req: Request,
+        q: &mut SimQueue<'_, E>,
+        wrap: &impl Fn(CoupledEv) -> E,
+    ) {
+        let vis = req.vision_tokens(&self.cost.model);
+        let mut sr = SimRequest::new(req, vis);
+        // Coupled system has no separate encode queue.
+        if sr.phase == Phase::WaitEncode {
+            sr.phase = Phase::WaitPrefill;
+        }
+        let id = sr.req.id;
+        let inst = self.pick_instance(&sr);
+        self.requests.insert(id, sr);
+        self.waiting[inst].push_back(id);
+        self.schedule(inst, q, wrap);
+    }
+
     /// Try to start an iteration on an idle instance.
-    fn schedule(&mut self, inst: usize, q: &mut EventQueue<Ev>) {
+    fn schedule<E>(
+        &mut self,
+        inst: usize,
+        q: &mut SimQueue<'_, E>,
+        wrap: &impl Fn(CoupledEv) -> E,
+    ) {
         let now = q.now();
         if !self.instances[inst].idle_at(now) || self.current[inst].is_some() {
             return;
@@ -136,7 +169,7 @@ impl CoupledVllm {
                 + self.cost.prefill_time(&batch_items, self.instances[inst].tp);
             let done = self.instances[inst].start_iteration(now, dur);
             self.current[inst] = Some(Iter::Prefill(batch_ids));
-            q.push(done, Ev::IterDone(inst));
+            q.push(done, wrap(CoupledEv::IterDone(inst)));
             return;
         }
         // 2) Decode step for resident sequences.
@@ -157,11 +190,16 @@ impl CoupledVllm {
             let dur = self.cost.decode_step_time(&items, self.instances[inst].tp);
             let done = self.instances[inst].start_iteration(now, dur);
             self.current[inst] = Some(Iter::Decode(ids));
-            q.push(done, Ev::IterDone(inst));
+            q.push(done, wrap(CoupledEv::IterDone(inst)));
         }
     }
 
-    fn complete_iteration(&mut self, inst: usize, q: &mut EventQueue<Ev>) {
+    pub(crate) fn complete_iteration<E>(
+        &mut self,
+        inst: usize,
+        q: &mut SimQueue<'_, E>,
+        wrap: &impl Fn(CoupledEv) -> E,
+    ) {
         let now = q.now();
         let iter = self.current[inst].take().expect("iteration in flight");
         match iter {
@@ -199,35 +237,37 @@ impl CoupledVllm {
                 }
             }
         }
-        self.schedule(inst, q);
+        self.schedule(inst, q, wrap);
+    }
+}
+
+impl ServingSystem for CoupledVllm {
+    type Ev = CoupledEv;
+
+    fn route(&mut self, req: Request, q: &mut SimQueue<'_, CoupledEv>) {
+        self.admit(req, q, &|e| e);
     }
 
-    /// Run a trace to completion; returns the metrics report.
-    pub fn run(&mut self, trace: &[Request]) -> Report {
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        for (i, r) in trace.iter().enumerate() {
-            q.push(r.arrival, Ev::Arrive(i));
+    fn on_event(&mut self, ev: CoupledEv, q: &mut SimQueue<'_, CoupledEv>) {
+        match ev {
+            CoupledEv::IterDone(inst) => self.complete_iteration(inst, q, &|e| e),
         }
-        while let Some((_, ev)) = q.pop() {
-            match ev {
-                Ev::Arrive(i) => {
-                    let req = trace[i].clone();
-                    let vis = req.vision_tokens(&self.cost.model);
-                    let mut sr = SimRequest::new(req, vis);
-                    // Coupled system has no separate encode queue.
-                    if sr.phase == Phase::WaitEncode {
-                        sr.phase = Phase::WaitPrefill;
-                    }
-                    let id = sr.req.id;
-                    let inst = self.route(&sr);
-                    self.requests.insert(id, sr);
-                    self.waiting[inst].push_back(id);
-                    self.schedule(inst, &mut q);
-                }
-                Ev::IterDone(inst) => self.complete_iteration(inst, &mut q),
-            }
-        }
-        Report::new(std::mem::take(&mut self.finished))
+    }
+
+    fn completed(&self) -> usize {
+        self.finished.len()
+    }
+
+    fn drain_records(&mut self) -> Vec<RequestRecord> {
+        std::mem::take(&mut self.finished)
+    }
+
+    fn verify_invariants(&self) -> Result<(), String> {
+        crate::sim::instance::check_instances(&self.instances, &self.requests)
+    }
+
+    fn kv_in_use(&self) -> usize {
+        crate::sim::instance::kv_tokens_in_use(&self.instances)
     }
 }
 
@@ -268,6 +308,7 @@ mod tests {
         let mut sys = system(4);
         let t = trace(100, 10.0, 2);
         sys.run(&t);
+        assert_eq!(sys.kv_in_use(), 0);
         for inst in &sys.instances {
             assert_eq!(inst.kv.num_seqs(), 0);
             assert_eq!(inst.kv.used_tokens(), 0);

@@ -6,13 +6,27 @@
 //! so EncDec models skip cross-attention there (the benefit of
 //! decoupling); everything else inherits coupled vLLM behaviour
 //! (inline encoding, static allocation).
+//!
+//! Both fleets share one event queue under the common driver: requests
+//! are routed by modality at arrival and each fleet's events are wrapped
+//! in [`DecoupledEv`] so the fleets stay independent while the run is a
+//! single simulation.
 
 use crate::config::SchedulerConfig;
-use crate::metrics::Report;
+use crate::metrics::RequestRecord;
 use crate::model::CostModel;
+use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::workload::{Modality, Request};
 
-use super::coupled::CoupledVllm;
+use super::coupled::{CoupledEv, CoupledVllm};
+
+/// Events of the decoupled system: a coupled-fleet event tagged with the
+/// fleet it belongs to.
+#[derive(Debug, Clone, Copy)]
+pub enum DecoupledEv {
+    Text(CoupledEv),
+    Multimodal(CoupledEv),
+}
 
 pub struct DecoupledStatic {
     pub text: CoupledVllm,
@@ -38,18 +52,47 @@ impl DecoupledStatic {
             multimodal: CoupledVllm::new(cost, sched, mm_gpus),
         }
     }
+}
 
-    pub fn run(&mut self, trace: &[Request]) -> Report {
-        let (mm, txt): (Vec<Request>, Vec<Request>) = trace
-            .iter()
-            .cloned()
-            .partition(|r| r.modality() == Modality::Multimodal);
-        // The two fleets are independent; simulate each on its own
-        // sub-trace and merge the reports.
-        let mut records = self.text.run(&txt).records;
-        records.extend(self.multimodal.run(&mm).records);
+impl ServingSystem for DecoupledStatic {
+    type Ev = DecoupledEv;
+
+    fn route(&mut self, req: Request, q: &mut SimQueue<'_, DecoupledEv>) {
+        match req.modality() {
+            Modality::TextOnly => self.text.admit(req, q, &DecoupledEv::Text),
+            Modality::Multimodal => self.multimodal.admit(req, q, &DecoupledEv::Multimodal),
+        }
+    }
+
+    fn on_event(&mut self, ev: DecoupledEv, q: &mut SimQueue<'_, DecoupledEv>) {
+        match ev {
+            DecoupledEv::Text(CoupledEv::IterDone(i)) => {
+                self.text.complete_iteration(i, q, &DecoupledEv::Text)
+            }
+            DecoupledEv::Multimodal(CoupledEv::IterDone(i)) => {
+                self.multimodal.complete_iteration(i, q, &DecoupledEv::Multimodal)
+            }
+        }
+    }
+
+    fn completed(&self) -> usize {
+        self.text.completed() + self.multimodal.completed()
+    }
+
+    fn drain_records(&mut self) -> Vec<RequestRecord> {
+        let mut records = self.text.drain_records();
+        records.extend(self.multimodal.drain_records());
         records.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        Report::new(records)
+        records
+    }
+
+    fn verify_invariants(&self) -> Result<(), String> {
+        self.text.verify_invariants()?;
+        self.multimodal.verify_invariants()
+    }
+
+    fn kv_in_use(&self) -> usize {
+        self.text.kv_in_use() + self.multimodal.kv_in_use()
     }
 }
 
@@ -77,6 +120,7 @@ mod tests {
         let mut sys = DecoupledStatic::new(cost(), SchedulerConfig::default(), 8);
         let rep = sys.run(&trace(200, 4.0, 1));
         assert_eq!(rep.records.len(), 200);
+        assert_eq!(sys.kv_in_use(), 0);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Baseline serving systems the paper compares against (§4.1):
 //! [`coupled`] = vLLM v0.6.6-style, [`decoupled`] = vLLM-Decouple.
 //! The Fig 7 *static allocation* policies (text-dominant / equal /
-//! multimodal-dominant) are ElasticMM variants with elasticity disabled
-//! and are constructed via `coordinator::EmpSystem::with_static_split`.
+//! multimodal-dominant) are ElasticMM variants with elasticity disabled,
+//! constructed via `coordinator::EmpOptions::static_split`. All
+//! baselines run on the shared [`crate::sim::driver::ServingSystem`]
+//! driver, so every system is measured by the same event loop.
 
 pub mod coupled;
 pub mod decoupled;

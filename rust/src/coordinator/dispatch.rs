@@ -1,0 +1,278 @@
+//! Stage-level request dispatching (§3.2 "Request Dispatching").
+//!
+//! FCFS admission into encode and prefill iterations, bounded by free KV
+//! slots on the decode destinations and by the memory→compute
+//! tipping-point token budget; decode stepping; and the unified path for
+//! single-instance groups (coupled semantics). Elasticity decisions
+//! (Eq. 2 / Eq. 3) live in [`super::scaling`] — dispatch only *asks* it
+//! when admission is blocked or a DP iteration could borrow an instance.
+
+use crate::model::{DecodeItem, PrefillItem};
+use crate::sim::driver::SimQueue;
+use crate::sim::instance::{GroupId, Phase, StageRole};
+
+use super::scaling;
+use super::system::{gidx, EmpEv, EmpSystem, Iter};
+
+/// Start encode iterations on idle encoder instances, draining the
+/// encode queue FCFS. Each request's pending images are encoded in one
+/// iteration (preprocess + encoder forward).
+pub(crate) fn schedule_encoders(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
+    let now = q.now();
+    let encoders = sys.role_members(g, StageRole::Encode);
+    for e in encoders {
+        if !sys.instances[e].idle_at(now) || sys.current[e].is_some() {
+            continue;
+        }
+        let Some(&id) = sys.groups[gidx(g)].wait_encode.front() else { break };
+        sys.groups[gidx(g)].wait_encode.pop_front();
+        let r = sys.requests.get_mut(&id).unwrap();
+        r.phase = Phase::Encoding;
+        // Encode all this request's pending images in one iteration.
+        let mut dur = 0.0;
+        for &vt in &r.encode_pending {
+            dur += sys.cost.encode_time(vt, sys.instances[e].tp);
+        }
+        for img in &r.req.images {
+            dur += sys.cost.preprocess_time(img.width, img.height);
+        }
+        let done = sys.instances[e].start_iteration(now, dur);
+        sys.current[e] = Some(Iter::Encode { id });
+        q.push(done, EmpEv::IterDone(e));
+    }
+}
+
+/// Pick the decode destination with the most free KV able to hold
+/// `reserve` tokens.
+fn pick_decode_dest(sys: &EmpSystem, g: GroupId, reserve: usize) -> Option<usize> {
+    let mut decode = sys.role_members(g, StageRole::Decode);
+    decode.extend(sys.role_members(g, StageRole::Unified));
+    decode
+        .into_iter()
+        .filter(|&d| sys.instances[d].kv.can_allocate(reserve))
+        .max_by_key(|&d| sys.instances[d].kv_free_tokens())
+}
+
+/// FCFS prefill dispatch onto the idle prefill set E_p, bounded by the
+/// chunked-prefill token budget and the KV slots of the chosen decode
+/// destinations; evaluates Eq. 2 to possibly borrow a decode instance
+/// for extra DP width.
+pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
+    let now = q.now();
+    // E_p = idle prefill instances (Unified handled separately).
+    let e_p: Vec<usize> = sys
+        .role_members(g, StageRole::Prefill)
+        .into_iter()
+        .filter(|&i| sys.instances[i].idle_at(now) && sys.current[i].is_none())
+        .collect();
+    if e_p.is_empty() {
+        schedule_unified(sys, g, q);
+        return;
+    }
+    // R_p: FCFS admission under KV and tipping-point constraints.
+    let budget = sys.sched.chunked_prefill_tokens * e_p.len().max(1) * 4;
+    let mut ids = Vec::new();
+    let mut items = Vec::new();
+    let mut dests = Vec::new();
+    let mut tokens = 0usize;
+    let mut blocked_on_kv = false;
+    while let Some(&id) = sys.groups[gidx(g)].wait_prefill.front() {
+        let r = &sys.requests[&id];
+        if ids.len() >= sys.sched.max_prefill_batch * e_p.len()
+            || (tokens > 0 && tokens + r.prefill_remaining() > budget)
+        {
+            break;
+        }
+        let reserve = r.input_len + r.req.output_tokens;
+        let Some(dest) = pick_decode_dest(sys, g, reserve) else {
+            blocked_on_kv = true;
+            break;
+        };
+        sys.instances[dest].kv.allocate(id, reserve).expect("checked");
+        tokens += r.prefill_remaining();
+        items.push(PrefillItem {
+            new_tokens: r.prefill_remaining(),
+            cached_tokens: r.cached_prefix,
+            vision_tokens: r.vision_tokens,
+        });
+        dests.push(dest);
+        ids.push(id);
+        sys.groups[gidx(g)].wait_prefill.pop_front();
+    }
+    if blocked_on_kv {
+        // Stage-level elasticity is part of the serving engine and
+        // stays on even under static *group* allocation (Fig 7's
+        // baselines freeze only the inter-group split).
+        scaling::try_decode_scale_up(sys, g, q, true);
+    }
+    if ids.is_empty() {
+        schedule_unified(sys, g, q);
+        return;
+    }
+    // Elastic instance allocation (Eq. 2): consider pulling the
+    // decode instance with max unused slots into E_p.
+    let mut participants = e_p.clone();
+    if let Some(extra) =
+        scaling::consider_prefill_preemption(sys, g, &items, participants.len(), now, q)
+    {
+        participants.push(extra);
+    }
+    let tp = sys.instances[participants[0]].tp;
+    let cross = g == GroupId::Multimodal;
+    let mut dur = {
+        // DP split over participants (leader computes the max-shard
+        // time; modality-pure text batches skip cross-attention).
+        if participants.len() == 1 {
+            sys.cost.prefill_time_flags(&items, tp, cross)
+        } else {
+            sys.cost.prefill_time_dp(&items, participants.len(), tp)
+        }
+    };
+    // Blocking encode: any request reaching prefill with un-encoded
+    // images pays encoding serially in front of the iteration (image
+    // encoding is not DP-splittable within one request; coupled
+    // frameworks run it inline — Fig 1a). With non-blocking encoding
+    // requests arrive here already encoded, so this charges nothing.
+    for &id in &ids {
+        let r = &sys.requests[&id];
+        for &vt in &r.encode_pending {
+            dur += sys.cost.encode_time(vt, tp);
+        }
+        if !r.encode_pending.is_empty() {
+            for img in &r.req.images {
+                dur += sys.cost.preprocess_time(img.width, img.height);
+            }
+        }
+    }
+    // KV shipping to the decode destinations (NVLink, overlapped
+    // poorly at iteration end — charged serially).
+    dur += sys.cost.migration_time(tokens) * 0.5;
+    for (&id, &dest) in ids.iter().zip(&dests) {
+        let r = sys.requests.get_mut(&id).unwrap();
+        r.phase = Phase::Prefilling;
+        r.home = Some(dest);
+    }
+    if participants.len() > 1 {
+        sys.stats.dp_prefill_iters += 1;
+    }
+    let leader = participants[0];
+    for &p in &participants {
+        sys.instances[p].start_iteration(now, dur);
+    }
+    sys.current[leader] = Some(Iter::Prefill { ids, participants: participants.clone() });
+    q.push(now + dur, EmpEv::IterDone(leader));
+}
+
+/// Start a decode step on an idle decode instance holding sequences.
+pub(crate) fn schedule_decode(sys: &mut EmpSystem, inst: usize, q: &mut SimQueue<'_, EmpEv>) {
+    let now = q.now();
+    if !sys.instances[inst].idle_at(now)
+        || sys.current[inst].is_some()
+        || sys.instances[inst].decoding.is_empty()
+    {
+        return;
+    }
+    let g = sys.instances[inst].group;
+    let ids: Vec<u64> = sys.instances[inst]
+        .decoding
+        .iter()
+        .take(sys.sched.max_decode_batch)
+        .copied()
+        .collect();
+    let items: Vec<DecodeItem> = ids
+        .iter()
+        .map(|id| {
+            let r = &sys.requests[id];
+            DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+        })
+        .collect();
+    let cross = g == GroupId::Multimodal;
+    let dur = sys
+        .cost
+        .decode_step_time_flags(&items, sys.instances[inst].tp, cross);
+    let done = sys.instances[inst].start_iteration(now, dur);
+    sys.current[inst] = Some(Iter::Decode { ids });
+    q.push(done, EmpEv::IterDone(inst));
+}
+
+/// Unified path for single-instance groups: prefill priority, decode
+/// otherwise (coupled semantics on one replica).
+pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
+    let now = q.now();
+    for u in sys.role_members(g, StageRole::Unified) {
+        if !sys.instances[u].idle_at(now) || sys.current[u].is_some() {
+            continue;
+        }
+        // Prefill priority, decode otherwise (coupled semantics).
+        let mut ids = Vec::new();
+        let mut items = Vec::new();
+        let mut encode_s = 0.0;
+        let mut tokens = 0usize;
+        while let Some(&id) = sys.groups[gidx(g)].wait_prefill.front() {
+            let r = &sys.requests[&id];
+            let reserve = r.input_len + r.req.output_tokens;
+            if ids.len() >= sys.sched.max_prefill_batch
+                || (tokens > 0 && tokens + r.prefill_remaining() > 8192)
+                || !sys.instances[u].kv.can_allocate(reserve)
+            {
+                break;
+            }
+            sys.instances[u].kv.allocate(id, reserve).expect("checked");
+            tokens += r.prefill_remaining();
+            for &vt in &r.encode_pending {
+                encode_s += sys.cost.encode_time(vt, sys.instances[u].tp);
+            }
+            items.push(PrefillItem {
+                new_tokens: r.prefill_remaining(),
+                cached_tokens: r.cached_prefix,
+                vision_tokens: r.vision_tokens,
+            });
+            ids.push(id);
+            sys.groups[gidx(g)].wait_prefill.pop_front();
+        }
+        if !ids.is_empty() {
+            for &id in &ids {
+                let r = sys.requests.get_mut(&id).unwrap();
+                r.phase = Phase::Prefilling;
+                r.home = Some(u);
+            }
+            let cross = g == GroupId::Multimodal;
+            let dur = encode_s
+                + sys
+                    .cost
+                    .prefill_time_flags(&items, sys.instances[u].tp, cross);
+            let done = sys.instances[u].start_iteration(now, dur);
+            sys.current[u] = Some(Iter::Prefill { ids, participants: vec![u] });
+            q.push(done, EmpEv::IterDone(u));
+        } else {
+            schedule_decode_unified(sys, u, q);
+        }
+    }
+}
+
+/// Decode step on a unified instance (no prefill work pending).
+pub(crate) fn schedule_decode_unified(sys: &mut EmpSystem, u: usize, q: &mut SimQueue<'_, EmpEv>) {
+    let now = q.now();
+    if sys.instances[u].decoding.is_empty()
+        || !sys.instances[u].idle_at(now)
+        || sys.current[u].is_some()
+    {
+        return;
+    }
+    let g = sys.instances[u].group;
+    let ids: Vec<u64> = sys.instances[u].decoding.clone();
+    let items: Vec<DecodeItem> = ids
+        .iter()
+        .map(|id| {
+            let r = &sys.requests[id];
+            DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+        })
+        .collect();
+    let cross = g == GroupId::Multimodal;
+    let dur = sys
+        .cost
+        .decode_step_time_flags(&items, sys.instances[u].tp, cross);
+    let done = sys.instances[u].start_iteration(now, dur);
+    sys.current[u] = Some(Iter::Decode { ids });
+    q.push(done, EmpEv::IterDone(u));
+}

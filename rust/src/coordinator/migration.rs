@@ -1,0 +1,186 @@
+//! Inter-group preemption and KV migration (§3.1 + §3.2 mechanics).
+//!
+//! * [`migrate_seqs`] — plan-then-execute movement of decoding
+//!   sequences between instances (the physical arm of Eq. 2/Eq. 3);
+//! * [`reactive_inter_group`] — reactive modality-level preemption when
+//!   a group is under water;
+//! * [`rebalance`] — the proactive burst-tolerance tick (Eq. 1) moving
+//!   at most one idle instance toward the target allocation;
+//! * [`on_migrate_done`] — event handler landing migrated sequences.
+
+use crate::sim::driver::SimQueue;
+use crate::sim::instance::{GroupId, Phase, StageRole};
+
+use super::modality;
+use super::system::{gidx, EmpEv, EmpSystem};
+
+use std::collections::BTreeMap;
+
+/// Move all `ids` from `src` to fitting instances among `dests`.
+/// Returns false (no state change) if they cannot be placed.
+pub(crate) fn migrate_seqs(
+    sys: &mut EmpSystem,
+    src: usize,
+    dests: &[usize],
+    ids: Vec<u64>,
+    q: &mut SimQueue<'_, EmpEv>,
+) -> bool {
+    // Feasibility check first (plan placements). Tie-breaks follow
+    // `dests` order so planning is deterministic (a HashMap here would
+    // randomize placement between identical runs).
+    let mut free: Vec<(usize, usize)> = dests
+        .iter()
+        .map(|&d| (d, sys.instances[d].kv_free_tokens()))
+        .collect();
+    let mut plan: Vec<(u64, usize)> = Vec::new();
+    for &id in &ids {
+        let r = &sys.requests[&id];
+        let reserve = r.input_len + r.req.output_tokens;
+        let mut best: Option<usize> = None;
+        for (i, &(_, f)) in free.iter().enumerate() {
+            if f >= reserve && best.map_or(true, |b| f > free[b].1) {
+                best = Some(i);
+            }
+        }
+        let Some(bi) = best else {
+            return false;
+        };
+        free[bi].1 -= reserve;
+        plan.push((id, free[bi].0));
+    }
+    // Execute: release at src, schedule arrival at dest. BTreeMap so
+    // MigrateDone events enqueue in ascending destination order.
+    let mut by_dest: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    let mut total_tokens = 0usize;
+    for (id, d) in plan {
+        let r = sys.requests.get_mut(&id).unwrap();
+        total_tokens += r.context_len();
+        r.phase = Phase::Migrating;
+        sys.instances[src].kv.release(id).expect("resident");
+        sys.instances[src].decoding.retain(|&x| x != id);
+        let reserve = r.input_len + r.req.output_tokens;
+        sys.instances[d].kv.allocate(id, reserve).expect("planned");
+        by_dest.entry(d).or_default().push(id);
+    }
+    let mig = sys.cost.migration_time(total_tokens);
+    sys.stats.migrated_seqs += ids.len() as u64;
+    for (dest, ids) in by_dest {
+        q.push_after(mig, EmpEv::MigrateDone { ids, dest });
+    }
+    true
+}
+
+/// Land migrated sequences on their destination and kick its decode.
+pub(crate) fn on_migrate_done(
+    sys: &mut EmpSystem,
+    ids: Vec<u64>,
+    dest: usize,
+    q: &mut SimQueue<'_, EmpEv>,
+) {
+    for id in ids {
+        let r = sys.requests.get_mut(&id).unwrap();
+        if r.phase == Phase::Migrating {
+            r.phase = Phase::Decoding;
+            r.home = Some(dest);
+            sys.instances[dest].decoding.push(id);
+        }
+    }
+    super::dispatch::schedule_decode(sys, dest, q);
+    super::dispatch::schedule_decode_unified(sys, dest, q);
+}
+
+/// "Selects instances to preempt ... with minimal impact": idle, not
+/// mid-iteration, holding no resident sequences; prefer Encode, then
+/// Prefill, then Unified, and only then Decode.
+fn pick_idle_donor(sys: &EmpSystem, donor: GroupId, now: f64) -> Option<usize> {
+    sys.members(donor)
+        .into_iter()
+        .filter(|&i| {
+            sys.instances[i].idle_at(now)
+                && sys.current[i].is_none()
+                && sys.instances[i].decoding.is_empty()
+        })
+        .min_by_key(|&i| match sys.instances[i].role {
+            StageRole::Encode => 0,
+            StageRole::Prefill => 1,
+            StageRole::Unified => 2,
+            StageRole::Decode => 3,
+        })
+}
+
+/// Move one instance from `donor` to `needy` and re-establish both
+/// groups' role invariants and schedules.
+fn transfer_instance(
+    sys: &mut EmpSystem,
+    donor: GroupId,
+    needy: GroupId,
+    pick: usize,
+    q: &mut SimQueue<'_, EmpEv>,
+) {
+    sys.instances[pick].group = needy;
+    sys.instances[pick].role = StageRole::Prefill;
+    sys.stats.group_moves += 1;
+    sys.assign_initial_roles(donor);
+    sys.assign_initial_roles(needy);
+    sys.schedule_group(needy, q);
+    sys.schedule_group(donor, q);
+}
+
+/// Reactive inter-group scaling (§3.1): preempt an idle instance
+/// from the other group when this group is under water.
+pub(crate) fn reactive_inter_group(
+    sys: &mut EmpSystem,
+    needy: GroupId,
+    q: &mut SimQueue<'_, EmpEv>,
+) {
+    if !sys.opts.elastic {
+        return;
+    }
+    let donor = match needy {
+        GroupId::Text => GroupId::Multimodal,
+        GroupId::Multimodal => GroupId::Text,
+    };
+    let needy_n = sys.members(needy).len();
+    let donor_n = sys.members(donor).len();
+    let needy_avg = sys.groups[gidx(needy)].monitor.avg_instances_needed();
+    let donor_avg = sys.groups[gidx(donor)].monitor.avg_instances_needed();
+    if !modality::should_preempt_inter_group(needy_n, needy_avg, donor_n, donor_avg, 1) {
+        return;
+    }
+    let now = q.now();
+    let Some(pick) = pick_idle_donor(sys, donor, now) else { return };
+    transfer_instance(sys, donor, needy, pick, q);
+}
+
+/// Proactive rebalance tick (§3.1): refresh monitors, recompute the
+/// burst-tolerance allocation, and migrate at most one idle instance
+/// toward it per tick.
+pub(crate) fn rebalance(sys: &mut EmpSystem, q: &mut SimQueue<'_, EmpEv>) {
+    let now = q.now();
+    for g in [GroupId::Text, GroupId::Multimodal] {
+        sys.groups[gidx(g)].monitor.tick(now);
+    }
+    if !sys.opts.elastic {
+        return;
+    }
+    let total = sys.instances.len();
+    let demands = [
+        sys.groups[0].monitor.avg_instances_needed(),
+        sys.groups[1].monitor.avg_instances_needed(),
+    ];
+    let target = modality::proactive_allocation(total, &demands, 1);
+    let current = [sys.members(GroupId::Text).len(), sys.members(GroupId::Multimodal).len()];
+    // Move one instance from over- to under-allocated group.
+    let (donor, needy) = if current[0] > target[0] {
+        (GroupId::Text, GroupId::Multimodal)
+    } else if current[1] > target[1] {
+        (GroupId::Multimodal, GroupId::Text)
+    } else {
+        return;
+    };
+    if sys.members(donor).len() <= 1 {
+        return;
+    }
+    let Some(pick) = pick_idle_donor(sys, donor, now) else { return };
+    transfer_instance(sys, donor, needy, pick, q);
+}

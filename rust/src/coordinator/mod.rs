@@ -1,13 +1,25 @@
-//! The paper's contribution: Elastic Multimodal Parallelism.
+//! The paper's contribution: Elastic Multimodal Parallelism, decomposed
+//! into composable scheduling policies.
 //!
 //! * [`modality`] — modality-aware load balancing (Eq. 1, §3.1),
 //! * [`gain_cost`] — the Eq. 2 / Eq. 3 preemption economics (§3.2),
-//! * [`system`] — the ElasticMM serving system tying modality groups,
-//!   stage partition scheduling, the unified multimodal prefix cache and
-//!   non-blocking encoding together on the cluster simulator.
+//! * [`dispatch`] — FCFS request dispatch bounded by KV slots and the
+//!   memory→compute tipping point,
+//! * [`scaling`] — elastic instance allocation (Eq. 2) and decode
+//!   auto-scaling (Eq. 3),
+//! * [`migration`] — inter-group preemption and KV migration,
+//! * [`system`] — the thin composition root wiring the policies to the
+//!   shared trace driver ([`crate::sim::driver`]).
 
 pub mod gain_cost;
 pub mod modality;
 pub mod system;
 
-pub use system::{EmpOptions, EmpStats, EmpSystem};
+pub(crate) mod dispatch;
+pub(crate) mod migration;
+pub(crate) mod scaling;
+
+#[cfg(test)]
+mod system_tests;
+
+pub use system::{EmpEv, EmpOptions, EmpStats, EmpSystem};

@@ -1,0 +1,299 @@
+//! Intra-group stage elasticity (§3.2): elastic instance allocation
+//! (Eq. 2), elastic auto-scaling of decode (Eq. 3), demand-driven
+//! encoder-pool sizing, and the role-flip cooldown that keeps the two
+//! equations from fighting over the same instance. All decisions are
+//! evaluated through the [`super::gain_cost`] economics; the physical
+//! act of moving sequences lives in [`super::migration`].
+
+use crate::model::{DecodeItem, PrefillItem};
+use crate::sim::driver::SimQueue;
+use crate::sim::instance::{GroupId, Phase, StageRole};
+
+use super::gain_cost::{self, DecodeSet, PrefillSet};
+use super::migration;
+use super::system::{gidx, EmpEv, EmpSystem};
+
+/// Role-flip rate limiter (see `EmpSystem::last_role_flip`).
+pub(crate) fn flip_allowed(sys: &EmpSystem, g: GroupId, now: f64) -> bool {
+    now - sys.last_role_flip[gidx(g)] >= sys.role_flip_cooldown_s
+}
+
+pub(crate) fn note_flip(sys: &mut EmpSystem, g: GroupId, now: f64) {
+    sys.last_role_flip[gidx(g)] = now;
+    sys.stats.role_flips += 1;
+}
+
+/// Eq. 2 evaluation: returns a decode instance to borrow for the
+/// prefill iteration, migrating its sequences away first.
+pub(crate) fn consider_prefill_preemption(
+    sys: &mut EmpSystem,
+    g: GroupId,
+    items: &[PrefillItem],
+    e_p: usize,
+    now: f64,
+    q: &mut SimQueue<'_, EmpEv>,
+) -> Option<usize> {
+    let decode = sys.role_members(g, StageRole::Decode);
+    if decode.len() < 2 || !flip_allowed(sys, g, now) {
+        return None; // keep at least one decode instance
+    }
+    // e_max: maximum unused KV slots.
+    let &emax = decode
+        .iter()
+        .max_by_key(|&&d| sys.instances[d].kv_free_tokens())?;
+    if !sys.instances[emax].idle_at(now) || sys.current[emax].is_some() {
+        return None;
+    }
+    let victim_ids: Vec<u64> = sys.instances[emax].decoding.clone();
+    let victim = DecodeSet {
+        items: victim_ids
+            .iter()
+            .map(|id| {
+                let r = &sys.requests[id];
+                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+            })
+            .collect(),
+        remaining_out: victim_ids
+            .iter()
+            .map(|id| {
+                let r = &sys.requests[id];
+                r.req.output_tokens.saturating_sub(r.decoded).max(1)
+            })
+            .collect(),
+    };
+    // Merged decode batch on the survivors.
+    let survivors: Vec<usize> = decode.iter().copied().filter(|&d| d != emax).collect();
+    let merged_before: Vec<DecodeItem> = survivors
+        .iter()
+        .flat_map(|&d| sys.instances[d].decoding.iter())
+        .map(|id| {
+            let r = &sys.requests[id];
+            DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+        })
+        .collect();
+    let mut merged_after = merged_before.clone();
+    merged_after.extend(victim.items.iter().copied());
+    let tp = sys.instances[emax].tp;
+    let rp = PrefillSet { items: items.to_vec() };
+    let gc = gain_cost::prefill_preemption(
+        &sys.cost,
+        &rp,
+        e_p,
+        &victim,
+        &merged_after,
+        &merged_before,
+        tp,
+        sys.sched.preempt_penalty_w,
+    );
+    if !gc.beneficial() {
+        return None;
+    }
+    // Migrate e_max's sequences to the survivor with most room.
+    if !victim_ids.is_empty() && !migration::migrate_seqs(sys, emax, &survivors, victim_ids, q) {
+        return None;
+    }
+    sys.instances[emax].role = StageRole::Prefill;
+    sys.stats.prefill_preemptions += 1;
+    note_flip(sys, g, now);
+    Some(emax)
+}
+
+/// Eq. 3 — scale decode up when a bottleneck is detected. `forced`
+/// is set when prefill dispatch was blocked on KV space.
+pub(crate) fn try_decode_scale_up(
+    sys: &mut EmpSystem,
+    g: GroupId,
+    q: &mut SimQueue<'_, EmpEv>,
+    forced: bool,
+) {
+    let now = q.now();
+    let decode = sys.role_members(g, StageRole::Decode);
+    if decode.is_empty() {
+        // No decode instance at all (can happen transiently): flip
+        // an idle prefill instance immediately.
+        if let Some(&pick) = sys
+            .role_members(g, StageRole::Prefill)
+            .iter()
+            .find(|&&p| sys.instances[p].idle_at(now) && sys.current[p].is_none())
+        {
+            sys.instances[pick].role = StageRole::Decode;
+            sys.stats.decode_scale_ups += 1;
+            sys.stats.role_flips += 1;
+        }
+        return;
+    }
+    // Detect the bottleneck: biggest decode batch beyond threshold,
+    // or KV-forced.
+    let &hot = decode
+        .iter()
+        .max_by_key(|&&d| sys.instances[d].decoding.len())
+        .unwrap();
+    let batch_len = sys.instances[hot].decoding.len();
+    if !forced && batch_len < sys.sched.decode_scale_up_batch {
+        return;
+    }
+    if !flip_allowed(sys, g, now) {
+        return;
+    }
+    // Prefer an idle prefill instance in-group (cheap: no Eq. 3 cost
+    // beyond losing DP width — still evaluated).
+    let prefill = sys.role_members(g, StageRole::Prefill);
+    if prefill.len() <= 1 {
+        // Last resort: inter-group reactive scaling (§3.1).
+        migration::reactive_inter_group(sys, g, q);
+        return;
+    }
+    let Some(&pick) = prefill
+        .iter()
+        .find(|&&p| sys.instances[p].idle_at(now) && sys.current[p].is_none())
+    else {
+        return;
+    };
+    // Eq. 3 gain/cost.
+    let b_d = DecodeSet {
+        items: sys.instances[hot]
+            .decoding
+            .iter()
+            .map(|id| {
+                let r = &sys.requests[id];
+                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+            })
+            .collect(),
+        remaining_out: sys.instances[hot]
+            .decoding
+            .iter()
+            .map(|id| {
+                let r = &sys.requests[id];
+                r.req.output_tokens.saturating_sub(r.decoded).max(1)
+            })
+            .collect(),
+    };
+    let tp = sys.instances[hot].tp;
+    let avg_lat = sys.cost.decode_step_time(&b_d.items, tp);
+    let rp_rest = PrefillSet {
+        items: sys.groups[gidx(g)]
+            .wait_prefill
+            .iter()
+            .take(16)
+            .map(|id| {
+                let r = &sys.requests[id];
+                PrefillItem {
+                    new_tokens: r.prefill_remaining(),
+                    cached_tokens: r.cached_prefix,
+                    vision_tokens: r.vision_tokens,
+                }
+            })
+            .collect(),
+    };
+    let gc = gain_cost::decode_scale_up(
+        &sys.cost,
+        &b_d,
+        avg_lat,
+        decode.len(),
+        &rp_rest,
+        prefill.len(),
+        tp,
+        sys.sched.preempt_penalty_w,
+    );
+    if !forced && !gc.beneficial() {
+        return;
+    }
+    sys.instances[pick].role = StageRole::Decode;
+    sys.stats.decode_scale_ups += 1;
+    note_flip(sys, g, now);
+    // Rebalance: move half of hot's sequences to the new instance.
+    let moved: Vec<u64> = {
+        let d = &sys.instances[hot].decoding;
+        d.iter().skip(d.len() / 2).copied().collect()
+    };
+    if !moved.is_empty() {
+        migration::migrate_seqs(sys, hot, &[pick], moved, q);
+    }
+}
+
+/// Shrink decode to minimum parallelism when idle (§3.2 "we shrink
+/// it to the minimum parallelism").
+pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
+    let decode = sys.role_members(g, StageRole::Decode);
+    if decode.len() <= 1 || !flip_allowed(sys, g, now) {
+        return;
+    }
+    for d in decode {
+        if sys.instances[d].decoding.is_empty()
+            && sys.current[d].is_none()
+            && sys.role_members(g, StageRole::Decode).len() > 1
+        {
+            sys.instances[d].role = StageRole::Prefill;
+            sys.stats.decode_scale_downs += 1;
+            note_flip(sys, g, now);
+            break;
+        }
+    }
+}
+
+/// Elastic encoder pool sizing: scale the number of Encode-role
+/// instances with the encode backlog (the encode stage "has higher
+/// computational complexity ... initially allocated more resources",
+/// Fig 4 discussion). Fully demand-driven — zero encoders when the
+/// queue is empty (the instance is worth more as prefill DP width) —
+/// and capped so prefill+decode keep at least one instance each.
+pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
+    if g != GroupId::Multimodal || !sys.opts.non_blocking_encode {
+        return;
+    }
+    let n = sys.members(g).len();
+    if n < 3 {
+        return;
+    }
+    if !flip_allowed(sys, g, now) {
+        return;
+    }
+    let backlog = sys.groups[gidx(g)].wait_encode.len();
+    let current = sys.role_members(g, StageRole::Encode).len();
+    let desired = (backlog.div_ceil(2)).clamp(0, n - 2);
+    if desired > current {
+        // Promote idle prefill instances (keep >=1 prefill).
+        let prefill = sys.role_members(g, StageRole::Prefill);
+        if prefill.len() > 1 {
+            if let Some(&pick) = prefill
+                .iter()
+                .find(|&&p| sys.current[p].is_none() && sys.instances[p].decoding.is_empty())
+            {
+                sys.instances[pick].role = StageRole::Encode;
+                note_flip(sys, g, now);
+            }
+        }
+    } else if desired < current {
+        // Demote an idle encoder back to prefill.
+        if let Some(&pick) = sys
+            .role_members(g, StageRole::Encode)
+            .iter()
+            .find(|&&e| sys.current[e].is_none())
+        {
+            sys.instances[pick].role = StageRole::Prefill;
+            note_flip(sys, g, now);
+        }
+    }
+}
+
+/// Safety net: encode work queued but no encoder could be created
+/// (e.g. the only prefill instance is busy for a long iteration) —
+/// fall back to blocking encode inside the prefill iteration.
+pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId) {
+    if sys.role_members(g, StageRole::Encode).is_empty()
+        && !sys.groups[gidx(g)].wait_encode.is_empty()
+    {
+        // Promotion is impossible when the group is too small or has
+        // a single prefill instance left (the >=1-prefill invariant
+        // blocks demotion) — fall back to blocking-inline encoding
+        // so these requests can never be stranded.
+        let promotable = sys.members(g).len() >= 3
+            && sys.role_members(g, StageRole::Prefill).len() > 1;
+        if !promotable {
+            while let Some(id) = sys.groups[gidx(g)].wait_encode.pop_front() {
+                sys.requests.get_mut(&id).unwrap().phase = Phase::WaitPrefill;
+                sys.groups[gidx(g)].wait_prefill.push_back(id);
+            }
+        }
+    }
+}

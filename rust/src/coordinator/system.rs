@@ -12,19 +12,24 @@
 //!   memory→compute tipping point, elastic instance allocation (Eq. 2),
 //!   and elastic auto-scaling of decode (Eq. 3).
 //!
-//! The §3.3 optimizations — unified multimodal prefix cache and
-//! non-blocking encoding — are toggleable for the Fig 7/8 ablations.
+//! This file is only the *composition root*: it owns the shared state
+//! and wires the policy modules — [`super::dispatch`] (FCFS dispatch),
+//! [`super::scaling`] (Eq. 2 / Eq. 3 stage elasticity), and
+//! [`super::migration`] (inter-group preemption + KV migration) — to the
+//! shared trace driver ([`crate::sim::driver`]). The §3.3 optimizations
+//! (unified multimodal prefix cache, non-blocking encoding) are
+//! toggleable for the Fig 7/8 ablations.
 
 use crate::config::SchedulerConfig;
 use crate::kvcache::unified::UnifiedCache;
-use crate::metrics::{Report, RequestRecord};
+use crate::metrics::RequestRecord;
 use crate::model::{CostModel, DecodeItem, PrefillItem};
-use crate::sim::engine::EventQueue;
+use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
 use crate::workload::{Modality, Request};
 
-use super::gain_cost::{self, DecodeSet, PrefillSet};
-use super::modality::{self, LoadMonitor};
+use super::modality::LoadMonitor;
+use super::{dispatch, migration, scaling};
 
 use std::collections::{HashMap, VecDeque};
 
@@ -55,7 +60,11 @@ impl EmpOptions {
 
     /// ElasticMM-EMP (Fig 8): elasticity only, optimizations off.
     pub fn emp_only(total_instances: usize) -> Self {
-        EmpOptions { unified_cache: false, non_blocking_encode: false, ..Self::full(total_instances) }
+        EmpOptions {
+            unified_cache: false,
+            non_blocking_encode: false,
+            ..Self::full(total_instances)
+        }
     }
 
     /// ElasticMM-UniCache (Fig 8): + unified prefix cache.
@@ -74,29 +83,32 @@ impl EmpOptions {
     }
 }
 
+/// Events of the EMP system. Arrival injection and the proactive
+/// rebalance tick are owned by the shared driver.
 #[derive(Debug)]
-enum Ev {
-    Arrive(usize),
+pub enum EmpEv {
+    /// An instance finished its current iteration.
     IterDone(usize),
+    /// A KV migration completed; the sequences land on `dest`.
     MigrateDone { ids: Vec<u64>, dest: usize },
-    Rebalance,
 }
 
+/// An in-flight iteration on an instance (leader-indexed for DP prefill).
 #[derive(Debug, Clone)]
-enum Iter {
+pub(crate) enum Iter {
     Prefill { ids: Vec<u64>, participants: Vec<usize> },
     Decode { ids: Vec<u64> },
     Encode { id: u64 },
 }
 
 /// Per-group scheduler state.
-struct Group {
+pub(crate) struct Group {
     #[allow(dead_code)] // observability / debugging
-    id: GroupId,
-    wait_encode: VecDeque<u64>,
-    wait_prefill: VecDeque<u64>,
-    cache: UnifiedCache,
-    monitor: LoadMonitor,
+    pub(crate) id: GroupId,
+    pub(crate) wait_encode: VecDeque<u64>,
+    pub(crate) wait_prefill: VecDeque<u64>,
+    pub(crate) cache: UnifiedCache,
+    pub(crate) monitor: LoadMonitor,
 }
 
 /// Counters for tests / EXPERIMENTS.md.
@@ -117,24 +129,23 @@ pub struct EmpSystem {
     pub cost: CostModel,
     pub sched: SchedulerConfig,
     pub opts: EmpOptions,
-    instances: Vec<Instance>,
-    current: Vec<Option<Iter>>,
-    groups: [Group; 2], // [Text, Multimodal]
-    requests: HashMap<u64, SimRequest>,
-    finished: Vec<RequestRecord>,
-    total: usize,
+    pub(crate) instances: Vec<Instance>,
+    pub(crate) current: Vec<Option<Iter>>,
+    pub(crate) groups: [Group; 2], // [Text, Multimodal]
+    pub(crate) requests: HashMap<u64, SimRequest>,
+    pub(crate) finished: Vec<RequestRecord>,
     pub stats: EmpStats,
     /// Marginal decode cost per token (for load estimates).
-    marginal_decode_s: f64,
+    pub(crate) marginal_decode_s: f64,
     /// Last stage-role flip per group — a short cooldown prevents
     /// Eq.2/Eq.3 from fighting over the same instance (role-flip +
     /// migration ping-pong would otherwise livelock under pressure).
-    last_role_flip: [f64; 2],
+    pub(crate) last_role_flip: [f64; 2],
     /// Minimum seconds between role flips in one group.
-    role_flip_cooldown_s: f64,
+    pub(crate) role_flip_cooldown_s: f64,
 }
 
-fn gidx(g: GroupId) -> usize {
+pub(crate) fn gidx(g: GroupId) -> usize {
     match g {
         GroupId::Text => 0,
         GroupId::Multimodal => 1,
@@ -183,7 +194,6 @@ impl EmpSystem {
             groups: [mk_group(GroupId::Text), mk_group(GroupId::Multimodal)],
             requests: HashMap::new(),
             finished: Vec::new(),
-            total: 0,
             stats: EmpStats::default(),
             marginal_decode_s,
             last_role_flip: [-1e9; 2],
@@ -196,7 +206,7 @@ impl EmpSystem {
 
     // --- group / role helpers ------------------------------------------
 
-    fn members(&self, g: GroupId) -> Vec<usize> {
+    pub(crate) fn members(&self, g: GroupId) -> Vec<usize> {
         self.instances
             .iter()
             .filter(|i| i.group == g)
@@ -204,7 +214,7 @@ impl EmpSystem {
             .collect()
     }
 
-    fn role_members(&self, g: GroupId, role: StageRole) -> Vec<usize> {
+    pub(crate) fn role_members(&self, g: GroupId, role: StageRole) -> Vec<usize> {
         self.instances
             .iter()
             .filter(|i| i.group == g && i.role == role)
@@ -216,7 +226,7 @@ impl EmpSystem {
     /// * 1 instance  → Unified;
     /// * ≥2          → ≥1 Decode, rest Prefill;
     /// * multimodal with non-blocking encode and ≥3 → ≥1 Encode.
-    fn assign_initial_roles(&mut self, g: GroupId) {
+    pub(crate) fn assign_initial_roles(&mut self, g: GroupId) {
         let members = self.members(g);
         let n = members.len();
         if n == 0 {
@@ -246,8 +256,9 @@ impl EmpSystem {
                 .unwrap_or(*members.last().unwrap());
             self.instances[pick].role = StageRole::Decode;
         }
-        // Encoders are demand-driven (see try_encoder_scaling); a group
-        // that can't host one (too small / blocking mode) demotes any.
+        // Encoders are demand-driven (see scaling::try_encoder_scaling);
+        // a group that can't host one (too small / blocking mode)
+        // demotes any.
         let can_have_encoder =
             g == GroupId::Multimodal && self.opts.non_blocking_encode && n >= 3;
         if !can_have_encoder {
@@ -292,654 +303,23 @@ impl EmpSystem {
         w
     }
 
-    // --- scheduling: encode ---------------------------------------------
+    // --- policy wiring -----------------------------------------------------
 
-    fn schedule_encoders(&mut self, g: GroupId, q: &mut EventQueue<Ev>) {
-        let now = q.now();
-        let encoders = self.role_members(g, StageRole::Encode);
-        for e in encoders {
-            if !self.instances[e].idle_at(now) || self.current[e].is_some() {
-                continue;
-            }
-            let Some(&id) = self.groups[gidx(g)].wait_encode.front() else { break };
-            self.groups[gidx(g)].wait_encode.pop_front();
-            let r = self.requests.get_mut(&id).unwrap();
-            r.phase = Phase::Encoding;
-            // Encode all this request's pending images in one iteration.
-            let mut dur = 0.0;
-            for &vt in &r.encode_pending {
-                dur += self.cost.encode_time(vt, self.instances[e].tp);
-            }
-            for img in &r.req.images {
-                dur += self.cost.preprocess_time(img.width, img.height);
-            }
-            let done = self.instances[e].start_iteration(now, dur);
-            self.current[e] = Some(Iter::Encode { id });
-            q.push(done, Ev::IterDone(e));
-        }
-    }
-
-    // --- scheduling: prefill dispatch (Request Dispatching + Eq. 2) ------
-
-    /// Pick the decode destination with the most free KV able to hold
-    /// `reserve` tokens.
-    fn pick_decode_dest(&self, g: GroupId, reserve: usize) -> Option<usize> {
-        let mut decode = self.role_members(g, StageRole::Decode);
-        decode.extend(self.role_members(g, StageRole::Unified));
-        decode
-            .into_iter()
-            .filter(|&d| self.instances[d].kv.can_allocate(reserve))
-            .max_by_key(|&d| self.instances[d].kv_free_tokens())
-    }
-
-    fn dispatch_prefill(&mut self, g: GroupId, q: &mut EventQueue<Ev>) {
-        let now = q.now();
-        // E_p = idle prefill instances (Unified handled separately).
-        let e_p: Vec<usize> = self
-            .role_members(g, StageRole::Prefill)
-            .into_iter()
-            .filter(|&i| self.instances[i].idle_at(now) && self.current[i].is_none())
-            .collect();
-        if e_p.is_empty() {
-            self.schedule_unified(g, q);
-            return;
-        }
-        // R_p: FCFS admission under KV and tipping-point constraints.
-        let budget = self.sched.chunked_prefill_tokens * e_p.len().max(1) * 4;
-        let mut ids = Vec::new();
-        let mut items = Vec::new();
-        let mut dests = Vec::new();
-        let mut tokens = 0usize;
-        let mut blocked_on_kv = false;
-        while let Some(&id) = self.groups[gidx(g)].wait_prefill.front() {
-            let r = &self.requests[&id];
-            if ids.len() >= self.sched.max_prefill_batch * e_p.len()
-                || (tokens > 0 && tokens + r.prefill_remaining() > budget)
-            {
-                break;
-            }
-            let reserve = r.input_len + r.req.output_tokens;
-            let Some(dest) = self.pick_decode_dest(g, reserve) else {
-                blocked_on_kv = true;
-                break;
-            };
-            self.instances[dest].kv.allocate(id, reserve).expect("checked");
-            tokens += r.prefill_remaining();
-            items.push(PrefillItem {
-                new_tokens: r.prefill_remaining(),
-                cached_tokens: r.cached_prefix,
-                vision_tokens: r.vision_tokens,
-            });
-            dests.push(dest);
-            ids.push(id);
-            self.groups[gidx(g)].wait_prefill.pop_front();
-        }
-        if blocked_on_kv {
-            // Stage-level elasticity is part of the serving engine and
-            // stays on even under static *group* allocation (Fig 7's
-            // baselines freeze only the inter-group split).
-            self.try_decode_scale_up(g, q, true);
-        }
-        if ids.is_empty() {
-            self.schedule_unified(g, q);
-            return;
-        }
-        // Elastic instance allocation (Eq. 2): consider pulling the
-        // decode instance with max unused slots into E_p.
-        let mut participants = e_p.clone();
-        if let Some(extra) =
-            self.consider_prefill_preemption(g, &items, participants.len(), now, q)
-        {
-            participants.push(extra);
-        }
-        let tp = self.instances[participants[0]].tp;
-        let cross = g == GroupId::Multimodal;
-        let mut dur = {
-            // DP split over participants (leader computes the max-shard
-            // time; modality-pure text batches skip cross-attention).
-            if participants.len() == 1 {
-                self.cost.prefill_time_flags(&items, tp, cross)
-            } else {
-                self.cost.prefill_time_dp(&items, participants.len(), tp)
-            }
-        };
-        // Blocking encode: any request reaching prefill with un-encoded
-        // images pays encoding serially in front of the iteration (image
-        // encoding is not DP-splittable within one request; coupled
-        // frameworks run it inline — Fig 1a). With non-blocking encoding
-        // requests arrive here already encoded, so this charges nothing.
-        for &id in &ids {
-            let r = &self.requests[&id];
-            for &vt in &r.encode_pending {
-                dur += self.cost.encode_time(vt, tp);
-            }
-            if !r.encode_pending.is_empty() {
-                for img in &r.req.images {
-                    dur += self.cost.preprocess_time(img.width, img.height);
-                }
-            }
-        }
-        // KV shipping to the decode destinations (NVLink, overlapped
-        // poorly at iteration end — charged serially).
-        dur += self.cost.migration_time(tokens) * 0.5;
-        for (&id, &dest) in ids.iter().zip(&dests) {
-            let r = self.requests.get_mut(&id).unwrap();
-            r.phase = Phase::Prefilling;
-            r.home = Some(dest);
-        }
-        if participants.len() > 1 {
-            self.stats.dp_prefill_iters += 1;
-        }
-        let leader = participants[0];
-        for &p in &participants {
-            self.instances[p].start_iteration(now, dur);
-        }
-        self.current[leader] = Some(Iter::Prefill { ids, participants: participants.clone() });
-        q.push(now + dur, Ev::IterDone(leader));
-    }
-
-    /// Eq. 2 evaluation: returns a decode instance to borrow for the
-    /// prefill iteration, migrating its sequences away first.
-    fn consider_prefill_preemption(
-        &mut self,
-        g: GroupId,
-        items: &[PrefillItem],
-        e_p: usize,
-        now: f64,
-        q: &mut EventQueue<Ev>,
-    ) -> Option<usize> {
-        let decode = self.role_members(g, StageRole::Decode);
-        if decode.len() < 2 || !self.flip_allowed(g, now) {
-            return None; // keep at least one decode instance
-        }
-        // e_max: maximum unused KV slots.
-        let &emax = decode
-            .iter()
-            .max_by_key(|&&d| self.instances[d].kv_free_tokens())?;
-        if !self.instances[emax].idle_at(now) || self.current[emax].is_some() {
-            return None;
-        }
-        let victim_ids: Vec<u64> = self.instances[emax].decoding.clone();
-        let victim = DecodeSet {
-            items: victim_ids
-                .iter()
-                .map(|id| {
-                    let r = &self.requests[id];
-                    DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-                })
-                .collect(),
-            remaining_out: victim_ids
-                .iter()
-                .map(|id| {
-                    let r = &self.requests[id];
-                    r.req.output_tokens.saturating_sub(r.decoded).max(1)
-                })
-                .collect(),
-        };
-        // Merged decode batch on the survivors.
-        let survivors: Vec<usize> = decode.iter().copied().filter(|&d| d != emax).collect();
-        let merged_before: Vec<DecodeItem> = survivors
-            .iter()
-            .flat_map(|&d| self.instances[d].decoding.iter())
-            .map(|id| {
-                let r = &self.requests[id];
-                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-            })
-            .collect();
-        let mut merged_after = merged_before.clone();
-        merged_after.extend(victim.items.iter().copied());
-        let tp = self.instances[emax].tp;
-        let rp = PrefillSet { items: items.to_vec() };
-        let gc = gain_cost::prefill_preemption(
-            &self.cost,
-            &rp,
-            e_p,
-            &victim,
-            &merged_after,
-            &merged_before,
-            tp,
-            self.sched.preempt_penalty_w,
-        );
-        if !gc.beneficial() {
-            return None;
-        }
-        // Migrate e_max's sequences to the survivor with most room.
-        if !victim_ids.is_empty() && !self.migrate_seqs(emax, &survivors, victim_ids, q) {
-            return None;
-        }
-        self.instances[emax].role = StageRole::Prefill;
-        self.stats.prefill_preemptions += 1;
-        self.note_flip(g, now);
-        Some(emax)
-    }
-
-    /// Move all `ids` from `src` to fitting instances among `dests`.
-    /// Returns false (no state change) if they cannot be placed.
-    fn migrate_seqs(
-        &mut self,
-        src: usize,
-        dests: &[usize],
-        ids: Vec<u64>,
-        q: &mut EventQueue<Ev>,
-    ) -> bool {
-        // Feasibility check first (plan placements).
-        let mut free: HashMap<usize, usize> = dests
-            .iter()
-            .map(|&d| (d, self.instances[d].kv_free_tokens()))
-            .collect();
-        let mut plan: Vec<(u64, usize)> = Vec::new();
-        for &id in &ids {
-            let r = &self.requests[&id];
-            let reserve = r.input_len + r.req.output_tokens;
-            let Some((&d, _)) = free
-                .iter()
-                .filter(|(_, &f)| f >= reserve)
-                .max_by_key(|(_, &f)| f)
-            else {
-                return false;
-            };
-            *free.get_mut(&d).unwrap() -= reserve;
-            plan.push((id, d));
-        }
-        // Execute: release at src, schedule arrival at dest.
-        let mut by_dest: HashMap<usize, Vec<u64>> = HashMap::new();
-        let mut total_tokens = 0usize;
-        for (id, d) in plan {
-            let r = self.requests.get_mut(&id).unwrap();
-            total_tokens += r.context_len();
-            r.phase = Phase::Migrating;
-            self.instances[src].kv.release(id).expect("resident");
-            self.instances[src].decoding.retain(|&x| x != id);
-            let reserve = r.input_len + r.req.output_tokens;
-            self.instances[d].kv.allocate(id, reserve).expect("planned");
-            by_dest.entry(d).or_default().push(id);
-        }
-        let mig = self.cost.migration_time(total_tokens);
-        self.stats.migrated_seqs += ids.len() as u64;
-        for (dest, ids) in by_dest {
-            q.push_after(mig, Ev::MigrateDone { ids, dest });
-        }
-        true
-    }
-
-    // --- scheduling: decode (+ Eq. 3 auto-scaling) ------------------------
-
-    fn schedule_decode(&mut self, inst: usize, q: &mut EventQueue<Ev>) {
-        let now = q.now();
-        if !self.instances[inst].idle_at(now)
-            || self.current[inst].is_some()
-            || self.instances[inst].decoding.is_empty()
-        {
-            return;
-        }
-        let g = self.instances[inst].group;
-        let ids: Vec<u64> = self.instances[inst]
-            .decoding
-            .iter()
-            .take(self.sched.max_decode_batch)
-            .copied()
-            .collect();
-        let items: Vec<DecodeItem> = ids
-            .iter()
-            .map(|id| {
-                let r = &self.requests[id];
-                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-            })
-            .collect();
-        let cross = g == GroupId::Multimodal;
-        let dur =
-            self.cost
-                .decode_step_time_flags(&items, self.instances[inst].tp, cross);
-        let done = self.instances[inst].start_iteration(now, dur);
-        self.current[inst] = Some(Iter::Decode { ids });
-        q.push(done, Ev::IterDone(inst));
-    }
-
-    /// Eq. 3 — scale decode up when a bottleneck is detected. `forced`
-    /// is set when prefill dispatch was blocked on KV space.
-    fn try_decode_scale_up(&mut self, g: GroupId, q: &mut EventQueue<Ev>, forced: bool) {
-        let now = q.now();
-        let decode = self.role_members(g, StageRole::Decode);
-        if decode.is_empty() {
-            // No decode instance at all (can happen transiently): flip
-            // an idle prefill instance immediately.
-            if let Some(&pick) = self
-                .role_members(g, StageRole::Prefill)
-                .iter()
-                .find(|&&p| self.instances[p].idle_at(now) && self.current[p].is_none())
-            {
-                self.instances[pick].role = StageRole::Decode;
-                self.stats.decode_scale_ups += 1;
-                self.stats.role_flips += 1;
-            }
-            return;
-        }
-        // Detect the bottleneck: biggest decode batch beyond threshold,
-        // or KV-forced.
-        let &hot = decode
-            .iter()
-            .max_by_key(|&&d| self.instances[d].decoding.len())
-            .unwrap();
-        let batch_len = self.instances[hot].decoding.len();
-        if !forced && batch_len < self.sched.decode_scale_up_batch {
-            return;
-        }
-        if !self.flip_allowed(g, now) {
-            return;
-        }
-        // Prefer an idle prefill instance in-group (cheap: no Eq. 3 cost
-        // beyond losing DP width — still evaluated).
-        let prefill = self.role_members(g, StageRole::Prefill);
-        if prefill.len() <= 1 {
-            // Last resort: inter-group reactive scaling (§3.1).
-            self.reactive_inter_group(g, q);
-            return;
-        }
-        let Some(&pick) = prefill
-            .iter()
-            .find(|&&p| self.instances[p].idle_at(now) && self.current[p].is_none())
-        else {
-            return;
-        };
-        // Eq. 3 gain/cost.
-        let b_d = DecodeSet {
-            items: self.instances[hot]
-                .decoding
-                .iter()
-                .map(|id| {
-                    let r = &self.requests[id];
-                    DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-                })
-                .collect(),
-            remaining_out: self.instances[hot]
-                .decoding
-                .iter()
-                .map(|id| {
-                    let r = &self.requests[id];
-                    r.req.output_tokens.saturating_sub(r.decoded).max(1)
-                })
-                .collect(),
-        };
-        let tp = self.instances[hot].tp;
-        let avg_lat = self.cost.decode_step_time(&b_d.items, tp);
-        let rp_rest = PrefillSet {
-            items: self.groups[gidx(g)]
-                .wait_prefill
-                .iter()
-                .take(16)
-                .map(|id| {
-                    let r = &self.requests[id];
-                    PrefillItem {
-                        new_tokens: r.prefill_remaining(),
-                        cached_tokens: r.cached_prefix,
-                        vision_tokens: r.vision_tokens,
-                    }
-                })
-                .collect(),
-        };
-        let gc = gain_cost::decode_scale_up(
-            &self.cost,
-            &b_d,
-            avg_lat,
-            decode.len(),
-            &rp_rest,
-            prefill.len(),
-            tp,
-            self.sched.preempt_penalty_w,
-        );
-        if !forced && !gc.beneficial() {
-            return;
-        }
-        self.instances[pick].role = StageRole::Decode;
-        self.stats.decode_scale_ups += 1;
-        self.note_flip(g, now);
-        // Rebalance: move half of hot's sequences to the new instance.
-        let moved: Vec<u64> = {
-            let d = &self.instances[hot].decoding;
-            d.iter().skip(d.len() / 2).copied().collect()
-        };
-        if !moved.is_empty() {
-            self.migrate_seqs(hot, &[pick], moved, q);
-        }
-    }
-
-    /// Elastic encoder pool sizing: scale the number of Encode-role
-    /// instances with the encode backlog (the encode stage "has higher
-    /// computational complexity ... initially allocated more resources",
-    /// Fig 4 discussion). One encoder per 3 queued encode jobs, capped
-    /// so prefill+decode keep at least one instance each.
-    /// Role-flip rate limiter (see `last_role_flip`).
-    fn flip_allowed(&self, g: GroupId, now: f64) -> bool {
-        now - self.last_role_flip[gidx(g)] >= self.role_flip_cooldown_s
-    }
-
-    fn note_flip(&mut self, g: GroupId, now: f64) {
-        self.last_role_flip[gidx(g)] = now;
-        self.stats.role_flips += 1;
-    }
-
-    fn try_encoder_scaling(&mut self, g: GroupId, now: f64) {
-        if g != GroupId::Multimodal || !self.opts.non_blocking_encode {
-            return;
-        }
-        let n = self.members(g).len();
-        if n < 3 {
-            return;
-        }
-        if !self.flip_allowed(g, now) {
-            return;
-        }
-        let backlog = self.groups[gidx(g)].wait_encode.len();
-        let current = self.role_members(g, StageRole::Encode).len();
-        // Fully demand-driven: zero encoders when the queue is empty
-        // (the instance is worth more as prefill DP width).
-        let desired = (backlog.div_ceil(2)).clamp(0, n - 2);
-        if desired > current {
-            // Promote idle prefill instances (keep >=1 prefill).
-            let prefill = self.role_members(g, StageRole::Prefill);
-            if prefill.len() > 1 {
-                if let Some(&pick) = prefill
-                    .iter()
-                    .find(|&&p| self.current[p].is_none() && self.instances[p].decoding.is_empty())
-                {
-                    self.instances[pick].role = StageRole::Encode;
-                    self.note_flip(g, now);
-                }
-            }
-        } else if desired < current {
-            // Demote an idle encoder back to prefill.
-            if let Some(&pick) = self
-                .role_members(g, StageRole::Encode)
-                .iter()
-                .find(|&&e| self.current[e].is_none())
-            {
-                self.instances[pick].role = StageRole::Prefill;
-                self.note_flip(g, now);
-            }
-        }
-    }
-
-    /// Safety net: encode work queued but no encoder could be created
-    /// (e.g. the only prefill instance is busy for a long iteration) —
-    /// fall back to blocking encode inside the prefill iteration.
-    fn drain_stuck_encode_queue(&mut self, g: GroupId) {
-        if self.role_members(g, StageRole::Encode).is_empty()
-            && !self.groups[gidx(g)].wait_encode.is_empty()
-        {
-            // Promotion is impossible when the group is too small or has
-            // a single prefill instance left (the >=1-prefill invariant
-            // blocks demotion) — fall back to blocking-inline encoding
-            // so these requests can never be stranded.
-            let promotable = self.members(g).len() >= 3
-                && self.role_members(g, StageRole::Prefill).len() > 1;
-            if !promotable {
-                while let Some(id) = self.groups[gidx(g)].wait_encode.pop_front() {
-                    self.requests.get_mut(&id).unwrap().phase = Phase::WaitPrefill;
-                    self.groups[gidx(g)].wait_prefill.push_back(id);
-                }
-            }
-        }
-    }
-
-    /// Shrink decode to minimum parallelism when idle (§3.2 "we shrink
-    /// it to the minimum parallelism").
-    fn try_decode_scale_down(&mut self, g: GroupId, now: f64) {
-        let decode = self.role_members(g, StageRole::Decode);
-        if decode.len() <= 1 || !self.flip_allowed(g, now) {
-            return;
-        }
-        for d in decode {
-            if self.instances[d].decoding.is_empty()
-                && self.current[d].is_none()
-                && self.role_members(g, StageRole::Decode).len() > 1
-            {
-                self.instances[d].role = StageRole::Prefill;
-                self.stats.decode_scale_downs += 1;
-                self.note_flip(g, now);
-                break;
-            }
-        }
-    }
-
-    /// Reactive inter-group scaling (§3.1): preempt an idle instance
-    /// from the other group when this group is under water.
-    fn reactive_inter_group(&mut self, needy: GroupId, q: &mut EventQueue<Ev>) {
-        if !self.opts.elastic {
-            return;
-        }
-        let donor = match needy {
-            GroupId::Text => GroupId::Multimodal,
-            GroupId::Multimodal => GroupId::Text,
-        };
-        let needy_n = self.members(needy).len();
-        let donor_n = self.members(donor).len();
-        let needy_avg = self.groups[gidx(needy)].monitor.avg_instances_needed();
-        let donor_avg = self.groups[gidx(donor)].monitor.avg_instances_needed();
-        if !modality::should_preempt_inter_group(needy_n, needy_avg, donor_n, donor_avg, 1) {
-            return;
-        }
-        let now = q.now();
-        // "selects instances to preempt ... with minimal impact": idle,
-        // no resident sequences, prefer Prefill/Encode role.
-        let candidates = self.members(donor);
-        let pick = candidates
-            .into_iter()
-            .filter(|&i| {
-                self.instances[i].idle_at(now)
-                    && self.current[i].is_none()
-                    && self.instances[i].decoding.is_empty()
-            })
-            .min_by_key(|&i| match self.instances[i].role {
-                StageRole::Encode => 0,
-                StageRole::Prefill => 1,
-                StageRole::Unified => 2,
-                StageRole::Decode => 3,
-            });
-        let Some(pick) = pick else { return };
-        self.instances[pick].group = needy;
-        self.instances[pick].role = StageRole::Prefill;
-        self.stats.group_moves += 1;
-        self.assign_initial_roles(donor);
-        self.assign_initial_roles(needy);
-        self.schedule_group(needy, q);
-        self.schedule_group(donor, q);
-    }
-
-    // --- unified (single-instance group) ----------------------------------
-
-    fn schedule_unified(&mut self, g: GroupId, q: &mut EventQueue<Ev>) {
-        let now = q.now();
-        for u in self.role_members(g, StageRole::Unified) {
-            if !self.instances[u].idle_at(now) || self.current[u].is_some() {
-                continue;
-            }
-            // Prefill priority, decode otherwise (coupled semantics).
-            let mut ids = Vec::new();
-            let mut items = Vec::new();
-            let mut encode_s = 0.0;
-            let mut tokens = 0usize;
-            while let Some(&id) = self.groups[gidx(g)].wait_prefill.front() {
-                let r = &self.requests[&id];
-                let reserve = r.input_len + r.req.output_tokens;
-                if ids.len() >= self.sched.max_prefill_batch
-                    || (tokens > 0 && tokens + r.prefill_remaining() > 8192)
-                    || !self.instances[u].kv.can_allocate(reserve)
-                {
-                    break;
-                }
-                self.instances[u].kv.allocate(id, reserve).expect("checked");
-                tokens += r.prefill_remaining();
-                for &vt in &r.encode_pending {
-                    encode_s += self.cost.encode_time(vt, self.instances[u].tp);
-                }
-                items.push(PrefillItem {
-                    new_tokens: r.prefill_remaining(),
-                    cached_tokens: r.cached_prefix,
-                    vision_tokens: r.vision_tokens,
-                });
-                ids.push(id);
-                self.groups[gidx(g)].wait_prefill.pop_front();
-            }
-            if !ids.is_empty() {
-                for &id in &ids {
-                    let r = self.requests.get_mut(&id).unwrap();
-                    r.phase = Phase::Prefilling;
-                    r.home = Some(u);
-                }
-                let cross = g == GroupId::Multimodal;
-                let dur = encode_s
-                    + self
-                        .cost
-                        .prefill_time_flags(&items, self.instances[u].tp, cross);
-                let done = self.instances[u].start_iteration(now, dur);
-                self.current[u] = Some(Iter::Prefill { ids, participants: vec![u] });
-                q.push(done, Ev::IterDone(u));
-            } else {
-                self.schedule_decode_unified(u, q);
-            }
-        }
-    }
-
-    fn schedule_decode_unified(&mut self, u: usize, q: &mut EventQueue<Ev>) {
-        let now = q.now();
-        if self.instances[u].decoding.is_empty()
-            || !self.instances[u].idle_at(now)
-            || self.current[u].is_some()
-        {
-            return;
-        }
-        let g = self.instances[u].group;
-        let ids: Vec<u64> = self.instances[u].decoding.clone();
-        let items: Vec<DecodeItem> = ids
-            .iter()
-            .map(|id| {
-                let r = &self.requests[id];
-                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-            })
-            .collect();
-        let cross = g == GroupId::Multimodal;
-        let dur = self
-            .cost
-            .decode_step_time_flags(&items, self.instances[u].tp, cross);
-        let done = self.instances[u].start_iteration(now, dur);
-        self.current[u] = Some(Iter::Decode { ids });
-        q.push(done, Ev::IterDone(u));
-    }
-
-    // --- the event loop ----------------------------------------------------
-
-    fn schedule_group(&mut self, g: GroupId, q: &mut EventQueue<Ev>) {
-        self.try_encoder_scaling(g, q.now());
-        self.drain_stuck_encode_queue(g);
-        self.schedule_encoders(g, q);
-        self.dispatch_prefill(g, q);
+    /// One scheduling pass over a group: encoder-pool sizing, encode
+    /// dispatch, prefill dispatch (with Eq. 2 preemption inside), decode
+    /// steps, and the unified single-instance path.
+    pub(crate) fn schedule_group(&mut self, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
+        scaling::try_encoder_scaling(self, g, q.now());
+        scaling::drain_stuck_encode_queue(self, g);
+        dispatch::schedule_encoders(self, g, q);
+        dispatch::dispatch_prefill(self, g, q);
         for d in self.role_members(g, StageRole::Decode) {
-            self.schedule_decode(d, q);
+            dispatch::schedule_decode(self, d, q);
         }
-        self.schedule_unified(g, q);
+        dispatch::schedule_unified(self, g, q);
     }
 
-    fn on_arrival(&mut self, req: Request, q: &mut EventQueue<Ev>) {
+    fn on_arrival(&mut self, req: Request, q: &mut SimQueue<'_, EmpEv>) {
         let now = q.now();
         let g = match req.modality() {
             Modality::TextOnly => GroupId::Text,
@@ -979,7 +359,7 @@ impl EmpSystem {
         self.schedule_group(g, q);
     }
 
-    fn on_iter_done(&mut self, inst: usize, q: &mut EventQueue<Ev>) {
+    fn on_iter_done(&mut self, inst: usize, q: &mut SimQueue<'_, EmpEv>) {
         let now = q.now();
         let Some(iter) = self.current[inst].take() else { return };
         let g = self.instances[inst].group;
@@ -1036,111 +416,13 @@ impl EmpSystem {
                 }
             }
         }
-        self.try_decode_scale_up(g, q, false);
-        self.try_decode_scale_down(g, now);
-        self.try_encoder_scaling(g, now);
+        scaling::try_decode_scale_up(self, g, q, false);
+        scaling::try_decode_scale_down(self, g, now);
+        scaling::try_encoder_scaling(self, g, now);
         self.schedule_group(g, q);
     }
 
-    fn on_migrate_done(&mut self, ids: Vec<u64>, dest: usize, q: &mut EventQueue<Ev>) {
-        for id in ids {
-            let r = self.requests.get_mut(&id).unwrap();
-            if r.phase == Phase::Migrating {
-                r.phase = Phase::Decoding;
-                r.home = Some(dest);
-                self.instances[dest].decoding.push(id);
-            }
-        }
-        self.schedule_decode(dest, q);
-        self.schedule_decode_unified(dest, q);
-    }
-
-    /// Proactive rebalance tick (§3.1): refresh monitors, recompute the
-    /// burst-tolerance allocation, and migrate at most one idle instance
-    /// toward it per tick.
-    fn on_rebalance(&mut self, q: &mut EventQueue<Ev>) {
-        let now = q.now();
-        for g in [GroupId::Text, GroupId::Multimodal] {
-            self.groups[gidx(g)].monitor.tick(now);
-        }
-        if !self.opts.elastic {
-            return;
-        }
-        let total = self.instances.len();
-        let demands = [
-            self.groups[0].monitor.avg_instances_needed(),
-            self.groups[1].monitor.avg_instances_needed(),
-        ];
-        let target = modality::proactive_allocation(total, &demands, 1);
-        let current = [self.members(GroupId::Text).len(), self.members(GroupId::Multimodal).len()];
-        // Move one instance from over- to under-allocated group.
-        let (donor, needy) = if current[0] > target[0] {
-            (GroupId::Text, GroupId::Multimodal)
-        } else if current[1] > target[1] {
-            (GroupId::Multimodal, GroupId::Text)
-        } else {
-            return;
-        };
-        if self.members(donor).len() <= 1 {
-            return;
-        }
-        let pick = self
-            .members(donor)
-            .into_iter()
-            .filter(|&i| {
-                self.instances[i].idle_at(now)
-                    && self.current[i].is_none()
-                    && self.instances[i].decoding.is_empty()
-            })
-            .min_by_key(|&i| match self.instances[i].role {
-                StageRole::Encode => 0,
-                StageRole::Prefill => 1,
-                StageRole::Unified => 2,
-                StageRole::Decode => 3,
-            });
-        let Some(pick) = pick else { return };
-        self.instances[pick].group = needy;
-        self.instances[pick].role = StageRole::Prefill;
-        self.stats.group_moves += 1;
-        self.assign_initial_roles(donor);
-        self.assign_initial_roles(needy);
-        self.schedule_group(needy, q);
-        self.schedule_group(donor, q);
-    }
-
-    /// Run a trace to completion.
-    pub fn run(&mut self, trace: &[Request]) -> Report {
-        self.total = trace.len();
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        for (i, r) in trace.iter().enumerate() {
-            q.push(r.arrival, Ev::Arrive(i));
-        }
-        q.push(self.sched.rebalance_interval_s, Ev::Rebalance);
-        while self.finished.len() < self.total {
-            let Some((_, ev)) = q.pop() else {
-                panic!(
-                    "simulation stalled: {}/{} finished",
-                    self.finished.len(),
-                    self.total
-                );
-            };
-            match ev {
-                Ev::Arrive(i) => self.on_arrival(trace[i].clone(), &mut q),
-                Ev::IterDone(inst) => self.on_iter_done(inst, &mut q),
-                Ev::MigrateDone { ids, dest } => self.on_migrate_done(ids, dest, &mut q),
-                Ev::Rebalance => {
-                    self.on_rebalance(&mut q);
-                    if self.finished.len() < self.total {
-                        q.push_after(self.sched.rebalance_interval_s, Ev::Rebalance);
-                    }
-                    // Nudge stalled groups (safety: e.g. role flips).
-                    self.schedule_group(GroupId::Text, &mut q);
-                    self.schedule_group(GroupId::Multimodal, &mut q);
-                }
-            }
-        }
-        Report::new(std::mem::take(&mut self.finished))
-    }
+    // --- observability -----------------------------------------------------
 
     /// Current group sizes [text, multimodal] (observability).
     pub fn group_sizes(&self) -> [usize; 2] {
@@ -1149,18 +431,7 @@ impl EmpSystem {
 
     /// Verify cross-instance invariants (used by tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        for inst in &self.instances {
-            inst.kv.check_invariants()?;
-            for id in &inst.decoding {
-                let r = self
-                    .requests
-                    .get(id)
-                    .ok_or(format!("decoding unknown request {id}"))?;
-                if r.home != Some(inst.id) {
-                    return Err(format!("request {id} home mismatch"));
-                }
-            }
-        }
+        crate::sim::instance::check_instances(&self.instances, &self.requests)?;
         for g in [GroupId::Text, GroupId::Multimodal] {
             if self.members(g).is_empty() {
                 return Err(format!("group {g:?} has no instances"));
@@ -1170,192 +441,45 @@ impl EmpSystem {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::{presets, GpuSpec, SchedulerConfig};
-    use crate::util::rng::Rng;
-    use crate::workload::arrival::{poisson_arrivals, BurstyProcess};
-    use crate::workload::datasets::DatasetSpec;
+impl ServingSystem for EmpSystem {
+    type Ev = EmpEv;
 
-    fn cost_qwen() -> CostModel {
-        CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+    fn route(&mut self, req: Request, q: &mut SimQueue<'_, EmpEv>) {
+        self.on_arrival(req, q);
     }
 
-    fn cost_llama() -> CostModel {
-        CostModel::new(presets::llama32_vision_11b(), GpuSpec::a800_80g())
-    }
-
-    fn trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
-        let mut rng = Rng::new(seed);
-        let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
-        poisson_arrivals(&mut rng, &mut reqs, qps);
-        reqs
-    }
-
-    #[test]
-    fn completes_all_requests_and_invariants_hold() {
-        let mut sys =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
-        let rep = sys.run(&trace(250, 6.0, 1));
-        assert_eq!(rep.records.len(), 250);
-        sys.check_invariants().unwrap();
-        for r in &rep.records {
-            assert!(r.first_token >= r.arrival);
-            assert!(r.finish >= r.first_token);
+    fn on_event(&mut self, ev: EmpEv, q: &mut SimQueue<'_, EmpEv>) {
+        match ev {
+            EmpEv::IterDone(inst) => self.on_iter_done(inst, q),
+            EmpEv::MigrateDone { ids, dest } => migration::on_migrate_done(self, ids, dest, q),
         }
     }
 
-    #[test]
-    fn encdec_model_also_completes() {
-        let mut sys =
-            EmpSystem::new(cost_llama(), SchedulerConfig::default(), 8, EmpOptions::full(8));
-        let rep = sys.run(&trace(150, 4.0, 2));
-        assert_eq!(rep.records.len(), 150);
-        sys.check_invariants().unwrap();
+    /// Proactive rebalance cadence (§3.1).
+    fn tick_interval(&self) -> Option<f64> {
+        Some(self.sched.rebalance_interval_s)
     }
 
-    #[test]
-    fn beats_coupled_vllm_on_input_latency_under_load() {
-        // The paper's headline: ElasticMM cuts TTFT vs vLLM under heavy
-        // multimodal load.
-        let t = trace(300, 10.0, 3);
-        let mut emp =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
-        let rep_emp = emp.run(&t);
-        let mut vllm = crate::baselines::coupled::CoupledVllm::new(
-            cost_qwen(),
-            SchedulerConfig::default(),
-            8,
-        );
-        let rep_vllm = vllm.run(&t);
-        assert!(
-            rep_emp.mean_norm_input_latency() < rep_vllm.mean_norm_input_latency(),
-            "emp {} vs vllm {}",
-            rep_emp.mean_norm_input_latency(),
-            rep_vllm.mean_norm_input_latency()
-        );
+    fn on_tick(&mut self, q: &mut SimQueue<'_, EmpEv>) {
+        migration::rebalance(self, q);
+        // Nudge stalled groups (safety: e.g. role flips).
+        self.schedule_group(GroupId::Text, q);
+        self.schedule_group(GroupId::Multimodal, q);
     }
 
-    #[test]
-    fn elastic_beats_static_under_bursts() {
-        // Fig 7's claim: static splits lose to EMP under shifting load.
-        let mut rng = Rng::new(4);
-        let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 400);
-        let p = BurstyProcess {
-            base_qps: 3.0,
-            burst_qps: 25.0,
-            mean_quiet_s: 40.0,
-            mean_burst_s: 10.0,
-        };
-        let bursts = p.stamp(&mut rng, &mut reqs);
-        crate::workload::arrival::concentrate_multimodal_in_bursts(&mut reqs, &bursts);
-        let mut elastic =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
-        let rep_e = elastic.run(&reqs);
-        let mut static_even = EmpSystem::new(
-            cost_qwen(),
-            SchedulerConfig::default(),
-            8,
-            EmpOptions::static_split(4),
-        );
-        let rep_s = static_even.run(&reqs);
-        assert!(
-            rep_e.p_ttft(90.0) < rep_s.p_ttft(90.0),
-            "elastic p90 ttft {} vs static {}",
-            rep_e.p_ttft(90.0),
-            rep_s.p_ttft(90.0)
-        );
-        assert!(elastic.stats.group_moves > 0, "elastic system should move instances");
+    fn completed(&self) -> usize {
+        self.finished.len()
     }
 
-    #[test]
-    fn unified_cache_reduces_latency_on_redundant_workload() {
-        let t = trace(250, 8.0, 5);
-        let mut with = EmpSystem::new(
-            cost_qwen(),
-            SchedulerConfig::default(),
-            8,
-            EmpOptions::emp_unicache(8),
-        );
-        let rep_with = with.run(&t);
-        let mut without =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::emp_only(8));
-        let rep_without = without.run(&t);
-        assert!(with.stats.encode_cache_hits > 0);
-        assert!(
-            rep_with.mean_norm_input_latency() <= rep_without.mean_norm_input_latency(),
-            "unicache {} vs none {}",
-            rep_with.mean_norm_input_latency(),
-            rep_without.mean_norm_input_latency()
-        );
+    fn drain_records(&mut self) -> Vec<RequestRecord> {
+        std::mem::take(&mut self.finished)
     }
 
-    #[test]
-    fn non_blocking_encode_helps_ttft() {
-        let t = trace(250, 8.0, 6);
-        let mut full =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
-        let rep_full = full.run(&t);
-        let mut block = EmpSystem::new(
-            cost_qwen(),
-            SchedulerConfig::default(),
-            8,
-            EmpOptions::emp_unicache(8),
-        );
-        let rep_block = block.run(&t);
-        assert!(
-            rep_full.mean_ttft() <= rep_block.mean_ttft() * 1.05,
-            "full {} vs blocking {}",
-            rep_full.mean_ttft(),
-            rep_block.mean_ttft()
-        );
+    fn verify_invariants(&self) -> Result<(), String> {
+        self.check_invariants()
     }
 
-    #[test]
-    fn deterministic_across_runs() {
-        let t = trace(120, 6.0, 7);
-        let mk = || {
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8))
-        };
-        let a = mk().run(&t);
-        let b = mk().run(&t);
-        let fa: Vec<f64> = a.records.iter().map(|r| r.finish).collect();
-        let fb: Vec<f64> = b.records.iter().map(|r| r.finish).collect();
-        assert_eq!(fa, fb);
-    }
-
-    #[test]
-    fn static_split_sizes_are_respected() {
-        let sys = EmpSystem::new(
-            cost_qwen(),
-            SchedulerConfig::default(),
-            8,
-            EmpOptions::static_split(6),
-        );
-        assert_eq!(sys.group_sizes(), [6, 2]);
-    }
-
-    #[test]
-    fn single_instance_groups_work() {
-        // 2 GPUs -> 1 text + 1 multimodal, both Unified.
-        let mut sys =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 2, EmpOptions::full(2));
-        let rep = sys.run(&trace(60, 2.0, 8));
-        assert_eq!(rep.records.len(), 60);
-        sys.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn stats_reflect_stage_elasticity() {
-        let mut sys =
-            EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
-        sys.run(&trace(400, 12.0, 9));
-        // Under this load the scheduler must have exercised elastic paths.
-        assert!(
-            sys.stats.role_flips > 0 || sys.stats.group_moves > 0,
-            "no elasticity exercised: {:?}",
-            sys.stats
-        );
+    fn kv_in_use(&self) -> usize {
+        crate::sim::instance::kv_tokens_in_use(&self.instances)
     }
 }

@@ -1,0 +1,192 @@
+//! Behavioural tests of the composed EMP system (moved out of
+//! `system.rs` when it became a thin composition root).
+
+use super::system::{EmpOptions, EmpSystem};
+use crate::config::{presets, GpuSpec, SchedulerConfig};
+use crate::model::CostModel;
+use crate::sim::driver::ServingSystem;
+use crate::util::rng::Rng;
+use crate::workload::arrival::{poisson_arrivals, BurstyProcess};
+use crate::workload::datasets::DatasetSpec;
+use crate::workload::Request;
+
+fn cost_qwen() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn cost_llama() -> CostModel {
+    CostModel::new(presets::llama32_vision_11b(), GpuSpec::a800_80g())
+}
+
+fn trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+#[test]
+fn completes_all_requests_and_invariants_hold() {
+    let mut sys =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep = sys.run(&trace(250, 6.0, 1));
+    assert_eq!(rep.records.len(), 250);
+    sys.check_invariants().unwrap();
+    for r in &rep.records {
+        assert!(r.first_token >= r.arrival);
+        assert!(r.finish >= r.first_token);
+    }
+}
+
+#[test]
+fn encdec_model_also_completes() {
+    let mut sys =
+        EmpSystem::new(cost_llama(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep = sys.run(&trace(150, 4.0, 2));
+    assert_eq!(rep.records.len(), 150);
+    sys.check_invariants().unwrap();
+}
+
+#[test]
+fn beats_coupled_vllm_on_input_latency_under_load() {
+    // The paper's headline: ElasticMM cuts TTFT vs vLLM under heavy
+    // multimodal load.
+    let t = trace(300, 10.0, 3);
+    let mut emp =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep_emp = emp.run(&t);
+    let mut vllm = crate::baselines::coupled::CoupledVllm::new(
+        cost_qwen(),
+        SchedulerConfig::default(),
+        8,
+    );
+    let rep_vllm = vllm.run(&t);
+    assert!(
+        rep_emp.mean_norm_input_latency() < rep_vllm.mean_norm_input_latency(),
+        "emp {} vs vllm {}",
+        rep_emp.mean_norm_input_latency(),
+        rep_vllm.mean_norm_input_latency()
+    );
+}
+
+#[test]
+fn elastic_beats_static_under_bursts() {
+    // Fig 7's claim: static splits lose to EMP under shifting load.
+    let mut rng = Rng::new(4);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 400);
+    let p = BurstyProcess {
+        base_qps: 3.0,
+        burst_qps: 25.0,
+        mean_quiet_s: 40.0,
+        mean_burst_s: 10.0,
+    };
+    let bursts = p.stamp(&mut rng, &mut reqs);
+    crate::workload::arrival::concentrate_multimodal_in_bursts(&mut reqs, &bursts);
+    let mut elastic =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep_e = elastic.run(&reqs);
+    let mut static_even = EmpSystem::new(
+        cost_qwen(),
+        SchedulerConfig::default(),
+        8,
+        EmpOptions::static_split(4),
+    );
+    let rep_s = static_even.run(&reqs);
+    assert!(
+        rep_e.p_ttft(90.0) < rep_s.p_ttft(90.0),
+        "elastic p90 ttft {} vs static {}",
+        rep_e.p_ttft(90.0),
+        rep_s.p_ttft(90.0)
+    );
+    assert!(elastic.stats.group_moves > 0, "elastic system should move instances");
+}
+
+#[test]
+fn unified_cache_reduces_latency_on_redundant_workload() {
+    let t = trace(250, 8.0, 5);
+    let mut with = EmpSystem::new(
+        cost_qwen(),
+        SchedulerConfig::default(),
+        8,
+        EmpOptions::emp_unicache(8),
+    );
+    let rep_with = with.run(&t);
+    let mut without =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::emp_only(8));
+    let rep_without = without.run(&t);
+    assert!(with.stats.encode_cache_hits > 0);
+    assert!(
+        rep_with.mean_norm_input_latency() <= rep_without.mean_norm_input_latency(),
+        "unicache {} vs none {}",
+        rep_with.mean_norm_input_latency(),
+        rep_without.mean_norm_input_latency()
+    );
+}
+
+#[test]
+fn non_blocking_encode_helps_ttft() {
+    let t = trace(250, 8.0, 6);
+    let mut full =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep_full = full.run(&t);
+    let mut block = EmpSystem::new(
+        cost_qwen(),
+        SchedulerConfig::default(),
+        8,
+        EmpOptions::emp_unicache(8),
+    );
+    let rep_block = block.run(&t);
+    assert!(
+        rep_full.mean_ttft() <= rep_block.mean_ttft() * 1.05,
+        "full {} vs blocking {}",
+        rep_full.mean_ttft(),
+        rep_block.mean_ttft()
+    );
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let t = trace(120, 6.0, 7);
+    let mk = || {
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8))
+    };
+    let a = mk().run(&t);
+    let b = mk().run(&t);
+    let fa: Vec<f64> = a.records.iter().map(|r| r.finish).collect();
+    let fb: Vec<f64> = b.records.iter().map(|r| r.finish).collect();
+    assert_eq!(fa, fb);
+}
+
+#[test]
+fn static_split_sizes_are_respected() {
+    let sys = EmpSystem::new(
+        cost_qwen(),
+        SchedulerConfig::default(),
+        8,
+        EmpOptions::static_split(6),
+    );
+    assert_eq!(sys.group_sizes(), [6, 2]);
+}
+
+#[test]
+fn single_instance_groups_work() {
+    // 2 GPUs -> 1 text + 1 multimodal, both Unified.
+    let mut sys =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 2, EmpOptions::full(2));
+    let rep = sys.run(&trace(60, 2.0, 8));
+    assert_eq!(rep.records.len(), 60);
+    sys.check_invariants().unwrap();
+}
+
+#[test]
+fn stats_reflect_stage_elasticity() {
+    let mut sys =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    sys.run(&trace(400, 12.0, 9));
+    // Under this load the scheduler must have exercised elastic paths.
+    assert!(
+        sys.stats.role_flips > 0 || sys.stats.group_moves > 0,
+        "no elasticity exercised: {:?}",
+        sys.stats
+    );
+}

@@ -28,15 +28,26 @@ struct SeqEntry {
     tokens: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum KvError {
-    #[error("out of KV blocks (need {need}, free {free})")]
     OutOfBlocks { need: usize, free: usize },
-    #[error("unknown sequence {0}")]
     UnknownSeq(SeqId),
-    #[error("sequence {0} already exists")]
     DuplicateSeq(SeqId),
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { need, free } => {
+                write!(f, "out of KV blocks (need {need}, free {free})")
+            }
+            KvError::UnknownSeq(s) => write!(f, "unknown sequence {s}"),
+            KvError::DuplicateSeq(s) => write!(f, "sequence {s} already exists"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 impl PagedKvCache {
     pub fn new(total_tokens: usize, block_tokens: usize) -> Self {
@@ -121,7 +132,12 @@ impl PagedKvCache {
     /// Fork: `child` shares `parent`'s blocks copy-on-write (prefix
     /// reuse). Only whole shared-prefix blocks are shared; the tail
     /// block is duplicated conservatively.
-    pub fn fork(&mut self, parent: SeqId, child: SeqId, prefix_tokens: usize) -> Result<(), KvError> {
+    pub fn fork(
+        &mut self,
+        parent: SeqId,
+        child: SeqId,
+        prefix_tokens: usize,
+    ) -> Result<(), KvError> {
         if self.tables.contains_key(&child) {
             return Err(KvError::DuplicateSeq(child));
         }

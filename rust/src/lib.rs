@@ -8,9 +8,13 @@
 //!
 //! * [`coordinator`] — the paper's contribution: modality-aware load
 //!   balancing, elastic partition scheduling (request dispatch, elastic
-//!   instance allocation, elastic auto-scaling), gain/cost models.
+//!   instance allocation, elastic auto-scaling), gain/cost models —
+//!   decomposed into `dispatch` / `scaling` / `migration` policy modules
+//!   around a thin `system` composition root.
 //! * [`sim`] — a discrete-event cluster simulator standing in for the
-//!   paper's 8×A800 testbed (see DESIGN.md §Substitutions).
+//!   paper's 8×A800 testbed (see DESIGN.md §Substitutions), including
+//!   the shared [`sim::driver::ServingSystem`] trace driver every
+//!   serving system (EMP and baselines) runs on.
 //! * [`kvcache`] — paged KV cache, radix-tree prefix cache, image-hash
 //!   cache and the unified multimodal prefix cache.
 //! * [`workload`] — synthetic ShareGPT-4o / VisualWebInstruct request
@@ -21,7 +25,10 @@
 //!   vLLM-Decouple variant used as paper baselines.
 //! * [`serving`] + [`runtime`] — a *real* execution path: a tiny MLLM
 //!   AOT-compiled from JAX/Pallas to HLO and executed via PJRT CPU.
-//! * [`util`] — in-repo substrates (PRNG, JSON, statistics, CLI).
+//!   Quarantined behind the `pjrt` cargo feature because it needs the
+//!   external `xla` crate (DESIGN.md §PJRT quarantine).
+//! * [`util`] — in-repo substrates (PRNG, JSON, statistics, CLI,
+//!   property testing, error handling).
 
 pub mod util;
 pub mod config;
@@ -32,5 +39,9 @@ pub mod sim;
 pub mod coordinator;
 pub mod baselines;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod serving;
+
+pub use sim::driver::{run_trace, ServingSystem};

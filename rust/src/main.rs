@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   serve      — serve a synthetic mixed workload on the real tiny MLLM
-//!                (sequential or staged/non-blocking pipeline)
+//!                (sequential or staged/non-blocking pipeline; needs the
+//!                `pjrt` feature)
 //!   simulate   — run a serving-system simulation on the A800 cluster
 //!                model (systems: elasticmm | vllm | vllm-decouple | static)
 //!   gen-trace  — generate a workload trace JSON
@@ -20,9 +21,9 @@ use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::metrics::Report;
 use elasticmm::model::CostModel;
-use elasticmm::runtime::Runtime;
-use elasticmm::serving::{serve_sequential_batch, serve_staged, ServeRequest};
+use elasticmm::ServingSystem;
 use elasticmm::util::cli::Args;
+use elasticmm::util::error::Result;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;
 use elasticmm::workload::arrival::poisson_arrivals;
@@ -30,7 +31,7 @@ use elasticmm::workload::datasets::DatasetSpec;
 use elasticmm::workload::trace;
 use elasticmm::workload::Request;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand() {
         Some("serve") => cmd_serve(&args),
@@ -77,12 +78,14 @@ fn make_trace(args: &Args) -> Vec<Request> {
     reqs
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> Result<()> {
     let cost = cost_model(args);
     let sched = SchedulerConfig::default();
     let gpus = args.get_usize("gpus", 8);
     let t = make_trace(args);
     let system = args.get_or("system", "elasticmm");
+    // Every system runs through the shared driver (sim::driver), so the
+    // comparison is apples-to-apples.
     let report: Report = match system.as_str() {
         "vllm" => CoupledVllm::new(cost, sched, gpus).run(&t),
         "vllm-decouple" => DecoupledStatic::new(cost, sched, gpus).run(&t),
@@ -119,7 +122,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn cmd_serve(args: &Args) -> Result<()> {
+    use elasticmm::runtime::Runtime;
+    use elasticmm::serving::{serve_sequential_batch, serve_staged, ServeRequest};
     let dir = Runtime::default_dir();
     let n = args.get_usize("requests", 6);
     let mut rng = Rng::new(args.get_u64("seed", 7));
@@ -155,9 +161,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    elasticmm::bail!(
+        "`serve` needs the real PJRT path: vendor the `xla` crate, add it to \
+         rust/Cargo.toml, then rebuild with `--features pjrt` \
+         (see DESIGN.md §PJRT quarantine)"
+    )
+}
+
 /// OpenAI-compatible HTTP frontend (paper Appendix A) over the real
 /// tiny-MLLM engine: `elasticmm serve-http --port 8000`.
-fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    use elasticmm::runtime::Runtime;
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
     let port = args.get_usize("port", 8000) as u16;
@@ -172,7 +189,16 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
     )
 }
 
-fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_http(_args: &Args) -> Result<()> {
+    elasticmm::bail!(
+        "`serve-http` needs the real PJRT path: vendor the `xla` crate, add it \
+         to rust/Cargo.toml, then rebuild with `--features pjrt` \
+         (see DESIGN.md §PJRT quarantine)"
+    )
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
     let t = make_trace(args);
     let path = args.get_or("out", "trace.json");
     trace::save_trace(std::path::Path::new(&path), &t)?;
@@ -180,7 +206,7 @@ fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_models() -> anyhow::Result<()> {
+fn cmd_models() -> Result<()> {
     let rows: Vec<Vec<String>> = presets::all_models()
         .iter()
         .map(|m| {

@@ -6,7 +6,7 @@
 pub mod weights;
 
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -99,7 +99,9 @@ impl Runtime {
     pub fn load(dir: &Path) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("read {}/manifest.json — run `make artifacts`", dir.display()))?;
+            .with_context(|| {
+                format!("read {}/manifest.json — run `make artifacts`", dir.display())
+            })?;
         let manifest = Json::parse(&manifest_text)?;
         let m = manifest.get("model")?;
         let meta = ModelMeta {

@@ -2,7 +2,7 @@
 //! `write_weights`: magic "EMMW", u32 count, then per tensor
 //! u32 name_len / name / u32 ndim / u64 dims... / f32 data (LE).
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 

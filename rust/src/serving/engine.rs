@@ -17,7 +17,7 @@ use crate::kvcache::image_cache::ImageCache;
 use crate::runtime::Runtime;
 use crate::serving::tokenizer;
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;

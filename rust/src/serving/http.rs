@@ -16,7 +16,7 @@
 
 use crate::serving::engine::{Engine, ServeRequest};
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;

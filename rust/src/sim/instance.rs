@@ -9,6 +9,7 @@
 
 use crate::kvcache::paged::PagedKvCache;
 use crate::workload::Request;
+use std::collections::HashMap;
 
 /// Which inference stage an instance currently serves (stage-level
 /// disaggregation, §3).
@@ -80,6 +81,35 @@ impl Instance {
     pub fn kv_free_tokens(&self) -> usize {
         self.kv.free_tokens()
     }
+}
+
+/// Cross-instance consistency shared by every serving system: each
+/// instance's KV pool is internally consistent and every resident
+/// decoding id maps to a request homed on that instance. Systems call
+/// this from `ServingSystem::verify_invariants` and layer their own
+/// checks on top.
+pub fn check_instances(
+    instances: &[Instance],
+    requests: &HashMap<u64, SimRequest>,
+) -> Result<(), String> {
+    for inst in instances {
+        inst.kv.check_invariants()?;
+        for id in &inst.decoding {
+            let r = requests
+                .get(id)
+                .ok_or(format!("decoding unknown request {id}"))?;
+            if r.home != Some(inst.id) {
+                return Err(format!("request {id} home mismatch"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Total KV tokens currently allocated across `instances` (must be
+/// zero once a run completes).
+pub fn kv_tokens_in_use(instances: &[Instance]) -> usize {
+    instances.iter().map(|i| i.kv.used_tokens()).sum()
 }
 
 /// Request lifecycle phase in the simulator.

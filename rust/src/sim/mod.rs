@@ -1,7 +1,10 @@
 //! Discrete-event cluster simulator — the testbed substitute
 //! (DESIGN.md §Substitutions). [`engine`] provides the clock/queue,
 //! [`instance`] the elastic-instance and request state shared by the
-//! EMP coordinator and all baselines.
+//! EMP coordinator and all baselines, and [`driver`] the shared
+//! [`driver::ServingSystem`] trait plus the generic trace driver every
+//! system runs on.
 
+pub mod driver;
 pub mod engine;
 pub mod instance;

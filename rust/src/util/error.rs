@@ -1,0 +1,128 @@
+//! Minimal error substrate (the offline vendor set has no `anyhow` /
+//! `thiserror`). [`Error`] is a cheap message-carrying error, [`Result`]
+//! the crate-wide alias, and the `anyhow!` / `bail!` macros plus the
+//! [`Context`] trait mirror the `anyhow` API surface the serving and
+//! runtime layers were written against, so the PJRT path compiles
+//! unchanged once its feature is enabled.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does *not* implement
+//! `std::error::Error`: that is what makes the blanket
+//! `From<E: std::error::Error>` conversion powering `?` coherent.
+
+use std::fmt;
+
+/// A message-carrying error with any causal chain flattened into the
+/// message at conversion time.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro calls
+    /// this).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style formatted error constructor.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+/// `anyhow::Context`-alike: prefix the error message with context.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {}", e.into())))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {}", f(), e.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad thing {}", 7);
+        assert_eq!(e.to_string(), "bad thing 7");
+        fn failing() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(failing().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn context_prefixes_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading weights").unwrap_err();
+        assert!(e.to_string().starts_with("reading weights: "));
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+    }
+}

@@ -21,15 +21,28 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected}, got {got}")]
     Type { expected: &'static str, got: &'static str },
-    #[error("json missing key: {0}")]
     MissingKey(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Type { expected, got } => {
+                write!(f, "json type error: expected {expected}, got {got}")
+            }
+            JsonError::MissingKey(k) => write!(f, "json missing key: {k}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn type_name(&self) -> &'static str {

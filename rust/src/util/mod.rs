@@ -1,7 +1,8 @@
 //! In-repo substrates: the offline vendor set lacks `rand`, `serde`,
-//! `clap`, `criterion`, and `proptest`, so this module provides the
-//! equivalents the rest of the system is built on.
+//! `clap`, `criterion`, `proptest`, `anyhow`, and `thiserror`, so this
+//! module provides the equivalents the rest of the system is built on.
 
+pub mod error;
 pub mod rng;
 pub mod json;
 pub mod stats;

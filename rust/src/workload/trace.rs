@@ -64,12 +64,12 @@ pub fn trace_from_json(j: &Json) -> Result<Vec<Request>, JsonError> {
     j.as_arr()?.iter().map(request_from_json).collect()
 }
 
-pub fn save_trace(path: &Path, requests: &[Request]) -> anyhow::Result<()> {
+pub fn save_trace(path: &Path, requests: &[Request]) -> crate::util::error::Result<()> {
     std::fs::write(path, trace_to_json(requests).to_string())?;
     Ok(())
 }
 
-pub fn load_trace(path: &Path) -> anyhow::Result<Vec<Request>> {
+pub fn load_trace(path: &Path) -> crate::util::error::Result<Vec<Request>> {
     let text = std::fs::read_to_string(path)?;
     Ok(trace_from_json(&Json::parse(&text)?)?)
 }

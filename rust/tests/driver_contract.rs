@@ -1,0 +1,137 @@
+//! Driver-contract property test: every serving system, driven over the
+//! same trace by the shared `ServingSystem` driver, must uphold the same
+//! invariants —
+//!
+//! * all requests complete (the driver would otherwise panic on stall);
+//! * per-request timing is causal (arrival ≤ first token ≤ finish);
+//! * every KV token is released by the end of the run;
+//! * the system's own cross-instance invariants hold;
+//! * identical traces replay identically (determinism).
+//!
+//! The generic `contract` helper is written against the trait alone, so
+//! any future baseline gets this coverage by implementing
+//! `ServingSystem`.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::Report;
+use elasticmm::model::CostModel;
+use elasticmm::ServingSystem;
+use elasticmm::util::proptest::{check, Gen};
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched() -> SchedulerConfig {
+    SchedulerConfig::default()
+}
+
+/// Per-request (id, first_token, finish) triples, id-sorted so record
+/// order (which differs legitimately between systems) is irrelevant.
+fn timing_key(rep: &Report) -> Vec<(u64, f64, f64)> {
+    let mut v: Vec<(u64, f64, f64)> = rep
+        .records
+        .iter()
+        .map(|r| (r.id, r.first_token, r.finish))
+        .collect();
+    v.sort_by_key(|e| e.0);
+    v
+}
+
+fn contract<S: ServingSystem>(
+    name: &str,
+    mk: impl Fn() -> S,
+    trace: &[Request],
+) -> Result<(), String> {
+    let mut sys = mk();
+    let rep = sys.run(trace);
+    if rep.records.len() != trace.len() {
+        return Err(format!(
+            "{name}: {}/{} requests completed",
+            rep.records.len(),
+            trace.len()
+        ));
+    }
+    for r in &rep.records {
+        if !(r.first_token >= r.arrival && r.finish >= r.first_token) {
+            return Err(format!("{name}: request {} has non-causal timing", r.id));
+        }
+    }
+    sys.verify_invariants().map_err(|e| format!("{name}: {e}"))?;
+    if sys.kv_in_use() != 0 {
+        return Err(format!("{name}: {} KV tokens leaked", sys.kv_in_use()));
+    }
+    let rep2 = mk().run(trace);
+    if timing_key(&rep) != timing_key(&rep2) {
+        return Err(format!("{name}: nondeterministic across identical runs"));
+    }
+    Ok(())
+}
+
+#[test]
+fn all_systems_uphold_driver_contract() {
+    check(
+        0xD21,
+        6,
+        |g: &mut Gen| {
+            let n = g.usize_in(20, 80);
+            let qps = g.f64_in(1.0, 12.0);
+            let gpus = [2usize, 4, 8][g.usize_in(0, 2)];
+            let seed = g.rng.next_u64();
+            (n, qps, gpus, seed)
+        },
+        |&(n, qps, gpus, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+            poisson_arrivals(&mut rng, &mut reqs, qps);
+            contract(
+                "EmpSystem",
+                || EmpSystem::new(cost(), sched(), gpus, EmpOptions::full(gpus)),
+                &reqs,
+            )?;
+            contract(
+                "EmpSystem/static",
+                || EmpSystem::new(cost(), sched(), gpus, EmpOptions::static_split(gpus / 2)),
+                &reqs,
+            )?;
+            contract("CoupledVllm", || CoupledVllm::new(cost(), sched(), gpus), &reqs)?;
+            contract(
+                "DecoupledStatic",
+                || DecoupledStatic::new(cost(), sched(), gpus),
+                &reqs,
+            )
+        },
+    );
+}
+
+#[test]
+fn systems_agree_on_the_workload_not_the_schedule() {
+    // Same trace through all three systems: completion sets must be
+    // identical even though schedules differ.
+    let mut rng = Rng::new(99);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 150);
+    poisson_arrivals(&mut rng, &mut reqs, 6.0);
+    let emp = EmpSystem::new(cost(), sched(), 8, EmpOptions::full(8)).run(&reqs);
+    let vllm = CoupledVllm::new(cost(), sched(), 8).run(&reqs);
+    let dec = DecoupledStatic::new(cost(), sched(), 8).run(&reqs);
+    let ids = |rep: &Report| {
+        let mut v: Vec<u64> = rep.records.iter().map(|r| r.id).collect();
+        v.sort_unstable();
+        v
+    };
+    let expect: Vec<u64> = {
+        let mut v: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(ids(&emp), expect);
+    assert_eq!(ids(&vllm), expect);
+    assert_eq!(ids(&dec), expect);
+}

@@ -8,6 +8,7 @@ use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::metrics::Slo;
 use elasticmm::model::CostModel;
+use elasticmm::ServingSystem;
 use elasticmm::util::rng::Rng;
 use elasticmm::workload::arrival::poisson_arrivals;
 use elasticmm::workload::datasets::DatasetSpec;
