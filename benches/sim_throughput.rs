@@ -1,0 +1,146 @@
+//! End-to-end simulator throughput benchmark: a large decode-heavy
+//! synthetic trace through all three serving systems via the shared
+//! driver, with decode fast-forwarding off vs on. Reports wall-clock,
+//! sim-events/sec, wall-clock per 10k requests, and the fast-forward
+//! speedup, and writes `BENCH_sim.json` at the repo root so the perf
+//! trajectory is tracked per-PR (CI runs `--smoke` and uploads it).
+//!
+//!     cargo bench --bench sim_throughput            # full (10k requests)
+//!     cargo bench --bench sim_throughput -- --smoke # CI-sized trace
+//!
+//! The fast path is behavior-preserving (bit-identical reports; see
+//! `rust/tests/fast_forward_equivalence.rs`), so both configurations
+//! simulate exactly the same schedule — only the event count differs.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::model::CostModel;
+use elasticmm::sim::driver::{run_trace_with_stats, ServingSystem};
+use elasticmm::util::cli::Args;
+use elasticmm::util::json::Json;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+use std::time::Instant;
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched(ff: bool) -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: ff, ..SchedulerConfig::default() }
+}
+
+/// Decode-heavy mix: moderate prompts, long outputs (median ≈ 450
+/// tokens), images present but not dominant — the regime where the
+/// per-token event cost of the step-by-step simulator dominates.
+fn decode_heavy_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut spec = DatasetSpec::sharegpt4o();
+    spec.name = "decode-heavy".to_string();
+    spec.prompt_mu = 4.5;
+    spec.output_mu = 6.1;
+    spec.output_sigma = 0.5;
+    spec.multimodal_fraction = 0.35;
+    let mut rng = elasticmm::util::rng::Rng::new(seed);
+    let mut reqs = spec.generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+struct Measurement {
+    wall_s: f64,
+    events: u64,
+    tokens: u64,
+}
+
+fn measure<S: ServingSystem>(mut sys: S, trace: &[Request]) -> Measurement {
+    let t0 = Instant::now();
+    let (rep, stats) = run_trace_with_stats(&mut sys, trace);
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.records.len(), trace.len(), "incomplete run");
+    let tokens: u64 = rep.records.iter().map(|r| r.output_len as u64).sum();
+    Measurement { wall_s, events: stats.events, tokens }
+}
+
+fn bench_system(
+    name: &str,
+    trace: &[Request],
+    run: impl Fn(bool, &[Request]) -> Measurement,
+) -> (Json, f64) {
+    let off = run(false, trace);
+    let on = run(true, trace);
+    let speedup = off.wall_s / on.wall_s.max(1e-9);
+    println!(
+        "{name:<18} ff-off {:>8.3}s ({:>9} events)   ff-on {:>8.3}s ({:>9} events)   speedup {speedup:>5.2}x",
+        off.wall_s, off.events, on.wall_s, on.events
+    );
+    let per_10k = |m: &Measurement| m.wall_s / trace.len() as f64 * 10_000.0;
+    let j = Json::obj(vec![
+        ("wall_s_ff_off", Json::num(off.wall_s)),
+        ("wall_s_ff_on", Json::num(on.wall_s)),
+        ("events_ff_off", Json::num(off.events as f64)),
+        ("events_ff_on", Json::num(on.events as f64)),
+        ("events_per_sec_ff_on", Json::num(on.events as f64 / on.wall_s.max(1e-9))),
+        (
+            "events_per_sec_ff_off",
+            Json::num(off.events as f64 / off.wall_s.max(1e-9)),
+        ),
+        ("wall_s_per_10k_requests_ff_off", Json::num(per_10k(&off))),
+        ("wall_s_per_10k_requests_ff_on", Json::num(per_10k(&on))),
+        ("output_tokens", Json::num(on.tokens as f64)),
+        ("speedup", Json::num(speedup)),
+    ]);
+    (j, speedup)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let n = args.get_usize("requests", if smoke { 600 } else { 10_000 });
+    let qps = args.get_f64("qps", 3.0);
+    let gpus = args.get_usize("gpus", 4);
+    let seed = args.get_u64("seed", 7);
+    let trace = decode_heavy_trace(n, qps, seed);
+    let total_tokens: usize = trace.iter().map(|r| r.output_tokens).sum();
+    println!(
+        "=== sim_throughput: {n} requests, {total_tokens} output tokens, qps {qps}, {gpus} GPUs{} ===",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let (coupled_json, coupled_speedup) = bench_system("coupled", &trace, |ff, t| {
+        measure(CoupledVllm::new(cost(), sched(ff), gpus), t)
+    });
+    let (decoupled_json, decoupled_speedup) = bench_system("decoupled", &trace, |ff, t| {
+        measure(DecoupledStatic::new(cost(), sched(ff), gpus), t)
+    });
+    let (emp_json, emp_speedup) = bench_system("emp", &trace, |ff, t| {
+        measure(EmpSystem::new(cost(), sched(ff), gpus, EmpOptions::full(gpus)), t)
+    });
+
+    let max_speedup = coupled_speedup.max(decoupled_speedup).max(emp_speedup);
+    println!("max fast-forward speedup: {max_speedup:.2}x");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("sim_throughput".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("requests", Json::num(n as f64)),
+        ("qps", Json::num(qps)),
+        ("gpus", Json::num(gpus as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("total_output_tokens", Json::num(total_tokens as f64)),
+        ("max_fast_forward_speedup", Json::num(max_speedup)),
+        (
+            "systems",
+            Json::obj(vec![
+                ("coupled", coupled_json),
+                ("decoupled", decoupled_json),
+                ("emp", emp_json),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json");
+    std::fs::write(path, out.to_string()).expect("write BENCH_sim.json");
+    println!("wrote {path}");
+}

@@ -16,7 +16,8 @@ fn req(id: u64, content_id: Option<u64>, prefix_id: u64) -> Request {
         output_tokens: 32,
         images: content_id
             .map(|c| vec![ImageRef { width: 904, height: 904, content_id: c }])
-            .unwrap_or_default(),
+            .unwrap_or_default()
+            .into(),
         prefix_id,
         prefix_tokens: if prefix_id != 0 { 128 } else { 0 },
     }

@@ -94,6 +94,18 @@ impl ServingSystem for DecoupledStatic {
     fn kv_in_use(&self) -> usize {
         self.text.kv_in_use() + self.multimodal.kv_in_use()
     }
+
+    fn outstanding_by_phase(&self) -> Vec<(&'static str, usize)> {
+        // Merge the two fleets' histograms (same phase order).
+        let mut merged = self.text.outstanding_by_phase();
+        for (slot, (name, count)) in
+            merged.iter_mut().zip(self.multimodal.outstanding_by_phase())
+        {
+            debug_assert_eq!(slot.0, name);
+            slot.1 += count;
+        }
+        merged
+    }
 }
 
 #[cfg(test)]

@@ -244,6 +244,23 @@ pub struct SchedulerConfig {
     pub non_blocking_encode: bool,
     /// Token budget per chunked-prefill iteration.
     pub chunked_prefill_tokens: usize,
+    /// Disaggregated prefill admits up to `chunked_prefill_tokens *
+    /// idle_instances * prefill_budget_multiplier` tokens per dispatch
+    /// (the headroom lets DP prefill fill wide iterations; was a magic
+    /// `* 4` in `dispatch_prefill`).
+    pub prefill_budget_multiplier: usize,
+    /// Prefill-token budget per iteration on a Unified (single-instance
+    /// coupled-semantics) replica — vLLM's `max_num_batched_tokens`
+    /// (was hardcoded to 8192 in `schedule_unified`).
+    pub unified_prefill_token_budget: usize,
+    /// Decode fast-forwarding (event coalescing): when a decode batch
+    /// provably cannot change before the next externally-visible event,
+    /// simulate many decode steps inside one event instead of one queue
+    /// round-trip per token. Behavior-preserving — reports are
+    /// bit-identical with this on or off (see
+    /// `tests/fast_forward_equivalence.rs`); the toggle exists for that
+    /// equivalence check and for debugging.
+    pub decode_fast_forward: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -259,6 +276,9 @@ impl Default for SchedulerConfig {
             unified_prefix_cache: true,
             non_blocking_encode: true,
             chunked_prefill_tokens: 2048,
+            prefill_budget_multiplier: 4,
+            unified_prefill_token_budget: 8192,
+            decode_fast_forward: true,
         }
     }
 }

@@ -6,10 +6,15 @@
 //! single-instance groups (coupled semantics). Elasticity decisions
 //! (Eq. 2 / Eq. 3) live in [`super::scaling`] — dispatch only *asks* it
 //! when admission is blocked or a DP iteration could borrow an instance.
+//!
+//! Requests are addressed by [`ReqIx`] slab indices throughout; role
+//! membership comes from the cached lists on [`EmpSystem`] (no per-call
+//! filtering or allocation — see `system.rs` §Hot-path layout).
 
-use crate::model::{DecodeItem, PrefillItem};
+use crate::model::PrefillItem;
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
+use crate::sim::slab::ReqIx;
 
 use super::scaling;
 use super::system::{gidx, EmpEv, EmpSystem, Iter};
@@ -19,25 +24,29 @@ use super::system::{gidx, EmpEv, EmpSystem, Iter};
 /// iteration (preprocess + encoder forward).
 pub(crate) fn schedule_encoders(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
     let now = q.now();
-    let encoders = sys.role_members(g, StageRole::Encode);
-    for e in encoders {
+    // Index-walk over the cached encoder list (stable: nothing below
+    // flips roles).
+    let mut k = 0;
+    loop {
+        let Some(&e) = sys.role_members(g, StageRole::Encode).get(k) else { break };
+        k += 1;
         if !sys.instances[e].idle_at(now) || sys.current[e].is_some() {
             continue;
         }
-        let Some(&id) = sys.groups[gidx(g)].wait_encode.front() else { break };
+        let Some(&ix) = sys.groups[gidx(g)].wait_encode.front() else { break };
         sys.groups[gidx(g)].wait_encode.pop_front();
-        let r = sys.requests.get_mut(&id).unwrap();
+        let r = sys.requests.get_mut(ix);
         r.phase = Phase::Encoding;
         // Encode all this request's pending images in one iteration.
         let mut dur = 0.0;
         for &vt in &r.encode_pending {
             dur += sys.cost.encode_time(vt, sys.instances[e].tp);
         }
-        for img in &r.req.images {
+        for img in r.req.images.iter() {
             dur += sys.cost.preprocess_time(img.width, img.height);
         }
         let done = sys.instances[e].start_iteration(now, dur);
-        sys.current[e] = Some(Iter::Encode { id });
+        sys.current[e] = Some(Iter::Encode { ix });
         q.push(done, EmpEv::IterDone(e));
     }
 }
@@ -45,10 +54,10 @@ pub(crate) fn schedule_encoders(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueu
 /// Pick the decode destination with the most free KV able to hold
 /// `reserve` tokens.
 fn pick_decode_dest(sys: &EmpSystem, g: GroupId, reserve: usize) -> Option<usize> {
-    let mut decode = sys.role_members(g, StageRole::Decode);
-    decode.extend(sys.role_members(g, StageRole::Unified));
-    decode
-        .into_iter()
+    sys.role_members(g, StageRole::Decode)
+        .iter()
+        .chain(sys.role_members(g, StageRole::Unified).iter())
+        .copied()
         .filter(|&d| sys.instances[d].kv.can_allocate(reserve))
         .max_by_key(|&d| sys.instances[d].kv_free_tokens())
 }
@@ -62,7 +71,8 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     // E_p = idle prefill instances (Unified handled separately).
     let e_p: Vec<usize> = sys
         .role_members(g, StageRole::Prefill)
-        .into_iter()
+        .iter()
+        .copied()
         .filter(|&i| sys.instances[i].idle_at(now) && sys.current[i].is_none())
         .collect();
     if e_p.is_empty() {
@@ -70,33 +80,36 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
         return;
     }
     // R_p: FCFS admission under KV and tipping-point constraints.
-    let budget = sys.sched.chunked_prefill_tokens * e_p.len().max(1) * 4;
-    let mut ids = Vec::new();
+    let budget =
+        sys.sched.chunked_prefill_tokens * e_p.len().max(1) * sys.sched.prefill_budget_multiplier;
+    let mut ids: Vec<ReqIx> = Vec::new();
     let mut items = Vec::new();
     let mut dests = Vec::new();
     let mut tokens = 0usize;
     let mut blocked_on_kv = false;
-    while let Some(&id) = sys.groups[gidx(g)].wait_prefill.front() {
-        let r = &sys.requests[&id];
+    while let Some(&ix) = sys.groups[gidx(g)].wait_prefill.front() {
+        let r = sys.requests.get(ix);
         if ids.len() >= sys.sched.max_prefill_batch * e_p.len()
             || (tokens > 0 && tokens + r.prefill_remaining() > budget)
         {
             break;
         }
         let reserve = r.input_len + r.req.output_tokens;
+        let id = r.req.id;
+        let item = PrefillItem {
+            new_tokens: r.prefill_remaining(),
+            cached_tokens: r.cached_prefix,
+            vision_tokens: r.vision_tokens,
+        };
         let Some(dest) = pick_decode_dest(sys, g, reserve) else {
             blocked_on_kv = true;
             break;
         };
         sys.instances[dest].kv.allocate(id, reserve).expect("checked");
-        tokens += r.prefill_remaining();
-        items.push(PrefillItem {
-            new_tokens: r.prefill_remaining(),
-            cached_tokens: r.cached_prefix,
-            vision_tokens: r.vision_tokens,
-        });
+        tokens += item.new_tokens;
+        items.push(item);
         dests.push(dest);
-        ids.push(id);
+        ids.push(ix);
         sys.groups[gidx(g)].wait_prefill.pop_front();
     }
     if blocked_on_kv {
@@ -133,13 +146,13 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     // encoding is not DP-splittable within one request; coupled
     // frameworks run it inline — Fig 1a). With non-blocking encoding
     // requests arrive here already encoded, so this charges nothing.
-    for &id in &ids {
-        let r = &sys.requests[&id];
+    for &ix in &ids {
+        let r = sys.requests.get(ix);
         for &vt in &r.encode_pending {
             dur += sys.cost.encode_time(vt, tp);
         }
         if !r.encode_pending.is_empty() {
-            for img in &r.req.images {
+            for img in r.req.images.iter() {
                 dur += sys.cost.preprocess_time(img.width, img.height);
             }
         }
@@ -147,8 +160,8 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     // KV shipping to the decode destinations (NVLink, overlapped
     // poorly at iteration end — charged serially).
     dur += sys.cost.migration_time(tokens) * 0.5;
-    for (&id, &dest) in ids.iter().zip(&dests) {
-        let r = sys.requests.get_mut(&id).unwrap();
+    for (&ix, &dest) in ids.iter().zip(&dests) {
+        let r = sys.requests.get_mut(ix);
         r.phase = Phase::Prefilling;
         r.home = Some(dest);
     }
@@ -173,66 +186,82 @@ pub(crate) fn schedule_decode(sys: &mut EmpSystem, inst: usize, q: &mut SimQueue
         return;
     }
     let g = sys.instances[inst].group;
-    let ids: Vec<u64> = sys.instances[inst]
-        .decoding
-        .iter()
-        .take(sys.sched.max_decode_batch)
-        .copied()
-        .collect();
-    let items: Vec<DecodeItem> = ids
-        .iter()
-        .map(|id| {
-            let r = &sys.requests[id];
-            DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-        })
-        .collect();
-    let cross = g == GroupId::Multimodal;
-    let dur = sys
-        .cost
-        .decode_step_time_flags(&items, sys.instances[inst].tp, cross);
+    let mut ids = sys.take_ids();
+    ids.extend(
+        sys.instances[inst]
+            .decoding
+            .iter()
+            .take(sys.sched.max_decode_batch)
+            .copied(),
+    );
+    let dur = decode_batch_time(sys, g, inst, &ids);
     let done = sys.instances[inst].start_iteration(now, dur);
     sys.current[inst] = Some(Iter::Decode { ids });
     q.push(done, EmpEv::IterDone(inst));
+}
+
+/// Cost of one decode step over `ids` on `inst`, via the pooled
+/// `DecodeItem` scratch and the shared batch-cost helper.
+fn decode_batch_time(sys: &mut EmpSystem, g: GroupId, inst: usize, ids: &[ReqIx]) -> f64 {
+    let mut items = std::mem::take(&mut sys.decode_scratch);
+    let dur = crate::sim::instance::decode_batch_time(
+        &sys.cost,
+        &sys.requests,
+        sys.instances[inst].tp,
+        ids,
+        &mut items,
+        g == GroupId::Multimodal,
+    );
+    sys.decode_scratch = items;
+    dur
 }
 
 /// Unified path for single-instance groups: prefill priority, decode
 /// otherwise (coupled semantics on one replica).
 pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
     let now = q.now();
-    for u in sys.role_members(g, StageRole::Unified) {
+    // Index-walk over the cached unified list (stable: no role flips
+    // below).
+    let mut k = 0;
+    loop {
+        let Some(&u) = sys.role_members(g, StageRole::Unified).get(k) else { break };
+        k += 1;
         if !sys.instances[u].idle_at(now) || sys.current[u].is_some() {
             continue;
         }
         // Prefill priority, decode otherwise (coupled semantics).
-        let mut ids = Vec::new();
+        let mut ids: Vec<ReqIx> = Vec::new();
         let mut items = Vec::new();
         let mut encode_s = 0.0;
         let mut tokens = 0usize;
-        while let Some(&id) = sys.groups[gidx(g)].wait_prefill.front() {
-            let r = &sys.requests[&id];
+        while let Some(&ix) = sys.groups[gidx(g)].wait_prefill.front() {
+            let r = sys.requests.get(ix);
             let reserve = r.input_len + r.req.output_tokens;
             if ids.len() >= sys.sched.max_prefill_batch
-                || (tokens > 0 && tokens + r.prefill_remaining() > 8192)
+                || (tokens > 0
+                    && tokens + r.prefill_remaining() > sys.sched.unified_prefill_token_budget)
                 || !sys.instances[u].kv.can_allocate(reserve)
             {
                 break;
             }
-            sys.instances[u].kv.allocate(id, reserve).expect("checked");
-            tokens += r.prefill_remaining();
-            for &vt in &r.encode_pending {
-                encode_s += sys.cost.encode_time(vt, sys.instances[u].tp);
-            }
-            items.push(PrefillItem {
+            let id = r.req.id;
+            let item = PrefillItem {
                 new_tokens: r.prefill_remaining(),
                 cached_tokens: r.cached_prefix,
                 vision_tokens: r.vision_tokens,
-            });
-            ids.push(id);
+            };
+            for &vt in &r.encode_pending {
+                encode_s += sys.cost.encode_time(vt, sys.instances[u].tp);
+            }
+            sys.instances[u].kv.allocate(id, reserve).expect("checked");
+            tokens += item.new_tokens;
+            items.push(item);
+            ids.push(ix);
             sys.groups[gidx(g)].wait_prefill.pop_front();
         }
         if !ids.is_empty() {
-            for &id in &ids {
-                let r = sys.requests.get_mut(&id).unwrap();
+            for &ix in &ids {
+                let r = sys.requests.get_mut(ix);
                 r.phase = Phase::Prefilling;
                 r.home = Some(u);
             }
@@ -260,18 +289,9 @@ pub(crate) fn schedule_decode_unified(sys: &mut EmpSystem, u: usize, q: &mut Sim
         return;
     }
     let g = sys.instances[u].group;
-    let ids: Vec<u64> = sys.instances[u].decoding.clone();
-    let items: Vec<DecodeItem> = ids
-        .iter()
-        .map(|id| {
-            let r = &sys.requests[id];
-            DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-        })
-        .collect();
-    let cross = g == GroupId::Multimodal;
-    let dur = sys
-        .cost
-        .decode_step_time_flags(&items, sys.instances[u].tp, cross);
+    let mut ids = sys.take_ids();
+    ids.extend(sys.instances[u].decoding.iter().copied());
+    let dur = decode_batch_time(sys, g, u, &ids);
     let done = sys.instances[u].start_iteration(now, dur);
     sys.current[u] = Some(Iter::Decode { ids });
     q.push(done, EmpEv::IterDone(u));

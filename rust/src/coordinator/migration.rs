@@ -10,6 +10,7 @@
 
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
+use crate::sim::slab::ReqIx;
 
 use super::modality;
 use super::system::{gidx, EmpEv, EmpSystem};
@@ -22,7 +23,7 @@ pub(crate) fn migrate_seqs(
     sys: &mut EmpSystem,
     src: usize,
     dests: &[usize],
-    ids: Vec<u64>,
+    ids: Vec<ReqIx>,
     q: &mut SimQueue<'_, EmpEv>,
 ) -> bool {
     // Feasibility check first (plan placements). Tie-breaks follow
@@ -32,9 +33,9 @@ pub(crate) fn migrate_seqs(
         .iter()
         .map(|&d| (d, sys.instances[d].kv_free_tokens()))
         .collect();
-    let mut plan: Vec<(u64, usize)> = Vec::new();
-    for &id in &ids {
-        let r = &sys.requests[&id];
+    let mut plan: Vec<(ReqIx, usize)> = Vec::new();
+    for &ix in &ids {
+        let r = sys.requests.get(ix);
         let reserve = r.input_len + r.req.output_tokens;
         let mut best: Option<usize> = None;
         for (i, &(_, f)) in free.iter().enumerate() {
@@ -46,21 +47,22 @@ pub(crate) fn migrate_seqs(
             return false;
         };
         free[bi].1 -= reserve;
-        plan.push((id, free[bi].0));
+        plan.push((ix, free[bi].0));
     }
     // Execute: release at src, schedule arrival at dest. BTreeMap so
     // MigrateDone events enqueue in ascending destination order.
-    let mut by_dest: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    let mut by_dest: BTreeMap<usize, Vec<ReqIx>> = BTreeMap::new();
     let mut total_tokens = 0usize;
-    for (id, d) in plan {
-        let r = sys.requests.get_mut(&id).unwrap();
+    for (ix, d) in plan {
+        let r = sys.requests.get_mut(ix);
         total_tokens += r.context_len();
         r.phase = Phase::Migrating;
-        sys.instances[src].kv.release(id).expect("resident");
-        sys.instances[src].decoding.retain(|&x| x != id);
+        let id = r.req.id;
         let reserve = r.input_len + r.req.output_tokens;
+        sys.instances[src].kv.release(id).expect("resident");
+        sys.instances[src].decoding.retain(|&x| x != ix);
         sys.instances[d].kv.allocate(id, reserve).expect("planned");
-        by_dest.entry(d).or_default().push(id);
+        by_dest.entry(d).or_default().push(ix);
     }
     let mig = sys.cost.migration_time(total_tokens);
     sys.stats.migrated_seqs += ids.len() as u64;
@@ -73,16 +75,16 @@ pub(crate) fn migrate_seqs(
 /// Land migrated sequences on their destination and kick its decode.
 pub(crate) fn on_migrate_done(
     sys: &mut EmpSystem,
-    ids: Vec<u64>,
+    ids: Vec<ReqIx>,
     dest: usize,
     q: &mut SimQueue<'_, EmpEv>,
 ) {
-    for id in ids {
-        let r = sys.requests.get_mut(&id).unwrap();
+    for ix in ids {
+        let r = sys.requests.get_mut(ix);
         if r.phase == Phase::Migrating {
             r.phase = Phase::Decoding;
             r.home = Some(dest);
-            sys.instances[dest].decoding.push(id);
+            sys.instances[dest].decoding.push(ix);
         }
     }
     super::dispatch::schedule_decode(sys, dest, q);
@@ -94,7 +96,8 @@ pub(crate) fn on_migrate_done(
 /// Prefill, then Unified, and only then Decode.
 fn pick_idle_donor(sys: &EmpSystem, donor: GroupId, now: f64) -> Option<usize> {
     sys.members(donor)
-        .into_iter()
+        .iter()
+        .copied()
         .filter(|&i| {
             sys.instances[i].idle_at(now)
                 && sys.current[i].is_none()
@@ -117,8 +120,7 @@ fn transfer_instance(
     pick: usize,
     q: &mut SimQueue<'_, EmpEv>,
 ) {
-    sys.instances[pick].group = needy;
-    sys.instances[pick].role = StageRole::Prefill;
+    sys.set_group(pick, needy, StageRole::Prefill);
     sys.stats.group_moves += 1;
     sys.assign_initial_roles(donor);
     sys.assign_initial_roles(needy);

@@ -3,11 +3,21 @@
 //! encoder-pool sizing, and the role-flip cooldown that keeps the two
 //! equations from fighting over the same instance. All decisions are
 //! evaluated through the [`super::gain_cost`] economics; the physical
-//! act of moving sequences lives in [`super::migration`].
+//! act of moving sequences lives in [`super::migration`]. Role flips go
+//! through `EmpSystem::set_role` so the cached membership lists stay in
+//! sync.
+//!
+//! **Fast-forward coupling:** the trigger conditions of the functions
+//! in this module are mirrored by `EmpSystem::can_fast_forward` (the
+//! decode-coalescing exactness predicate). When changing when a
+//! function here mutates state, update the matching predicate block —
+//! `tests/fast_forward_equivalence.rs` will catch a mismatch as a
+//! report divergence.
 
 use crate::model::{DecodeItem, PrefillItem};
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
+use crate::sim::slab::ReqIx;
 
 use super::gain_cost::{self, DecodeSet, PrefillSet};
 use super::migration;
@@ -21,6 +31,27 @@ pub(crate) fn flip_allowed(sys: &EmpSystem, g: GroupId, now: f64) -> bool {
 pub(crate) fn note_flip(sys: &mut EmpSystem, g: GroupId, now: f64) {
     sys.last_role_flip[gidx(g)] = now;
     sys.stats.role_flips += 1;
+}
+
+/// Build the [`DecodeSet`] for an instance's resident sequences.
+fn decode_set(sys: &EmpSystem, inst: usize) -> DecodeSet {
+    let decoding = &sys.instances[inst].decoding;
+    DecodeSet {
+        items: decoding
+            .iter()
+            .map(|&ix| {
+                let r = sys.requests.get(ix);
+                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+            })
+            .collect(),
+        remaining_out: decoding
+            .iter()
+            .map(|&ix| {
+                let r = sys.requests.get(ix);
+                r.req.output_tokens.saturating_sub(r.decoded).max(1)
+            })
+            .collect(),
+    }
 }
 
 /// Eq. 2 evaluation: returns a decode instance to borrow for the
@@ -44,30 +75,15 @@ pub(crate) fn consider_prefill_preemption(
     if !sys.instances[emax].idle_at(now) || sys.current[emax].is_some() {
         return None;
     }
-    let victim_ids: Vec<u64> = sys.instances[emax].decoding.clone();
-    let victim = DecodeSet {
-        items: victim_ids
-            .iter()
-            .map(|id| {
-                let r = &sys.requests[id];
-                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-            })
-            .collect(),
-        remaining_out: victim_ids
-            .iter()
-            .map(|id| {
-                let r = &sys.requests[id];
-                r.req.output_tokens.saturating_sub(r.decoded).max(1)
-            })
-            .collect(),
-    };
+    let victim_ids: Vec<ReqIx> = sys.instances[emax].decoding.clone();
+    let victim = decode_set(sys, emax);
     // Merged decode batch on the survivors.
     let survivors: Vec<usize> = decode.iter().copied().filter(|&d| d != emax).collect();
     let merged_before: Vec<DecodeItem> = survivors
         .iter()
         .flat_map(|&d| sys.instances[d].decoding.iter())
-        .map(|id| {
-            let r = &sys.requests[id];
+        .map(|&ix| {
+            let r = sys.requests.get(ix);
             DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
         })
         .collect();
@@ -92,7 +108,7 @@ pub(crate) fn consider_prefill_preemption(
     if !victim_ids.is_empty() && !migration::migrate_seqs(sys, emax, &survivors, victim_ids, q) {
         return None;
     }
-    sys.instances[emax].role = StageRole::Prefill;
+    sys.set_role(emax, StageRole::Prefill);
     sys.stats.prefill_preemptions += 1;
     note_flip(sys, g, now);
     Some(emax)
@@ -116,7 +132,7 @@ pub(crate) fn try_decode_scale_up(
             .iter()
             .find(|&&p| sys.instances[p].idle_at(now) && sys.current[p].is_none())
         {
-            sys.instances[pick].role = StageRole::Decode;
+            sys.set_role(pick, StageRole::Decode);
             sys.stats.decode_scale_ups += 1;
             sys.stats.role_flips += 1;
         }
@@ -138,7 +154,8 @@ pub(crate) fn try_decode_scale_up(
     // Prefer an idle prefill instance in-group (cheap: no Eq. 3 cost
     // beyond losing DP width — still evaluated).
     let prefill = sys.role_members(g, StageRole::Prefill);
-    if prefill.len() <= 1 {
+    let prefill_len = prefill.len();
+    if prefill_len <= 1 {
         // Last resort: inter-group reactive scaling (§3.1).
         migration::reactive_inter_group(sys, g, q);
         return;
@@ -150,24 +167,8 @@ pub(crate) fn try_decode_scale_up(
         return;
     };
     // Eq. 3 gain/cost.
-    let b_d = DecodeSet {
-        items: sys.instances[hot]
-            .decoding
-            .iter()
-            .map(|id| {
-                let r = &sys.requests[id];
-                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-            })
-            .collect(),
-        remaining_out: sys.instances[hot]
-            .decoding
-            .iter()
-            .map(|id| {
-                let r = &sys.requests[id];
-                r.req.output_tokens.saturating_sub(r.decoded).max(1)
-            })
-            .collect(),
-    };
+    let decode_len = sys.role_members(g, StageRole::Decode).len();
+    let b_d = decode_set(sys, hot);
     let tp = sys.instances[hot].tp;
     let avg_lat = sys.cost.decode_step_time(&b_d.items, tp);
     let rp_rest = PrefillSet {
@@ -175,8 +176,8 @@ pub(crate) fn try_decode_scale_up(
             .wait_prefill
             .iter()
             .take(16)
-            .map(|id| {
-                let r = &sys.requests[id];
+            .map(|&ix| {
+                let r = sys.requests.get(ix);
                 PrefillItem {
                     new_tokens: r.prefill_remaining(),
                     cached_tokens: r.cached_prefix,
@@ -189,20 +190,20 @@ pub(crate) fn try_decode_scale_up(
         &sys.cost,
         &b_d,
         avg_lat,
-        decode.len(),
+        decode_len,
         &rp_rest,
-        prefill.len(),
+        prefill_len,
         tp,
         sys.sched.preempt_penalty_w,
     );
     if !forced && !gc.beneficial() {
         return;
     }
-    sys.instances[pick].role = StageRole::Decode;
+    sys.set_role(pick, StageRole::Decode);
     sys.stats.decode_scale_ups += 1;
     note_flip(sys, g, now);
     // Rebalance: move half of hot's sequences to the new instance.
-    let moved: Vec<u64> = {
+    let moved: Vec<ReqIx> = {
         let d = &sys.instances[hot].decoding;
         d.iter().skip(d.len() / 2).copied().collect()
     };
@@ -214,16 +215,19 @@ pub(crate) fn try_decode_scale_up(
 /// Shrink decode to minimum parallelism when idle (§3.2 "we shrink
 /// it to the minimum parallelism").
 pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
-    let decode = sys.role_members(g, StageRole::Decode);
-    if decode.len() <= 1 || !flip_allowed(sys, g, now) {
+    if sys.role_members(g, StageRole::Decode).len() <= 1 || !flip_allowed(sys, g, now) {
         return;
     }
-    for d in decode {
+    // Index-walk: the list is only mutated right before `break`.
+    let mut k = 0;
+    loop {
+        let Some(&d) = sys.role_members(g, StageRole::Decode).get(k) else { break };
+        k += 1;
         if sys.instances[d].decoding.is_empty()
             && sys.current[d].is_none()
             && sys.role_members(g, StageRole::Decode).len() > 1
         {
-            sys.instances[d].role = StageRole::Prefill;
+            sys.set_role(d, StageRole::Prefill);
             sys.stats.decode_scale_downs += 1;
             note_flip(sys, g, now);
             break;
@@ -259,7 +263,7 @@ pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
                 .iter()
                 .find(|&&p| sys.current[p].is_none() && sys.instances[p].decoding.is_empty())
             {
-                sys.instances[pick].role = StageRole::Encode;
+                sys.set_role(pick, StageRole::Encode);
                 note_flip(sys, g, now);
             }
         }
@@ -270,7 +274,7 @@ pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
             .iter()
             .find(|&&e| sys.current[e].is_none())
         {
-            sys.instances[pick].role = StageRole::Prefill;
+            sys.set_role(pick, StageRole::Prefill);
             note_flip(sys, g, now);
         }
     }
@@ -290,9 +294,9 @@ pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId) {
         let promotable = sys.members(g).len() >= 3
             && sys.role_members(g, StageRole::Prefill).len() > 1;
         if !promotable {
-            while let Some(id) = sys.groups[gidx(g)].wait_encode.pop_front() {
-                sys.requests.get_mut(&id).unwrap().phase = Phase::WaitPrefill;
-                sys.groups[gidx(g)].wait_prefill.push_back(id);
+            while let Some(ix) = sys.groups[gidx(g)].wait_encode.pop_front() {
+                sys.requests.get_mut(ix).phase = Phase::WaitPrefill;
+                sys.groups[gidx(g)].wait_prefill.push_back(ix);
             }
         }
     }

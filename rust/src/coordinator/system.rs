@@ -19,6 +19,19 @@
 //! shared trace driver ([`crate::sim::driver`]). The §3.3 optimizations
 //! (unified multimodal prefix cache, non-blocking encoding) are
 //! toggleable for the Fig 7/8 ablations.
+//!
+//! ## Hot-path layout
+//!
+//! Requests live in a dense [`RequestSlab`]; wait queues, per-instance
+//! `decoding` lists and iteration snapshots carry [`ReqIx`] slab
+//! indices, so the per-token path never hashes. Role membership is
+//! cached per (group, stage) in [`RoleCache`] and updated incrementally
+//! on role flips / group moves instead of re-filtering the instance
+//! vector on every query. Decode `ids`/`items` buffers are pooled.
+//! Decode **fast-forwarding** (see [`EmpSystem::fast_forward_decode`])
+//! coalesces consecutive decode steps into one event when the
+//! conservative exactness predicate [`EmpSystem::can_fast_forward`]
+//! proves the step-by-step path would do nothing else in between.
 
 use crate::config::SchedulerConfig;
 use crate::kvcache::unified::UnifiedCache;
@@ -26,12 +39,13 @@ use crate::metrics::RequestRecord;
 use crate::model::{CostModel, DecodeItem, PrefillItem};
 use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
+use crate::sim::slab::{IdsPool, ReqIx, RequestSlab};
 use crate::workload::{Modality, Request};
 
 use super::modality::LoadMonitor;
 use super::{dispatch, migration, scaling};
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 /// Feature toggles (ablation axes of Fig 7 and Fig 8).
 #[derive(Debug, Clone)]
@@ -90,23 +104,23 @@ pub enum EmpEv {
     /// An instance finished its current iteration.
     IterDone(usize),
     /// A KV migration completed; the sequences land on `dest`.
-    MigrateDone { ids: Vec<u64>, dest: usize },
+    MigrateDone { ids: Vec<ReqIx>, dest: usize },
 }
 
 /// An in-flight iteration on an instance (leader-indexed for DP prefill).
 #[derive(Debug, Clone)]
 pub(crate) enum Iter {
-    Prefill { ids: Vec<u64>, participants: Vec<usize> },
-    Decode { ids: Vec<u64> },
-    Encode { id: u64 },
+    Prefill { ids: Vec<ReqIx>, participants: Vec<usize> },
+    Decode { ids: Vec<ReqIx> },
+    Encode { ix: ReqIx },
 }
 
 /// Per-group scheduler state.
 pub(crate) struct Group {
     #[allow(dead_code)] // observability / debugging
     pub(crate) id: GroupId,
-    pub(crate) wait_encode: VecDeque<u64>,
-    pub(crate) wait_prefill: VecDeque<u64>,
+    pub(crate) wait_encode: VecDeque<ReqIx>,
+    pub(crate) wait_prefill: VecDeque<ReqIx>,
     pub(crate) cache: UnifiedCache,
     pub(crate) monitor: LoadMonitor,
 }
@@ -122,6 +136,55 @@ pub struct EmpStats {
     pub encode_cache_hits: u64,
     pub dp_prefill_iters: u64,
     pub role_flips: u64,
+    /// Decode steps committed inside coalesced fast-forward events
+    /// (each would have been a full queue round-trip otherwise).
+    pub coalesced_steps: u64,
+}
+
+/// Incrementally-maintained membership lists: which instances belong to
+/// each (group, stage-role) pair, in ascending instance-id order (the
+/// same order the old filter-walk produced, so scheduling decisions and
+/// tie-breaks are unchanged). Updated by [`EmpSystem::set_role`] /
+/// [`EmpSystem::set_group`]; never rebuilt on the hot path.
+pub(crate) struct RoleCache {
+    by_role: [[Vec<usize>; 4]; 2],
+    members: [Vec<usize>; 2],
+}
+
+fn ridx(role: StageRole) -> usize {
+    match role {
+        StageRole::Encode => 0,
+        StageRole::Prefill => 1,
+        StageRole::Decode => 2,
+        StageRole::Unified => 3,
+    }
+}
+
+impl RoleCache {
+    fn build(instances: &[Instance]) -> RoleCache {
+        let mut c = RoleCache {
+            by_role: Default::default(),
+            members: Default::default(),
+        };
+        for inst in instances {
+            let gi = gidx(inst.group);
+            c.members[gi].push(inst.id);
+            c.by_role[gi][ridx(inst.role)].push(inst.id);
+        }
+        c
+    }
+
+    fn insert(list: &mut Vec<usize>, i: usize) {
+        if let Err(pos) = list.binary_search(&i) {
+            list.insert(pos, i);
+        }
+    }
+
+    fn remove(list: &mut Vec<usize>, i: usize) {
+        if let Ok(pos) = list.binary_search(&i) {
+            list.remove(pos);
+        }
+    }
 }
 
 /// The ElasticMM system simulator.
@@ -132,7 +195,7 @@ pub struct EmpSystem {
     pub(crate) instances: Vec<Instance>,
     pub(crate) current: Vec<Option<Iter>>,
     pub(crate) groups: [Group; 2], // [Text, Multimodal]
-    pub(crate) requests: HashMap<u64, SimRequest>,
+    pub(crate) requests: RequestSlab,
     pub(crate) finished: Vec<RequestRecord>,
     pub stats: EmpStats,
     /// Marginal decode cost per token (for load estimates).
@@ -143,6 +206,14 @@ pub struct EmpSystem {
     pub(crate) last_role_flip: [f64; 2],
     /// Minimum seconds between role flips in one group.
     pub(crate) role_flip_cooldown_s: f64,
+    /// Cached (group, role) membership lists.
+    pub(crate) roles: RoleCache,
+    /// Pooled `ids` buffers for decode iterations (hot-path allocation
+    /// elimination: a decode step reuses a retired snapshot instead of
+    /// allocating a fresh `Vec` per event).
+    pub(crate) ids_pool: IdsPool,
+    /// Reusable `DecodeItem` buffer for decode cost queries.
+    pub(crate) decode_scratch: Vec<DecodeItem>,
 }
 
 pub(crate) fn gidx(g: GroupId) -> usize {
@@ -185,6 +256,7 @@ impl EmpSystem {
         let probe: Vec<DecodeItem> =
             (0..64).map(|_| DecodeItem { context_len: 1024, vision_tokens: 0 }).collect();
         let marginal_decode_s = cost.decode_step_time(&probe, tp) / 64.0;
+        let roles = RoleCache::build(&instances);
         let mut sys = EmpSystem {
             cost,
             sched,
@@ -192,12 +264,15 @@ impl EmpSystem {
             instances,
             current: (0..n_inst).map(|_| None).collect(),
             groups: [mk_group(GroupId::Text), mk_group(GroupId::Multimodal)],
-            requests: HashMap::new(),
+            requests: RequestSlab::new(),
             finished: Vec::new(),
             stats: EmpStats::default(),
             marginal_decode_s,
             last_role_flip: [-1e9; 2],
             role_flip_cooldown_s: 0.25,
+            roles,
+            ids_pool: IdsPool::default(),
+            decode_scratch: Vec::new(),
         };
         sys.assign_initial_roles(GroupId::Text);
         sys.assign_initial_roles(GroupId::Multimodal);
@@ -206,20 +281,53 @@ impl EmpSystem {
 
     // --- group / role helpers ------------------------------------------
 
-    pub(crate) fn members(&self, g: GroupId) -> Vec<usize> {
-        self.instances
-            .iter()
-            .filter(|i| i.group == g)
-            .map(|i| i.id)
-            .collect()
+    /// Instances of group `g`, ascending id (cached).
+    pub(crate) fn members(&self, g: GroupId) -> &[usize] {
+        &self.roles.members[gidx(g)]
     }
 
-    pub(crate) fn role_members(&self, g: GroupId, role: StageRole) -> Vec<usize> {
-        self.instances
-            .iter()
-            .filter(|i| i.group == g && i.role == role)
-            .map(|i| i.id)
-            .collect()
+    /// Instances of group `g` currently serving `role`, ascending id
+    /// (cached; no per-call allocation).
+    pub(crate) fn role_members(&self, g: GroupId, role: StageRole) -> &[usize] {
+        &self.roles.by_role[gidx(g)][ridx(role)]
+    }
+
+    /// Flip an instance's stage role, keeping the membership cache in
+    /// sync. Every role mutation must go through here (or
+    /// [`Self::set_group`]).
+    pub(crate) fn set_role(&mut self, i: usize, role: StageRole) {
+        let old = self.instances[i].role;
+        if old == role {
+            return;
+        }
+        self.instances[i].role = role;
+        let gi = gidx(self.instances[i].group);
+        RoleCache::remove(&mut self.roles.by_role[gi][ridx(old)], i);
+        RoleCache::insert(&mut self.roles.by_role[gi][ridx(role)], i);
+    }
+
+    /// Move an instance to another modality group with a new role,
+    /// keeping the membership cache in sync.
+    pub(crate) fn set_group(&mut self, i: usize, g: GroupId, role: StageRole) {
+        let old_g = self.instances[i].group;
+        let old_r = self.instances[i].role;
+        let (ogi, ngi) = (gidx(old_g), gidx(g));
+        RoleCache::remove(&mut self.roles.by_role[ogi][ridx(old_r)], i);
+        RoleCache::remove(&mut self.roles.members[ogi], i);
+        self.instances[i].group = g;
+        self.instances[i].role = role;
+        RoleCache::insert(&mut self.roles.members[ngi], i);
+        RoleCache::insert(&mut self.roles.by_role[ngi][ridx(role)], i);
+    }
+
+    /// Take a pooled `ids` buffer (empty) for a decode iteration.
+    pub(crate) fn take_ids(&mut self) -> Vec<ReqIx> {
+        self.ids_pool.take()
+    }
+
+    /// Return a retired `ids` buffer to the pool.
+    pub(crate) fn recycle_ids(&mut self, v: Vec<ReqIx>) {
+        self.ids_pool.recycle(v);
     }
 
     /// (Re)establish stage-role invariants in a group:
@@ -227,24 +335,25 @@ impl EmpSystem {
     /// * ≥2          → ≥1 Decode, rest Prefill;
     /// * multimodal with non-blocking encode and ≥3 → ≥1 Encode.
     pub(crate) fn assign_initial_roles(&mut self, g: GroupId) {
-        let members = self.members(g);
+        let members = self.members(g).to_vec();
         let n = members.len();
         if n == 0 {
             return;
         }
         if n == 1 {
-            self.instances[members[0]].role = StageRole::Unified;
+            self.set_role(members[0], StageRole::Unified);
             return;
         }
         // Preserve existing decode instances (they hold KV); demote
         // Unified leftovers.
         for &m in &members {
             if self.instances[m].role == StageRole::Unified {
-                self.instances[m].role = if self.instances[m].decoding.is_empty() {
+                let role = if self.instances[m].decoding.is_empty() {
                     StageRole::Prefill
                 } else {
                     StageRole::Decode
                 };
+                self.set_role(m, role);
             }
         }
         if self.role_members(g, StageRole::Decode).is_empty() {
@@ -254,7 +363,7 @@ impl EmpSystem {
                 .copied()
                 .find(|&m| !self.instances[m].decoding.is_empty())
                 .unwrap_or(*members.last().unwrap());
-            self.instances[pick].role = StageRole::Decode;
+            self.set_role(pick, StageRole::Decode);
         }
         // Encoders are demand-driven (see scaling::try_encoder_scaling);
         // a group that can't host one (too small / blocking mode)
@@ -262,8 +371,8 @@ impl EmpSystem {
         let can_have_encoder =
             g == GroupId::Multimodal && self.opts.non_blocking_encode && n >= 3;
         if !can_have_encoder {
-            for m in self.role_members(g, StageRole::Encode) {
-                self.instances[m].role = StageRole::Prefill;
+            for m in self.role_members(g, StageRole::Encode).to_vec() {
+                self.set_role(m, StageRole::Prefill);
             }
         }
         // Guarantee at least one prefill-capable instance.
@@ -276,7 +385,7 @@ impl EmpSystem {
                         && self.role_members(g, StageRole::Decode).len() > 1
                 }))
             {
-                self.instances[pick].role = StageRole::Prefill;
+                self.set_role(pick, StageRole::Prefill);
             }
         }
     }
@@ -286,7 +395,7 @@ impl EmpSystem {
     fn work_estimate(&self, r: &SimRequest) -> f64 {
         let tp = self.cost.min_tp();
         let mut w = 0.0;
-        for img in &r.req.images {
+        for img in r.req.images.iter() {
             let vt = self.cost.model.image_tokens(img.width, img.height);
             w += self.cost.preprocess_time(img.width, img.height)
                 + self.cost.encode_time(vt, tp);
@@ -313,7 +422,12 @@ impl EmpSystem {
         scaling::drain_stuck_encode_queue(self, g);
         dispatch::schedule_encoders(self, g, q);
         dispatch::dispatch_prefill(self, g, q);
-        for d in self.role_members(g, StageRole::Decode) {
+        // Index-walk over the cached decode list: schedule_decode never
+        // flips roles, so the list is stable across iterations.
+        let mut k = 0;
+        loop {
+            let Some(&d) = self.role_members(g, StageRole::Decode).get(k) else { break };
+            k += 1;
             dispatch::schedule_decode(self, d, q);
         }
         dispatch::schedule_unified(self, g, q);
@@ -338,14 +452,13 @@ impl EmpSystem {
         self.groups[gidx(g)].cache.release(&outcome);
         let work = self.work_estimate(&sr);
         self.groups[gidx(g)].monitor.record_arrival(now, work);
-        let id = sr.req.id;
         // A group that can host encoders (>=3 instances) takes the
         // non-blocking path; encoders spin up on demand.
         let can_encode_async = self.opts.non_blocking_encode && self.members(g).len() >= 3;
         if !sr.encode_pending.is_empty() && can_encode_async {
             sr.phase = Phase::WaitEncode;
-            self.requests.insert(id, sr);
-            self.groups[gidx(g)].wait_encode.push_back(id);
+            let ix = self.requests.insert(sr);
+            self.groups[gidx(g)].wait_encode.push_back(ix);
         } else {
             // Either text-only, fully cached, or blocking-encode mode
             // (encode charged inside the prefill iteration).
@@ -353,10 +466,189 @@ impl EmpSystem {
             if sr.encode_pending.is_empty() {
                 sr.t_encode_done = now;
             }
-            self.requests.insert(id, sr);
-            self.groups[gidx(g)].wait_prefill.push_back(id);
+            let ix = self.requests.insert(sr);
+            self.groups[gidx(g)].wait_prefill.push_back(ix);
         }
         self.schedule_group(g, q);
+    }
+
+    // --- decode fast-forwarding ---------------------------------------
+
+    /// Conservative exactness predicate for decode fast-forwarding.
+    ///
+    /// Returns true only when, for the whole coalescing window (which
+    /// ends strictly before the global event horizon, so no queued
+    /// event can fire inside it and all state other than this
+    /// instance's own decode counters is frozen), every policy hook the
+    /// step-by-step path would run between decode steps —
+    /// `try_decode_scale_up` / `try_decode_scale_down` /
+    /// `try_encoder_scaling` and the full `schedule_group` pass — is
+    /// provably a no-op. Then skipping those intermediate invocations
+    /// cannot change any decision, and the coalesced run is bit-exact.
+    /// The role-flip cooldown is the only time-varying input to those
+    /// hooks, so it is assumed *expired* (worst case) rather than
+    /// evaluated.
+    ///
+    /// **Maintenance invariant:** each block below mirrors the trigger
+    /// condition of one policy function in `scaling.rs` / `dispatch.rs`
+    /// — when editing those triggers, update the matching block here
+    /// (and vice versa). `tests/fast_forward_equivalence.rs` is the
+    /// enforcement: a stale block makes fast-forward reports diverge
+    /// from the step-by-step path on its traces.
+    fn can_fast_forward(&self, inst: usize, now: f64) -> bool {
+        if !self.sched.decode_fast_forward {
+            return false;
+        }
+        let me = &self.instances[inst];
+        let g = me.group;
+        let gi = gidx(g);
+        let wait_prefill_empty = self.groups[gi].wait_prefill.is_empty();
+        let wait_encode = self.groups[gi].wait_encode.len();
+        match me.role {
+            StageRole::Decode => {}
+            // A Unified instance decodes only while nothing waits for
+            // prefill (prefill priority would preempt the decode run).
+            StageRole::Unified if wait_prefill_empty => {}
+            _ => return false,
+        }
+        let n = self.members(g).len();
+        let prefill = self.role_members(g, StageRole::Prefill);
+        let decode = self.role_members(g, StageRole::Decode);
+        let encoders = self.role_members(g, StageRole::Encode);
+        // dispatch_prefill must admit nothing: either no idle prefill
+        // width or nothing waiting (otherwise admission, or the
+        // KV-blocked forced scale-up, could fire mid-window).
+        let idle_prefill_exists = prefill
+            .iter()
+            .any(|&p| self.instances[p].idle_at(now) && self.current[p].is_none());
+        if idle_prefill_exists && !wait_prefill_empty {
+            return false;
+        }
+        // try_decode_scale_up must early-return.
+        if decode.is_empty() {
+            // The empty-decode branch flips an idle prefill instance
+            // unconditionally (no cooldown).
+            if idle_prefill_exists {
+                return false;
+            }
+        } else {
+            let hot = decode
+                .iter()
+                .map(|&d| self.instances[d].decoding.len())
+                .max()
+                .unwrap_or(0);
+            if hot >= self.sched.decode_scale_up_batch {
+                return false;
+            }
+        }
+        // try_decode_scale_down: no flippable idle-empty decode
+        // instance may exist (cooldown assumed expired).
+        if decode.len() > 1
+            && decode.iter().any(|&d| {
+                self.instances[d].decoding.is_empty() && self.current[d].is_none()
+            })
+        {
+            return false;
+        }
+        // try_encoder_scaling: the demand-driven encoder pool must be
+        // unable to move toward its target.
+        if g == GroupId::Multimodal && self.opts.non_blocking_encode && n >= 3 {
+            let desired = wait_encode.div_ceil(2).clamp(0, n - 2);
+            let cur = encoders.len();
+            if desired > cur {
+                let promotable = prefill.len() > 1
+                    && prefill.iter().any(|&p| {
+                        self.current[p].is_none() && self.instances[p].decoding.is_empty()
+                    });
+                if promotable {
+                    return false;
+                }
+            } else if desired < cur && encoders.iter().any(|&e| self.current[e].is_none()) {
+                return false;
+            }
+        }
+        // drain_stuck_encode_queue would re-queue encode work.
+        if encoders.is_empty() && wait_encode > 0 && !(n >= 3 && prefill.len() > 1) {
+            return false;
+        }
+        // schedule_encoders: an idle encoder with queued work would
+        // start an iteration.
+        if wait_encode > 0
+            && encoders.iter().any(|&e| {
+                self.instances[e].idle_at(now) && self.current[e].is_none()
+            })
+        {
+            return false;
+        }
+        // schedule_decode on any *other* decode instance must no-op.
+        if decode.iter().any(|&d| {
+            d != inst
+                && self.instances[d].idle_at(now)
+                && self.current[d].is_none()
+                && !self.instances[d].decoding.is_empty()
+        }) {
+            return false;
+        }
+        // schedule_unified on any other unified instance must no-op.
+        if self.role_members(g, StageRole::Unified).iter().any(|&u| {
+            u != inst
+                && self.instances[u].idle_at(now)
+                && self.current[u].is_none()
+                && (!wait_prefill_empty || !self.instances[u].decoding.is_empty())
+        }) {
+            return false;
+        }
+        true
+    }
+
+    /// Coalesce consecutive decode steps of `inst`'s resident batch into
+    /// the current event: commit every step that ends strictly before
+    /// the global horizon and completes no request, then schedule the
+    /// *boundary* step (the one that would cross the horizon or finish a
+    /// sequence) as a normal event. Bit-exact with the step-by-step path
+    /// by construction: per-step costs and time accumulation go through
+    /// [`CostModel::decode_run_time_flags`] (the same float operations
+    /// the event loop chains), and the intermediate policy hooks being
+    /// skipped are no-ops by [`Self::can_fast_forward`].
+    fn fast_forward_decode(&mut self, inst: usize, mut ids: Vec<ReqIx>, q: &mut SimQueue<'_, EmpEv>) {
+        let now = q.now();
+        let cross = self.instances[inst].group == GroupId::Multimodal;
+        // Re-snapshot the batch exactly as a fresh dispatch would:
+        // sequences may have *landed* on this instance while the
+        // finished iteration was in flight (a prefill completion or
+        // migration pushes onto a busy instance's `decoding`), and the
+        // step-by-step path picks them up at this reschedule point.
+        ids.clear();
+        {
+            let me = &self.instances[inst];
+            match me.role {
+                // schedule_decode_unified takes the full resident list.
+                StageRole::Unified => ids.extend(me.decoding.iter().copied()),
+                // schedule_decode takes the max_decode_batch prefix.
+                _ => ids.extend(
+                    me.decoding.iter().take(self.sched.max_decode_batch).copied(),
+                ),
+            }
+        }
+        debug_assert!(!ids.is_empty(), "fast-forward on an empty decode batch");
+        // EMP hooks read and mutate cross-instance state, so only the
+        // *global* horizon is a valid coalescing bound here.
+        let horizon = q.peek_next_time();
+        let mut scratch = std::mem::take(&mut self.decode_scratch);
+        let (steps, done) = crate::sim::instance::fast_forward_decode_batch(
+            &self.cost,
+            &mut self.requests,
+            &mut self.instances[inst],
+            &ids,
+            &mut scratch,
+            cross,
+            now,
+            horizon,
+        );
+        self.decode_scratch = scratch;
+        self.stats.coalesced_steps += steps as u64;
+        self.current[inst] = Some(Iter::Decode { ids });
+        q.push(done, EmpEv::IterDone(inst));
     }
 
     fn on_iter_done(&mut self, inst: usize, q: &mut SimQueue<'_, EmpEv>) {
@@ -364,18 +656,18 @@ impl EmpSystem {
         let Some(iter) = self.current[inst].take() else { return };
         let g = self.instances[inst].group;
         match iter {
-            Iter::Encode { id } => {
-                let r = self.requests.get_mut(&id).unwrap();
+            Iter::Encode { ix } => {
+                let r = self.requests.get_mut(ix);
                 r.encode_pending.clear();
                 r.t_encode_done = now;
                 r.phase = Phase::WaitPrefill;
                 // Requests may have been re-grouped meanwhile; enqueue to
                 // the instance's current group.
-                self.groups[gidx(g)].wait_prefill.push_back(id);
+                self.groups[gidx(g)].wait_prefill.push_back(ix);
             }
             Iter::Prefill { ids, participants } => {
-                for &id in &ids {
-                    let r = self.requests.get_mut(&id).unwrap();
+                for &ix in &ids {
+                    let r = self.requests.get_mut(ix);
                     r.t_first_token = now;
                     r.encode_pending.clear(); // blocking path encoded inline
                     if r.t_encode_done.is_nan() {
@@ -387,11 +679,12 @@ impl EmpSystem {
                     if r.decoded >= r.req.output_tokens {
                         r.t_finish = now;
                         r.phase = Phase::Finished;
+                        let id = r.req.id;
                         self.instances[home].kv.release(id).expect("reserved");
                         self.finished.push(RequestRecord::from_sim(r));
                     } else {
                         r.phase = Phase::Decoding;
-                        self.instances[home].decoding.push(id);
+                        self.instances[home].decoding.push(ix);
                     }
                 }
                 for &p in &participants {
@@ -399,20 +692,34 @@ impl EmpSystem {
                 }
             }
             Iter::Decode { ids } => {
-                for id in ids {
-                    let r = self.requests.get_mut(&id).unwrap();
+                let mut any_completed = false;
+                let mut all_resident = true;
+                for &ix in &ids {
+                    let r = self.requests.get_mut(ix);
                     if r.phase != Phase::Decoding || r.home != Some(inst) {
+                        all_resident = false;
                         continue; // migrated away mid-step
                     }
                     r.decoded += 1;
                     self.instances[inst].tokens_processed += 1;
                     if r.decoded >= r.req.output_tokens {
+                        any_completed = true;
                         r.t_finish = now;
                         r.phase = Phase::Finished;
+                        let id = r.req.id;
                         self.instances[inst].kv.release(id).expect("resident");
-                        self.instances[inst].decoding.retain(|&x| x != id);
+                        self.instances[inst].decoding.retain(|&x| x != ix);
                         self.finished.push(RequestRecord::from_sim(r));
                     }
+                }
+                if !any_completed
+                    && all_resident
+                    && !ids.is_empty()
+                    && self.can_fast_forward(inst, now)
+                {
+                    self.fast_forward_decode(inst, ids, q);
+                } else {
+                    self.recycle_ids(ids);
                 }
             }
         }
@@ -436,6 +743,33 @@ impl EmpSystem {
             if self.members(g).is_empty() {
                 return Err(format!("group {g:?} has no instances"));
             }
+            // The role cache must agree with the instance vector.
+            for role in [
+                StageRole::Encode,
+                StageRole::Prefill,
+                StageRole::Decode,
+                StageRole::Unified,
+            ] {
+                for &i in self.role_members(g, role) {
+                    if self.instances[i].group != g || self.instances[i].role != role {
+                        return Err(format!(
+                            "role cache stale: instance {i} listed as {g:?}/{role:?} \
+                             but is {:?}/{:?}",
+                            self.instances[i].group, self.instances[i].role
+                        ));
+                    }
+                }
+            }
+        }
+        let cached: usize = [GroupId::Text, GroupId::Multimodal]
+            .iter()
+            .map(|&g| self.members(g).len())
+            .sum();
+        if cached != self.instances.len() {
+            return Err(format!(
+                "role cache covers {cached} of {} instances",
+                self.instances.len()
+            ));
         }
         Ok(())
     }
@@ -481,5 +815,9 @@ impl ServingSystem for EmpSystem {
 
     fn kv_in_use(&self) -> usize {
         crate::sim::instance::kv_tokens_in_use(&self.instances)
+    }
+
+    fn outstanding_by_phase(&self) -> Vec<(&'static str, usize)> {
+        self.requests.phase_histogram()
     }
 }

@@ -80,7 +80,7 @@ impl UnifiedCache {
         }
         // Vision tokens, identified by content hash so identical images
         // in different requests produce identical token runs.
-        for img in &req.images {
+        for img in req.images.iter() {
             let h = hash_image_desc(img.content_id, img.width, img.height);
             let n = model.image_tokens(img.width, img.height);
             let base = 0x4000_0000u32 | ((h as u32) & 0x0FFF_FFFF);
@@ -120,7 +120,7 @@ impl UnifiedCache {
         // Pool 1: image hash lookups.
         let mut images_to_encode = Vec::new();
         let mut vision_tokens_cached = 0;
-        for img in &req.images {
+        for img in req.images.iter() {
             let h = hash_image_desc(img.content_id, img.width, img.height);
             let n = model.image_tokens(img.width, img.height);
             if self.image_pool.lookup(h).is_some() {
@@ -181,7 +181,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: 200,
             output_tokens: 10,
-            images: vec![ImageRef { width: 904, height: 904, content_id }],
+            images: vec![ImageRef { width: 904, height: 904, content_id }].into(),
             prefix_id,
             prefix_tokens: if prefix_id != 0 { 100 } else { 0 },
         }
@@ -220,8 +220,8 @@ mod tests {
         let mut c = UnifiedCache::new(1_000_000, 1_000_000);
         let mut r1 = mm_request(1, 5, 3);
         let mut r2 = mm_request(2, 6, 3);
-        r1.images.clear();
-        r2.images.clear();
+        r1.images = Vec::new().into();
+        r2.images = Vec::new().into();
         let o1 = c.process(&r1, &model);
         assert_eq!(o1.prefix_hit_tokens, 0);
         c.release(&o1);

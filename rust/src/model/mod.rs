@@ -254,6 +254,53 @@ impl CostModel {
         compute.max(memory) + self.iter_overhead
     }
 
+    /// Multi-step decode cost for the simulator's fast-forward path: run
+    /// up to `max_steps` consecutive decode iterations of `batch`
+    /// starting at `start`, stopping *before* any step whose end time
+    /// would reach `horizon` (`None` = unbounded). Each committed step
+    /// advances every item's `context_len` by one and accumulates its
+    /// duration into `busy_acc`. Returns `(steps_committed, end_time)`.
+    ///
+    /// **Bit-exactness contract:** identical — to the last f64 bit — to
+    /// calling [`Self::decode_step_time_flags`] once per step on the
+    /// growing batch and chaining `t = t + dur`, which is exactly what
+    /// the step-by-step event path computes (`start_iteration` does
+    /// `busy_until = now + duration` with `now` equal to the previous
+    /// step's `busy_until`). No closed-form reassociation is allowed
+    /// here: summing the series in a different order would change the
+    /// low bits and break report equivalence between the coalesced and
+    /// step-by-step simulations.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_run_time_flags(
+        &self,
+        batch: &mut [DecodeItem],
+        tp: usize,
+        cross_attn: bool,
+        max_steps: usize,
+        start: f64,
+        horizon: Option<f64>,
+        busy_acc: &mut f64,
+    ) -> (usize, f64) {
+        let mut t = start;
+        let mut steps = 0usize;
+        while steps < max_steps {
+            let dur = self.decode_step_time_flags(batch, tp, cross_attn);
+            let end = t + dur;
+            if let Some(h) = horizon {
+                if end >= h {
+                    break;
+                }
+            }
+            t = end;
+            *busy_acc += dur;
+            for it in batch.iter_mut() {
+                it.context_len += 1;
+            }
+            steps += 1;
+        }
+        (steps, t)
+    }
+
     /// The batch size at which decode flips from memory-bound (weights
     /// dominate) to compute-bound — the paper's offline-profiled
     /// "scaling threshold" for elastic auto-scaling (§3.2).
@@ -421,6 +468,69 @@ mod tests {
         assert!(t2 > t1);
         let var = (t2 - m.migration_rtt) / (t1 - m.migration_rtt);
         assert!((var - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multi_step_decode_matches_stepwise_loop_bit_for_bit() {
+        for m in [qwen(), llama()] {
+            for cross in [true, false] {
+                let mk = || {
+                    (0..7)
+                        .map(|i| DecodeItem {
+                            context_len: 300 + 41 * i,
+                            vision_tokens: if i % 3 == 0 { 1200 } else { 0 },
+                        })
+                        .collect::<Vec<_>>()
+                };
+                // Reference: the step-by-step event path.
+                let mut batch = mk();
+                let mut t_ref = 1.75_f64;
+                let mut busy_ref = 0.25_f64;
+                for _ in 0..25 {
+                    let dur = m.decode_step_time_flags(&batch, 1, cross);
+                    t_ref += dur;
+                    busy_ref += dur;
+                    for it in batch.iter_mut() {
+                        it.context_len += 1;
+                    }
+                }
+                // Fast-forward path, unbounded horizon.
+                let mut batch2 = mk();
+                let mut busy = 0.25_f64;
+                let (steps, t) =
+                    m.decode_run_time_flags(&mut batch2, 1, cross, 25, 1.75, None, &mut busy);
+                assert_eq!(steps, 25);
+                assert_eq!(t.to_bits(), t_ref.to_bits(), "end time must be bit-identical");
+                assert_eq!(busy.to_bits(), busy_ref.to_bits());
+                assert_eq!(
+                    batch2.iter().map(|i| i.context_len).collect::<Vec<_>>(),
+                    batch.iter().map(|i| i.context_len).collect::<Vec<_>>(),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_step_decode_respects_horizon_and_step_cap() {
+        let m = qwen();
+        let mut batch =
+            vec![DecodeItem { context_len: 512, vision_tokens: 0 }; 4];
+        let one = m.decode_step_time_flags(&batch, 1, true);
+        // Horizon after ~2.5 steps: exactly 2 steps must commit.
+        let horizon = 2.5 * one;
+        let mut busy = 0.0;
+        let (steps, t) =
+            m.decode_run_time_flags(&mut batch, 1, true, 100, 0.0, Some(horizon), &mut busy);
+        assert_eq!(steps, 2, "stops before crossing the horizon");
+        assert!(t < horizon);
+        // Step cap binds when the horizon does not.
+        let mut batch2 =
+            vec![DecodeItem { context_len: 512, vision_tokens: 0 }; 4];
+        let mut busy2 = 0.0;
+        let (steps2, _) =
+            m.decode_run_time_flags(&mut batch2, 1, true, 3, 0.0, None, &mut busy2);
+        assert_eq!(steps2, 3);
+        assert_eq!(batch2[0].context_len, 515);
     }
 
     #[test]

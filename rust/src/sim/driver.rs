@@ -9,6 +9,15 @@
 //! systems through this one driver, so the comparison is apples-to-apples
 //! by construction, and a new baseline or scheduling policy is one
 //! trait impl away.
+//!
+//! Arrivals are injected *lazily*: only the next pending arrival sits in
+//! the queue at any time. Besides keeping the heap small, this lets the
+//! driver tell systems the time of the next **external** event (next
+//! arrival or periodic tick) via [`SimQueue::next_external_time`] — the
+//! coalescing horizon used by decode fast-forwarding in systems whose
+//! instances are independent between arrivals (the coupled baselines).
+//! [`SimQueue::peek_next_time`] exposes the global horizon (earliest
+//! event of any kind) for systems with cross-instance coupling.
 
 use crate::metrics::{Report, RequestRecord};
 use crate::sim::engine::EventQueue;
@@ -22,11 +31,29 @@ enum DriverEv<E> {
     Sys(E),
 }
 
+/// Times of the next driver-owned (external) events, snapshotted for the
+/// duration of one event dispatch. `None` = no such event pending.
+#[derive(Debug, Clone, Copy, Default)]
+struct ExternalTimes {
+    arrival: Option<f64>,
+    tick: Option<f64>,
+}
+
+impl ExternalTimes {
+    fn min(&self) -> Option<f64> {
+        match (self.arrival, self.tick) {
+            (Some(a), Some(t)) => Some(a.min(t)),
+            (a, t) => a.or(t),
+        }
+    }
+}
+
 /// The system-facing view of the event queue: systems read the clock and
 /// schedule their own events, while arrival and tick bookkeeping stay
 /// with the driver.
 pub struct SimQueue<'a, E> {
     inner: &'a mut EventQueue<DriverEv<E>>,
+    ext: ExternalTimes,
 }
 
 impl<'a, E> SimQueue<'a, E> {
@@ -44,6 +71,37 @@ impl<'a, E> SimQueue<'a, E> {
     pub fn push_after(&mut self, delay: f64, ev: E) {
         self.inner.push_after(delay, DriverEv::Sys(ev));
     }
+
+    /// Global coalescing horizon: the time of the earliest queued event
+    /// of *any* kind. Nothing in the simulation can change strictly
+    /// before this time, so a decode batch whose every step completes
+    /// strictly earlier can be fast-forwarded without observing or
+    /// perturbing anything. `None` = the queue is empty.
+    pub fn peek_next_time(&self) -> Option<f64> {
+        self.inner.peek_next_time()
+    }
+
+    /// External coalescing horizon: the earliest *driver-owned* event
+    /// (next trace arrival or periodic tick). Valid as a fast-forward
+    /// horizon only for systems whose event handlers never read or
+    /// mutate another instance's decode state — then instance-local
+    /// decode runs may safely overlap other instances' iteration
+    /// boundaries, and only arrivals/ticks can perturb them. `None` =
+    /// no arrivals left and no tick armed.
+    pub fn next_external_time(&self) -> Option<f64> {
+        self.ext.min()
+    }
+}
+
+/// Counters from one [`run_trace_with_stats`] run — the denominator for
+/// the `sim-events/sec` metric in `benches/sim_throughput.rs`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DriverStats {
+    /// Total events dispatched (arrivals + ticks + system events).
+    pub events: u64,
+    pub arrivals: u64,
+    pub ticks: u64,
+    pub sys_events: u64,
 }
 
 /// A serving system that can be driven over a request trace by
@@ -93,6 +151,15 @@ pub trait ServingSystem {
     /// the leak check vacuous for systems that forget to implement it.
     fn kv_in_use(&self) -> usize;
 
+    /// Outstanding (not yet finished) requests bucketed by lifecycle
+    /// phase, included in the driver's stall diagnostic so a policy bug
+    /// is localizable from the panic message alone. Systems backed by a
+    /// `RequestSlab` implement this via `RequestSlab::phase_histogram`;
+    /// the default reports nothing.
+    fn outstanding_by_phase(&self) -> Vec<(&'static str, usize)> {
+        Vec::new()
+    }
+
     /// Run a trace to completion through the shared driver.
     fn run(&mut self, trace: &[Request]) -> Report
     where
@@ -102,12 +169,29 @@ pub trait ServingSystem {
     }
 }
 
-/// The generic discrete-event loop: inject arrivals, arm the periodic
-/// tick, dispatch events until every request finished, and collect the
-/// [`Report`]. Panics with a stall diagnostic if the event queue drains
-/// while requests are still outstanding — a scheduling-policy bug, never
-/// a workload property.
-pub fn run_trace<S: ServingSystem + ?Sized>(sys: &mut S, trace: &[Request]) -> Report {
+fn stall_message<S: ServingSystem + ?Sized>(sys: &S, total: usize, detail: &str) -> String {
+    let mut msg = format!(
+        "simulation stalled: {}/{} requests finished{detail}",
+        sys.completed(),
+        total
+    );
+    let hist = sys.outstanding_by_phase();
+    if hist.is_empty() {
+        msg.push_str(" (no phase breakdown available)");
+    } else {
+        msg.push_str("; outstanding by phase:");
+        for (name, count) in hist {
+            msg.push_str(&format!(" {name}={count}"));
+        }
+    }
+    msg
+}
+
+/// [`run_trace`] plus the dispatch counters (see [`DriverStats`]).
+pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
+    sys: &mut S,
+    trace: &[Request],
+) -> (Report, DriverStats) {
     // Consecutive ticks with an otherwise-empty queue and no completion
     // progress before we declare a stall. One idle tick is legitimate
     // (e.g. a role-flip cooldown can defer work to the next tick);
@@ -115,59 +199,107 @@ pub fn run_trace<S: ServingSystem + ?Sized>(sys: &mut S, trace: &[Request]) -> R
     const MAX_IDLE_TICKS: u32 = 3;
     let total = trace.len();
     let mut q: EventQueue<DriverEv<S::Ev>> = EventQueue::new();
-    for (i, r) in trace.iter().enumerate() {
-        q.push(r.arrival, DriverEv::Arrive(i));
+    // Lazy arrival injection: requests enter the queue one at a time in
+    // arrival order (stable by trace index for identical timestamps, so
+    // replays match the eager-injection behaviour).
+    let mut order: Vec<usize> = (0..total).collect();
+    order.sort_by(|&a, &b| trace[a].arrival.total_cmp(&trace[b].arrival));
+    let mut next_arrival = 0usize;
+    let mut ext = ExternalTimes::default();
+    if let Some(&i) = order.first() {
+        q.push(trace[i].arrival, DriverEv::Arrive(i));
+        ext.arrival = Some(trace[i].arrival);
+        next_arrival = 1;
     }
     if let Some(dt) = sys.tick_interval() {
         q.push(dt, DriverEv::Tick);
+        ext.tick = Some(dt);
     }
+    let mut stats = DriverStats::default();
     let mut idle_ticks = 0u32;
     while !sys.is_done(total) {
         let Some((_, ev)) = q.pop() else {
-            panic!(
-                "simulation stalled: {}/{} requests finished",
-                sys.completed(),
-                total
-            );
+            panic!("{}", stall_message(sys, total, ""));
         };
+        stats.events += 1;
         match ev {
             DriverEv::Arrive(i) => {
+                stats.arrivals += 1;
                 idle_ticks = 0;
-                sys.route(trace[i].clone(), &mut SimQueue { inner: &mut q });
+                // Queue the next arrival *before* routing so every
+                // handler sees a complete horizon.
+                if let Some(&j) = order.get(next_arrival) {
+                    q.push(trace[j].arrival, DriverEv::Arrive(j));
+                    ext.arrival = Some(trace[j].arrival.max(q.now()));
+                    next_arrival += 1;
+                } else {
+                    ext.arrival = None;
+                }
+                sys.route(trace[i].clone(), &mut SimQueue { inner: &mut q, ext });
             }
             DriverEv::Sys(e) => {
+                stats.sys_events += 1;
                 idle_ticks = 0;
-                sys.on_event(e, &mut SimQueue { inner: &mut q });
+                sys.on_event(e, &mut SimQueue { inner: &mut q, ext });
             }
             DriverEv::Tick => {
+                stats.ticks += 1;
                 let before = sys.completed();
-                sys.on_tick(&mut SimQueue { inner: &mut q });
-                if let Some(dt) = sys.tick_interval() {
-                    if !sys.is_done(total) {
-                        // A tick-driven system keeps the queue nonempty
-                        // forever via re-arming, so the empty-queue stall
-                        // check above never fires for it: detect
-                        // no-progress idle ticks instead.
-                        if q.is_empty() && sys.completed() == before {
-                            idle_ticks += 1;
-                            if idle_ticks >= MAX_IDLE_TICKS {
-                                panic!(
-                                    "simulation stalled: {}/{} requests finished \
-                                     ({idle_ticks} consecutive idle ticks)",
-                                    sys.completed(),
-                                    total
-                                );
-                            }
-                        } else {
-                            idle_ticks = 0;
+                // Re-arm *before* the handler so the next tick is in the
+                // queue (and in `ext`) while `on_tick` runs — both
+                // coalescing horizons must stay truthful for any system
+                // that reads them from a tick path. A stale tick left
+                // behind by a run that completes inside `on_tick` is
+                // harmless: the loop exits on `is_done`.
+                let rearmed = match sys.tick_interval() {
+                    Some(dt) if !sys.is_done(total) => {
+                        let t = q.now() + dt.max(0.0);
+                        q.push(t, DriverEv::Tick);
+                        ext.tick = Some(t);
+                        true
+                    }
+                    _ => {
+                        ext.tick = None;
+                        false
+                    }
+                };
+                sys.on_tick(&mut SimQueue { inner: &mut q, ext });
+                if rearmed {
+                    // A tick-driven system keeps the queue nonempty
+                    // forever via re-arming, so the empty-queue stall
+                    // check above never fires for it: detect no-progress
+                    // idle ticks instead (only the re-armed tick queued,
+                    // no pending arrival, no completions).
+                    if q.len() == 1 && ext.arrival.is_none() && sys.completed() == before {
+                        idle_ticks += 1;
+                        if idle_ticks >= MAX_IDLE_TICKS {
+                            panic!(
+                                "{}",
+                                stall_message(
+                                    sys,
+                                    total,
+                                    &format!(" ({idle_ticks} consecutive idle ticks)")
+                                )
+                            );
                         }
-                        q.push_after(dt, DriverEv::Tick);
+                    } else {
+                        idle_ticks = 0;
                     }
                 }
             }
         }
     }
-    Report::new(sys.drain_records())
+    (Report::new(sys.drain_records()), stats)
+}
+
+/// The generic discrete-event loop: inject arrivals, arm the periodic
+/// tick, dispatch events until every request finished, and collect the
+/// [`Report`]. Panics with a stall diagnostic (including a per-phase
+/// histogram of outstanding requests) if the event queue drains while
+/// requests are still outstanding — a scheduling-policy bug, never a
+/// workload property.
+pub fn run_trace<S: ServingSystem + ?Sized>(sys: &mut S, trace: &[Request]) -> Report {
+    run_trace_with_stats(sys, trace).0
 }
 
 #[cfg(test)]
@@ -181,7 +313,7 @@ mod tests {
             arrival,
             prompt_tokens: 10,
             output_tokens: 2,
-            images: Vec::new(),
+            images: Vec::new().into(),
             prefix_id: 0,
             prefix_tokens: 0,
         }
@@ -194,6 +326,7 @@ mod tests {
         ticks: usize,
         drop_all: bool,
         tick_every: Option<f64>,
+        outstanding: usize,
     }
 
     impl Fifo {
@@ -204,6 +337,7 @@ mod tests {
                 ticks: 0,
                 drop_all: false,
                 tick_every: None,
+                outstanding: 0,
             }
         }
     }
@@ -217,6 +351,7 @@ mod tests {
 
         fn route(&mut self, req: Request, q: &mut SimQueue<'_, FifoEv>) {
             if self.drop_all {
+                self.outstanding += 1;
                 return; // simulate a lost request → stall
             }
             let start = self.busy_until.max(q.now());
@@ -262,6 +397,14 @@ mod tests {
         fn kv_in_use(&self) -> usize {
             0
         }
+
+        fn outstanding_by_phase(&self) -> Vec<(&'static str, usize)> {
+            if self.outstanding > 0 {
+                vec![("Dropped", self.outstanding)]
+            } else {
+                Vec::new()
+            }
+        }
     }
 
     #[test]
@@ -283,6 +426,28 @@ mod tests {
     }
 
     #[test]
+    fn stats_count_dispatched_events() {
+        let trace: Vec<Request> = (0..4).map(|i| req(i, i as f64)).collect();
+        let mut sys = Fifo::new();
+        let (rep, stats) = run_trace_with_stats(&mut sys, &trace);
+        assert_eq!(rep.records.len(), 4);
+        assert_eq!(stats.arrivals, 4);
+        assert_eq!(stats.sys_events, 4);
+        assert_eq!(stats.events, stats.arrivals + stats.sys_events + stats.ticks);
+    }
+
+    #[test]
+    fn unsorted_trace_arrivals_inject_in_time_order() {
+        // Lazy injection must sort by arrival, not trace position.
+        let trace = vec![req(0, 2.0), req(1, 0.5), req(2, 1.0)];
+        let rep = Fifo::new().run(&trace);
+        let mut by_id = rep.records.clone();
+        by_id.sort_by_key(|r| r.id);
+        assert!(by_id[1].first_token < by_id[2].first_token);
+        assert!(by_id[2].first_token < by_id[0].first_token);
+    }
+
+    #[test]
     fn tick_fires_periodically_and_stops_at_completion() {
         let trace: Vec<Request> = (0..3).map(|i| req(i, 0.0)).collect();
         let mut sys = Fifo::new();
@@ -296,6 +461,14 @@ mod tests {
     #[test]
     #[should_panic(expected = "simulation stalled")]
     fn stall_detection_panics_with_progress_count() {
+        let mut sys = Fifo::new();
+        sys.drop_all = true;
+        sys.run(&[req(0, 0.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outstanding by phase: Dropped=1")]
+    fn stall_panic_includes_phase_histogram() {
         let mut sys = Fifo::new();
         sys.drop_all = true;
         sys.run(&[req(0, 0.0)]);

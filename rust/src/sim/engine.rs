@@ -60,8 +60,16 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute time `t` (clamped to now — events in
-    /// the past fire immediately-next).
+    /// the past fire immediately-next). Panics on non-finite `t`:
+    /// `Entry::cmp` falls back to `Ordering::Equal` for incomparable
+    /// times, so a single NaN would silently corrupt heap ordering.
     pub fn push(&mut self, t: f64, event: E) {
+        assert!(
+            t.is_finite(),
+            "EventQueue::push: non-finite event time {t} at sim time {} \
+             (a NaN/inf timestamp would corrupt heap ordering)",
+            self.now
+        );
         let t = if t < self.now { self.now } else { t };
         self.heap.push(Entry { time: t, seq: self.seq, event });
         self.seq += 1;
@@ -71,6 +79,13 @@ impl<E> EventQueue<E> {
     pub fn push_after(&mut self, delay: f64, event: E) {
         let now = self.now;
         self.push(now + delay.max(0.0), event);
+    }
+
+    /// Time of the earliest queued event without popping it — the
+    /// *horizon* used by decode fast-forwarding: nothing can change the
+    /// simulation state strictly before this time.
+    pub fn peek_next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
     }
 
     /// Pop the next event, advancing the clock.
@@ -127,6 +142,32 @@ mod tests {
         assert!(t2 >= t1);
         let (t3, _) = q.pop().unwrap();
         assert_eq!(t3, 5.0);
+    }
+
+    #[test]
+    fn peek_returns_earliest_without_popping() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_next_time(), None);
+        q.push(4.0, "b");
+        q.push(2.0, "a");
+        assert_eq!(q.peek_next_time(), Some(2.0));
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.peek_next_time(), Some(4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_panics_instead_of_corrupting_heap() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_panics() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, ());
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! moving instances between modality groups and stages.
 
 use crate::kvcache::paged::PagedKvCache;
+use crate::model::{CostModel, DecodeItem};
+use crate::sim::slab::{ReqIx, RequestSlab};
 use crate::workload::Request;
-use std::collections::HashMap;
 
 /// Which inference stage an instance currently serves (stage-level
 /// disaggregation, §3).
@@ -41,8 +42,9 @@ pub struct Instance {
     pub group: GroupId,
     /// Busy with the current iteration until this sim time.
     pub busy_until: f64,
-    /// Sequences currently resident for decode (request ids).
-    pub decoding: Vec<u64>,
+    /// Sequences currently resident for decode (slab indices into the
+    /// owning system's [`RequestSlab`]).
+    pub decoding: Vec<ReqIx>,
     /// Paged KV pool (token-granular accounting, Appendix A).
     pub kv: PagedKvCache,
     /// Tokens decoded on this instance (utilization accounting).
@@ -90,16 +92,16 @@ impl Instance {
 /// checks on top.
 pub fn check_instances(
     instances: &[Instance],
-    requests: &HashMap<u64, SimRequest>,
+    requests: &RequestSlab,
 ) -> Result<(), String> {
     for inst in instances {
         inst.kv.check_invariants()?;
-        for id in &inst.decoding {
+        for &ix in &inst.decoding {
             let r = requests
-                .get(id)
-                .ok_or(format!("decoding unknown request {id}"))?;
+                .try_get(ix)
+                .ok_or(format!("decoding unknown request slot {ix}"))?;
             if r.home != Some(inst.id) {
-                return Err(format!("request {id} home mismatch"));
+                return Err(format!("request {} home mismatch", r.req.id));
             }
         }
     }
@@ -110,6 +112,83 @@ pub fn check_instances(
 /// zero once a run completes).
 pub fn kv_tokens_in_use(instances: &[Instance]) -> usize {
     instances.iter().map(|i| i.kv.used_tokens()).sum()
+}
+
+/// Cost of one decode step over `ids`, building the `DecodeItem` batch
+/// into the caller's reusable `scratch` buffer (cleared here; no
+/// per-step allocation). Shared by every serving system so batch-cost
+/// construction cannot drift between them.
+pub fn decode_batch_time(
+    cost: &CostModel,
+    requests: &RequestSlab,
+    tp: usize,
+    ids: &[ReqIx],
+    scratch: &mut Vec<DecodeItem>,
+    cross_attn: bool,
+) -> f64 {
+    scratch.clear();
+    for &ix in ids {
+        let r = requests.get(ix);
+        scratch.push(DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens });
+    }
+    cost.decode_step_time_flags(scratch, tp, cross_attn)
+}
+
+/// Shared core of decode fast-forwarding, used by every serving system:
+/// commit as many consecutive decode steps of `ids` as end strictly
+/// before `horizon` and complete no request, then account the
+/// *boundary* step (the one that crosses the horizon or finishes a
+/// sequence) exactly as `start_iteration` would. Returns the committed
+/// step count and the boundary step's completion time; the caller
+/// records its in-flight iteration and pushes the completion event.
+///
+/// All bit-exactness-critical float accumulation lives here and in
+/// [`CostModel::decode_run_time_flags`] — systems must not reimplement
+/// it, or the fast/step-by-step report equivalence can drift.
+/// `scratch` is a reusable `DecodeItem` buffer (cleared here).
+pub fn fast_forward_decode_batch(
+    cost: &CostModel,
+    requests: &mut RequestSlab,
+    inst: &mut Instance,
+    ids: &[ReqIx],
+    scratch: &mut Vec<DecodeItem>,
+    cross_attn: bool,
+    now: f64,
+    horizon: Option<f64>,
+) -> (usize, f64) {
+    scratch.clear();
+    // Steps until the first in-batch completion: the completing step
+    // must run as a real event (it changes the batch and triggers
+    // completion-side policy).
+    let mut max_steps = usize::MAX;
+    for &ix in ids {
+        let r = requests.get(ix);
+        scratch.push(DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens });
+        max_steps = max_steps.min(r.req.output_tokens - r.decoded - 1);
+    }
+    let tp = inst.tp;
+    let (steps, start) = cost.decode_run_time_flags(
+        scratch,
+        tp,
+        cross_attn,
+        max_steps,
+        now,
+        horizon,
+        &mut inst.busy_time,
+    );
+    if steps > 0 {
+        for &ix in ids {
+            requests.get_mut(ix).decoded += steps;
+        }
+        inst.tokens_processed += (steps * ids.len()) as u64;
+    }
+    // Boundary step, scheduled exactly as a fresh decode dispatch would
+    // start it at `start` with the advanced context lengths.
+    let dur = cost.decode_step_time_flags(scratch, tp, cross_attn);
+    let done = start + dur;
+    inst.busy_until = done;
+    inst.busy_time += dur;
+    (steps, done)
 }
 
 /// Request lifecycle phase in the simulator.
@@ -128,6 +207,39 @@ pub enum Phase {
     /// Generating tokens.
     Decoding,
     Finished,
+}
+
+impl Phase {
+    /// All phases in declaration (= pipeline) order; the single source
+    /// of truth for [`Phase::COUNT`] and [`Phase::index`].
+    pub const ALL: [Phase; 7] = [
+        Phase::WaitEncode,
+        Phase::Encoding,
+        Phase::WaitPrefill,
+        Phase::Prefilling,
+        Phase::Migrating,
+        Phase::Decoding,
+        Phase::Finished,
+    ];
+    pub const COUNT: usize = Phase::ALL.len();
+
+    /// Dense index: the discriminant, which matches the position in
+    /// [`Phase::ALL`] because both follow declaration order.
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::WaitEncode => "WaitEncode",
+            Phase::Encoding => "Encoding",
+            Phase::WaitPrefill => "WaitPrefill",
+            Phase::Prefilling => "Prefilling",
+            Phase::Migrating => "Migrating",
+            Phase::Decoding => "Decoding",
+            Phase::Finished => "Finished",
+        }
+    }
 }
 
 /// Per-request simulation state + timing record.
@@ -208,7 +320,8 @@ mod tests {
             output_tokens: 20,
             images: (0..images)
                 .map(|i| ImageRef { width: 448, height: 448, content_id: i as u64 })
-                .collect(),
+                .collect::<Vec<_>>()
+                .into(),
             prefix_id: 0,
             prefix_tokens: 0,
         }

@@ -8,3 +8,4 @@
 pub mod driver;
 pub mod engine;
 pub mod instance;
+pub mod slab;

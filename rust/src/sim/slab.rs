@@ -1,0 +1,154 @@
+//! Dense request storage for the simulation hot path.
+//!
+//! Every serving system used to keep its in-flight requests in a
+//! `HashMap<u64, SimRequest>` and look them up by trace id on every
+//! decode step — one hash per sequence per generated token. The slab
+//! replaces that with a `Vec<SimRequest>` keyed by a small dense
+//! [`ReqIx`] handed out once at routing; instances, wait queues and
+//! iteration snapshots all carry `ReqIx`, so the per-token path is a
+//! bounds-checked array index. Requests are never removed (a finished
+//! request keeps its slot until the run ends), which keeps indices
+//! stable for the whole simulation.
+
+use crate::sim::instance::{Phase, SimRequest};
+
+/// Dense index of a request within a [`RequestSlab`]. `u32` keeps the
+/// per-instance `decoding` lists and iteration snapshots compact.
+pub type ReqIx = u32;
+
+/// Append-only arena of [`SimRequest`]s, indexed by [`ReqIx`].
+#[derive(Debug, Default)]
+pub struct RequestSlab {
+    items: Vec<SimRequest>,
+}
+
+impl RequestSlab {
+    pub fn new() -> RequestSlab {
+        RequestSlab { items: Vec::new() }
+    }
+
+    /// Insert at routing time; the returned index is the request's
+    /// identity for the rest of the run.
+    pub fn insert(&mut self, r: SimRequest) -> ReqIx {
+        let ix = self.items.len() as ReqIx;
+        self.items.push(r);
+        ix
+    }
+
+    pub fn get(&self, ix: ReqIx) -> &SimRequest {
+        &self.items[ix as usize]
+    }
+
+    pub fn get_mut(&mut self, ix: ReqIx) -> &mut SimRequest {
+        &mut self.items[ix as usize]
+    }
+
+    /// Checked access for invariant verification (an out-of-range index
+    /// is a scheduler bug, reported rather than panicking mid-check).
+    pub fn try_get(&self, ix: ReqIx) -> Option<&SimRequest> {
+        self.items.get(ix as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SimRequest> {
+        self.items.iter()
+    }
+
+    /// Outstanding (non-finished) requests per lifecycle phase, for the
+    /// driver's stall diagnostic. Order matches the [`Phase`] pipeline.
+    pub fn phase_histogram(&self) -> Vec<(&'static str, usize)> {
+        let mut counts = [0usize; Phase::COUNT];
+        for r in &self.items {
+            counts[r.phase.index()] += 1;
+        }
+        Phase::ALL
+            .iter()
+            .filter(|p| **p != Phase::Finished)
+            .map(|p| (p.name(), counts[p.index()]))
+            .collect()
+    }
+}
+
+/// Small pool of retired `Vec<ReqIx>` decode-batch snapshots, so the
+/// per-iteration `ids` buffer is reused instead of freshly allocated
+/// (hot-path allocation elimination; shared by every serving system).
+#[derive(Debug, Default)]
+pub struct IdsPool {
+    free: Vec<Vec<ReqIx>>,
+}
+
+impl IdsPool {
+    /// Take an empty buffer (pooled if available).
+    pub fn take(&mut self) -> Vec<ReqIx> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a retired buffer to the pool (bounded so a pathological
+    /// burst can't hoard memory forever).
+    pub fn recycle(&mut self, mut v: Vec<ReqIx>) {
+        v.clear();
+        if self.free.len() < 64 {
+            self.free.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Request;
+
+    fn req(id: u64) -> SimRequest {
+        SimRequest::new(
+            Request {
+                id,
+                arrival: 0.0,
+                prompt_tokens: 10,
+                output_tokens: 4,
+                images: Vec::new().into(),
+                prefix_id: 0,
+                prefix_tokens: 0,
+            },
+            0,
+        )
+    }
+
+    #[test]
+    fn insert_returns_dense_indices() {
+        let mut s = RequestSlab::new();
+        assert!(s.is_empty());
+        let a = s.insert(req(10));
+        let b = s.insert(req(20));
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a).req.id, 10);
+        assert_eq!(s.get(b).req.id, 20);
+        s.get_mut(a).decoded = 3;
+        assert_eq!(s.get(a).decoded, 3);
+        assert!(s.try_get(2).is_none());
+    }
+
+    #[test]
+    fn phase_histogram_counts_outstanding() {
+        let mut s = RequestSlab::new();
+        let a = s.insert(req(1));
+        let b = s.insert(req(2));
+        let c = s.insert(req(3));
+        s.get_mut(a).phase = Phase::Decoding;
+        s.get_mut(b).phase = Phase::Decoding;
+        s.get_mut(c).phase = Phase::Finished;
+        let h = s.phase_histogram();
+        assert!(h.iter().all(|(name, _)| *name != "Finished"));
+        let decoding = h.iter().find(|(n, _)| *n == "Decoding").unwrap().1;
+        assert_eq!(decoding, 2);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 2, "finished requests are not outstanding");
+    }
+}

@@ -157,7 +157,7 @@ impl DatasetSpec {
             arrival: 0.0,
             prompt_tokens,
             output_tokens,
-            images,
+            images: images.into(),
             prefix_id,
             prefix_tokens,
         }
@@ -277,7 +277,7 @@ mod tests {
             for r in spec.generate(&mut rng, 2000) {
                 assert!(r.prompt_tokens <= spec.prompt_max);
                 assert!(r.output_tokens <= spec.output_max);
-                for img in &r.images {
+                for img in r.images.iter() {
                     assert!(img.width >= spec.image_edge_min);
                     assert!(img.width <= spec.image_edge_max);
                 }

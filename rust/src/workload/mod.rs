@@ -32,6 +32,10 @@ pub struct ImageRef {
 }
 
 /// A serving request as it enters the frontend.
+///
+/// `images` lives behind an `Arc<[ImageRef]>` so cloning a request —
+/// which the trace driver does once per arrival — is a refcount bump,
+/// not a heap copy of the image list.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -42,7 +46,7 @@ pub struct Request {
     /// Output length (ground truth for the simulator; a real run decides
     /// by sampling / EOS).
     pub output_tokens: usize,
-    pub images: Vec<ImageRef>,
+    pub images: std::sync::Arc<[ImageRef]>,
     /// Shared-prefix identity: requests with the same `prefix_id` share
     /// their first `prefix_tokens` prompt tokens (system prompts etc.) —
     /// exercised by the unified prefix cache.
@@ -84,7 +88,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: 100,
             output_tokens: 50,
-            images,
+            images: images.into(),
             prefix_id: 0,
             prefix_tokens: 0,
         }

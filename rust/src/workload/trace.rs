@@ -50,7 +50,7 @@ pub fn request_from_json(j: &Json) -> Result<Request, JsonError> {
         arrival: j.get("arrival")?.as_f64()?,
         prompt_tokens: j.get("prompt_tokens")?.as_usize()?,
         output_tokens: j.get("output_tokens")?.as_usize()?,
-        images,
+        images: images.into(),
         prefix_id: j.get("prefix_id")?.as_u64()?,
         prefix_tokens: j.get("prefix_tokens")?.as_usize()?,
     })

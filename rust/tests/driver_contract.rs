@@ -29,8 +29,8 @@ fn cost() -> CostModel {
     CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
 }
 
-fn sched() -> SchedulerConfig {
-    SchedulerConfig::default()
+fn sched(ff: bool) -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: ff, ..SchedulerConfig::default() }
 }
 
 /// Per-request (id, first_token, finish) triples, id-sorted so record
@@ -91,22 +91,34 @@ fn all_systems_uphold_driver_contract() {
             let mut rng = Rng::new(seed);
             let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
             poisson_arrivals(&mut rng, &mut reqs, qps);
-            contract(
-                "EmpSystem",
-                || EmpSystem::new(cost(), sched(), gpus, EmpOptions::full(gpus)),
-                &reqs,
-            )?;
-            contract(
-                "EmpSystem/static",
-                || EmpSystem::new(cost(), sched(), gpus, EmpOptions::static_split(gpus / 2)),
-                &reqs,
-            )?;
-            contract("CoupledVllm", || CoupledVllm::new(cost(), sched(), gpus), &reqs)?;
-            contract(
-                "DecoupledStatic",
-                || DecoupledStatic::new(cost(), sched(), gpus),
-                &reqs,
-            )
+            // Invariants and determinism must hold on both the
+            // step-by-step and the fast-forwarding decode path.
+            for ff in [true, false] {
+                contract(
+                    "EmpSystem",
+                    || EmpSystem::new(cost(), sched(ff), gpus, EmpOptions::full(gpus)),
+                    &reqs,
+                )?;
+                contract(
+                    "EmpSystem/static",
+                    || {
+                        EmpSystem::new(
+                            cost(),
+                            sched(ff),
+                            gpus,
+                            EmpOptions::static_split(gpus / 2),
+                        )
+                    },
+                    &reqs,
+                )?;
+                contract("CoupledVllm", || CoupledVllm::new(cost(), sched(ff), gpus), &reqs)?;
+                contract(
+                    "DecoupledStatic",
+                    || DecoupledStatic::new(cost(), sched(ff), gpus),
+                    &reqs,
+                )?;
+            }
+            Ok(())
         },
     );
 }
@@ -118,9 +130,9 @@ fn systems_agree_on_the_workload_not_the_schedule() {
     let mut rng = Rng::new(99);
     let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 150);
     poisson_arrivals(&mut rng, &mut reqs, 6.0);
-    let emp = EmpSystem::new(cost(), sched(), 8, EmpOptions::full(8)).run(&reqs);
-    let vllm = CoupledVllm::new(cost(), sched(), 8).run(&reqs);
-    let dec = DecoupledStatic::new(cost(), sched(), 8).run(&reqs);
+    let emp = EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8)).run(&reqs);
+    let vllm = CoupledVllm::new(cost(), sched(true), 8).run(&reqs);
+    let dec = DecoupledStatic::new(cost(), sched(true), 8).run(&reqs);
     let ids = |rep: &Report| {
         let mut v: Vec<u64> = rep.records.iter().map(|r| r.id).collect();
         v.sort_unstable();

@@ -1,0 +1,160 @@
+//! Decode fast-forwarding must be invisible: running the same mixed
+//! text+multimodal trace with event coalescing forced on vs off has to
+//! produce **byte-identical** `Report`s — every record field equal, f64
+//! timings compared bit-for-bit — for the EMP system (full and static)
+//! and both baselines. The coalesced path skips queue round-trips, not
+//! simulation steps, so any divergence is a bug in the exactness
+//! predicate or the multi-step cost accumulation.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::Report;
+use elasticmm::model::CostModel;
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+use elasticmm::ServingSystem;
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched(ff: bool) -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: ff, ..SchedulerConfig::default() }
+}
+
+fn trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+/// Every record field, with timings as raw bits so the comparison is
+/// byte-exact, in record order (order itself must match too).
+fn record_bytes(rep: &Report) -> Vec<(u64, bool, usize, usize, u64, u64, u64)> {
+    rep.records
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.multimodal,
+                r.input_len,
+                r.output_len,
+                r.arrival.to_bits(),
+                r.first_token.to_bits(),
+                r.finish.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn assert_equivalent<S: ServingSystem>(
+    name: &str,
+    mk: impl Fn(bool) -> S,
+    trace: &[Request],
+) -> (Report, Report) {
+    let mut on = mk(true);
+    let rep_on = on.run(trace);
+    let mut off = mk(false);
+    let rep_off = off.run(trace);
+    assert_eq!(rep_on.records.len(), trace.len(), "{name}: incomplete run");
+    assert_eq!(
+        record_bytes(&rep_on),
+        record_bytes(&rep_off),
+        "{name}: fast-forward on/off reports diverge"
+    );
+    on.verify_invariants().unwrap();
+    off.verify_invariants().unwrap();
+    (rep_on, rep_off)
+}
+
+#[test]
+fn coupled_reports_identical_and_fast_path_exercised() {
+    for (n, qps, gpus, seed) in [(150, 1.0, 4, 11), (200, 8.0, 8, 12), (80, 0.3, 2, 13)] {
+        let t = trace(n, qps, gpus as u64 + seed);
+        assert_equivalent("CoupledVllm", |ff| CoupledVllm::new(cost(), sched(ff), gpus), &t);
+        // The light-load case must actually coalesce (otherwise the
+        // equivalence assertion is vacuous).
+        let mut sys = CoupledVllm::new(cost(), sched(true), gpus);
+        sys.run(&t);
+        assert!(
+            sys.coalesced_steps > 0,
+            "no decode steps coalesced on n={n} qps={qps} gpus={gpus}"
+        );
+    }
+}
+
+#[test]
+fn decoupled_reports_identical() {
+    for (n, qps, seed) in [(150, 1.5, 21), (200, 6.0, 22)] {
+        let t = trace(n, qps, seed);
+        assert_equivalent(
+            "DecoupledStatic",
+            |ff| DecoupledStatic::new(cost(), sched(ff), 8),
+            &t,
+        );
+        let mut sys = DecoupledStatic::new(cost(), sched(true), 8);
+        sys.run(&t);
+        assert!(
+            sys.text.coalesced_steps + sys.multimodal.coalesced_steps > 0,
+            "decoupled fleets never coalesced"
+        );
+    }
+}
+
+#[test]
+fn emp_full_reports_identical() {
+    for (n, qps, gpus, seed) in [(120, 1.0, 8, 31), (200, 8.0, 8, 32), (80, 3.0, 4, 33)] {
+        let t = trace(n, qps, seed);
+        assert_equivalent(
+            "EmpSystem/full",
+            |ff| EmpSystem::new(cost(), sched(ff), gpus, EmpOptions::full(gpus)),
+            &t,
+        );
+    }
+}
+
+#[test]
+fn emp_static_reports_identical() {
+    let t = trace(150, 4.0, 41);
+    assert_equivalent(
+        "EmpSystem/static",
+        |ff| EmpSystem::new(cost(), sched(ff), 8, EmpOptions::static_split(4)),
+        &t,
+    );
+}
+
+#[test]
+fn emp_fast_path_exercised_at_light_load() {
+    // Light load → queues drain, decode dominates → the EMP predicate
+    // must let coalescing happen (this guards against the predicate
+    // silently rotting into `false` forever).
+    let t = trace(100, 0.4, 51);
+    let mut sys = EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8));
+    sys.run(&t);
+    assert!(
+        sys.stats.coalesced_steps > 0,
+        "EMP never coalesced on a light decode-heavy trace: {:?}",
+        sys.stats
+    );
+}
+
+#[test]
+fn aggregate_metrics_identical_too() {
+    // Belt-and-braces: derived metrics come out of identical records,
+    // so they must match exactly as well.
+    let t = trace(150, 5.0, 61);
+    let mut on = CoupledVllm::new(cost(), sched(true), 8);
+    let mut off = CoupledVllm::new(cost(), sched(false), 8);
+    let (a, b) = (on.run(&t), off.run(&t));
+    assert_eq!(a.mean_ttft().to_bits(), b.mean_ttft().to_bits());
+    assert_eq!(a.token_throughput().to_bits(), b.token_throughput().to_bits());
+    assert_eq!(
+        a.mean_norm_output_latency().to_bits(),
+        b.mean_norm_output_latency().to_bits()
+    );
+}
