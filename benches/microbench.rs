@@ -9,6 +9,8 @@ use elasticmm::coordinator::gain_cost::{self, DecodeSet, PrefillSet};
 use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::kvcache::paged::PagedKvCache;
 use elasticmm::kvcache::radix::RadixTree;
+use elasticmm::kvcache::runs::{RunKind, TokenRun};
+use elasticmm::kvcache::token_oracle::{TokenInterner, TokenRadixTree};
 use elasticmm::model::{CostModel, DecodeItem, PrefillItem};
 use elasticmm::ServingSystem;
 use elasticmm::sim::engine::EventQueue;
@@ -35,21 +37,46 @@ fn main() {
     });
     println!("{}", r.line());
 
-    // Radix tree: prefix insert/match on realistic unified sequences.
+    // Radix tree: run-length insert/match on realistic unified
+    // sequences (shared prefix stem + vision run + unique tail), with
+    // the per-token oracle on the same flattened sequences for
+    // comparison.
     let mut rng = Rng::new(3);
-    let seqs: Vec<Vec<u32>> = (0..256)
+    let run_seqs: Vec<Vec<TokenRun>> = (0..256u64)
         .map(|i| {
-            let stem = (i % 16) as u32;
-            let len = 64 + rng.below(192) as usize;
-            (0..len)
-                .map(|j| if j < 32 { stem * 1000 + j as u32 } else { rng.below(4096) as u32 })
-                .collect()
+            vec![
+                TokenRun::new(RunKind::Prefix(i % 16 + 1), 0, 32),
+                TokenRun::new(RunKind::Vision(i % 32), 0, 64 + rng.below(160) as u32),
+                TokenRun::new(RunKind::Tail(i), 0, 16 + rng.below(64) as u32),
+            ]
         })
         .collect();
-    let r = b.run("radix_tree insert+match x256 seqs", || {
+    let r = b.run("radix_tree(run-length) insert+match x256 seqs", || {
         let mut t = RadixTree::new(20_000);
         let mut hits = 0usize;
-        for s in &seqs {
+        for s in &run_seqs {
+            let (_, m) = t.insert(s);
+            t.release(&m);
+            let q = t.match_prefix(s);
+            hits += q.matched_tokens;
+            t.release(&q);
+        }
+        hits
+    });
+    println!("{}", r.line());
+    let mut interner = TokenInterner::default();
+    let tok_seqs: Vec<Vec<u32>> = run_seqs
+        .iter()
+        .map(|s| {
+            let mut v = Vec::new();
+            interner.materialize(s, &mut v);
+            v
+        })
+        .collect();
+    let r = b.run("radix_tree(per-token oracle) x256 seqs", || {
+        let mut t = TokenRadixTree::new(20_000);
+        let mut hits = 0usize;
+        for s in &tok_seqs {
             let (_, m) = t.insert(s);
             t.release(&m);
             let q = t.match_prefix(s);

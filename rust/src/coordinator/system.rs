@@ -134,6 +134,9 @@ pub struct EmpStats {
     pub group_moves: u64,
     pub migrated_seqs: u64,
     pub encode_cache_hits: u64,
+    /// Total unified-sequence prefix tokens served from the KV pool
+    /// (prefill skipped).
+    pub prefix_hit_tokens: u64,
     pub dp_prefill_iters: u64,
     pub role_flips: u64,
     /// Decode steps committed inside coalesced fast-forward events
@@ -441,14 +444,16 @@ impl EmpSystem {
         };
         let vis = req.vision_tokens(&self.cost.model);
         let mut sr = SimRequest::new(req, vis);
-        // Unified multimodal prefix cache (§3.3).
-        let outcome = self.groups[gidx(g)].cache.process(&sr.req, &self.cost.model);
-        sr.encode_pending = outcome.images_to_encode.clone();
+        // Unified multimodal prefix cache (§3.3): run-length matching —
+        // O(#runs), no per-token sequence materialization on admission.
+        let mut outcome = self.groups[gidx(g)].cache.process(&sr.req, &self.cost.model);
+        sr.encode_pending = std::mem::take(&mut outcome.images_to_encode);
         sr.cached_prefix = outcome.prefix_hit_tokens.min(sr.input_len.saturating_sub(1));
         sr.prefill_target = sr.input_len - sr.cached_prefix;
         if outcome.vision_tokens_cached > 0 {
             self.stats.encode_cache_hits += 1;
         }
+        self.stats.prefix_hit_tokens += sr.cached_prefix as u64;
         self.groups[gidx(g)].cache.release(&outcome);
         let work = self.work_estimate(&sr);
         self.groups[gidx(g)].monitor.record_arrival(now, work);

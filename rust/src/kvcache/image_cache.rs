@@ -2,9 +2,14 @@
 //! Multimodal Prefix Cache (§3.3). "When a multimodal input is received,
 //! we generate a hash. If the hash matches an existing entry, we skip
 //! re-encoding and use the cached tokens." LRU-evicted under a token
-//! budget like the prefix pool.
+//! budget like the prefix pool — via the same lazily-invalidated
+//! min-heap scheme as [`super::radix::RadixTree`] (O(log n) per victim
+//! instead of a full-map scan), valid because every stamp draws a fresh
+//! logical-clock value, so an entry is current iff its timestamp equals
+//! the entry's `last_access`.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// FNV-1a — the deterministic content hash for image payloads. The
 /// simulator hashes `(content_id, w, h, model tiling)`; the real path
@@ -42,6 +47,10 @@ struct Entry {
 #[derive(Debug)]
 pub struct ImageCache {
     map: HashMap<u64, Entry>,
+    /// Lazy LRU heap: `(last_access, hash)`. Entries are pushed on every
+    /// stamp (insert / lookup hit); an entry is acted on only if its
+    /// timestamp still matches the live entry's `last_access`.
+    lru: BinaryHeap<Reverse<(u64, u64)>>,
     clock: u64,
     cached_tokens: usize,
     pub capacity_tokens: usize,
@@ -53,6 +62,7 @@ impl ImageCache {
     pub fn new(capacity_tokens: usize) -> Self {
         ImageCache {
             map: HashMap::new(),
+            lru: BinaryHeap::new(),
             clock: 0,
             cached_tokens: 0,
             capacity_tokens,
@@ -80,26 +90,47 @@ impl ImageCache {
             e.last_access = self.clock;
             e.hits += 1;
             self.hits += 1;
-            Some(e.payload)
+            self.lru.push(Reverse((self.clock, hash)));
+            let payload = e.payload;
+            self.maybe_compact();
+            Some(payload)
         } else {
             self.misses += 1;
             None
         }
     }
 
+    /// Rebuild the heap from the entries' current stamps once stale
+    /// entries dominate — a hot pool that never fills to capacity
+    /// otherwise accumulates one entry per touch forever, since only
+    /// eviction pops. Amortized O(1); the surviving entry set (one
+    /// fresh stamp per live entry) is what eviction acts on anyway.
+    fn maybe_compact(&mut self) {
+        if self.lru.len() <= 2 * self.map.len() + 64 {
+            return;
+        }
+        self.lru.clear();
+        self.lru.extend(self.map.iter().map(|(&h, e)| Reverse((e.last_access, h))));
+    }
+
     /// Insert encoded tokens for a hash, evicting LRU entries if needed.
+    /// An entry larger than the whole pool is rejected *before* any
+    /// eviction — evicting first would flush every resident entry and
+    /// then fail to cache anyway.
     pub fn insert(&mut self, hash: u64, tokens: usize, payload: Option<u64>) {
         self.clock += 1;
         if let Some(old) = self.map.remove(&hash) {
             self.cached_tokens -= old.tokens;
         }
         if self.capacity_tokens > 0 {
-            while self.cached_tokens + tokens > self.capacity_tokens && !self.map.is_empty()
-            {
-                self.evict_one();
-            }
             if tokens > self.capacity_tokens {
                 return; // single entry larger than the pool: don't cache
+            }
+            while self.cached_tokens + tokens > self.capacity_tokens && !self.map.is_empty()
+            {
+                if !self.evict_one() {
+                    break;
+                }
             }
         }
         self.cached_tokens += tokens;
@@ -107,15 +138,23 @@ impl ImageCache {
             hash,
             Entry { tokens, last_access: self.clock, hits: 0, payload },
         );
+        self.lru.push(Reverse((self.clock, hash)));
     }
 
-    fn evict_one(&mut self) {
-        if let Some((&h, _)) =
-            self.map.iter().min_by_key(|(_, e)| e.last_access)
-        {
-            let e = self.map.remove(&h).unwrap();
+    /// Evict the least-recently-used entry: pop heap entries until one
+    /// still describes a live entry's current stamp. O(log n) amortized
+    /// — each stale entry is popped at most once.
+    fn evict_one(&mut self) -> bool {
+        while let Some(Reverse((ts, hash))) = self.lru.pop() {
+            let fresh = self.map.get(&hash).map(|e| e.last_access == ts).unwrap_or(false);
+            if !fresh {
+                continue; // re-stamped, re-inserted, or already removed
+            }
+            let e = self.map.remove(&hash).expect("checked live");
             self.cached_tokens -= e.tokens;
+            return true;
         }
+        false
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -173,11 +212,56 @@ mod tests {
     }
 
     #[test]
+    fn oversized_insert_does_not_flush_pool() {
+        // Regression: the oversize check used to run *after* the
+        // eviction loop, so an entry larger than the pool evicted every
+        // resident entry and then bailed out.
+        let mut c = ImageCache::new(10_000);
+        c.insert(1, 4000, None);
+        c.insert(2, 4000, None);
+        c.insert(9, 50_000, None); // larger than the whole pool
+        assert!(c.lookup(9).is_none());
+        assert!(c.lookup(1).is_some(), "oversized insert must not evict others");
+        assert!(c.lookup(2).is_some(), "oversized insert must not evict others");
+        assert_eq!(c.cached_tokens(), 8000);
+    }
+
+    #[test]
     fn reinsert_updates_size() {
         let mut c = ImageCache::new(100_000);
         c.insert(5, 1000, None);
         c.insert(5, 2000, None);
         assert_eq!(c.cached_tokens(), 2000);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn heap_eviction_follows_lru_order_under_churn() {
+        let mut c = ImageCache::new(10_000);
+        for i in 0..100u64 {
+            c.insert(i, 500, None); // constant eviction pressure
+            assert!(c.cached_tokens() <= 10_000);
+        }
+        // Survivors must be the 20 most recent inserts.
+        assert!(c.lookup(99).is_some());
+        assert!(c.lookup(80).is_some());
+        assert!(c.lookup(79).is_none());
+        assert!(c.lookup(0).is_none());
+    }
+
+    #[test]
+    fn stale_heap_entries_from_touches_are_skipped() {
+        let mut c = ImageCache::new(2000);
+        c.insert(1, 900, None);
+        c.insert(2, 900, None);
+        // Touch 1 repeatedly: many stale heap entries for hash 1.
+        for _ in 0..10 {
+            c.lookup(1);
+        }
+        // Inserting 3 must evict 2 (the true LRU), not 1.
+        c.insert(3, 900, None);
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(2).is_none());
+        assert!(c.lookup(3).is_some());
     }
 }

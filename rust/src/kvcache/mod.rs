@@ -2,15 +2,23 @@
 //!
 //! * [`paged`] — PagedAttention-style block allocator managing each
 //!   instance's KV pool at token granularity.
-//! * [`radix`] — radix (prefix) tree over token sequences with reference
-//!   counts and LRU eviction; backs the "prefix tokens from unified
-//!   sequences" cache pool.
+//! * [`runs`] — run-length encoding of unified sequences: a request's
+//!   token stream as a handful of `{kind, offset, len}` descriptors
+//!   with O(1) in-run prefix arithmetic.
+//! * [`radix`] — run-length radix (prefix) tree with reference counts
+//!   and heap-based O(log n) LRU eviction; backs the "prefix tokens
+//!   from unified sequences" cache pool.
+//! * [`token_oracle`] — the per-token reference tree kept as a
+//!   differential oracle for tests and benches (never on the serving
+//!   path).
 //! * [`image_cache`] — hash → vision-token cache; backs the "tokens
 //!   encoded from multimodal inputs" pool.
 //! * [`unified`] — the Unified Multimodal Prefix Cache combining both
 //!   pools behind one lookup/insert API.
 
 pub mod paged;
+pub mod runs;
 pub mod radix;
+pub mod token_oracle;
 pub mod image_cache;
 pub mod unified;

@@ -1,29 +1,57 @@
-//! Radix (prefix) tree over token sequences with refcounts + LRU
-//! eviction — the "prefix tokens from unified sequences" pool of §3.3.
+//! Run-length radix (prefix) tree over unified sequences — the "prefix
+//! tokens from unified sequences" pool of §3.3.
 //!
-//! Follows the SGLang RadixAttention design the paper cites (Appendix A:
-//! "each KV cache node in the prefix tree maintains a user count, and
-//! when this count drops to zero it becomes eligible for eviction ...
-//! released in least-recently-used order").
+//! Follows the SGLang RadixAttention design the paper cites (refcounts
+//! pin in-flight paths; unpinned leaves are released in LRU order), but
+//! compressed end to end:
 //!
-//! Token values are `u32`; vision tokens are folded into the sequence by
-//! the unified cache with a reserved-id scheme (see `unified.rs`), so a
-//! single tree covers both modalities ("unified sequences").
+//! * **Edge labels are [`TokenRun`] slices**, not per-token vectors. A
+//!   904×904 image contributes one run, not ~6,516 `u32`s, so a full
+//!   descend costs O(#runs) — common-prefix lengths *within* a run are
+//!   computed by the O(1) arithmetic rule in [`super::runs`], and
+//!   mid-run splits slice a run in O(1).
+//! * **Eviction is O(log n) per victim** via a lazily-invalidated
+//!   min-heap over eviction candidates (unpinned leaves), replacing the
+//!   old full-tree scan per evicted leaf. Heap entries are
+//!   `(last_access, node, generation)`; an entry is acted on only if it
+//!   still describes the node's current state, so stale entries (from
+//!   re-pins, touches, or slot reuse) are simply popped and dropped.
+//!   Invariant: every current candidate has a heap entry carrying its
+//!   current `last_access` — entries are pushed whenever a node *becomes*
+//!   a candidate (refcount hits zero on a leaf in [`RadixTree::release`],
+//!   or a parent loses its last child in [`RadixTree::evict`]).
+//!
+//! Hit/miss token counts are bit-identical to the per-token
+//! [`super::token_oracle::TokenRadixTree`] (including LRU victim order:
+//! ties on `last_access` break toward the lower node id in both);
+//! `tests/cache_differential.rs` enforces this against randomized
+//! multimodal workloads.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::runs::{common_prefix_tokens, split_runs, total_tokens, RunCursor, RunToken, TokenRun};
 
 type NodeId = usize;
 
 #[derive(Debug)]
 struct Node {
-    /// Edge label: tokens on the edge from parent to this node.
-    label: Vec<u32>,
-    children: HashMap<u32, NodeId>,
+    /// Edge label: token runs on the edge from parent to this node.
+    label: Vec<TokenRun>,
+    /// Cached token count of `label` (sum of run lengths).
+    label_tokens: usize,
+    children: HashMap<RunToken, NodeId>,
     parent: Option<NodeId>,
     /// Active users of this node's tokens (in-flight requests).
     refcount: u32,
     /// LRU stamp (logical clock).
     last_access: u64,
+}
+
+impl Node {
+    fn is_candidate(&self) -> bool {
+        self.refcount == 0 && self.children.is_empty()
+    }
 }
 
 /// Result of a prefix match.
@@ -39,9 +67,15 @@ pub struct MatchResult {
 pub struct RadixTree {
     nodes: Vec<Option<Node>>,
     free: Vec<NodeId>,
+    /// Per-slot generation, bumped on dealloc, so heap entries from a
+    /// previous occupant of a reused slot can be recognized as stale.
+    gens: Vec<u32>,
+    /// Lazy LRU min-heap over eviction candidates:
+    /// `(last_access, node, generation)`.
+    lru: BinaryHeap<Reverse<(u64, NodeId, u32)>>,
     root: NodeId,
     clock: u64,
-    /// Total tokens stored (sum of label lengths).
+    /// Total tokens stored (sum of label token counts).
     cached_tokens: usize,
     /// Capacity in tokens; inserts beyond this trigger LRU eviction.
     pub capacity_tokens: usize,
@@ -51,6 +85,7 @@ impl RadixTree {
     pub fn new(capacity_tokens: usize) -> Self {
         let root = Node {
             label: Vec::new(),
+            label_tokens: 0,
             children: HashMap::new(),
             parent: None,
             refcount: 1, // root is never evicted
@@ -59,6 +94,8 @@ impl RadixTree {
         RadixTree {
             nodes: vec![Some(root)],
             free: Vec::new(),
+            gens: vec![0],
+            lru: BinaryHeap::new(),
             root: 0,
             clock: 0,
             cached_tokens: 0,
@@ -79,19 +116,21 @@ impl RadixTree {
     }
 
     fn alloc(&mut self, node: Node) -> NodeId {
-        self.cached_tokens += node.label.len();
+        self.cached_tokens += node.label_tokens;
         if let Some(id) = self.free.pop() {
             self.nodes[id] = Some(node);
             id
         } else {
             self.nodes.push(Some(node));
+            self.gens.push(0);
             self.nodes.len() - 1
         }
     }
 
     fn dealloc(&mut self, id: NodeId) {
         let n = self.nodes[id].take().expect("live node");
-        self.cached_tokens -= n.label.len();
+        self.cached_tokens -= n.label_tokens;
+        self.gens[id] = self.gens[id].wrapping_add(1);
         self.free.push(id);
     }
 
@@ -100,28 +139,42 @@ impl RadixTree {
         self.clock
     }
 
-    /// Longest cached prefix of `tokens`. Bumps LRU stamps and refcounts
-    /// along the path; caller must `release` the returned path.
-    pub fn match_prefix(&mut self, tokens: &[u32]) -> MatchResult {
+    /// Register `id` with the eviction heap if it is currently an
+    /// unpinned leaf. Called at every candidate-creating transition.
+    fn push_if_candidate(&mut self, id: NodeId) {
+        if id == self.root {
+            return;
+        }
+        let Some(n) = self.nodes[id].as_ref() else { return };
+        if n.is_candidate() {
+            self.lru.push(Reverse((n.last_access, id, self.gens[id])));
+        }
+    }
+
+    /// Longest cached prefix of the run sequence. Bumps LRU stamps and
+    /// refcounts along the path; caller must `release` the returned
+    /// path. O(#runs · edge fan-in), never O(#tokens).
+    pub fn match_prefix(&mut self, runs: &[TokenRun]) -> MatchResult {
         let now = self.tick();
         let mut cur = self.root;
         let mut matched = 0;
         let mut path = Vec::new();
-        let mut rest = tokens;
+        let mut rest = RunCursor::new(runs);
         loop {
             self.node_mut(cur).last_access = now;
             if rest.is_empty() {
                 break;
             }
-            let Some(&child) = self.node(cur).children.get(&rest[0]) else {
+            let Some(&child) = self.node(cur).children.get(&rest.first_token()) else {
                 break;
             };
-            let label_len = self.node(child).label.len();
-            let common = common_prefix_len(&self.node(child).label, rest);
-            if common == label_len {
+            let label_tokens = self.node(child).label_tokens;
+            let mut probe = rest; // Copy: commit only on use
+            let common = common_prefix_tokens(&self.node(child).label, &mut probe);
+            if common == label_tokens {
                 // Full edge match; descend.
                 matched += common;
-                rest = &rest[common..];
+                rest = probe;
                 cur = child;
                 self.node_mut(cur).refcount += 1;
                 path.push(cur);
@@ -131,8 +184,9 @@ impl RadixTree {
                 if common > 0 {
                     let split = self.split_node(child, common);
                     matched += common;
-                    self.node_mut(split).refcount += 1;
-                    self.node_mut(split).last_access = now;
+                    let s = self.node_mut(split);
+                    s.refcount += 1;
+                    s.last_access = now;
                     path.push(split);
                 }
                 break;
@@ -141,40 +195,44 @@ impl RadixTree {
         MatchResult { matched_tokens: matched, path }
     }
 
-    /// Split `child` so its first `at` label tokens become a new parent
-    /// node; returns the new upper node.
+    /// Split `child` so its first `at` label tokens become a new upper
+    /// node (slicing mid-run if needed); returns the upper node.
     fn split_node(&mut self, child: NodeId, at: usize) -> NodeId {
         let parent = self.node(child).parent.expect("non-root");
-        let label = self.node(child).label.clone();
-        let (upper_label, lower_label) = (label[..at].to_vec(), label[at..].to_vec());
+        let (upper_label, lower_label) = split_runs(&self.node(child).label, at);
+        let upper_key = upper_label[0].first_token();
+        let lower_key = lower_label[0].first_token();
+        let lower_tokens = self.node(child).label_tokens - at;
         let upper = self.alloc(Node {
-            label: upper_label.clone(),
+            label: upper_label,
+            label_tokens: at,
             children: HashMap::new(),
             parent: Some(parent),
             refcount: 0,
             last_access: self.node(child).last_access,
         });
         // Rewire: parent -> upper -> child.
-        self.node_mut(parent).children.insert(upper_label[0], upper);
-        self.node_mut(upper).children.insert(lower_label[0], child);
+        self.node_mut(parent).children.insert(upper_key, upper);
+        self.node_mut(upper).children.insert(lower_key, child);
         // Shrink child's label (account token bookkeeping).
         self.cached_tokens -= at;
         let c = self.node_mut(child);
         c.label = lower_label;
+        c.label_tokens = lower_tokens;
         c.parent = Some(upper);
         upper
     }
 
-    /// Insert `tokens`, reusing any cached prefix. Returns the number of
-    /// *new* tokens added (the part that must actually be computed).
-    /// The inserted path is pinned (refcounted) and returned for release.
-    pub fn insert(&mut self, tokens: &[u32]) -> (usize, MatchResult) {
-        let mut m = self.match_prefix(tokens);
-        let rest = &tokens[m.matched_tokens..];
-        if rest.is_empty() {
+    /// Insert a run sequence, reusing any cached prefix. Returns the
+    /// number of *new* tokens added (the part that must actually be
+    /// computed). The inserted path is pinned and returned for release.
+    pub fn insert(&mut self, runs: &[TokenRun]) -> (usize, MatchResult) {
+        let total = total_tokens(runs);
+        let mut m = self.match_prefix(runs);
+        if m.matched_tokens == total {
             return (0, m);
         }
-        let new_tokens = rest.len();
+        let new_tokens = total - m.matched_tokens;
         // Evict to make room (never evicts pinned nodes).
         if self.capacity_tokens > 0 {
             let need =
@@ -185,74 +243,119 @@ impl RadixTree {
         }
         let now = self.tick();
         let attach = *m.path.last().unwrap_or(&self.root);
+        let mut cursor = RunCursor::new(runs);
+        cursor.advance(m.matched_tokens);
+        let mut label = Vec::new();
+        cursor.remaining_runs_into(&mut label);
+        let key = label[0].first_token();
         let leaf = self.alloc(Node {
-            label: rest.to_vec(),
+            label,
+            label_tokens: new_tokens,
             children: HashMap::new(),
             parent: Some(attach),
             refcount: 1,
             last_access: now,
         });
-        self.node_mut(attach).children.insert(rest[0], leaf);
+        self.node_mut(attach).children.insert(key, leaf);
         m.path.push(leaf);
-        m.matched_tokens = tokens.len();
+        m.matched_tokens = total;
         (new_tokens, m)
     }
 
-    /// Release a previously returned path (decrement refcounts).
+    /// Release a previously returned path (decrement refcounts). A node
+    /// whose refcount reaches zero while it is a leaf becomes an
+    /// eviction candidate and is registered with the LRU heap.
     pub fn release(&mut self, m: &MatchResult) {
         for &id in &m.path {
-            if self.nodes[id].is_some() {
-                let n = self.node_mut(id);
+            if let Some(n) = self.nodes[id].as_mut() {
                 n.refcount = n.refcount.saturating_sub(1);
             }
+            self.push_if_candidate(id);
+        }
+        self.maybe_compact();
+    }
+
+    /// Rebuild the heap from live candidates once stale entries dominate
+    /// (a hot cache that never fills to capacity otherwise accumulates
+    /// one entry per touch forever, since only eviction pops). Amortized
+    /// O(1): a rebuild costs O(nodes) but only after Ω(nodes) pushes.
+    /// The set of valid candidates — all eviction can act on — is
+    /// unchanged, so eviction order is unaffected.
+    fn maybe_compact(&mut self) {
+        let live = self.nodes.len() - self.free.len();
+        if self.lru.len() <= 2 * live + 64 {
+            return;
+        }
+        self.lru.clear();
+        for id in 0..self.nodes.len() {
+            self.push_if_candidate(id);
         }
     }
 
-    /// Evict at least `target_tokens` from unpinned leaves in LRU order.
-    /// Returns tokens actually evicted.
+    /// Evict at least `target_tokens` from unpinned leaves in LRU order,
+    /// O(log n) amortized per victim. Returns tokens actually evicted.
     pub fn evict(&mut self, target_tokens: usize) -> usize {
         let mut evicted = 0;
         while evicted < target_tokens {
-            // Find LRU unpinned leaf (linear scan; tree sizes in the
-            // scheduler are modest, and correctness > micro-speed here).
-            let mut victim: Option<(u64, NodeId)> = None;
-            for (id, slot) in self.nodes.iter().enumerate() {
-                if let Some(n) = slot {
-                    if id != self.root
-                        && n.refcount == 0
-                        && n.children.is_empty()
-                        && victim.map(|(ts, _)| n.last_access < ts).unwrap_or(true)
-                    {
-                        victim = Some((n.last_access, id));
-                    }
-                }
+            let Some(Reverse((ts, id, gen))) = self.lru.pop() else { break };
+            // Lazy invalidation: act only if the entry still describes
+            // the node's current state.
+            if gen != self.gens[id] {
+                continue;
             }
-            let Some((_, id)) = victim else { break };
-            let parent = self.node(id).parent.expect("leaf has parent");
-            let first = self.node(id).label[0];
-            evicted += self.node(id).label.len();
+            let valid = match self.nodes[id].as_ref() {
+                Some(n) => id != self.root && n.is_candidate() && n.last_access == ts,
+                None => false,
+            };
+            if !valid {
+                continue;
+            }
+            let n = self.node(id);
+            let parent = n.parent.expect("leaf has parent");
+            let first = n.label[0].first_token();
+            evicted += n.label_tokens;
             self.node_mut(parent).children.remove(&first);
             self.dealloc(id);
+            // The parent may just have become an unpinned leaf itself.
+            self.push_if_candidate(parent);
         }
         evicted
     }
 
-    /// Structural invariants for property tests.
+    /// Structural invariants for property tests, including heap
+    /// coverage: every eviction candidate must be discoverable through a
+    /// fresh LRU entry.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut seen_tokens = 0;
         for (id, slot) in self.nodes.iter().enumerate() {
             let Some(n) = slot else { continue };
-            seen_tokens += n.label.len();
+            let label_sum: usize = n.label.iter().map(|r| r.len as usize).sum();
+            if label_sum != n.label_tokens {
+                return Err(format!(
+                    "node {id} label_tokens {} != sum of runs {label_sum}",
+                    n.label_tokens
+                ));
+            }
+            seen_tokens += n.label_tokens;
             if id != self.root {
-                if n.label.is_empty() {
+                if n.label_tokens == 0 {
                     return Err(format!("non-root node {id} with empty label"));
+                }
+                if n.label.iter().any(|r| r.len == 0) {
+                    return Err(format!("node {id} label contains a zero-length run"));
                 }
                 let p = n.parent.ok_or(format!("node {id} missing parent"))?;
                 let pn = self.nodes[p]
                     .as_ref()
                     .ok_or(format!("node {id} parent {p} is dead"))?;
-                if pn.children.get(&n.label[0]) != Some(&id) {
+                if pn.children.get(&n.label[0].first_token()) != Some(&id) {
                     return Err(format!("node {id} not linked from parent"));
+                }
+                if n.is_candidate() {
+                    let want = Reverse((n.last_access, id, self.gens[id]));
+                    if !self.lru.iter().any(|e| *e == want) {
+                        return Err(format!("candidate node {id} missing from LRU heap"));
+                    }
                 }
             }
             // Children keys match child label heads; no sibling shares a head.
@@ -260,7 +363,7 @@ impl RadixTree {
                 let cn = self.nodes[c]
                     .as_ref()
                     .ok_or(format!("node {id} child {c} is dead"))?;
-                if cn.label[0] != k {
+                if cn.label[0].first_token() != k {
                     return Err(format!("child key mismatch at node {id}"));
                 }
             }
@@ -275,20 +378,25 @@ impl RadixTree {
     }
 }
 
-fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
-    a.iter().zip(b).take_while(|(x, y)| x == y).count()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::runs::RunKind;
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
+
+    fn tail(id: u64, len: u32) -> TokenRun {
+        TokenRun::new(RunKind::Tail(id), 0, len)
+    }
+
+    fn vis(h: u64, off: u32, len: u32) -> TokenRun {
+        TokenRun::new(RunKind::Vision(h), off, len)
+    }
 
     #[test]
     fn cold_miss_then_hit() {
         let mut t = RadixTree::new(0);
-        let seq: Vec<u32> = (0..100).collect();
+        let seq = [tail(1, 100)];
         let (new, m1) = t.insert(&seq);
         assert_eq!(new, 100);
         t.release(&m1);
@@ -299,24 +407,85 @@ mod tests {
     }
 
     #[test]
-    fn partial_prefix_matches_with_split() {
+    fn partial_prefix_matches_with_split_at_run_boundary() {
         let mut t = RadixTree::new(0);
-        let a: Vec<u32> = (0..64).collect();
+        // a = prefix run + tail run; b shares the prefix run only.
+        let a = [TokenRun::new(RunKind::Prefix(3), 0, 32), tail(1, 32)];
         let (_, m) = t.insert(&a);
         t.release(&m);
-        // Shares first 32 tokens then diverges.
-        let b: Vec<u32> = (0..32).chain(1000..1032).collect();
+        let b = [TokenRun::new(RunKind::Prefix(3), 0, 32), tail(2, 32)];
         let m = t.match_prefix(&b);
         assert_eq!(m.matched_tokens, 32);
         t.release(&m);
         let (new, m2) = t.insert(&b);
         assert_eq!(new, 32);
         t.release(&m2);
-        // Both full sequences still match fully.
         for s in [&a, &b] {
-            let m = t.match_prefix(s);
-            assert_eq!(m.matched_tokens, s.len());
+            let m = t.match_prefix(s.as_slice());
+            assert_eq!(m.matched_tokens, 64);
             t.release(&m);
+        }
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mid_run_split_uses_run_arithmetic() {
+        let mut t = RadixTree::new(0);
+        let full = [vis(9, 0, 100)];
+        let (_, m) = t.insert(&full);
+        t.release(&m);
+        // A query for the first 40 vision tokens splits the 100-token
+        // run without touching individual tokens.
+        let part = [vis(9, 0, 40)];
+        let m = t.match_prefix(&part);
+        assert_eq!(m.matched_tokens, 40);
+        t.release(&m);
+        t.check_invariants().unwrap();
+        // The full sequence still matches across the split nodes.
+        let m = t.match_prefix(&full);
+        assert_eq!(m.matched_tokens, 100);
+        t.release(&m);
+        // A differently-chunked encoding of the same tokens matches too.
+        let chunked = [vis(9, 0, 25), vis(9, 25, 75)];
+        let m = t.match_prefix(&chunked);
+        assert_eq!(m.matched_tokens, 100);
+        t.release(&m);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn offset_mismatch_matches_nothing_past_divergence() {
+        let mut t = RadixTree::new(0);
+        let (_, m) = t.insert(&[vis(5, 0, 50)]);
+        t.release(&m);
+        // Same span, non-zero start: first token differs => no match.
+        let m = t.match_prefix(&[vis(5, 10, 40)]);
+        assert_eq!(m.matched_tokens, 0);
+        t.release(&m);
+        // Shares 10 tokens then jumps to offset 20: splits at 10.
+        let m = t.match_prefix(&[vis(5, 0, 10), vis(5, 20, 10)]);
+        assert_eq!(m.matched_tokens, 10);
+        t.release(&m);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn distinct_image_hashes_never_alias() {
+        // Regression for the old per-token id synthesis, which kept
+        // only 28 bits of the content hash: hashes differing above bit
+        // 27 aliased. Run-token identity compares the full hash.
+        let mut t = RadixTree::new(0);
+        let mut rng = Rng::new(0xA11A5);
+        for _ in 0..200 {
+            let h1 = rng.next_u64();
+            let h2 = h1 ^ (1u64 << 40); // identical low 28 bits
+            let a = [vis(h1, 0, 64)];
+            let b = [vis(h2, 0, 64)];
+            let (_, m) = t.insert(&a);
+            t.release(&m);
+            let q = t.match_prefix(&b);
+            assert_eq!(q.matched_tokens, 0, "distinct hashes aliased");
+            t.release(&q);
         }
         t.check_invariants().unwrap();
     }
@@ -324,7 +493,7 @@ mod tests {
     #[test]
     fn insert_same_sequence_adds_nothing() {
         let mut t = RadixTree::new(0);
-        let seq: Vec<u32> = (0..50).collect();
+        let seq = [tail(1, 50)];
         let (n1, m1) = t.insert(&seq);
         t.release(&m1);
         let (n2, m2) = t.insert(&seq);
@@ -337,8 +506,8 @@ mod tests {
     #[test]
     fn lru_eviction_prefers_cold_entries() {
         let mut t = RadixTree::new(0);
-        let cold: Vec<u32> = (0..100).collect();
-        let hot: Vec<u32> = (1000..1100).collect();
+        let cold = [tail(1, 100)];
+        let hot = [tail(2, 100)];
         let (_, m) = t.insert(&cold);
         t.release(&m);
         let (_, m) = t.insert(&hot);
@@ -348,7 +517,6 @@ mod tests {
         t.release(&m);
         let evicted = t.evict(50);
         assert!(evicted >= 50);
-        // Hot must still match; cold should be gone.
         let m = t.match_prefix(&hot);
         assert_eq!(m.matched_tokens, 100);
         t.release(&m);
@@ -361,7 +529,7 @@ mod tests {
     #[test]
     fn pinned_nodes_survive_eviction() {
         let mut t = RadixTree::new(0);
-        let seq: Vec<u32> = (0..80).collect();
+        let seq = [tail(1, 80)];
         let (_, pin) = t.insert(&seq); // keep pinned
         let evicted = t.evict(1000);
         assert_eq!(evicted, 0, "pinned path must not be evicted");
@@ -377,9 +545,8 @@ mod tests {
     fn capacity_bound_respected_when_unpinned() {
         let mut t = RadixTree::new(200);
         let mut rng = Rng::new(1);
-        for i in 0..50u32 {
-            let seq: Vec<u32> =
-                (0..rng.range_u64(10, 60) as u32).map(|k| i * 1000 + k).collect();
+        for i in 0..50u64 {
+            let seq = [tail(i, rng.range_u64(10, 60) as u32)];
             let (_, m) = t.insert(&seq);
             t.release(&m);
         }
@@ -392,28 +559,47 @@ mod tests {
     }
 
     #[test]
-    fn prop_radix_tree_consistency() {
+    fn eviction_cascades_to_parents_become_leaves() {
+        let mut t = RadixTree::new(0);
+        // Two sequences sharing a 32-token stem: the stem becomes an
+        // interior node; evicting both leaves must then allow evicting
+        // the stem (parent registered as candidate on child removal).
+        let a = [TokenRun::new(RunKind::Prefix(1), 0, 32), tail(1, 16)];
+        let b = [TokenRun::new(RunKind::Prefix(1), 0, 32), tail(2, 16)];
+        let (_, m) = t.insert(&a);
+        t.release(&m);
+        let (_, m) = t.insert(&b);
+        t.release(&m);
+        assert_eq!(t.cached_tokens(), 64);
+        assert_eq!(t.evict(1_000_000), 64, "everything unpinned must evict");
+        assert_eq!(t.cached_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_run_tree_consistency() {
         check(
-            0xADD1,
+            0xADD2,
             150,
             |g| {
                 let n_ops = g.usize_in(5, 60);
                 let mut rng = Rng::new(g.rng.next_u64());
                 (0..n_ops)
                     .map(|_| {
-                        // Sequences drawn from a small alphabet with
-                        // shared stems to force splits.
-                        let stem = rng.below(4) as u32;
-                        let len = rng.range_u64(1, 40) as usize;
-                        let seq: Vec<u32> = (0..len)
-                            .map(|i| {
-                                if i < len / 2 {
-                                    stem * 100 + i as u32
-                                } else {
-                                    rng.below(50) as u32
-                                }
-                            })
-                            .collect();
+                        // Small pools of kinds/offsets with shared stems
+                        // force splits, offset divergence, and re-merges.
+                        let mut seq = Vec::new();
+                        let n_runs = 1 + rng.below(4) as usize;
+                        for _ in 0..n_runs {
+                            let kind = match rng.below(3) {
+                                0 => RunKind::Prefix(1 + rng.below(2)),
+                                1 => RunKind::Vision(1 + rng.below(3)),
+                                _ => RunKind::Tail(1 + rng.below(5)),
+                            };
+                            let offset = [0, 0, 5, 17][rng.below(4) as usize];
+                            let len = 1 + rng.below(40) as u32;
+                            seq.push(TokenRun::new(kind, offset, len));
+                        }
                         (rng.below(3), seq)
                     })
                     .collect::<Vec<_>>()
@@ -429,8 +615,7 @@ mod tests {
                         }
                         1 => {
                             let m = t.match_prefix(seq);
-                            // Matched prefix must be an actual prefix.
-                            if m.matched_tokens > seq.len() {
+                            if m.matched_tokens > total_tokens(seq) {
                                 return Err("matched more than query".into());
                             }
                             t.release(&m);
@@ -448,13 +633,11 @@ mod tests {
                     t.release(m);
                 }
                 t.check_invariants()?;
-                // After inserting a sequence and releasing, match must
-                // return the full sequence (unless evicted, which can't
-                // happen while pinned — so re-insert one and verify).
-                let probe: Vec<u32> = vec![7, 7, 7];
+                // A pinned insert must stay matchable.
+                let probe = [TokenRun::new(RunKind::Tail(777), 0, 3)];
                 let (_, m) = t.insert(&probe);
                 let q = t.match_prefix(&probe);
-                if q.matched_tokens != probe.len() {
+                if q.matched_tokens != 3 {
                     return Err("pinned insert not matchable".into());
                 }
                 t.release(&q);

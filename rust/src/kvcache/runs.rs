@@ -1,0 +1,295 @@
+//! Run-length encoding of unified multimodal sequences (§3.3).
+//!
+//! A request's unified sequence — `[shared prefix][vision tokens][unique
+//! tail]` — is piecewise *arithmetic*: within each span, token `i` is
+//! fully determined by the span's identity and the offset `i`. Instead
+//! of materializing one `u32` per token (a single 904×904 image is
+//! ~6,516 vision tokens), the sequence is described by a handful of
+//! [`TokenRun`]s, each `{kind, offset, len}` where `kind` names the
+//! source span ([`RunKind::Prefix`] / [`RunKind::Vision`] /
+//! [`RunKind::Tail`]) and the run covers tokens `offset .. offset+len`
+//! of that span.
+//!
+//! **Token identity.** Token `i` of a run *is* the pair
+//! `(kind, offset + i)` — see [`RunToken`]. Two tokens are equal iff
+//! their kinds and absolute positions are equal, so distinct image
+//! hashes can never alias (the old per-token id synthesis truncated the
+//! content hash to 28 bits and could collide).
+//!
+//! **O(1) in-run compare rule.** For two runs `a`, `b`: if
+//! `a.kind == b.kind && a.offset == b.offset` then their first
+//! `min(a.len, b.len)` tokens are pairwise equal (both are
+//! `(kind, offset + i)`); if the kinds differ, or the offsets differ,
+//! then *zero* leading tokens are equal (`a.offset + i == b.offset + i`
+//! has no solution for `a.offset != b.offset`). A common-prefix walk
+//! over two run sequences therefore advances a whole run per step —
+//! O(#run boundaries), never O(#tokens) — regardless of how the two
+//! sides' run boundaries line up.
+
+/// Identity of the source span a run draws its tokens from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RunKind {
+    /// Shared text prefix (system prompt etc.), keyed by `prefix_id`.
+    Prefix(u64),
+    /// Vision tokens of one image, keyed by the 64-bit content hash.
+    Vision(u64),
+    /// Unique per-request prompt tail, keyed by the request id.
+    Tail(u64),
+}
+
+/// One arithmetic run of unified-sequence tokens: tokens
+/// `offset .. offset + len` of the span named by `kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenRun {
+    pub kind: RunKind,
+    pub offset: u32,
+    pub len: u32,
+}
+
+/// A single token's identity: `(source span, absolute position)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RunToken {
+    pub kind: RunKind,
+    pub pos: u32,
+}
+
+impl TokenRun {
+    pub fn new(kind: RunKind, offset: u32, len: u32) -> TokenRun {
+        TokenRun { kind, offset, len }
+    }
+
+    /// Identity of token `i` of this run.
+    pub fn token_at(&self, i: u32) -> RunToken {
+        debug_assert!(i < self.len, "token index {i} out of run of len {}", self.len);
+        RunToken { kind: self.kind, pos: self.offset + i }
+    }
+
+    pub fn first_token(&self) -> RunToken {
+        self.token_at(0)
+    }
+
+    /// The run with its first `from` tokens dropped.
+    pub fn slice_from(&self, from: u32) -> TokenRun {
+        debug_assert!(from <= self.len);
+        TokenRun { kind: self.kind, offset: self.offset + from, len: self.len - from }
+    }
+}
+
+/// Total token count of a run sequence.
+pub fn total_tokens(runs: &[TokenRun]) -> usize {
+    runs.iter().map(|r| r.len as usize).sum()
+}
+
+/// Split a run sequence at token position `at` (`0 < at < total`),
+/// cutting mid-run if `at` falls inside one.
+pub fn split_runs(runs: &[TokenRun], at: usize) -> (Vec<TokenRun>, Vec<TokenRun>) {
+    debug_assert!(at > 0 && at < total_tokens(runs), "split at {at} outside sequence");
+    let mut upper = Vec::new();
+    let mut lower = Vec::new();
+    let mut remaining = at;
+    for (i, r) in runs.iter().enumerate() {
+        if remaining == 0 {
+            lower.extend_from_slice(&runs[i..]);
+            break;
+        }
+        if (r.len as usize) <= remaining {
+            upper.push(*r);
+            remaining -= r.len as usize;
+        } else {
+            upper.push(TokenRun::new(r.kind, r.offset, remaining as u32));
+            lower.push(r.slice_from(remaining as u32));
+            lower.extend_from_slice(&runs[i + 1..]);
+            break;
+        }
+    }
+    (upper, lower)
+}
+
+/// Cursor over a run sequence, tracking a position in flattened-token
+/// space without ever enumerating tokens. `Copy` so callers can probe
+/// ahead and commit only on success.
+#[derive(Debug, Clone, Copy)]
+pub struct RunCursor<'a> {
+    runs: &'a [TokenRun],
+    idx: usize,
+    /// Tokens consumed of `runs[idx]` (strictly less than its len while
+    /// `idx` is in range).
+    within: u32,
+}
+
+impl<'a> RunCursor<'a> {
+    pub fn new(runs: &'a [TokenRun]) -> RunCursor<'a> {
+        let mut c = RunCursor { runs, idx: 0, within: 0 };
+        c.skip_empty();
+        c
+    }
+
+    fn skip_empty(&mut self) {
+        while self.idx < self.runs.len() && self.runs[self.idx].len == self.within {
+            self.idx += 1;
+            self.within = 0;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx >= self.runs.len()
+    }
+
+    /// Identity of the token at the cursor.
+    pub fn first_token(&self) -> RunToken {
+        self.runs[self.idx].token_at(self.within)
+    }
+
+    /// Remainder of the current run (the cursor's run sliced at its
+    /// position).
+    pub fn rest(&self) -> TokenRun {
+        self.runs[self.idx].slice_from(self.within)
+    }
+
+    /// Advance `n` tokens (may cross run boundaries).
+    pub fn advance(&mut self, mut n: usize) {
+        while n > 0 {
+            let rem = (self.runs[self.idx].len - self.within) as usize;
+            if n < rem {
+                self.within += n as u32;
+                return;
+            }
+            n -= rem;
+            self.idx += 1;
+            self.within = 0;
+            self.skip_empty();
+        }
+    }
+
+    pub fn remaining_tokens(&self) -> usize {
+        if self.is_empty() {
+            return 0;
+        }
+        (self.runs[self.idx].len - self.within) as usize
+            + total_tokens(&self.runs[self.idx + 1..])
+    }
+
+    /// Append the remaining runs (current run sliced at the cursor,
+    /// then the untouched rest) to `out`.
+    pub fn remaining_runs_into(&self, out: &mut Vec<TokenRun>) {
+        if self.is_empty() {
+            return;
+        }
+        out.push(self.rest());
+        for r in &self.runs[self.idx + 1..] {
+            if r.len > 0 {
+                out.push(*r);
+            }
+        }
+    }
+}
+
+/// Tokens shared between a node's edge label and the query cursor,
+/// advancing the cursor past them. O(#run boundaries) by the in-run
+/// compare rule (module docs) — no per-token loop.
+pub fn common_prefix_tokens(label: &[TokenRun], cur: &mut RunCursor<'_>) -> usize {
+    let mut n = 0usize;
+    let mut li = 0usize;
+    let mut lw = 0u32;
+    while li < label.len() {
+        if label[li].len == lw {
+            li += 1;
+            lw = 0;
+            continue;
+        }
+        if cur.is_empty() {
+            break;
+        }
+        let a = label[li].slice_from(lw);
+        let b = cur.rest();
+        if a.kind != b.kind || a.offset != b.offset {
+            break;
+        }
+        let step = a.len.min(b.len);
+        n += step as usize;
+        cur.advance(step as usize);
+        lw += step;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vis(h: u64, off: u32, len: u32) -> TokenRun {
+        TokenRun::new(RunKind::Vision(h), off, len)
+    }
+
+    #[test]
+    fn token_identity_is_kind_and_position() {
+        assert_eq!(vis(7, 0, 10).token_at(3), vis(7, 3, 7).token_at(0));
+        assert_ne!(vis(7, 0, 10).token_at(3), vis(8, 0, 10).token_at(3));
+        assert_ne!(vis(7, 0, 10).token_at(3), vis(7, 1, 10).token_at(3));
+    }
+
+    #[test]
+    fn split_runs_mid_run_and_on_boundary() {
+        let runs = [vis(1, 0, 10), vis(2, 0, 6)];
+        // Mid-run.
+        let (u, l) = split_runs(&runs, 4);
+        assert_eq!(u, vec![vis(1, 0, 4)]);
+        assert_eq!(l, vec![vis(1, 4, 6), vis(2, 0, 6)]);
+        assert_eq!(total_tokens(&u) + total_tokens(&l), 16);
+        // On a run boundary.
+        let (u, l) = split_runs(&runs, 10);
+        assert_eq!(u, vec![vis(1, 0, 10)]);
+        assert_eq!(l, vec![vis(2, 0, 6)]);
+    }
+
+    #[test]
+    fn cursor_advances_across_boundaries() {
+        let runs = [vis(1, 0, 5), vis(2, 0, 5)];
+        let mut c = RunCursor::new(&runs);
+        assert_eq!(c.remaining_tokens(), 10);
+        c.advance(7);
+        assert_eq!(c.first_token(), vis(2, 0, 5).token_at(2));
+        assert_eq!(c.remaining_tokens(), 3);
+        c.advance(3);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn common_prefix_matches_flattened_semantics() {
+        // Differently-chunked encodings of the same flattened tokens
+        // must compare equal: [V1 0..10] vs [V1 0..4][V1 4..10].
+        let a = [vis(1, 0, 10)];
+        let b = [vis(1, 0, 4), vis(1, 4, 6)];
+        let mut cur = RunCursor::new(&b);
+        assert_eq!(common_prefix_tokens(&a, &mut cur), 10);
+        assert!(cur.is_empty());
+    }
+
+    #[test]
+    fn common_prefix_stops_at_offset_mismatch() {
+        // [V1 0..10] vs [V1 0..4][V1 20..26]: 4 tokens agree, then the
+        // absolute positions diverge (4 vs 20).
+        let label = [vis(1, 0, 10)];
+        let query = [vis(1, 0, 4), vis(1, 20, 6)];
+        let mut cur = RunCursor::new(&query);
+        assert_eq!(common_prefix_tokens(&label, &mut cur), 4);
+        assert_eq!(cur.first_token(), RunToken { kind: RunKind::Vision(1), pos: 20 });
+    }
+
+    #[test]
+    fn common_prefix_stops_at_kind_mismatch() {
+        let label = [vis(1, 0, 8)];
+        let query = [vis(1, 0, 5), TokenRun::new(RunKind::Tail(9), 5, 5)];
+        let mut cur = RunCursor::new(&query);
+        assert_eq!(common_prefix_tokens(&label, &mut cur), 5);
+    }
+
+    #[test]
+    fn common_prefix_label_longer_than_query() {
+        let label = [vis(1, 0, 20)];
+        let query = [vis(1, 0, 7)];
+        let mut cur = RunCursor::new(&query);
+        assert_eq!(common_prefix_tokens(&label, &mut cur), 7);
+        assert!(cur.is_empty());
+    }
+}

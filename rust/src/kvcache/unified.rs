@@ -3,17 +3,20 @@
 //!
 //! 1. the [`ImageCache`] pool for tokens encoded from multimodal inputs
 //!    (hash hit ⇒ skip re-encoding), and
-//! 2. the [`RadixTree`] pool for KV prefixes of *unified* sequences
-//!    (vision tokens merged with text tokens ⇒ longest-prefix hit skips
-//!    that much prefill).
+//! 2. the run-length [`RadixTree`] pool for KV prefixes of *unified*
+//!    sequences (vision tokens merged with text tokens ⇒ longest-prefix
+//!    hit skips that much prefill).
 //!
-//! For the simulator, a request's "unified sequence" is synthesized
-//! deterministically from its shared-prefix id, its images' content
-//! hashes, and its own id, so two requests share cached tokens exactly
-//! when the paper's hashing scheme would say they do.
+//! A request's unified sequence is described by a handful of
+//! [`TokenRun`] descriptors (`Request::unified_runs_into`) — one run per
+//! shared prefix / image / tail span — so the admission path does
+//! **zero per-token work**: no `Vec<u32>` with one element per token is
+//! ever materialized, prefix matching costs O(#runs), and the run
+//! buffer itself is pooled on the cache and reused across requests.
 
 use super::image_cache::{hash_image_desc, ImageCache};
 use super::radix::{MatchResult, RadixTree};
+use super::runs::{total_tokens, TokenRun};
 use crate::config::ModelConfig;
 use crate::workload::Request;
 
@@ -46,6 +49,9 @@ pub struct UnifiedCache {
     pub kv_pool: RadixTree,
     /// When false the whole cache is a no-op (ablation: ElasticMM-EMP).
     pub enabled: bool,
+    /// Pooled run buffer: `process` reuses it across requests so the
+    /// admission path allocates nothing once warm.
+    run_scratch: Vec<TokenRun>,
 }
 
 impl UnifiedCache {
@@ -54,6 +60,7 @@ impl UnifiedCache {
             image_pool: ImageCache::new(image_pool_tokens),
             kv_pool: RadixTree::new(kv_pool_tokens),
             enabled: true,
+            run_scratch: Vec::new(),
         }
     }
 
@@ -63,38 +70,16 @@ impl UnifiedCache {
         c
     }
 
-    /// Build the unified token sequence for a request. Layout:
-    /// `[shared prefix tokens][image tokens][unique tail tokens]` —
-    /// matching the paper's "merge vision tokens with text tokens, then
-    /// check the prefix tree" order. Token values are synthesized ids:
-    /// real token identity is irrelevant to scheduling, only *equality
-    /// structure* matters.
-    pub fn unified_sequence(&self, req: &Request, model: &ModelConfig) -> Vec<u32> {
-        let mut seq = Vec::new();
-        // Shared text prefix (system prompt etc.).
-        if req.prefix_id != 0 {
-            let base = 0x1000_0000u32 + (req.prefix_id as u32) * 0x10000;
-            for i in 0..req.prefix_tokens {
-                seq.push(base + i as u32);
-            }
-        }
-        // Vision tokens, identified by content hash so identical images
-        // in different requests produce identical token runs.
-        for img in req.images.iter() {
-            let h = hash_image_desc(img.content_id, img.width, img.height);
-            let n = model.image_tokens(img.width, img.height);
-            let base = 0x4000_0000u32 | ((h as u32) & 0x0FFF_FFFF);
-            for i in 0..n {
-                seq.push(base ^ (i as u32).rotate_left(8) | 0x4000_0000);
-            }
-        }
-        // Unique per-request tail (the rest of the prompt).
-        let tail = req.prompt_tokens - req.prefix_tokens.min(req.prompt_tokens);
-        let base = 0x8000_0000u32 | ((req.id as u32) << 12);
-        for i in 0..tail {
-            seq.push(base.wrapping_add(i as u32));
-        }
-        seq
+    /// Build the unified run sequence for a request. Layout:
+    /// `[shared prefix][image runs][unique tail]` — matching the paper's
+    /// "merge vision tokens with text tokens, then check the prefix
+    /// tree" order. Convenience wrapper over
+    /// [`Request::unified_runs_into`]; the hot path uses the pooled
+    /// buffer instead.
+    pub fn unified_sequence(&self, req: &Request, model: &ModelConfig) -> Vec<TokenRun> {
+        let mut runs = Vec::new();
+        req.unified_runs_into(model, &mut runs);
+        runs
     }
 
     /// Process a request through both pools. On return:
@@ -102,6 +87,8 @@ impl UnifiedCache {
     /// * `prefix_hit_tokens` of prefill can be skipped,
     /// * the request's unified sequence has been inserted (so subsequent
     ///   identical requests hit) and pinned until [`release`].
+    ///
+    /// [`release`]: UnifiedCache::release
     pub fn process(&mut self, req: &Request, model: &ModelConfig) -> CacheOutcome {
         let vision_total: usize = req.vision_tokens(model);
         if !self.enabled {
@@ -130,15 +117,17 @@ impl UnifiedCache {
                 self.image_pool.insert(h, n, None);
             }
         }
-        // Pool 2: unified-sequence prefix.
-        let seq = self.unified_sequence(req, model);
-        let (_new_tokens, kv_path) = self.kv_pool.insert(&seq);
-        let prefix_hit_tokens = seq.len() - _new_tokens;
+        // Pool 2: unified-sequence prefix over token runs.
+        let mut runs = std::mem::take(&mut self.run_scratch);
+        req.unified_runs_into(model, &mut runs);
+        let total = total_tokens(&runs);
+        let (new_tokens, kv_path) = self.kv_pool.insert(&runs);
+        self.run_scratch = runs;
         CacheOutcome {
             images_to_encode,
             vision_tokens_cached,
-            prefix_hit_tokens,
-            total_tokens: seq.len(),
+            prefix_hit_tokens: total - new_tokens,
+            total_tokens: total,
             kv_path,
         }
     }
@@ -173,6 +162,7 @@ pub struct CacheStats {
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::kvcache::runs::RunKind;
     use crate::workload::ImageRef;
 
     fn mm_request(id: u64, content_id: u64, prefix_id: u64) -> Request {
@@ -239,8 +229,8 @@ mod tests {
         let r1 = mm_request(1, 5, 3);
         let o1 = c.process(&r1, &model);
         c.release(&o1);
-        // Same id => identical synthesized tail => full sequence hit
-        // (models a retried/duplicated request).
+        // Same id => identical run sequence => full hit (models a
+        // retried/duplicated request).
         let o2 = c.process(&r1, &model);
         assert_eq!(o2.prefix_hit_tokens, o2.total_tokens);
         assert_eq!(o2.prefill_tokens(), 0);
@@ -285,10 +275,47 @@ mod tests {
     }
 
     #[test]
-    fn sequence_length_matches_input_len() {
+    fn run_lengths_match_input_len() {
         let model = presets::qwen25_vl_7b();
         let c = UnifiedCache::new(0, 0);
         let r = mm_request(7, 9, 2);
-        assert_eq!(c.unified_sequence(&r, &model).len(), r.input_len(&model));
+        assert_eq!(total_tokens(&c.unified_sequence(&r, &model)), r.input_len(&model));
+    }
+
+    #[test]
+    fn vision_runs_carry_the_full_image_hash() {
+        // Regression for the old per-token id synthesis
+        // (`base ^ rot | 0x4000_0000`), which kept only 28 bits of the
+        // content hash and could alias tokens across distinct images.
+        // Run identity is the full 64-bit hash plus the exact offset.
+        let model = presets::qwen25_vl_7b();
+        let c = UnifiedCache::new(0, 0);
+        let s1 = c.unified_sequence(&mm_request(1, 10, 0), &model);
+        let s2 = c.unified_sequence(&mm_request(2, 11, 0), &model);
+        assert_eq!(s1[0].kind, RunKind::Vision(hash_image_desc(10, 904, 904)));
+        assert_eq!(s2[0].kind, RunKind::Vision(hash_image_desc(11, 904, 904)));
+        assert_ne!(s1[0].kind, s2[0].kind, "distinct images must never alias");
+        // And two distinct hashes never produce a prefix hit.
+        let mut cache = UnifiedCache::new(1_000_000, 1_000_000);
+        let o1 = cache.process(&mm_request(1, 10, 0), &model);
+        cache.release(&o1);
+        let o2 = cache.process(&mm_request(2, 11, 0), &model);
+        assert_eq!(o2.prefix_hit_tokens, 0);
+        cache.release(&o2);
+    }
+
+    #[test]
+    fn duplicate_image_within_one_request_forms_two_runs() {
+        let model = presets::qwen25_vl_7b();
+        let c = UnifiedCache::new(0, 0);
+        let mut r = mm_request(1, 5, 0);
+        let img = ImageRef { width: 904, height: 904, content_id: 5 };
+        r.images = vec![img, img].into();
+        let runs = c.unified_sequence(&r, &model);
+        // vision, vision, tail — both vision runs restart at offset 0.
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0].offset, 0);
+        assert_eq!(total_tokens(&runs), r.input_len(&model));
     }
 }

@@ -5,6 +5,8 @@ pub mod datasets;
 pub mod arrival;
 pub mod trace;
 
+use crate::kvcache::runs::{RunKind, TokenRun};
+
 /// Request modality (the paper's two modality groups).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Modality {
@@ -75,6 +77,46 @@ impl Request {
     pub fn input_len(&self, model: &crate::config::ModelConfig) -> usize {
         self.prompt_tokens + self.vision_tokens(model)
     }
+
+    /// Run-length unified sequence (§3.3) — the request's
+    /// `[shared prefix][vision tokens][unique tail]` token stream as a
+    /// handful of [`TokenRun`] descriptors instead of one id per token.
+    /// O(#images), zero per-token work; clears and reuses `out` so the
+    /// admission hot path allocates nothing once the buffer is warm.
+    pub fn unified_runs_into(
+        &self,
+        model: &crate::config::ModelConfig,
+        out: &mut Vec<TokenRun>,
+    ) {
+        out.clear();
+        // Shared text prefix (system prompt etc.).
+        if self.prefix_id != 0 && self.prefix_tokens > 0 {
+            out.push(TokenRun::new(
+                RunKind::Prefix(self.prefix_id),
+                0,
+                self.prefix_tokens as u32,
+            ));
+        }
+        // Vision tokens, identified by the full 64-bit content hash so
+        // identical images in different requests produce identical runs
+        // and distinct images can never alias.
+        for img in self.images.iter() {
+            let h = crate::kvcache::image_cache::hash_image_desc(
+                img.content_id,
+                img.width,
+                img.height,
+            );
+            let n = model.image_tokens(img.width, img.height) as u32;
+            if n > 0 {
+                out.push(TokenRun::new(RunKind::Vision(h), 0, n));
+            }
+        }
+        // Unique per-request tail (the rest of the prompt).
+        let tail = self.prompt_tokens - self.prefix_tokens.min(self.prompt_tokens);
+        if tail > 0 {
+            out.push(TokenRun::new(RunKind::Tail(self.id), 0, tail as u32));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +150,24 @@ mod tests {
         let m = presets::qwen25_vl_7b();
         let r = req(vec![ImageRef { width: 904, height: 904, content_id: 7 }]);
         assert_eq!(r.input_len(&m), 100 + m.image_tokens(904, 904));
+    }
+
+    #[test]
+    fn unified_runs_cover_exactly_the_input() {
+        let m = presets::qwen25_vl_7b();
+        let mut r = req(vec![ImageRef { width: 904, height: 904, content_id: 7 }]);
+        r.prefix_id = 3;
+        r.prefix_tokens = 40;
+        let mut runs = Vec::new();
+        r.unified_runs_into(&m, &mut runs);
+        // [prefix][vision][tail] — three runs, no per-token expansion.
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0], TokenRun::new(RunKind::Prefix(3), 0, 40));
+        assert!(matches!(runs[1].kind, RunKind::Vision(_)));
+        assert_eq!(runs[1].len as usize, m.image_tokens(904, 904));
+        assert_eq!(runs[2], TokenRun::new(RunKind::Tail(1), 0, 60));
+        let total: usize = runs.iter().map(|x| x.len as usize).sum();
+        assert_eq!(total, r.input_len(&m));
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Differential property test for the run-length prefix cache: the
+//! production `RadixTree` (run-length labels, O(1) in-run compares,
+//! heap LRU) must be **bit-identical** to the per-token
+//! `TokenRadixTree` oracle — same `matched_tokens`, same new-token
+//! counts, same eviction totals, same resident token count after every
+//! operation — across randomized multimodal workloads.
+//!
+//! The bridge is `TokenInterner`: it expands each run sequence into
+//! per-token ids whose equality structure is exactly run-token
+//! `(kind, position)` identity, so any divergence is a bug in the
+//! run-length tree (or the oracle), never an artifact of the encoding.
+//!
+//! Two workload shapes:
+//! * dataset-derived — requests from a redundancy-heavy ShareGPT-4o-like
+//!   spec (duplicated image content, hot shared prefixes, clamped
+//!   prefix spans that force mid-run splits);
+//! * adversarial synthetic — short run sequences over tiny kind/offset
+//!   pools, exercising offset mismatches, differently-chunked runs, and
+//!   split/evict churn far denser than real traces.
+
+use elasticmm::config::presets;
+use elasticmm::kvcache::radix::{MatchResult, RadixTree};
+use elasticmm::kvcache::runs::{total_tokens, RunKind, TokenRun};
+use elasticmm::kvcache::token_oracle::{TokenInterner, TokenMatchResult, TokenRadixTree};
+use elasticmm::util::proptest::check;
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::datasets::DatasetSpec;
+
+/// One differential step: apply the same operation to both trees and
+/// compare every observable.
+struct Pair {
+    fast: RadixTree,
+    oracle: TokenRadixTree,
+    interner: TokenInterner,
+    toks: Vec<u32>,
+    held: Vec<(MatchResult, TokenMatchResult)>,
+}
+
+impl Pair {
+    fn new(capacity: usize) -> Pair {
+        Pair {
+            fast: RadixTree::new(capacity),
+            oracle: TokenRadixTree::new(capacity),
+            interner: TokenInterner::default(),
+            toks: Vec::new(),
+            held: Vec::new(),
+        }
+    }
+
+    fn step(&mut self, op: u64, runs: &[TokenRun]) -> Result<(), String> {
+        self.interner.materialize(runs, &mut self.toks);
+        debug_assert_eq!(self.toks.len(), total_tokens(runs));
+        match op % 4 {
+            0 => {
+                let mf = self.fast.match_prefix(runs);
+                let mo = self.oracle.match_prefix(&self.toks);
+                if mf.matched_tokens != mo.matched_tokens {
+                    return Err(format!(
+                        "match diverged: run-length {} vs oracle {}",
+                        mf.matched_tokens, mo.matched_tokens
+                    ));
+                }
+                self.fast.release(&mf);
+                self.oracle.release(&mo);
+            }
+            1 => {
+                // Insert and hold the pin (models an in-flight request).
+                let (nf, mf) = self.fast.insert(runs);
+                let (no, mo) = self.oracle.insert(&self.toks);
+                if nf != no || mf.matched_tokens != mo.matched_tokens {
+                    return Err(format!(
+                        "insert diverged: run-length ({nf}, {}) vs oracle ({no}, {})",
+                        mf.matched_tokens, mo.matched_tokens
+                    ));
+                }
+                self.held.push((mf, mo));
+            }
+            2 => {
+                // Insert and release immediately (request admitted and
+                // its prefill finished).
+                let (nf, mf) = self.fast.insert(runs);
+                let (no, mo) = self.oracle.insert(&self.toks);
+                if nf != no {
+                    return Err(format!("insert diverged: {nf} vs {no}"));
+                }
+                self.fast.release(&mf);
+                self.oracle.release(&mo);
+            }
+            _ => {
+                // Release the most recent pin and force an eviction wave.
+                if let Some((mf, mo)) = self.held.pop() {
+                    self.fast.release(&mf);
+                    self.oracle.release(&mo);
+                }
+                let target = (op / 4 % 5000) as usize;
+                let ef = self.fast.evict(target);
+                let eo = self.oracle.evict(target);
+                if ef != eo {
+                    return Err(format!("evict({target}) diverged: {ef} vs {eo}"));
+                }
+            }
+        }
+        if self.fast.cached_tokens() != self.oracle.cached_tokens() {
+            return Err(format!(
+                "resident tokens diverged: run-length {} vs oracle {}",
+                self.fast.cached_tokens(),
+                self.oracle.cached_tokens()
+            ));
+        }
+        self.fast.check_invariants()?;
+        self.oracle.check_invariants()?;
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<(), String> {
+        for (mf, mo) in &self.held {
+            self.fast.release(mf);
+            self.oracle.release(mo);
+        }
+        let ef = self.fast.evict(usize::MAX / 2);
+        let eo = self.oracle.evict(usize::MAX / 2);
+        if ef != eo {
+            return Err(format!("final evict diverged: {ef} vs {eo}"));
+        }
+        if self.fast.cached_tokens() != self.oracle.cached_tokens() {
+            return Err("final resident tokens diverged".into());
+        }
+        self.fast.check_invariants()?;
+        self.oracle.check_invariants()
+    }
+}
+
+#[test]
+fn run_tree_matches_per_token_oracle_on_multimodal_workloads() {
+    let model = presets::qwen25_vl_7b();
+    check(
+        0xD1FF,
+        30,
+        |g| {
+            let n = g.usize_in(10, 50);
+            // 0 = unbounded; small caps force heavy eviction churn
+            // (one 904px image is ~6.5k tokens).
+            let cap = [0usize, 8_000, 30_000][g.usize_in(0, 2)];
+            (n, cap, g.rng.next_u64())
+        },
+        |&(n, cap, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut spec = DatasetSpec::sharegpt4o();
+            spec.image_pool = 6; // heavy duplicate image content
+            spec.prefix_pool = 3; // hot shared prefixes
+            spec.shared_prefix_fraction = 0.7;
+            spec.multimodal_fraction = 0.7;
+            let reqs = spec.generate(&mut rng, n);
+            let mut pair = Pair::new(cap);
+            let mut runs = Vec::new();
+            for r in &reqs {
+                r.unified_runs_into(&model, &mut runs);
+                pair.step(rng.next_u64(), &runs)?;
+            }
+            pair.finish()
+        },
+    );
+}
+
+#[test]
+fn run_tree_matches_oracle_on_adversarial_run_sequences() {
+    check(
+        0xD2FF,
+        60,
+        |g| {
+            let n_ops = g.usize_in(5, 50);
+            (n_ops, g.rng.next_u64())
+        },
+        |&(n_ops, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut pair = Pair::new(300);
+            for _ in 0..n_ops {
+                // Tiny pools of kinds and offsets: sequences constantly
+                // share stems, diverge mid-run, and re-chunk the same
+                // flattened tokens across different run boundaries.
+                let mut seq = Vec::new();
+                let n_runs = 1 + rng.below(4) as usize;
+                for _ in 0..n_runs {
+                    let kind = match rng.below(3) {
+                        0 => RunKind::Prefix(1 + rng.below(2)),
+                        1 => RunKind::Vision(1 + rng.below(3)),
+                        _ => RunKind::Tail(1 + rng.below(5)),
+                    };
+                    let offset = [0, 0, 5, 17][rng.below(4) as usize];
+                    let len = 1 + rng.below(40) as u32;
+                    seq.push(TokenRun::new(kind, offset, len));
+                }
+                pair.step(rng.next_u64(), &seq)?;
+            }
+            pair.finish()
+        },
+    );
+}

@@ -123,6 +123,56 @@ fn all_systems_uphold_driver_contract() {
     );
 }
 
+/// Multimodal-heavy trace with aggressive content redundancy: a tiny
+/// image pool (almost every image repeats) and a handful of hot shared
+/// prefixes, so the unified prefix cache's hit paths — image-pool
+/// encode skips and run-length radix prefix hits — fire constantly.
+fn multimodal_heavy_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut spec = DatasetSpec::sharegpt4o();
+    spec.name = "mm-heavy".to_string();
+    spec.multimodal_fraction = 0.9;
+    spec.image_pool = 12;
+    spec.shared_prefix_fraction = 0.85;
+    spec.prefix_pool = 4;
+    let mut rng = Rng::new(seed);
+    let mut reqs = spec.generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+#[test]
+fn multimodal_heavy_trace_exercises_cache_hit_paths() {
+    let reqs = multimodal_heavy_trace(120, 8.0, 0xCAFE);
+    // Every system upholds the contract (completion, causal timing, KV
+    // release, invariants, determinism) on the cache-heavy trace, on
+    // both decode paths.
+    for ff in [false, true] {
+        contract(
+            "EmpSystem",
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full(8)),
+            &reqs,
+        )
+        .unwrap();
+        contract(
+            "EmpSystem/static",
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::static_split(4)),
+            &reqs,
+        )
+        .unwrap();
+        contract("CoupledVllm", || CoupledVllm::new(cost(), sched(ff), 8), &reqs).unwrap();
+        contract("DecoupledStatic", || DecoupledStatic::new(cost(), sched(ff), 8), &reqs)
+            .unwrap();
+    }
+    // The trace must actually drive the cache: duplicated image content
+    // skips re-encoding, and shared prefixes + repeated images produce
+    // radix prefix hits (prefill actually skipped).
+    let mut sys = EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8));
+    let rep = sys.run(&reqs);
+    assert_eq!(rep.records.len(), reqs.len());
+    assert!(sys.stats.encode_cache_hits > 0, "no image-pool hits on a 12-image pool");
+    assert!(sys.stats.prefix_hit_tokens > 0, "no KV prefix hits despite hot prefixes");
+}
+
 #[test]
 fn systems_agree_on_the_workload_not_the_schedule() {
     // Same trace through all three systems: completion sets must be
