@@ -19,7 +19,7 @@
 //! either way.
 
 use elasticmm::config::presets;
-use elasticmm::kvcache::image_cache::{hash_image_desc, ImageCache};
+use elasticmm::kvcache::image_cache::ImageCache;
 use elasticmm::kvcache::token_oracle::{TokenInterner, TokenRadixTree};
 use elasticmm::kvcache::unified::UnifiedCache;
 use elasticmm::util::cli::Args;
@@ -61,7 +61,7 @@ fn run_length_path(trace: &[Request], model: &elasticmm::config::ModelConfig) ->
     for r in trace {
         let o = cache.process(r, model);
         hit += o.prefix_hit_tokens as u64;
-        encoded += o.images_to_encode.len() as u64;
+        encoded += o.media_to_encode.len() as u64;
         total += o.total_tokens as u64;
         cache.release(&o);
     }
@@ -84,20 +84,34 @@ fn per_token_path(trace: &[Request], model: &elasticmm::config::ModelConfig) -> 
     let (mut hit, mut encoded, mut total) = (0u64, 0u64, 0u64);
     let t0 = Instant::now();
     for r in trace {
-        for img in r.images.iter() {
-            let h = hash_image_desc(img.content_id, img.width, img.height);
-            let n = model.image_tokens(img.width, img.height);
-            if image_pool.lookup(h).is_none() {
-                encoded += 1;
-                image_pool.insert(h, n, None);
-            }
-        }
         r.unified_runs_into(model, &mut runs);
         interner.materialize(&runs, &mut toks); // the per-token Vec<u32>
-        let (new_tokens, m) = kv.insert(&toks);
-        hit += (toks.len() - new_tokens) as u64;
+        let (new_tokens, mr) = kv.insert(&toks);
+        let prefix_hit = toks.len() - new_tokens;
+        // Same media-pool rule as `UnifiedCache::process`: encode jobs
+        // only for attachments neither pooled nor fully covered by the
+        // KV prefix hit.
+        let text_prefix = if r.prefix_id != 0 { r.prefix_tokens } else { 0 };
+        let mut span_start = text_prefix;
+        for m in r.media.iter() {
+            let h = m.content_hash();
+            let n = m.tokens(model);
+            let kv_covered = prefix_hit >= span_start + n;
+            if image_pool.lookup(h).is_some() || kv_covered {
+                if kv_covered {
+                    image_pool.insert(h, n, None);
+                }
+            } else {
+                // Count encode *jobs* (a video miss is one per chunk),
+                // matching `CacheOutcome::media_to_encode` semantics.
+                m.encode_jobs(model, |_| encoded += 1);
+                image_pool.insert(h, n, None);
+            }
+            span_start += n;
+        }
+        hit += prefix_hit as u64;
         total += toks.len() as u64;
-        kv.release(&m);
+        kv.release(&mr);
     }
     PathResult {
         wall_s: t0.elapsed().as_secs_f64(),
@@ -132,9 +146,9 @@ fn main() {
     let n = args.get_usize("requests", if smoke { 1_500 } else { 10_000 });
     let seed = args.get_u64("seed", 11);
     let trace = mm_trace(n, seed);
-    let images: usize = trace.iter().map(|r| r.images.len()).sum();
+    let images: usize = trace.iter().map(|r| r.media.len()).sum();
     println!(
-        "=== cache_throughput: {n} requests, {images} images, image pool {IMAGE_POOL_TOKENS} tok, kv pool {KV_POOL_TOKENS} tok{} ===",
+        "=== cache_throughput: {n} requests, {images} media, media pool {IMAGE_POOL_TOKENS} tok, kv pool {KV_POOL_TOKENS} tok{} ===",
         if smoke { " (smoke)" } else { "" }
     );
 

@@ -103,7 +103,7 @@ fn main() {
     let (mut txt, mut mm) = (Vec::new(), Vec::new());
     for r in &reqs {
         let len = r.input_len(&model) as f64;
-        if r.images.is_empty() {
+        if r.media.is_empty() {
             txt.push(len)
         } else {
             mm.push(len)

@@ -49,6 +49,15 @@ fn decode_heavy_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
     reqs
 }
 
+/// Mixed 4-modality trace (text + image + video + audio): chunked video
+/// encode and the N-way group registry on the EMP system's hot path.
+fn mixed_modality_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = elasticmm::util::rng::Rng::new(seed);
+    let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
 struct Measurement {
     wall_s: f64,
     events: u64,
@@ -119,7 +128,19 @@ fn main() {
         measure(EmpSystem::new(cost(), sched(ff), gpus, EmpOptions::full(gpus)), t)
     });
 
-    let max_speedup = coupled_speedup.max(decoupled_speedup).max(emp_speedup);
+    // Mixed-modality row: the N-way registry (4 modality groups) over a
+    // text+image+video+audio trace with chunked video encoding.
+    let nway_gpus = gpus.max(4);
+    let mixed = mixed_modality_trace(n / 2, qps, seed ^ 0x4DA1);
+    let (nway_json, nway_speedup) = bench_system("emp-nway/mixed", &mixed, |ff, t| {
+        measure(
+            EmpSystem::new(cost(), sched(ff), nway_gpus, EmpOptions::full_nway(nway_gpus)),
+            t,
+        )
+    });
+
+    let max_speedup =
+        coupled_speedup.max(decoupled_speedup).max(emp_speedup).max(nway_speedup);
     println!("max fast-forward speedup: {max_speedup:.2}x");
 
     let out = Json::obj(vec![
@@ -137,6 +158,7 @@ fn main() {
                 ("coupled", coupled_json),
                 ("decoupled", decoupled_json),
                 ("emp", emp_json),
+                ("emp_nway_mixed", nway_json),
             ]),
         ),
     ]);

@@ -43,7 +43,7 @@ fn main() {
     println!("  KV migrations (sequences):   {}", sys.stats.migrated_seqs);
     println!("  DP prefill iterations:       {}", sys.stats.dp_prefill_iters);
     println!("  encode cache hits:           {}", sys.stats.encode_cache_hits);
-    let (txt, mm) = report.split_by_modality();
+    let (txt, mm) = report.split_text_media();
     println!(
         "\nmean TTFT: text {:.3}s, multimodal {:.3}s; p90 multimodal {:.3}s",
         txt.mean_ttft(),

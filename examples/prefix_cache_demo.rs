@@ -6,7 +6,7 @@
 
 use elasticmm::config::presets;
 use elasticmm::kvcache::unified::UnifiedCache;
-use elasticmm::workload::{ImageRef, Request};
+use elasticmm::workload::{MediaRef, Request};
 
 fn req(id: u64, content_id: Option<u64>, prefix_id: u64) -> Request {
     Request {
@@ -14,8 +14,8 @@ fn req(id: u64, content_id: Option<u64>, prefix_id: u64) -> Request {
         arrival: 0.0,
         prompt_tokens: 300,
         output_tokens: 32,
-        images: content_id
-            .map(|c| vec![ImageRef { width: 904, height: 904, content_id: c }])
+        media: content_id
+            .map(|c| vec![MediaRef::image(904, 904, c)])
             .unwrap_or_default()
             .into(),
         prefix_id,
@@ -38,9 +38,9 @@ fn main() {
         let o = cache.process(r, &model);
         println!(
             "{label:<52} {:>8} {:>10} {:>10}",
-            if o.images_to_encode.is_empty() && !r.images.is_empty() {
+            if o.media_to_encode.is_empty() && !r.media.is_empty() {
                 "cached"
-            } else if r.images.is_empty() {
+            } else if r.media.is_empty() {
                 "n/a"
             } else {
                 "yes"

@@ -77,7 +77,7 @@ impl CoupledVllm {
         let n_inst = (num_gpus / tp).max(1);
         let kv_tokens = cost.kv_pool_tokens(tp, sched.kv_memory_fraction);
         let instances = (0..n_inst)
-            .map(|i| Instance::new(i, tp, StageRole::Unified, GroupId::Multimodal, kv_tokens))
+            .map(|i| Instance::new(i, tp, StageRole::Unified, GroupId(0), kv_tokens))
             .collect();
         let prefill_token_budget = sched.unified_prefill_token_budget;
         CoupledVllm {
@@ -138,7 +138,7 @@ impl CoupledVllm {
         q: &mut SimQueue<'_, E>,
         wrap: &impl Fn(CoupledEv) -> E,
     ) {
-        let vis = req.vision_tokens(&self.cost.model);
+        let vis = req.media_tokens(&self.cost.model);
         let mut sr = SimRequest::new(req, vis);
         // Coupled system has no separate encode queue.
         if sr.phase == Phase::WaitEncode {
@@ -179,11 +179,10 @@ impl CoupledVllm {
             }
             let id = r.req.id;
             let input_len = r.input_len;
-            // Inline (blocking) encoding for each image still pending.
-            for img in r.req.images.iter() {
-                encode_s += self.cost.preprocess_time(img.width, img.height);
-                let vt = self.cost.model.image_tokens(img.width, img.height);
-                encode_s += self.cost.encode_time(vt, self.instances[inst].tp);
+            // Inline (blocking) encoding for every media attachment
+            // (all of a video's chunks, serially — Fig 1a).
+            for m in r.req.media.iter() {
+                encode_s += self.cost.media_encode_time(m, self.instances[inst].tp);
             }
             batch_items.push(PrefillItem {
                 new_tokens: input_len,
@@ -464,7 +463,7 @@ mod tests {
         // encode time; text-only must not.
         let mut sys = system(8);
         let rep = sys.run(&trace(120, 0.2, 5));
-        let (txt, mm) = rep.split_by_modality();
+        let (txt, mm) = rep.split_text_media();
         assert!(!txt.records.is_empty() && !mm.records.is_empty());
         assert!(mm.mean_ttft() > txt.mean_ttft());
     }

@@ -58,9 +58,12 @@ impl ServingSystem for DecoupledStatic {
     type Ev = DecoupledEv;
 
     fn route(&mut self, req: Request, q: &mut SimQueue<'_, DecoupledEv>) {
-        match req.modality() {
-            Modality::TextOnly => self.text.admit(req, q, &DecoupledEv::Text),
-            Modality::Multimodal => self.multimodal.admit(req, q, &DecoupledEv::Multimodal),
+        if req.modality() == Modality::Text {
+            self.text.admit(req, q, &DecoupledEv::Text)
+        } else {
+            // All media classes share the multimodal fleet (the paper's
+            // baseline decouples text from everything else).
+            self.multimodal.admit(req, q, &DecoupledEv::Multimodal)
         }
     }
 
@@ -149,8 +152,8 @@ mod tests {
             8,
         );
         let rep_coup = coup.run(&t);
-        let (txt_dec, _) = rep_dec.split_by_modality();
-        let (txt_coup, _) = rep_coup.split_by_modality();
+        let (txt_dec, _) = rep_dec.split_text_media();
+        let (txt_coup, _) = rep_coup.split_text_media();
         assert!(
             txt_dec.mean_ttft() < txt_coup.mean_ttft(),
             "decoupled text ttft {} should beat coupled {}",
@@ -168,8 +171,8 @@ mod tests {
             DecoupledStatic::with_split(cost(), SchedulerConfig::default(), 2, 6);
         let a = text_heavy.run(&t);
         let b = mm_heavy.run(&t);
-        let (_, mm_a) = a.split_by_modality();
-        let (_, mm_b) = b.split_by_modality();
+        let (_, mm_a) = a.split_text_media();
+        let (_, mm_b) = b.split_text_media();
         // Giving the multimodal group 3x the GPUs must help mm latency.
         assert!(mm_b.mean_ttft() < mm_a.mean_ttft());
     }

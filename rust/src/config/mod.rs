@@ -90,15 +90,55 @@ pub struct ModelConfig {
     pub max_tiles: usize,
     /// Bytes per parameter for serving precision (2 = fp16/bf16).
     pub bytes_per_param: u64,
+    /// Video: encode every `stride`-th frame (temporal subsampling).
+    pub video_frame_stride: usize,
+    /// Video: spatial tiles per sampled frame (frames are encoded at
+    /// reduced resolution relative to stills).
+    pub video_max_tiles_per_frame: usize,
+    /// Video: sampled frames per encode **chunk** — the unit of
+    /// non-blocking encoder work, letting later chunks of a long clip
+    /// encode while earlier chunks' tokens already prefill.
+    pub video_chunk_frames: usize,
+    /// Audio tokens per second of audio (Whisper-style fixed rate).
+    pub audio_tokens_per_s: usize,
 }
 
 impl ModelConfig {
-    /// Total vision tokens for an image of `w`×`h` pixels.
-    pub fn image_tokens(&self, w: usize, h: usize) -> usize {
+    /// Spatial tile count of a `w`×`h` frame after resize + tiling,
+    /// capped at `max`. The single source of the tiling rule — token
+    /// estimators and CPU-preprocess costing both derive from it.
+    pub fn spatial_tiles(&self, w: usize, h: usize, max: usize) -> usize {
         let tiles_w = w.div_ceil(self.tile_pixels);
         let tiles_h = h.div_ceil(self.tile_pixels);
-        let tiles = (tiles_w * tiles_h).clamp(1, self.max_tiles);
-        tiles * self.tokens_per_tile
+        (tiles_w * tiles_h).clamp(1, max.max(1))
+    }
+
+    /// Total vision tokens for an image of `w`×`h` pixels.
+    pub fn image_tokens(&self, w: usize, h: usize) -> usize {
+        self.spatial_tiles(w, h, self.max_tiles) * self.tokens_per_tile
+    }
+
+    /// Vision tokens per *sampled video frame*: the spatial tiling of a
+    /// frame, capped at `video_max_tiles_per_frame` (video frames are
+    /// encoded at reduced resolution relative to stills).
+    pub fn video_frame_tokens(&self, w: usize, h: usize) -> usize {
+        self.spatial_tiles(w, h, self.video_max_tiles_per_frame) * self.tokens_per_tile
+    }
+
+    /// Frames actually encoded from a `frames`-frame clip after temporal
+    /// subsampling.
+    pub fn video_sampled_frames(&self, frames: usize) -> usize {
+        frames.div_ceil(self.video_frame_stride.max(1)).max(1)
+    }
+
+    /// Total vision tokens for a `w`×`h`, `frames`-frame video clip.
+    pub fn video_tokens(&self, w: usize, h: usize, frames: usize) -> usize {
+        self.video_sampled_frames(frames) * self.video_frame_tokens(w, h)
+    }
+
+    /// Audio tokens for a clip of `duration_ms` milliseconds.
+    pub fn audio_tokens(&self, duration_ms: usize) -> usize {
+        (duration_ms * self.audio_tokens_per_s).div_ceil(1000).max(1)
     }
 
     /// Backend weight bytes (what a GPU must hold to serve the LLM).
@@ -133,6 +173,13 @@ impl ModelConfig {
             ("tile_pixels", Json::num(self.tile_pixels as f64)),
             ("max_tiles", Json::num(self.max_tiles as f64)),
             ("bytes_per_param", Json::num(self.bytes_per_param as f64)),
+            ("video_frame_stride", Json::num(self.video_frame_stride as f64)),
+            (
+                "video_max_tiles_per_frame",
+                Json::num(self.video_max_tiles_per_frame as f64),
+            ),
+            ("video_chunk_frames", Json::num(self.video_chunk_frames as f64)),
+            ("audio_tokens_per_s", Json::num(self.audio_tokens_per_s as f64)),
         ])
     }
 
@@ -147,6 +194,10 @@ impl ModelConfig {
             tile_pixels: j.get("tile_pixels")?.as_usize()?,
             max_tiles: j.get("max_tiles")?.as_usize()?,
             bytes_per_param: j.get("bytes_per_param")?.as_u64()?,
+            video_frame_stride: j.get("video_frame_stride")?.as_usize()?,
+            video_max_tiles_per_frame: j.get("video_max_tiles_per_frame")?.as_usize()?,
+            video_chunk_frames: j.get("video_chunk_frames")?.as_usize()?,
+            audio_tokens_per_s: j.get("audio_tokens_per_s")?.as_usize()?,
         })
     }
 }
@@ -338,6 +389,28 @@ mod tests {
         let l = presets::llama32_vision_11b();
         let huge = l.image_tokens(10_000, 10_000);
         assert_eq!(huge, l.max_tiles * l.tokens_per_tile);
+    }
+
+    #[test]
+    fn video_tokens_scale_with_frames_not_resolution_blowup() {
+        let q = presets::qwen25_vl_7b();
+        let short = q.video_tokens(448, 448, 32);
+        let long = q.video_tokens(448, 448, 128);
+        assert_eq!(long, 4 * short, "linear in sampled frames");
+        // Frames are capped at video_max_tiles_per_frame tiles: a 4K
+        // frame costs the same as a capped-resolution frame.
+        assert_eq!(q.video_tokens(3840, 2160, 32), q.video_tokens(904, 904, 32));
+        // Temporal subsampling: a clip is far cheaper than one still
+        // image per raw frame.
+        assert!(long < 128 * q.image_tokens(448, 448));
+    }
+
+    #[test]
+    fn audio_tokens_follow_fixed_rate() {
+        let q = presets::qwen25_vl_7b();
+        assert_eq!(q.audio_tokens(1000), q.audio_tokens_per_s);
+        assert_eq!(q.audio_tokens(4000), 4 * q.audio_tokens_per_s);
+        assert!(q.audio_tokens(1) >= 1, "minimum one token");
     }
 
     #[test]

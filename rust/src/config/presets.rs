@@ -38,6 +38,10 @@ pub fn llama32_vision_11b() -> ModelConfig {
         tile_pixels: 560,
         max_tiles: 4,
         bytes_per_param: 2,
+        video_frame_stride: 2,
+        video_max_tiles_per_frame: 1,
+        video_chunk_frames: 8,
+        audio_tokens_per_s: 25,
     }
 }
 
@@ -85,6 +89,10 @@ pub fn qwen25_vl_7b() -> ModelConfig {
         tile_pixels: 226,
         max_tiles: 64,
         bytes_per_param: 2,
+        video_frame_stride: 2,
+        video_max_tiles_per_frame: 2,
+        video_chunk_frames: 8,
+        audio_tokens_per_s: 25,
     }
 }
 

@@ -7,9 +7,18 @@
 //! (Eq. 2 / Eq. 3) live in [`super::scaling`] — dispatch only *asks* it
 //! when admission is blocked or a DP iteration could borrow an instance.
 //!
+//! Encoder dispatch works at **encode-job** granularity (one image, one
+//! audio clip, or one video *chunk* per iteration); prefill admission
+//! works at **admissible-token** granularity
+//! ([`SimRequest::prefill_admissible`]): a request whose media is only
+//! partly encoded prefills what it has, so a long video's later chunks
+//! encode while its earlier chunks' tokens already prefill.
+//!
 //! Requests are addressed by [`ReqIx`] slab indices throughout; role
 //! membership comes from the cached lists on [`EmpSystem`] (no per-call
 //! filtering or allocation — see `system.rs` §Hot-path layout).
+//!
+//! [`SimRequest::prefill_admissible`]: crate::sim::instance::SimRequest::prefill_admissible
 
 use crate::model::PrefillItem;
 use crate::sim::driver::SimQueue;
@@ -20,8 +29,9 @@ use super::scaling;
 use super::system::{gidx, EmpEv, EmpSystem, Iter};
 
 /// Start encode iterations on idle encoder instances, draining the
-/// encode queue FCFS. Each request's pending images are encoded in one
-/// iteration (preprocess + encoder forward).
+/// encode queue FCFS. Each iteration encodes the front request's *next
+/// pending job* (one image / audio clip / video chunk); requests with
+/// further jobs re-enter at the queue front when the job completes.
 pub(crate) fn schedule_encoders(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
     let now = q.now();
     // Index-walk over the cached encoder list (stable: nothing below
@@ -35,16 +45,15 @@ pub(crate) fn schedule_encoders(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueu
         }
         let Some(&ix) = sys.groups[gidx(g)].wait_encode.front() else { break };
         sys.groups[gidx(g)].wait_encode.pop_front();
+        let tp = sys.instances[e].tp;
         let r = sys.requests.get_mut(ix);
-        r.phase = Phase::Encoding;
-        // Encode all this request's pending images in one iteration.
-        let mut dur = 0.0;
-        for &vt in &r.encode_pending {
-            dur += sys.cost.encode_time(vt, sys.instances[e].tp);
+        // Don't clobber prefill-side phases: the request may already be
+        // prefilling its earlier chunks on another instance.
+        if r.phase == Phase::WaitEncode {
+            r.phase = Phase::Encoding;
         }
-        for img in r.req.images.iter() {
-            dur += sys.cost.preprocess_time(img.width, img.height);
-        }
+        let job = *r.encode_pending.last().expect("encode-queued request has pending jobs");
+        let dur = sys.cost.encode_job_time(&job, tp);
         let done = sys.instances[e].start_iteration(now, dur);
         sys.current[e] = Some(Iter::Encode { ix });
         q.push(done, EmpEv::IterDone(e));
@@ -65,7 +74,9 @@ fn pick_decode_dest(sys: &EmpSystem, g: GroupId, reserve: usize) -> Option<usize
 /// FCFS prefill dispatch onto the idle prefill set E_p, bounded by the
 /// chunked-prefill token budget and the KV slots of the chosen decode
 /// destinations; evaluates Eq. 2 to possibly borrow a decode instance
-/// for extra DP width.
+/// for extra DP width. Admits each request's currently-admissible
+/// tokens (everything encoded so far); a continuation re-uses the KV
+/// reservation made at its first admission.
 pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
     let now = q.now();
     // E_p = idle prefill instances (Unified handled separately).
@@ -89,23 +100,33 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     let mut blocked_on_kv = false;
     while let Some(&ix) = sys.groups[gidx(g)].wait_prefill.front() {
         let r = sys.requests.get(ix);
+        let admissible = r.prefill_admissible();
+        debug_assert!(admissible > 0, "queued request must have admissible tokens");
         if ids.len() >= sys.sched.max_prefill_batch * e_p.len()
-            || (tokens > 0 && tokens + r.prefill_remaining() > budget)
+            || (tokens > 0 && tokens + admissible > budget)
         {
             break;
         }
-        let reserve = r.input_len + r.req.output_tokens;
         let id = r.req.id;
+        let reserve = r.input_len + r.req.output_tokens;
+        let home = r.home;
         let item = PrefillItem {
-            new_tokens: r.prefill_remaining(),
-            cached_tokens: r.cached_prefix,
+            new_tokens: admissible,
+            cached_tokens: r.cached_prefix + r.prefill_done,
             vision_tokens: r.vision_tokens,
         };
-        let Some(dest) = pick_decode_dest(sys, g, reserve) else {
-            blocked_on_kv = true;
-            break;
+        let dest = match home {
+            // Continuation: KV was reserved in full at first admission.
+            Some(h) => h,
+            None => {
+                let Some(d) = pick_decode_dest(sys, g, reserve) else {
+                    blocked_on_kv = true;
+                    break;
+                };
+                sys.instances[d].kv.allocate(id, reserve).expect("checked");
+                d
+            }
         };
-        sys.instances[dest].kv.allocate(id, reserve).expect("checked");
         tokens += item.new_tokens;
         items.push(item);
         dests.push(dest);
@@ -131,7 +152,7 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
         participants.push(extra);
     }
     let tp = sys.instances[participants[0]].tp;
-    let cross = g == GroupId::Multimodal;
+    let cross = sys.group_serves_media(g);
     let mut dur = {
         // DP split over participants (leader computes the max-shard
         // time; modality-pure text batches skip cross-attention).
@@ -141,29 +162,36 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
             sys.cost.prefill_time_dp(&items, participants.len(), tp)
         }
     };
-    // Blocking encode: any request reaching prefill with un-encoded
-    // images pays encoding serially in front of the iteration (image
-    // encoding is not DP-splittable within one request; coupled
-    // frameworks run it inline — Fig 1a). With non-blocking encoding
-    // requests arrive here already encoded, so this charges nothing.
+    // Blocking encode: inline-encode requests pay their pending jobs
+    // serially in front of the iteration (coupled frameworks run
+    // encoding inline — Fig 1a). Non-blocking requests reaching here
+    // with jobs still pending are the *overlap* case: their remaining
+    // chunks keep encoding on the encoder pool while this iteration
+    // prefills the already-encoded tokens.
+    let mut overlaps = 0u64;
     for &ix in &ids {
         let r = sys.requests.get(ix);
-        for &vt in &r.encode_pending {
-            dur += sys.cost.encode_time(vt, tp);
-        }
-        if !r.encode_pending.is_empty() {
-            for img in r.req.images.iter() {
-                dur += sys.cost.preprocess_time(img.width, img.height);
+        if r.inline_encode {
+            for job in &r.encode_pending {
+                dur += sys.cost.encode_job_time(job, tp);
             }
+        } else if !r.encode_pending.is_empty() {
+            overlaps += 1;
         }
     }
+    sys.stats.encode_overlap_prefills += overlaps;
     // KV shipping to the decode destinations (NVLink, overlapped
     // poorly at iteration end — charged serially).
     dur += sys.cost.migration_time(tokens) * 0.5;
-    for (&ix, &dest) in ids.iter().zip(&dests) {
+    for (k, &ix) in ids.iter().enumerate() {
         let r = sys.requests.get_mut(ix);
         r.phase = Phase::Prefilling;
-        r.home = Some(dest);
+        r.home = Some(dests[k]);
+        r.in_wait_prefill = false;
+        r.prefill_inflight = items[k].new_tokens;
+        // Record that this iteration paid for the pending jobs, so the
+        // completion handler may discard them (and only then).
+        r.encode_charged_inline = r.inline_encode && !r.encode_pending.is_empty();
     }
     if participants.len() > 1 {
         sys.stats.dp_prefill_iters += 1;
@@ -210,7 +238,7 @@ fn decode_batch_time(sys: &mut EmpSystem, g: GroupId, inst: usize, ids: &[ReqIx]
         sys.instances[inst].tp,
         ids,
         &mut items,
-        g == GroupId::Multimodal,
+        sys.group_serves_media(g),
     );
     sys.decode_scratch = items;
     dur
@@ -231,41 +259,61 @@ pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
         }
         // Prefill priority, decode otherwise (coupled semantics).
         let mut ids: Vec<ReqIx> = Vec::new();
-        let mut items = Vec::new();
+        let mut items: Vec<PrefillItem> = Vec::new();
         let mut encode_s = 0.0;
         let mut tokens = 0usize;
+        let mut overlaps = 0u64;
         while let Some(&ix) = sys.groups[gidx(g)].wait_prefill.front() {
             let r = sys.requests.get(ix);
+            let admissible = r.prefill_admissible();
+            debug_assert!(admissible > 0, "queued request must have admissible tokens");
+            let id = r.req.id;
             let reserve = r.input_len + r.req.output_tokens;
+            let home = r.home;
             if ids.len() >= sys.sched.max_prefill_batch
                 || (tokens > 0
-                    && tokens + r.prefill_remaining() > sys.sched.unified_prefill_token_budget)
-                || !sys.instances[u].kv.can_allocate(reserve)
+                    && tokens + admissible > sys.sched.unified_prefill_token_budget)
+                || (home.is_none() && !sys.instances[u].kv.can_allocate(reserve))
             {
                 break;
             }
-            let id = r.req.id;
             let item = PrefillItem {
-                new_tokens: r.prefill_remaining(),
-                cached_tokens: r.cached_prefix,
+                new_tokens: admissible,
+                cached_tokens: r.cached_prefix + r.prefill_done,
                 vision_tokens: r.vision_tokens,
             };
-            for &vt in &r.encode_pending {
-                encode_s += sys.cost.encode_time(vt, sys.instances[u].tp);
+            if r.inline_encode {
+                for job in &r.encode_pending {
+                    encode_s += sys.cost.encode_job_time(job, sys.instances[u].tp);
+                }
+            } else if !r.encode_pending.is_empty() {
+                overlaps += 1;
             }
-            sys.instances[u].kv.allocate(id, reserve).expect("checked");
+            if home.is_none() {
+                sys.instances[u].kv.allocate(id, reserve).expect("checked");
+            }
             tokens += item.new_tokens;
             items.push(item);
             ids.push(ix);
             sys.groups[gidx(g)].wait_prefill.pop_front();
         }
         if !ids.is_empty() {
-            for &ix in &ids {
+            sys.stats.encode_overlap_prefills += overlaps;
+            for (j, &ix) in ids.iter().enumerate() {
                 let r = sys.requests.get_mut(ix);
                 r.phase = Phase::Prefilling;
-                r.home = Some(u);
+                // A continuation keeps the home its KV was reserved on;
+                // fresh admissions land on this unified instance.
+                if r.home.is_none() {
+                    r.home = Some(u);
+                }
+                r.in_wait_prefill = false;
+                r.prefill_inflight = items[j].new_tokens;
+                // This iteration paid for the pending jobs (see
+                // dispatch_prefill's matching line).
+                r.encode_charged_inline = r.inline_encode && !r.encode_pending.is_empty();
             }
-            let cross = g == GroupId::Multimodal;
+            let cross = sys.group_serves_media(g);
             let dur = encode_s
                 + sys
                     .cost

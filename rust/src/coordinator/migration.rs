@@ -1,11 +1,14 @@
-//! Inter-group preemption and KV migration (§3.1 + §3.2 mechanics).
+//! Inter-group preemption and KV migration (§3.1 + §3.2 mechanics),
+//! over the N-way modality-group registry.
 //!
 //! * [`migrate_seqs`] — plan-then-execute movement of decoding
 //!   sequences between instances (the physical arm of Eq. 2/Eq. 3);
 //! * [`reactive_inter_group`] — reactive modality-level preemption when
-//!   a group is under water;
+//!   a group is under water: the donor is the group retaining the most
+//!   burst tolerance after losing one instance;
 //! * [`rebalance`] — the proactive burst-tolerance tick (Eq. 1) moving
-//!   at most one idle instance toward the target allocation;
+//!   at most one idle instance from the most over-allocated group
+//!   toward the most under-allocated one;
 //! * [`on_migrate_done`] — event handler landing migrated sequences.
 
 use crate::sim::driver::SimQueue;
@@ -92,8 +95,10 @@ pub(crate) fn on_migrate_done(
 }
 
 /// "Selects instances to preempt ... with minimal impact": idle, not
-/// mid-iteration, holding no resident sequences; prefer Encode, then
-/// Prefill, then Unified, and only then Decode.
+/// mid-iteration, holding no resident sequences *and no in-flight KV
+/// reservations* (a mid-prefill request reserved here must be able to
+/// land); prefer Encode, then Prefill, then Unified, and only then
+/// Decode.
 fn pick_idle_donor(sys: &EmpSystem, donor: GroupId, now: f64) -> Option<usize> {
     sys.members(donor)
         .iter()
@@ -102,6 +107,7 @@ fn pick_idle_donor(sys: &EmpSystem, donor: GroupId, now: f64) -> Option<usize> {
             sys.instances[i].idle_at(now)
                 && sys.current[i].is_none()
                 && sys.instances[i].decoding.is_empty()
+                && sys.instances[i].kv.num_seqs() == 0
         })
         .min_by_key(|&i| match sys.instances[i].role {
             StageRole::Encode => 0,
@@ -128,8 +134,11 @@ fn transfer_instance(
     sys.schedule_group(donor, q);
 }
 
-/// Reactive inter-group scaling (§3.1): preempt an idle instance
-/// from the other group when this group is under water.
+/// Reactive inter-group scaling (§3.1): preempt an idle instance from
+/// another group when this group is under water. With N groups the
+/// donor is chosen among all others: the group whose burst tolerance
+/// stays highest after losing one instance (most residual slack),
+/// lowest index on ties.
 pub(crate) fn reactive_inter_group(
     sys: &mut EmpSystem,
     needy: GroupId,
@@ -138,48 +147,60 @@ pub(crate) fn reactive_inter_group(
     if !sys.opts.elastic {
         return;
     }
-    let donor = match needy {
-        GroupId::Text => GroupId::Multimodal,
-        GroupId::Multimodal => GroupId::Text,
-    };
     let needy_n = sys.members(needy).len();
-    let donor_n = sys.members(donor).len();
     let needy_avg = sys.groups[gidx(needy)].monitor.avg_instances_needed();
-    let donor_avg = sys.groups[gidx(donor)].monitor.avg_instances_needed();
-    if !modality::should_preempt_inter_group(needy_n, needy_avg, donor_n, donor_avg, 1) {
-        return;
+    let mut best: Option<(GroupId, f64)> = None;
+    for i in 0..sys.num_groups() {
+        let d = GroupId(i as u8);
+        if d == needy {
+            continue;
+        }
+        let d_n = sys.members(d).len();
+        let d_avg = sys.groups[i].monitor.avg_instances_needed();
+        if !modality::should_preempt_inter_group(needy_n, needy_avg, d_n, d_avg, 1) {
+            continue;
+        }
+        let bt_after = modality::burst_tolerance(d_n - 1, d_avg);
+        if best.map_or(true, |(_, b)| bt_after > b) {
+            best = Some((d, bt_after));
+        }
     }
+    let Some((donor, _)) = best else { return };
     let now = q.now();
     let Some(pick) = pick_idle_donor(sys, donor, now) else { return };
     transfer_instance(sys, donor, needy, pick, q);
 }
 
 /// Proactive rebalance tick (§3.1): refresh monitors, recompute the
-/// burst-tolerance allocation, and migrate at most one idle instance
-/// toward it per tick.
+/// burst-tolerance allocation over all N groups, and migrate at most
+/// one idle instance per tick — from the group most over its target to
+/// the group most under it (lowest index on ties).
 pub(crate) fn rebalance(sys: &mut EmpSystem, q: &mut SimQueue<'_, EmpEv>) {
     let now = q.now();
-    for g in [GroupId::Text, GroupId::Multimodal] {
-        sys.groups[gidx(g)].monitor.tick(now);
+    for i in 0..sys.num_groups() {
+        sys.groups[i].monitor.tick(now);
     }
     if !sys.opts.elastic {
         return;
     }
     let total = sys.instances.len();
-    let demands = [
-        sys.groups[0].monitor.avg_instances_needed(),
-        sys.groups[1].monitor.avg_instances_needed(),
-    ];
+    let demands: Vec<f64> = (0..sys.num_groups())
+        .map(|i| sys.groups[i].monitor.avg_instances_needed())
+        .collect();
     let target = modality::proactive_allocation(total, &demands, 1);
-    let current = [sys.members(GroupId::Text).len(), sys.members(GroupId::Multimodal).len()];
-    // Move one instance from over- to under-allocated group.
-    let (donor, needy) = if current[0] > target[0] {
-        (GroupId::Text, GroupId::Multimodal)
-    } else if current[1] > target[1] {
-        (GroupId::Multimodal, GroupId::Text)
-    } else {
-        return;
-    };
+    let mut donor: Option<(usize, usize)> = None; // (group, surplus)
+    let mut needy: Option<(usize, usize)> = None; // (group, deficit)
+    for i in 0..sys.num_groups() {
+        let cur = sys.members(GroupId(i as u8)).len();
+        if cur > target[i] && donor.map_or(true, |(_, s)| cur - target[i] > s) {
+            donor = Some((i, cur - target[i]));
+        }
+        if cur < target[i] && needy.map_or(true, |(_, s)| target[i] - cur > s) {
+            needy = Some((i, target[i] - cur));
+        }
+    }
+    let (Some((di, _)), Some((ni, _))) = (donor, needy) else { return };
+    let (donor, needy) = (GroupId(di as u8), GroupId(ni as u8));
     if sys.members(donor).len() <= 1 {
         return;
     }

@@ -7,6 +7,14 @@
 //! through `EmpSystem::set_role` so the cached membership lists stay in
 //! sync.
 //!
+//! **Reservation safety:** chunked non-blocking encoding means a
+//! request can hold a KV reservation on its decode destination across
+//! *several* partial prefill iterations before its sequence lands
+//! there. An instance is therefore only flipped away from decode duty
+//! when its KV pool holds no sequences at all (`kv.num_seqs() == 0`,
+//! not merely an empty `decoding` list) — otherwise a reserved request
+//! would land on a non-decode instance and strand.
+//!
 //! **Fast-forward coupling:** the trigger conditions of the functions
 //! in this module are mirrored by `EmpSystem::can_fast_forward` (the
 //! decode-coalescing exactness predicate). When changing when a
@@ -76,6 +84,12 @@ pub(crate) fn consider_prefill_preemption(
         return None;
     }
     let victim_ids: Vec<ReqIx> = sys.instances[emax].decoding.clone();
+    // Reservation safety: every sequence in e_max's pool must be a
+    // migratable decoding resident — a mid-prefill reservation cannot
+    // move and would strand on a prefill-role instance.
+    if sys.instances[emax].kv.num_seqs() != victim_ids.len() {
+        return None;
+    }
     let victim = decode_set(sys, emax);
     // Merged decode batch on the survivors.
     let survivors: Vec<usize> = decode.iter().copied().filter(|&d| d != emax).collect();
@@ -179,8 +193,8 @@ pub(crate) fn try_decode_scale_up(
             .map(|&ix| {
                 let r = sys.requests.get(ix);
                 PrefillItem {
-                    new_tokens: r.prefill_remaining(),
-                    cached_tokens: r.cached_prefix,
+                    new_tokens: r.prefill_admissible(),
+                    cached_tokens: r.cached_prefix + r.prefill_done,
                     vision_tokens: r.vision_tokens,
                 }
             })
@@ -213,7 +227,10 @@ pub(crate) fn try_decode_scale_up(
 }
 
 /// Shrink decode to minimum parallelism when idle (§3.2 "we shrink
-/// it to the minimum parallelism").
+/// it to the minimum parallelism"). Only instances whose KV pool is
+/// completely empty may flip — an empty `decoding` list is not enough,
+/// because mid-prefill requests may hold reservations here (module
+/// docs, *Reservation safety*).
 pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
     if sys.role_members(g, StageRole::Decode).len() <= 1 || !flip_allowed(sys, g, now) {
         return;
@@ -224,6 +241,7 @@ pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
         let Some(&d) = sys.role_members(g, StageRole::Decode).get(k) else { break };
         k += 1;
         if sys.instances[d].decoding.is_empty()
+            && sys.instances[d].kv.num_seqs() == 0
             && sys.current[d].is_none()
             && sys.role_members(g, StageRole::Decode).len() > 1
         {
@@ -242,7 +260,7 @@ pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
 /// queue is empty (the instance is worth more as prefill DP width) —
 /// and capped so prefill+decode keep at least one instance each.
 pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
-    if g != GroupId::Multimodal || !sys.opts.non_blocking_encode {
+    if !sys.group_serves_media(g) || !sys.opts.non_blocking_encode {
         return;
     }
     let n = sys.members(g).len();
@@ -295,8 +313,18 @@ pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId) {
             && sys.role_members(g, StageRole::Prefill).len() > 1;
         if !promotable {
             while let Some(ix) = sys.groups[gidx(g)].wait_encode.pop_front() {
-                sys.requests.get_mut(ix).phase = Phase::WaitPrefill;
-                sys.groups[gidx(g)].wait_prefill.push_back(ix);
+                let r = sys.requests.get_mut(ix);
+                // From here the remaining jobs are charged inline in the
+                // prefill iteration; all remaining tokens become
+                // admissible at once.
+                r.inline_encode = true;
+                // Requests already queued for prefill — or mid partial
+                // prefill — will pick the flag up at (re)admission.
+                if !r.in_wait_prefill && r.phase != Phase::Prefilling {
+                    r.phase = Phase::WaitPrefill;
+                    r.in_wait_prefill = true;
+                    sys.groups[gidx(g)].wait_prefill.push_back(ix);
+                }
             }
         }
     }

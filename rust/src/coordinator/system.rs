@@ -1,10 +1,12 @@
 //! The ElasticMM serving system: Elastic Multimodal Parallelism on the
 //! discrete-event cluster.
 //!
-//! Two-level hierarchy (paper Fig 2):
-//! * **modality level** — requests split into a text group and a
-//!   multimodal group; the modality-level manager allocates instances
-//!   across groups proactively (burst tolerance, Eq. 1) and reactively
+//! Two-level hierarchy (paper Fig 2), generalized to N modality groups:
+//! * **modality level** — requests split into modality groups (the
+//!   configurable registry in [`EmpOptions::groups`]: binary
+//!   text/multimodal, or the full `Text | Image | Video | Audio`
+//!   taxonomy); the modality-level manager allocates instances across
+//!   groups proactively (burst tolerance, Eq. 1) and reactively
 //!   (inter-group preemption);
 //! * **stage level** — inside each group the pipeline is disaggregated
 //!   into encode / prefill / decode instances, with elastic partition
@@ -19,6 +21,19 @@
 //! shared trace driver ([`crate::sim::driver`]). The §3.3 optimizations
 //! (unified multimodal prefix cache, non-blocking encoding) are
 //! toggleable for the Fig 7/8 ablations.
+//!
+//! ## Chunked non-blocking media encoding
+//!
+//! Encoder work is scheduled at [`crate::workload::EncodeJob`]
+//! granularity: an image or
+//! audio clip is one job, a video clip one job per chunk. After each
+//! chunk completes, the tokens it produced become *prefill-admissible*
+//! ([`SimRequest::prefill_admissible`]), so a long video's later chunks
+//! encode while its earlier chunks' tokens (plus the text prompt) are
+//! already prefilling — the per-request pipeline the paper's
+//! non-blocking encoding implies for long media. A request may therefore
+//! run **several partial prefill iterations**; KV is reserved in full at
+//! the first one, and the first token fires when the last part finishes.
 //!
 //! ## Hot-path layout
 //!
@@ -47,7 +62,8 @@ use super::{dispatch, migration, scaling};
 
 use std::collections::VecDeque;
 
-/// Feature toggles (ablation axes of Fig 7 and Fig 8).
+/// Feature toggles (ablation axes of Fig 7 and Fig 8) plus the
+/// modality-group registry.
 #[derive(Debug, Clone)]
 pub struct EmpOptions {
     /// Elastic Multimodal Parallelism on: dynamic inter-group allocation
@@ -57,18 +73,36 @@ pub struct EmpOptions {
     pub unified_cache: bool,
     /// Non-blocking encoding (§3.3).
     pub non_blocking_encode: bool,
-    /// Initial (and, when `!elastic`, permanent) text-group size.
+    /// Initial (and, when `!elastic`, permanent) size of group 0; the
+    /// remaining instances split evenly over the other groups.
     pub text_instances: usize,
+    /// Modality-group registry: which modality each scheduling group
+    /// serves. A request whose exact modality has no group falls back to
+    /// the first media-serving group (or group 0 if none). Requires at
+    /// least as many instances as groups.
+    pub groups: Vec<Modality>,
 }
 
 impl EmpOptions {
-    /// The full ElasticMM system.
+    /// The full ElasticMM system with the paper's binary split (text
+    /// group + one group for all media).
     pub fn full(total_instances: usize) -> Self {
         EmpOptions {
             elastic: true,
             unified_cache: true,
             non_blocking_encode: true,
             text_instances: (total_instances / 2).max(1),
+            groups: vec![Modality::Text, Modality::Image],
+        }
+    }
+
+    /// N-way modality groups: one scheduling group per modality
+    /// (`Text | Image | Video | Audio`). Needs ≥ 4 instances.
+    pub fn full_nway(total_instances: usize) -> Self {
+        EmpOptions {
+            text_instances: (total_instances / Modality::COUNT).max(1),
+            groups: Modality::ALL.to_vec(),
+            ..Self::full(total_instances)
         }
     }
 
@@ -93,6 +127,7 @@ impl EmpOptions {
             unified_cache: true,
             non_blocking_encode: true,
             text_instances,
+            groups: vec![Modality::Text, Modality::Image],
         }
     }
 }
@@ -112,6 +147,8 @@ pub enum EmpEv {
 pub(crate) enum Iter {
     Prefill { ids: Vec<ReqIx>, participants: Vec<usize> },
     Decode { ids: Vec<ReqIx> },
+    /// One encode job (an image, an audio clip, or one video chunk) of
+    /// request `ix`.
     Encode { ix: ReqIx },
 }
 
@@ -119,6 +156,10 @@ pub(crate) enum Iter {
 pub(crate) struct Group {
     #[allow(dead_code)] // observability / debugging
     pub(crate) id: GroupId,
+    /// The modality this group serves (observability; routing lives in
+    /// `EmpSystem::modality_group`).
+    #[allow(dead_code)]
+    pub(crate) modality: Modality,
     pub(crate) wait_encode: VecDeque<ReqIx>,
     pub(crate) wait_prefill: VecDeque<ReqIx>,
     pub(crate) cache: UnifiedCache,
@@ -142,6 +183,13 @@ pub struct EmpStats {
     /// Decode steps committed inside coalesced fast-forward events
     /// (each would have been a full queue round-trip otherwise).
     pub coalesced_steps: u64,
+    /// Encode jobs (images / audio clips / video chunks) completed on
+    /// the non-blocking encoder pool.
+    pub media_chunks_encoded: u64,
+    /// Prefill admissions of requests that still had encode jobs
+    /// pending on the encoder pool — i.e. iterations where a later
+    /// chunk's encode provably overlapped an earlier chunk's prefill.
+    pub encode_overlap_prefills: u64,
 }
 
 /// Incrementally-maintained membership lists: which instances belong to
@@ -150,8 +198,8 @@ pub struct EmpStats {
 /// tie-breaks are unchanged). Updated by [`EmpSystem::set_role`] /
 /// [`EmpSystem::set_group`]; never rebuilt on the hot path.
 pub(crate) struct RoleCache {
-    by_role: [[Vec<usize>; 4]; 2],
-    members: [Vec<usize>; 2],
+    by_role: Vec<[Vec<usize>; 4]>,
+    members: Vec<Vec<usize>>,
 }
 
 fn ridx(role: StageRole) -> usize {
@@ -164,10 +212,10 @@ fn ridx(role: StageRole) -> usize {
 }
 
 impl RoleCache {
-    fn build(instances: &[Instance]) -> RoleCache {
+    fn build(instances: &[Instance], n_groups: usize) -> RoleCache {
         let mut c = RoleCache {
-            by_role: Default::default(),
-            members: Default::default(),
+            by_role: (0..n_groups).map(|_| std::array::from_fn(|_| Vec::new())).collect(),
+            members: vec![Vec::new(); n_groups],
         };
         for inst in instances {
             let gi = gidx(inst.group);
@@ -197,7 +245,8 @@ pub struct EmpSystem {
     pub opts: EmpOptions,
     pub(crate) instances: Vec<Instance>,
     pub(crate) current: Vec<Option<Iter>>,
-    pub(crate) groups: [Group; 2], // [Text, Multimodal]
+    /// One scheduler state per modality group (registry order).
+    pub(crate) groups: Vec<Group>,
     pub(crate) requests: RequestSlab,
     pub(crate) finished: Vec<RequestRecord>,
     pub stats: EmpStats,
@@ -206,11 +255,16 @@ pub struct EmpSystem {
     /// Last stage-role flip per group — a short cooldown prevents
     /// Eq.2/Eq.3 from fighting over the same instance (role-flip +
     /// migration ping-pong would otherwise livelock under pressure).
-    pub(crate) last_role_flip: [f64; 2],
+    pub(crate) last_role_flip: Vec<f64>,
     /// Minimum seconds between role flips in one group.
     pub(crate) role_flip_cooldown_s: f64,
     /// Cached (group, role) membership lists.
     pub(crate) roles: RoleCache,
+    /// Modality → group routing (exact match, else first media group).
+    pub(crate) modality_group: [GroupId; Modality::COUNT],
+    /// Whether any media-bearing modality routes to a group (drives
+    /// cross-attention batching and encoder-pool eligibility).
+    pub(crate) group_media: Vec<bool>,
     /// Pooled `ids` buffers for decode iterations (hot-path allocation
     /// elimination: a decode step reuses a retired snapshot instead of
     /// allocating a fresh `Vec` per event).
@@ -220,26 +274,69 @@ pub struct EmpSystem {
 }
 
 pub(crate) fn gidx(g: GroupId) -> usize {
-    match g {
-        GroupId::Text => 0,
-        GroupId::Multimodal => 1,
-    }
+    g.index()
 }
 
 impl EmpSystem {
     pub fn new(cost: CostModel, sched: SchedulerConfig, num_gpus: usize, opts: EmpOptions) -> Self {
         let tp = cost.min_tp();
         let n_inst = (num_gpus / tp).max(2);
+        let n_groups = opts.groups.len();
+        assert!(n_groups >= 1, "at least one modality group required");
+        assert!(
+            n_inst >= n_groups,
+            "{n_inst} instances cannot host {n_groups} modality groups \
+             (each group keeps at least one instance)"
+        );
         let kv_tokens = cost.kv_pool_tokens(tp, sched.kv_memory_fraction);
-        let text_n = opts.text_instances.clamp(1, n_inst - 1);
+        // Initial split: group 0 takes `text_instances` (clamped so each
+        // other group keeps >=1), the rest split evenly with the
+        // remainder toward earlier groups.
+        let mut split = vec![1usize; n_groups];
+        split[0] = opts.text_instances.clamp(1, n_inst - (n_groups - 1));
+        if n_groups > 1 {
+            let rest = n_inst - split[0];
+            let per = rest / (n_groups - 1);
+            let mut rem = rest % (n_groups - 1);
+            for s in split.iter_mut().skip(1) {
+                *s = per + usize::from(rem > 0);
+                rem = rem.saturating_sub(1);
+            }
+        } else {
+            split[0] = n_inst;
+        }
         let mut instances = Vec::new();
+        let (mut gi, mut used) = (0usize, 0usize);
         for i in 0..n_inst {
-            let group = if i < text_n { GroupId::Text } else { GroupId::Multimodal };
-            instances.push(Instance::new(i, tp, StageRole::Prefill, group, kv_tokens));
+            while used >= split[gi] && gi + 1 < n_groups {
+                gi += 1;
+                used = 0;
+            }
+            instances.push(Instance::new(i, tp, StageRole::Prefill, GroupId(gi as u8), kv_tokens));
+            used += 1;
+        }
+        // Modality → group routing: exact registry match, else the first
+        // media-serving group for media, group 0 for text.
+        let fallback_media = opts.groups.iter().position(|m| m.has_media());
+        let mut modality_group = [GroupId(0); Modality::COUNT];
+        for m in Modality::ALL {
+            let g = opts
+                .groups
+                .iter()
+                .position(|&gm| gm == m)
+                .or(if m.has_media() { fallback_media } else { None })
+                .unwrap_or(0);
+            modality_group[m.index()] = GroupId(g as u8);
+        }
+        let mut group_media = vec![false; n_groups];
+        for m in Modality::ALL {
+            if m.has_media() {
+                group_media[modality_group[m.index()].index()] = true;
+            }
         }
         let cache = |on: bool| {
             if on {
-                // Pool budgets: image pool sized for ~40 904px images,
+                // Pool budgets: media pool sized for ~40 904px images,
                 // KV pool for ~4 instance KV footprints of prefixes.
                 UnifiedCache::new(300_000, 500_000)
             } else {
@@ -248,8 +345,9 @@ impl EmpSystem {
         };
         let unified_cache_on = opts.unified_cache;
         let ewma_alpha = sched.load_ewma_alpha;
-        let mk_group = move |id| Group {
+        let mk_group = |id: GroupId, modality: Modality| Group {
             id,
+            modality,
             wait_encode: VecDeque::new(),
             wait_prefill: VecDeque::new(),
             cache: cache(unified_cache_on),
@@ -259,30 +357,46 @@ impl EmpSystem {
         let probe: Vec<DecodeItem> =
             (0..64).map(|_| DecodeItem { context_len: 1024, vision_tokens: 0 }).collect();
         let marginal_decode_s = cost.decode_step_time(&probe, tp) / 64.0;
-        let roles = RoleCache::build(&instances);
+        let roles = RoleCache::build(&instances, n_groups);
+        let groups: Vec<Group> = (0..n_groups)
+            .map(|i| mk_group(GroupId(i as u8), opts.groups[i]))
+            .collect();
         let mut sys = EmpSystem {
             cost,
             sched,
             opts,
             instances,
             current: (0..n_inst).map(|_| None).collect(),
-            groups: [mk_group(GroupId::Text), mk_group(GroupId::Multimodal)],
+            groups,
             requests: RequestSlab::new(),
             finished: Vec::new(),
             stats: EmpStats::default(),
             marginal_decode_s,
-            last_role_flip: [-1e9; 2],
+            last_role_flip: vec![-1e9; n_groups],
             role_flip_cooldown_s: 0.25,
             roles,
+            modality_group,
+            group_media,
             ids_pool: IdsPool::default(),
             decode_scratch: Vec::new(),
         };
-        sys.assign_initial_roles(GroupId::Text);
-        sys.assign_initial_roles(GroupId::Multimodal);
+        for i in 0..n_groups {
+            sys.assign_initial_roles(GroupId(i as u8));
+        }
         sys
     }
 
     // --- group / role helpers ------------------------------------------
+
+    pub(crate) fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Whether group `g` serves media-bearing requests (cross-attention
+    /// stays on for its batches; it may host encoders).
+    pub(crate) fn group_serves_media(&self, g: GroupId) -> bool {
+        self.group_media[gidx(g)]
+    }
 
     /// Instances of group `g`, ascending id (cached).
     pub(crate) fn members(&self, g: GroupId) -> &[usize] {
@@ -336,7 +450,8 @@ impl EmpSystem {
     /// (Re)establish stage-role invariants in a group:
     /// * 1 instance  → Unified;
     /// * ≥2          → ≥1 Decode, rest Prefill;
-    /// * multimodal with non-blocking encode and ≥3 → ≥1 Encode.
+    /// * media-serving with non-blocking encode and ≥3 → may host
+    ///   Encode instances (demand-driven).
     pub(crate) fn assign_initial_roles(&mut self, g: GroupId) {
         let members = self.members(g).to_vec();
         let n = members.len();
@@ -369,10 +484,10 @@ impl EmpSystem {
             self.set_role(pick, StageRole::Decode);
         }
         // Encoders are demand-driven (see scaling::try_encoder_scaling);
-        // a group that can't host one (too small / blocking mode)
-        // demotes any.
+        // a group that can't host one (too small / blocking mode /
+        // text-only) demotes any.
         let can_have_encoder =
-            g == GroupId::Multimodal && self.opts.non_blocking_encode && n >= 3;
+            self.group_serves_media(g) && self.opts.non_blocking_encode && n >= 3;
         if !can_have_encoder {
             for m in self.role_members(g, StageRole::Encode).to_vec() {
                 self.set_role(m, StageRole::Prefill);
@@ -398,10 +513,8 @@ impl EmpSystem {
     fn work_estimate(&self, r: &SimRequest) -> f64 {
         let tp = self.cost.min_tp();
         let mut w = 0.0;
-        for img in r.req.images.iter() {
-            let vt = self.cost.model.image_tokens(img.width, img.height);
-            w += self.cost.preprocess_time(img.width, img.height)
-                + self.cost.encode_time(vt, tp);
+        for m in r.req.media.iter() {
+            w += self.cost.media_encode_time(m, tp);
         }
         w += self.cost.prefill_time(
             &[PrefillItem {
@@ -438,16 +551,13 @@ impl EmpSystem {
 
     fn on_arrival(&mut self, req: Request, q: &mut SimQueue<'_, EmpEv>) {
         let now = q.now();
-        let g = match req.modality() {
-            Modality::TextOnly => GroupId::Text,
-            Modality::Multimodal => GroupId::Multimodal,
-        };
-        let vis = req.vision_tokens(&self.cost.model);
+        let g = self.modality_group[req.modality().index()];
+        let vis = req.media_tokens(&self.cost.model);
         let mut sr = SimRequest::new(req, vis);
         // Unified multimodal prefix cache (§3.3): run-length matching —
         // O(#runs), no per-token sequence materialization on admission.
         let mut outcome = self.groups[gidx(g)].cache.process(&sr.req, &self.cost.model);
-        sr.encode_pending = std::mem::take(&mut outcome.images_to_encode);
+        sr.encode_pending = std::mem::take(&mut outcome.media_to_encode);
         sr.cached_prefix = outcome.prefix_hit_tokens.min(sr.input_len.saturating_sub(1));
         sr.prefill_target = sr.input_len - sr.cached_prefix;
         if outcome.vision_tokens_cached > 0 {
@@ -457,9 +567,12 @@ impl EmpSystem {
         self.groups[gidx(g)].cache.release(&outcome);
         let work = self.work_estimate(&sr);
         self.groups[gidx(g)].monitor.record_arrival(now, work);
-        // A group that can host encoders (>=3 instances) takes the
-        // non-blocking path; encoders spin up on demand.
-        let can_encode_async = self.opts.non_blocking_encode && self.members(g).len() >= 3;
+        // A media-serving group that can host encoders (>=3 instances)
+        // takes the non-blocking path; encoders spin up on demand and
+        // hand a clip's tokens to prefill chunk by chunk.
+        let can_encode_async = self.opts.non_blocking_encode
+            && self.group_serves_media(g)
+            && self.members(g).len() >= 3;
         if !sr.encode_pending.is_empty() && can_encode_async {
             sr.phase = Phase::WaitEncode;
             let ix = self.requests.insert(sr);
@@ -468,8 +581,11 @@ impl EmpSystem {
             // Either text-only, fully cached, or blocking-encode mode
             // (encode charged inside the prefill iteration).
             sr.phase = Phase::WaitPrefill;
+            sr.in_wait_prefill = true;
             if sr.encode_pending.is_empty() {
                 sr.t_encode_done = now;
+            } else {
+                sr.inline_encode = true;
             }
             let ix = self.requests.insert(sr);
             self.groups[gidx(g)].wait_prefill.push_back(ix);
@@ -546,18 +662,22 @@ impl EmpSystem {
                 return false;
             }
         }
-        // try_decode_scale_down: no flippable idle-empty decode
-        // instance may exist (cooldown assumed expired).
+        // try_decode_scale_down: no flippable fully-empty decode
+        // instance may exist (cooldown assumed expired; an instance
+        // holding mid-prefill KV reservations is not flippable —
+        // reservation safety, see scaling.rs).
         if decode.len() > 1
             && decode.iter().any(|&d| {
-                self.instances[d].decoding.is_empty() && self.current[d].is_none()
+                self.instances[d].decoding.is_empty()
+                    && self.instances[d].kv.num_seqs() == 0
+                    && self.current[d].is_none()
             })
         {
             return false;
         }
         // try_encoder_scaling: the demand-driven encoder pool must be
         // unable to move toward its target.
-        if g == GroupId::Multimodal && self.opts.non_blocking_encode && n >= 3 {
+        if self.group_serves_media(g) && self.opts.non_blocking_encode && n >= 3 {
             let desired = wait_encode.div_ceil(2).clamp(0, n - 2);
             let cur = encoders.len();
             if desired > cur {
@@ -615,9 +735,14 @@ impl EmpSystem {
     /// [`CostModel::decode_run_time_flags`] (the same float operations
     /// the event loop chains), and the intermediate policy hooks being
     /// skipped are no-ops by [`Self::can_fast_forward`].
-    fn fast_forward_decode(&mut self, inst: usize, mut ids: Vec<ReqIx>, q: &mut SimQueue<'_, EmpEv>) {
+    fn fast_forward_decode(
+        &mut self,
+        inst: usize,
+        mut ids: Vec<ReqIx>,
+        q: &mut SimQueue<'_, EmpEv>,
+    ) {
         let now = q.now();
-        let cross = self.instances[inst].group == GroupId::Multimodal;
+        let cross = self.group_serves_media(self.instances[inst].group);
         // Re-snapshot the batch exactly as a fresh dispatch would:
         // sequences may have *landed* on this instance while the
         // finished iteration was in flight (a prefill completion or
@@ -662,34 +787,80 @@ impl EmpSystem {
         let g = self.instances[inst].group;
         match iter {
             Iter::Encode { ix } => {
+                // One encode job (image / audio clip / video chunk)
+                // finished: its tokens become prefill-admissible; the
+                // request's remaining jobs stay queued on the encoder
+                // pool. Requests may have been re-grouped meanwhile, so
+                // all queueing targets the instance's current group.
+                self.stats.media_chunks_encoded += 1;
                 let r = self.requests.get_mut(ix);
-                r.encode_pending.clear();
-                r.t_encode_done = now;
-                r.phase = Phase::WaitPrefill;
-                // Requests may have been re-grouped meanwhile; enqueue to
-                // the instance's current group.
-                self.groups[gidx(g)].wait_prefill.push_back(ix);
+                r.encode_pending.pop().expect("encode iteration had a job");
+                let all_done = r.encode_pending.is_empty();
+                if all_done {
+                    r.t_encode_done = now;
+                }
+                // A request already queued for prefill — or inside a
+                // partial prefill iteration right now — will pick the
+                // fresh tokens up at its own (re)admission.
+                let engaged = r.in_wait_prefill || r.phase == Phase::Prefilling;
+                let mut to_prefill = false;
+                if !engaged {
+                    if r.prefill_admissible() > 0 {
+                        r.phase = Phase::WaitPrefill;
+                        r.in_wait_prefill = true;
+                        to_prefill = true;
+                    } else if r.phase == Phase::Encoding {
+                        r.phase = Phase::WaitEncode;
+                    }
+                }
+                if !all_done {
+                    // Next chunk keeps the request's FCFS position.
+                    self.groups[gidx(g)].wait_encode.push_front(ix);
+                }
+                if to_prefill {
+                    self.groups[gidx(g)].wait_prefill.push_back(ix);
+                }
             }
             Iter::Prefill { ids, participants } => {
                 for &ix in &ids {
                     let r = self.requests.get_mut(ix);
-                    r.t_first_token = now;
-                    r.encode_pending.clear(); // blocking path encoded inline
-                    if r.t_encode_done.is_nan() {
+                    let nt = std::mem::take(&mut r.prefill_inflight);
+                    r.prefill_done += nt;
+                    // Discard pending jobs only if *this* iteration's
+                    // duration charged them inline (inline_encode may
+                    // flip on mid-iteration via the drain-stuck
+                    // fallback; those jobs are charged at the next
+                    // admission instead).
+                    if std::mem::take(&mut r.encode_charged_inline) {
+                        r.encode_pending.clear(); // blocking path encoded inline
+                    }
+                    if r.t_encode_done.is_nan() && r.encode_pending.is_empty() {
                         r.t_encode_done = now;
                     }
-                    r.prefill_done = r.prefill_target;
-                    r.decoded = 1;
-                    let home = r.home.expect("dest chosen at dispatch");
-                    if r.decoded >= r.req.output_tokens {
-                        r.t_finish = now;
-                        r.phase = Phase::Finished;
-                        let id = r.req.id;
-                        self.instances[home].kv.release(id).expect("reserved");
-                        self.finished.push(RequestRecord::from_sim(r));
+                    if r.prefill_done >= r.prefill_target {
+                        r.t_first_token = now;
+                        r.decoded = 1;
+                        let home = r.home.expect("dest chosen at dispatch");
+                        if r.decoded >= r.req.output_tokens {
+                            r.t_finish = now;
+                            r.phase = Phase::Finished;
+                            let id = r.req.id;
+                            self.instances[home].kv.release(id).expect("reserved");
+                            self.finished.push(RequestRecord::from_sim(r));
+                        } else {
+                            r.phase = Phase::Decoding;
+                            self.instances[home].decoding.push(ix);
+                        }
                     } else {
-                        r.phase = Phase::Decoding;
-                        self.instances[home].decoding.push(ix);
+                        // Partial prefill: more chunks must encode
+                        // first. Requeue immediately if further tokens
+                        // became admissible mid-iteration; otherwise the
+                        // next chunk completion re-enqueues it.
+                        r.phase = Phase::WaitPrefill;
+                        if r.prefill_admissible() > 0 {
+                            r.in_wait_prefill = true;
+                            self.groups[gidx(g)].wait_prefill.push_back(ix);
+                        }
                     }
                 }
                 for &p in &participants {
@@ -736,17 +907,21 @@ impl EmpSystem {
 
     // --- observability -----------------------------------------------------
 
-    /// Current group sizes [text, multimodal] (observability).
-    pub fn group_sizes(&self) -> [usize; 2] {
-        [self.members(GroupId::Text).len(), self.members(GroupId::Multimodal).len()]
+    /// Current group sizes in registry order (observability).
+    pub fn group_sizes(&self) -> Vec<usize> {
+        (0..self.num_groups()).map(|i| self.members(GroupId(i as u8)).len()).collect()
     }
 
     /// Verify cross-instance invariants (used by tests).
     pub fn check_invariants(&self) -> Result<(), String> {
         crate::sim::instance::check_instances(&self.instances, &self.requests)?;
-        for g in [GroupId::Text, GroupId::Multimodal] {
+        for i in 0..self.num_groups() {
+            let g = GroupId(i as u8);
             if self.members(g).is_empty() {
-                return Err(format!("group {g:?} has no instances"));
+                return Err(format!(
+                    "group {i} ({:?}) has no instances",
+                    self.groups[i].modality
+                ));
             }
             // The role cache must agree with the instance vector.
             for role in [
@@ -755,21 +930,19 @@ impl EmpSystem {
                 StageRole::Decode,
                 StageRole::Unified,
             ] {
-                for &i in self.role_members(g, role) {
-                    if self.instances[i].group != g || self.instances[i].role != role {
+                for &m in self.role_members(g, role) {
+                    if self.instances[m].group != g || self.instances[m].role != role {
                         return Err(format!(
-                            "role cache stale: instance {i} listed as {g:?}/{role:?} \
+                            "role cache stale: instance {m} listed as {g:?}/{role:?} \
                              but is {:?}/{:?}",
-                            self.instances[i].group, self.instances[i].role
+                            self.instances[m].group, self.instances[m].role
                         ));
                     }
                 }
             }
         }
-        let cached: usize = [GroupId::Text, GroupId::Multimodal]
-            .iter()
-            .map(|&g| self.members(g).len())
-            .sum();
+        let cached: usize =
+            (0..self.num_groups()).map(|i| self.members(GroupId(i as u8)).len()).sum();
         if cached != self.instances.len() {
             return Err(format!(
                 "role cache covers {cached} of {} instances",
@@ -802,8 +975,9 @@ impl ServingSystem for EmpSystem {
     fn on_tick(&mut self, q: &mut SimQueue<'_, EmpEv>) {
         migration::rebalance(self, q);
         // Nudge stalled groups (safety: e.g. role flips).
-        self.schedule_group(GroupId::Text, q);
-        self.schedule_group(GroupId::Multimodal, q);
+        for i in 0..self.num_groups() {
+            self.schedule_group(GroupId(i as u8), q);
+        }
     }
 
     fn completed(&self) -> usize {

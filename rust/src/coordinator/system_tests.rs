@@ -165,7 +165,64 @@ fn static_split_sizes_are_respected() {
         8,
         EmpOptions::static_split(6),
     );
-    assert_eq!(sys.group_sizes(), [6, 2]);
+    assert_eq!(sys.group_sizes(), vec![6, 2]);
+}
+
+#[test]
+fn nway_registry_builds_four_groups_with_even_split() {
+    let sys = EmpSystem::new(
+        cost_qwen(),
+        SchedulerConfig::default(),
+        8,
+        EmpOptions::full_nway(8),
+    );
+    let sizes = sys.group_sizes();
+    assert_eq!(sizes.len(), 4);
+    assert_eq!(sizes.iter().sum::<usize>(), 8);
+    assert!(sizes.iter().all(|&s| s >= 1), "every group keeps an instance: {sizes:?}");
+    sys.check_invariants().unwrap();
+}
+
+#[test]
+fn nway_groups_complete_a_mixed_modality_trace() {
+    use crate::workload::Modality;
+    let mut rng = Rng::new(21);
+    let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, 140);
+    poisson_arrivals(&mut rng, &mut reqs, 5.0);
+    let mut sys =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full_nway(8));
+    let rep = sys.run(&reqs);
+    assert_eq!(rep.records.len(), reqs.len());
+    sys.check_invariants().unwrap();
+    // All four modality groups actually served traffic.
+    let served: std::collections::HashSet<Modality> =
+        rep.records.iter().map(|r| r.modality).collect();
+    assert_eq!(served.len(), Modality::COUNT, "served: {served:?}");
+}
+
+#[test]
+fn video_chunks_overlap_encode_with_prefill() {
+    // A video-heavy trace on the full system: later chunks of a clip
+    // must encode while earlier chunks' tokens already prefill — the
+    // non-blocking pipeline for long media.
+    let mut rng = Rng::new(22);
+    let mut reqs = DatasetSpec::video_chat().generate(&mut rng, 80);
+    poisson_arrivals(&mut rng, &mut reqs, 1.5);
+    let mut sys =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep = sys.run(&reqs);
+    assert_eq!(rep.records.len(), reqs.len());
+    sys.check_invariants().unwrap();
+    assert!(
+        sys.stats.media_chunks_encoded > 0,
+        "encoder pool must run chunk jobs: {:?}",
+        sys.stats
+    );
+    assert!(
+        sys.stats.encode_overlap_prefills > 0,
+        "chunked encode must overlap prefill: {:?}",
+        sys.stats
+    );
 }
 
 #[test]

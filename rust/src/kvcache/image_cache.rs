@@ -32,6 +32,19 @@ pub fn hash_image_desc(content_id: u64, width: usize, height: usize) -> u64 {
     fnv1a(&buf)
 }
 
+/// Hash a non-image media descriptor (video / audio). `class_tag`
+/// separates media classes so a clip and an image sharing a numeric
+/// content id can never alias; the 32-byte layout is disjoint from the
+/// 24-byte [`hash_image_desc`] input.
+pub fn hash_media_desc(class_tag: u64, content_id: u64, d0: u64, d1: u64) -> u64 {
+    let mut buf = [0u8; 32];
+    buf[..8].copy_from_slice(&class_tag.to_le_bytes());
+    buf[8..16].copy_from_slice(&content_id.to_le_bytes());
+    buf[16..24].copy_from_slice(&d0.to_le_bytes());
+    buf[24..32].copy_from_slice(&d1.to_le_bytes());
+    fnv1a(&buf)
+}
+
 #[derive(Debug, Clone)]
 struct Entry {
     /// Vision-token count held by this entry (cost accounting).

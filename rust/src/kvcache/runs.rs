@@ -33,6 +33,14 @@ pub enum RunKind {
     Prefix(u64),
     /// Vision tokens of one image, keyed by the 64-bit content hash.
     Vision(u64),
+    /// Vision tokens of one video clip, keyed by the 64-bit content
+    /// hash. A clip spans several runs of this kind — one per encode
+    /// chunk, with consecutive absolute offsets — so the in-run compare
+    /// rule stitches them into one contiguous token span regardless of
+    /// how the chunk boundaries line up between two requests.
+    VideoChunk(u64),
+    /// Audio tokens of one clip, keyed by the 64-bit content hash.
+    Audio(u64),
     /// Unique per-request prompt tail, keyed by the request id.
     Tail(u64),
 }

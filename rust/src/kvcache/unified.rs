@@ -2,34 +2,41 @@
 //! over two pools —
 //!
 //! 1. the [`ImageCache`] pool for tokens encoded from multimodal inputs
-//!    (hash hit ⇒ skip re-encoding), and
+//!    (images, video clips, audio clips — hash hit ⇒ skip re-encoding),
+//!    and
 //! 2. the run-length [`RadixTree`] pool for KV prefixes of *unified*
-//!    sequences (vision tokens merged with text tokens ⇒ longest-prefix
+//!    sequences (media tokens merged with text tokens ⇒ longest-prefix
 //!    hit skips that much prefill).
 //!
 //! A request's unified sequence is described by a handful of
 //! [`TokenRun`] descriptors (`Request::unified_runs_into`) — one run per
-//! shared prefix / image / tail span — so the admission path does
-//! **zero per-token work**: no `Vec<u32>` with one element per token is
-//! ever materialized, prefix matching costs O(#runs), and the run
-//! buffer itself is pooled on the cache and reused across requests.
+//! shared prefix / image / video chunk / audio clip / tail span — so the
+//! admission path does **zero per-token work**: no `Vec<u32>` with one
+//! element per token is ever materialized, prefix matching costs
+//! O(#runs), and the run buffer itself is pooled on the cache and reused
+//! across requests.
+//!
+//! Encode misses come back as [`EncodeJob`]s: an image or audio clip is
+//! one job, a video clip one job **per chunk** — the granularity the
+//! non-blocking encoder pool schedules at.
 
-use super::image_cache::{hash_image_desc, ImageCache};
+use super::image_cache::ImageCache;
 use super::radix::{MatchResult, RadixTree};
 use super::runs::{total_tokens, TokenRun};
 use crate::config::ModelConfig;
-use crate::workload::Request;
+use crate::workload::{EncodeJob, Request};
 
 /// What the cache did for one request.
 #[derive(Debug)]
 pub struct CacheOutcome {
-    /// Vision tokens per image that must actually be encoded (misses).
-    pub images_to_encode: Vec<usize>,
-    /// Vision tokens served from the image pool.
+    /// Encoder work units that must actually run (media-pool misses);
+    /// videos arrive pre-split into chunks.
+    pub media_to_encode: Vec<EncodeJob>,
+    /// Media tokens served from the media-hash pool.
     pub vision_tokens_cached: usize,
     /// Unified-sequence prefix found in the KV pool (skips prefill).
     pub prefix_hit_tokens: usize,
-    /// Total unified sequence length (text + vision tokens).
+    /// Total unified sequence length (text + media tokens).
     pub total_tokens: usize,
     /// Pin on the radix path; release via [`UnifiedCache::release`].
     pub kv_path: MatchResult,
@@ -71,7 +78,7 @@ impl UnifiedCache {
     }
 
     /// Build the unified run sequence for a request. Layout:
-    /// `[shared prefix][image runs][unique tail]` — matching the paper's
+    /// `[shared prefix][media runs][unique tail]` — matching the paper's
     /// "merge vision tokens with text tokens, then check the prefix
     /// tree" order. Convenience wrapper over
     /// [`Request::unified_runs_into`]; the hot path uses the pooled
@@ -83,50 +90,66 @@ impl UnifiedCache {
     }
 
     /// Process a request through both pools. On return:
-    /// * `images_to_encode` lists vision-token counts needing encoding,
+    /// * `media_to_encode` lists the encode jobs still needed,
     /// * `prefix_hit_tokens` of prefill can be skipped,
     /// * the request's unified sequence has been inserted (so subsequent
     ///   identical requests hit) and pinned until [`release`].
     ///
     /// [`release`]: UnifiedCache::release
     pub fn process(&mut self, req: &Request, model: &ModelConfig) -> CacheOutcome {
-        let vision_total: usize = req.vision_tokens(model);
+        let media_total: usize = req.media_tokens(model);
         if !self.enabled {
+            let mut media_to_encode = Vec::new();
+            for m in req.media.iter() {
+                m.encode_jobs(model, |j| media_to_encode.push(j));
+            }
             return CacheOutcome {
-                images_to_encode: req
-                    .images
-                    .iter()
-                    .map(|i| model.image_tokens(i.width, i.height))
-                    .collect(),
+                media_to_encode,
                 vision_tokens_cached: 0,
                 prefix_hit_tokens: 0,
-                total_tokens: req.prompt_tokens + vision_total,
+                total_tokens: req.prompt_tokens + media_total,
                 kv_path: MatchResult { matched_tokens: 0, path: vec![] },
             };
         }
-        // Pool 1: image hash lookups.
-        let mut images_to_encode = Vec::new();
-        let mut vision_tokens_cached = 0;
-        for img in req.images.iter() {
-            let h = hash_image_desc(img.content_id, img.width, img.height);
-            let n = model.image_tokens(img.width, img.height);
-            if self.image_pool.lookup(h).is_some() {
-                vision_tokens_cached += n;
-            } else {
-                images_to_encode.push(n);
-                self.image_pool.insert(h, n, None);
-            }
-        }
-        // Pool 2: unified-sequence prefix over token runs.
+        // Pool 2 first: unified-sequence prefix over token runs. Its hit
+        // length decides below which attachments need encoding at all.
         let mut runs = std::mem::take(&mut self.run_scratch);
         req.unified_runs_into(model, &mut runs);
         let total = total_tokens(&runs);
         let (new_tokens, kv_path) = self.kv_pool.insert(&runs);
         self.run_scratch = runs;
+        let prefix_hit = total - new_tokens;
+        // Pool 1: media hash lookups (whole-attachment granularity: a
+        // hit skips every chunk of a clip). An attachment whose entire
+        // token span already sits inside the KV prefix hit needs no
+        // encoder output either — its KV is served from the prefix
+        // pool — so it is not re-encoded even on a media-pool miss
+        // (e.g. a clip too large for the media pool's token budget).
+        // Matches the run layout of `unified_runs_into` exactly.
+        let text_prefix = if req.prefix_id != 0 { req.prefix_tokens } else { 0 };
+        let mut media_to_encode = Vec::new();
+        let mut vision_tokens_cached = 0;
+        let mut span_start = text_prefix;
+        for m in req.media.iter() {
+            let h = m.content_hash();
+            let n = m.tokens(model);
+            let kv_covered = prefix_hit >= span_start + n;
+            if self.image_pool.lookup(h).is_some() || kv_covered {
+                vision_tokens_cached += n;
+                if kv_covered {
+                    // (Re)stamp so hot KV-covered media stays warm.
+                    self.image_pool.insert(h, n, None);
+                }
+            } else {
+                m.encode_jobs(model, |j| media_to_encode.push(j));
+                self.image_pool.insert(h, n, None);
+            }
+            span_start += n;
+        }
         CacheOutcome {
-            images_to_encode,
+            media_to_encode,
             vision_tokens_cached,
-            prefix_hit_tokens: total - new_tokens,
+            prefix_hit_tokens: prefix_hit,
             total_tokens: total,
             kv_path,
         }
@@ -162,8 +185,9 @@ pub struct CacheStats {
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::kvcache::image_cache::hash_image_desc;
     use crate::kvcache::runs::RunKind;
-    use crate::workload::ImageRef;
+    use crate::workload::MediaRef;
 
     fn mm_request(id: u64, content_id: u64, prefix_id: u64) -> Request {
         Request {
@@ -171,9 +195,21 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: 200,
             output_tokens: 10,
-            images: vec![ImageRef { width: 904, height: 904, content_id }].into(),
+            media: vec![MediaRef::image(904, 904, content_id)].into(),
             prefix_id,
             prefix_tokens: if prefix_id != 0 { 100 } else { 0 },
+        }
+    }
+
+    fn video_request(id: u64, content_id: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens: 80,
+            output_tokens: 10,
+            media: vec![MediaRef::video(448, 448, 100, content_id)].into(),
+            prefix_id: 0,
+            prefix_tokens: 0,
         }
     }
 
@@ -184,10 +220,10 @@ mod tests {
         let r1 = mm_request(1, 77, 0);
         let r2 = mm_request(2, 77, 0);
         let o1 = c.process(&r1, &model);
-        assert_eq!(o1.images_to_encode.len(), 1);
+        assert_eq!(o1.media_to_encode.len(), 1);
         c.release(&o1);
         let o2 = c.process(&r2, &model);
-        assert!(o2.images_to_encode.is_empty(), "second occurrence must hit");
+        assert!(o2.media_to_encode.is_empty(), "second occurrence must hit");
         assert!(o2.vision_tokens_cached > 6000);
         c.release(&o2);
     }
@@ -198,9 +234,80 @@ mod tests {
         let mut c = UnifiedCache::new(1_000_000, 1_000_000);
         let o1 = c.process(&mm_request(1, 10, 0), &model);
         let o2 = c.process(&mm_request(2, 11, 0), &model);
-        assert_eq!(o1.images_to_encode.len(), 1);
-        assert_eq!(o2.images_to_encode.len(), 1);
+        assert_eq!(o1.media_to_encode.len(), 1);
+        assert_eq!(o2.media_to_encode.len(), 1);
         c.release(&o1);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn repeated_video_skips_all_chunks_and_hits_prefix() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let r1 = video_request(1, 5);
+        let o1 = c.process(&r1, &model);
+        assert!(o1.media_to_encode.len() > 1, "clip must split into chunks");
+        assert_eq!(o1.prefix_hit_tokens, 0);
+        c.release(&o1);
+        // Same clip, different request: encode fully skipped, and the
+        // clip's token span (all chunks) hits in the radix pool.
+        let r2 = video_request(2, 5);
+        let o2 = c.process(&r2, &model);
+        assert!(o2.media_to_encode.is_empty(), "repeated clip must not re-encode");
+        let clip_tokens = model.video_tokens(448, 448, 100);
+        assert_eq!(o2.vision_tokens_cached, clip_tokens);
+        assert!(
+            o2.prefix_hit_tokens >= clip_tokens,
+            "prefix hit {} must cover the clip {}",
+            o2.prefix_hit_tokens,
+            clip_tokens
+        );
+        c.release(&o2);
+    }
+
+    #[test]
+    fn kv_covered_media_skips_encoding_even_on_media_pool_miss() {
+        // A clip larger than the media pool's token budget never enters
+        // pool 1 — but once its token span lives in the KV prefix pool,
+        // repeats must not re-encode it (its KV is served from cache; no
+        // encoder output is needed), and its tail prefill must not be
+        // blocked behind pointless re-encoding.
+        let model = presets::qwen25_vl_7b();
+        let clip_tokens = model.video_tokens(448, 448, 100);
+        // Media pool smaller than one clip; KV pool comfortably larger.
+        let mut c = UnifiedCache::new(clip_tokens / 2, 1_000_000);
+        let o1 = c.process(&video_request(1, 5), &model);
+        assert!(!o1.media_to_encode.is_empty(), "cold clip must encode");
+        c.release(&o1);
+        let o2 = c.process(&video_request(2, 5), &model);
+        assert!(
+            o2.media_to_encode.is_empty(),
+            "KV-covered clip must not re-encode on a media-pool miss"
+        );
+        assert_eq!(o2.vision_tokens_cached, clip_tokens);
+        assert!(o2.prefix_hit_tokens >= clip_tokens);
+        c.release(&o2);
+    }
+
+    #[test]
+    fn audio_media_caches_like_images() {
+        let model = presets::qwen25_vl_7b();
+        let mut c = UnifiedCache::new(1_000_000, 1_000_000);
+        let mk = |id| Request {
+            id,
+            arrival: 0.0,
+            prompt_tokens: 50,
+            output_tokens: 5,
+            media: vec![MediaRef::audio(4000, 16_000, 9)].into(),
+            prefix_id: 0,
+            prefix_tokens: 0,
+        };
+        let o1 = c.process(&mk(1), &model);
+        assert_eq!(o1.media_to_encode.len(), 1);
+        c.release(&o1);
+        let o2 = c.process(&mk(2), &model);
+        assert!(o2.media_to_encode.is_empty());
+        assert_eq!(o2.vision_tokens_cached, model.audio_tokens(4000));
         c.release(&o2);
     }
 
@@ -210,8 +317,8 @@ mod tests {
         let mut c = UnifiedCache::new(1_000_000, 1_000_000);
         let mut r1 = mm_request(1, 5, 3);
         let mut r2 = mm_request(2, 6, 3);
-        r1.images = Vec::new().into();
-        r2.images = Vec::new().into();
+        r1.media = Vec::new().into();
+        r2.media = Vec::new().into();
         let o1 = c.process(&r1, &model);
         assert_eq!(o1.prefix_hit_tokens, 0);
         c.release(&o1);
@@ -246,7 +353,7 @@ mod tests {
         let o1 = c.process(&r1, &model);
         c.release(&o1);
         let o2 = c.process(&r2, &model);
-        assert!(o2.images_to_encode.is_empty());
+        assert!(o2.media_to_encode.is_empty());
         // Hits prefix tokens + all vision tokens (tail differs).
         let vis = model.image_tokens(904, 904);
         assert_eq!(o2.prefix_hit_tokens, 100 + vis);
@@ -260,7 +367,7 @@ mod tests {
         let r = mm_request(1, 5, 3);
         for _ in 0..3 {
             let o = c.process(&r, &model);
-            assert_eq!(o.images_to_encode.len(), 1);
+            assert_eq!(o.media_to_encode.len(), 1);
             assert_eq!(o.prefix_hit_tokens, 0);
             c.release(&o);
         }
@@ -280,6 +387,8 @@ mod tests {
         let c = UnifiedCache::new(0, 0);
         let r = mm_request(7, 9, 2);
         assert_eq!(total_tokens(&c.unified_sequence(&r, &model)), r.input_len(&model));
+        let v = video_request(3, 4);
+        assert_eq!(total_tokens(&c.unified_sequence(&v, &model)), v.input_len(&model));
     }
 
     #[test]
@@ -309,8 +418,8 @@ mod tests {
         let model = presets::qwen25_vl_7b();
         let c = UnifiedCache::new(0, 0);
         let mut r = mm_request(1, 5, 0);
-        let img = ImageRef { width: 904, height: 904, content_id: 5 };
-        r.images = vec![img, img].into();
+        let img = MediaRef::image(904, 904, 5);
+        r.media = vec![img, img].into();
         let runs = c.unified_sequence(&r, &model);
         // vision, vision, tail — both vision runs restart at offset 0.
         assert_eq!(runs.len(), 3);

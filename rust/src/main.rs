@@ -5,15 +5,18 @@
 //!                (sequential or staged/non-blocking pipeline; needs the
 //!                `pjrt` feature)
 //!   simulate   — run a serving-system simulation on the A800 cluster
-//!                model (systems: elasticmm | vllm | vllm-decouple | static)
+//!                model (systems: elasticmm | vllm | vllm-decouple | static;
+//!                datasets: sharegpt | vwi | video-chat | voice-assistant |
+//!                mixed-modal; `--groups 4` = N-way modality groups)
 //!   gen-trace  — generate a workload trace JSON
 //!   models     — print the Table-1 model presets
 //!
 //! Examples:
 //!   elasticmm simulate --system elasticmm --model qwen --dataset sharegpt \
 //!       --qps 8 --requests 400 --gpus 8
+//!   elasticmm simulate --system elasticmm --dataset mixed-modal --groups 4
 //!   elasticmm serve --requests 8 --staged
-//!   elasticmm gen-trace --dataset vwi --requests 1000 --qps 5 --out trace.json
+//!   elasticmm gen-trace --dataset video-chat --requests 1000 --qps 5 --out trace.json
 
 use elasticmm::baselines::coupled::CoupledVllm;
 use elasticmm::baselines::decoupled::DecoupledStatic;
@@ -49,10 +52,14 @@ fn main() -> Result<()> {
     }
 }
 
-fn dataset(args: &Args) -> DatasetSpec {
-    match args.get_or("dataset", "sharegpt").as_str() {
-        "vwi" | "visualwebinstruct" => DatasetSpec::visualwebinstruct(),
-        _ => DatasetSpec::sharegpt4o(),
+fn dataset(args: &Args) -> Result<DatasetSpec> {
+    let name = args.get_or("dataset", "sharegpt");
+    match DatasetSpec::by_name(&name) {
+        Some(spec) => Ok(spec),
+        None => elasticmm::bail!(
+            "unknown dataset `{name}`; valid datasets: {}",
+            DatasetSpec::REGISTRY.join(", ")
+        ),
     }
 }
 
@@ -69,21 +76,40 @@ fn cost_model(args: &Args) -> CostModel {
     CostModel::new(model, GpuSpec::a800_80g())
 }
 
-fn make_trace(args: &Args) -> Vec<Request> {
+fn make_trace(args: &Args) -> Result<Vec<Request>> {
     let mut rng = Rng::new(args.get_u64("seed", 42));
     let n = args.get_usize("requests", 300);
     let qps = args.get_f64("qps", 6.0);
-    let mut reqs = dataset(args).generate(&mut rng, n);
+    let mut reqs = dataset(args)?.generate(&mut rng, n);
     poisson_arrivals(&mut rng, &mut reqs, qps);
-    reqs
+    Ok(reqs)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cost = cost_model(args);
     let sched = SchedulerConfig::default();
     let gpus = args.get_usize("gpus", 8);
-    let t = make_trace(args);
+    let t = make_trace(args)?;
     let system = args.get_or("system", "elasticmm");
+    // `--groups 4` runs ElasticMM with the full N-way modality-group
+    // registry (Text | Image | Video | Audio) instead of the binary
+    // text/multimodal split. Only `elasticmm` honors it — reject it
+    // elsewhere rather than silently ignoring it.
+    let groups = args.get_usize("groups", 2);
+    if args.get("groups").is_some() && system != "elasticmm" {
+        elasticmm::bail!("--groups only applies to --system elasticmm (got `{system}`)");
+    }
+    // Each group keeps >=1 *instance*; an instance spans the model's
+    // minimum tensor-parallel degree worth of GPUs, so validate
+    // instances, not raw GPUs (a 72B model needs tp>1 per instance).
+    let n_inst = (gpus / cost.min_tp()).max(2);
+    if groups == 4 && n_inst < 4 {
+        elasticmm::bail!(
+            "--groups 4 needs at least 4 instances (one per modality group); \
+             {gpus} GPUs at tp={} give only {n_inst}",
+            cost.min_tp()
+        );
+    }
     // Every system runs through the shared driver (sim::driver), so the
     // comparison is apples-to-apples.
     let report: Report = match system.as_str() {
@@ -93,9 +119,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             let text = args.get_usize("text-instances", gpus / 2);
             EmpSystem::new(cost, sched, gpus, EmpOptions::static_split(text)).run(&t)
         }
-        _ => EmpSystem::new(cost, sched, gpus, EmpOptions::full(gpus)).run(&t),
+        "elasticmm" => {
+            let opts = match groups {
+                4 => EmpOptions::full_nway(gpus),
+                2 => EmpOptions::full(gpus),
+                other => elasticmm::bail!("--groups must be 2 or 4, got {other}"),
+            };
+            EmpSystem::new(cost, sched, gpus, opts).run(&t)
+        }
+        other => elasticmm::bail!(
+            "unknown system `{other}`; valid: elasticmm, vllm, vllm-decouple, static"
+        ),
     };
-    let (txt, mm) = report.split_by_modality();
     println!("system={system} gpus={gpus} requests={}", report.records.len());
     let row = |name: &str, r: &Report| {
         vec![
@@ -107,7 +142,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             format!("{:.2}", r.throughput_rps()),
         ]
     };
-    let rows = vec![row("all", &report), row("text", &txt), row("multimodal", &mm)];
+    let mut rows = vec![row("all", &report)];
+    for (m, sub) in report.split_by_modality() {
+        rows.push(row(m.name(), &sub));
+    }
     println!(
         "{}",
         render_table(
@@ -117,7 +155,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     );
     if let Some(path) = args.get("out") {
         std::fs::write(path, report.to_json().to_string())?;
-        println!("wrote records to {path}");
+        println!("wrote records + per-modality summary to {path}");
     }
     Ok(())
 }
@@ -199,7 +237,7 @@ fn cmd_serve_http(_args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_trace(args: &Args) -> Result<()> {
-    let t = make_trace(args);
+    let t = make_trace(args)?;
     let path = args.get_or("out", "trace.json");
     trace::save_trace(std::path::Path::new(&path), &t)?;
     println!("wrote {} requests to {path}", t.len());

@@ -5,17 +5,21 @@
 //! * **normalized output latency** — average decode time divided by
 //!   output length,
 //! * **SLO attainment / max goodput under SLO** — the Fig 6/7 metric,
-//! * P90 effective throughput for the ablations.
+//!   with per-modality SLO defaults (voice traffic is TTFT-tight, video
+//!   traffic amortizes long inputs),
+//! * P90 effective throughput for the ablations,
+//! * per-modality breakdowns over the N-way taxonomy.
 
 use crate::sim::instance::SimRequest;
 use crate::util::json::Json;
 use crate::util::stats;
+use crate::workload::Modality;
 
 /// Timing record for one completed request.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: u64,
-    pub multimodal: bool,
+    pub modality: Modality,
     pub input_len: usize,
     pub output_len: usize,
     pub arrival: f64,
@@ -27,13 +31,18 @@ impl RequestRecord {
     pub fn from_sim(r: &SimRequest) -> RequestRecord {
         RequestRecord {
             id: r.req.id,
-            multimodal: r.vision_tokens > 0,
+            modality: r.req.modality(),
             input_len: r.input_len,
             output_len: r.req.output_tokens,
             arrival: r.t_arrival,
             first_token: r.t_first_token,
             finish: r.t_finish,
         }
+    }
+
+    /// Whether the request carried media (legacy binary view).
+    pub fn multimodal(&self) -> bool {
+        self.modality.has_media()
     }
 
     /// Time to first token.
@@ -57,7 +66,8 @@ impl RequestRecord {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id as f64)),
-            ("multimodal", Json::Bool(self.multimodal)),
+            ("modality", Json::str(self.modality.name().to_string())),
+            ("multimodal", Json::Bool(self.multimodal())),
             ("input_len", Json::num(self.input_len as f64)),
             ("output_len", Json::num(self.output_len as f64)),
             ("arrival", Json::num(self.arrival)),
@@ -152,14 +162,65 @@ impl Report {
         self.throughput_rps() * self.slo_attainment(slo)
     }
 
-    pub fn split_by_modality(&self) -> (Report, Report) {
+    /// Per-modality partition in [`Modality::ALL`] order, keeping only
+    /// modalities that actually appear in the records.
+    pub fn split_by_modality(&self) -> Vec<(Modality, Report)> {
+        Modality::ALL
+            .iter()
+            .filter_map(|&m| {
+                let recs: Vec<RequestRecord> = self
+                    .records
+                    .iter()
+                    .filter(|r| r.modality == m)
+                    .cloned()
+                    .collect();
+                if recs.is_empty() {
+                    None
+                } else {
+                    Some((m, Report::new(recs)))
+                }
+            })
+            .collect()
+    }
+
+    /// Legacy binary view: `(text-only, media-bearing)` sub-reports.
+    pub fn split_text_media(&self) -> (Report, Report) {
         let (mm, txt): (Vec<_>, Vec<_>) =
-            self.records.iter().cloned().partition(|r| r.multimodal);
+            self.records.iter().cloned().partition(|r| r.multimodal());
         (Report::new(txt), Report::new(mm))
     }
 
+    /// Per-modality TTFT/latency/goodput summary (goodput under each
+    /// modality's default SLO — see [`Slo::default_for`]).
+    pub fn per_modality_json(&self) -> Json {
+        let sections: Vec<(&str, Json)> = self
+            .split_by_modality()
+            .into_iter()
+            .map(|(m, rep)| {
+                let slo = Slo::default_for(m);
+                (
+                    m.name(),
+                    Json::obj(vec![
+                        ("requests", Json::num(rep.records.len() as f64)),
+                        ("mean_ttft_s", Json::num(rep.mean_ttft())),
+                        ("p90_ttft_s", Json::num(rep.p_ttft(90.0))),
+                        ("mean_norm_input_s", Json::num(rep.mean_norm_input_latency())),
+                        ("mean_norm_output_s", Json::num(rep.mean_norm_output_latency())),
+                        ("throughput_rps", Json::num(rep.throughput_rps())),
+                        ("slo_attainment", Json::num(rep.slo_attainment(&slo))),
+                        ("goodput_rps", Json::num(rep.goodput_rps(&slo))),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(sections)
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::Arr(self.records.iter().map(|r| r.to_json()).collect())
+        Json::obj(vec![
+            ("per_modality", self.per_modality_json()),
+            ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ])
     }
 }
 
@@ -181,6 +242,19 @@ impl Slo {
         }
     }
 
+    /// Default per-modality SLO targets for reporting: voice traffic is
+    /// TTFT-tight (a spoken assistant must answer promptly), video
+    /// tolerates more absolute TTFT but its enormous inputs amortize it,
+    /// text/image sit between.
+    pub fn default_for(m: Modality) -> Slo {
+        match m {
+            Modality::Text => Slo { norm_input_s: 0.010, norm_output_s: 0.10 },
+            Modality::Image => Slo { norm_input_s: 0.012, norm_output_s: 0.10 },
+            Modality::Video => Slo { norm_input_s: 0.020, norm_output_s: 0.10 },
+            Modality::Audio => Slo { norm_input_s: 0.006, norm_output_s: 0.06 },
+        }
+    }
+
     pub fn scaled(&self, k: f64) -> Slo {
         Slo { norm_input_s: self.norm_input_s * k, norm_output_s: self.norm_output_s * k }
     }
@@ -193,7 +267,7 @@ mod tests {
     fn rec(arrival: f64, first: f64, finish: f64, input: usize, output: usize) -> RequestRecord {
         RequestRecord {
             id: 0,
-            multimodal: false,
+            modality: Modality::Text,
             input_len: input,
             output_len: output,
             arrival,
@@ -239,15 +313,48 @@ mod tests {
     }
 
     #[test]
-    fn modality_split() {
+    fn modality_split_binary_and_nway() {
         let mut a = rec(0.0, 1.0, 2.0, 10, 5);
-        a.multimodal = true;
+        a.modality = Modality::Image;
+        let mut v = rec(0.0, 1.0, 2.0, 10, 5);
+        v.modality = Modality::Video;
         let b = rec(0.0, 1.0, 2.0, 10, 5);
-        let rep = Report::new(vec![a, b]);
-        let (txt, mm) = rep.split_by_modality();
+        let rep = Report::new(vec![a, v, b]);
+        let (txt, mm) = rep.split_text_media();
         assert_eq!(txt.records.len(), 1);
-        assert_eq!(mm.records.len(), 1);
-        assert!(mm.records[0].multimodal);
+        assert_eq!(mm.records.len(), 2);
+        assert!(mm.records.iter().all(|r| r.multimodal()));
+        // N-way map: three modalities present, in ALL order, audio absent.
+        let map = rep.split_by_modality();
+        let names: Vec<&str> = map.iter().map(|(m, _)| m.name()).collect();
+        assert_eq!(names, vec!["text", "image", "video"]);
+        for (_, sub) in &map {
+            assert_eq!(sub.records.len(), 1);
+        }
+    }
+
+    #[test]
+    fn per_modality_json_emits_sections() {
+        let mut a = rec(0.0, 1.0, 2.0, 10, 5);
+        a.modality = Modality::Audio;
+        let rep = Report::new(vec![a, rec(0.0, 1.0, 2.0, 10, 5)]);
+        let j = rep.per_modality_json();
+        assert!(j.get("audio").is_ok());
+        assert!(j.get("text").is_ok());
+        assert!(j.get("video").is_err(), "absent modality emits no section");
+        assert!(j.get("audio").unwrap().get("goodput_rps").is_ok());
+        // Full report json carries both sections and raw records.
+        let full = rep.to_json();
+        assert!(full.get("per_modality").is_ok());
+        assert_eq!(full.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn audio_slo_is_tightest_on_ttft() {
+        let audio = Slo::default_for(Modality::Audio);
+        for m in [Modality::Text, Modality::Image, Modality::Video] {
+            assert!(audio.norm_input_s < Slo::default_for(m).norm_input_s);
+        }
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub struct CostModel {
     pub preprocess_per_tile: f64,
     /// Fixed migration handshake latency (s).
     pub migration_rtt: f64,
+    /// Audio encoder size relative to the vision encoder (a
+    /// Whisper-small-class audio tower vs a ViT-H-class vision tower);
+    /// scales both FLOPs and weight reads in [`Self::audio_encode_time`].
+    pub audio_encoder_scale: f64,
 }
 
 impl CostModel {
@@ -59,6 +63,7 @@ impl CostModel {
             tp_comm_penalty: 0.08,
             preprocess_per_tile: 4.0e-3,
             migration_rtt: 1.0e-3,
+            audio_encoder_scale: 0.35,
         }
     }
 
@@ -86,9 +91,7 @@ impl CostModel {
 
     /// CPU preprocessing time for an image (resize + tiling, §2.1).
     pub fn preprocess_time(&self, image_w: usize, image_h: usize) -> f64 {
-        let tiles_w = image_w.div_ceil(self.model.tile_pixels);
-        let tiles_h = image_h.div_ceil(self.model.tile_pixels);
-        let tiles = (tiles_w * tiles_h).clamp(1, self.model.max_tiles);
+        let tiles = self.model.spatial_tiles(image_w, image_h, self.model.max_tiles);
         self.preprocess_per_tile * tiles as f64
     }
 
@@ -113,6 +116,59 @@ impl CostModel {
         let compute = flops / self.flops_rate(tp);
         let memory = weight_bytes / self.hbm_rate(tp);
         compute.max(memory) + self.iter_overhead
+    }
+
+    /// Frame-batched video encode: GEMM work over all tokens of the
+    /// chunk, but attention is quadratic *per sampled frame* rather than
+    /// over the whole clip (frames attend independently, as video
+    /// encoders batch frames) — so a clip's encode cost grows linearly
+    /// with its length instead of quadratically.
+    pub fn video_encode_time(&self, tokens: usize, frame_tokens: usize, tp: usize) -> f64 {
+        let e = &self.model.encoder;
+        let n = tokens as f64;
+        let ft = frame_tokens.max(1) as f64;
+        let frames = (n / ft).ceil().max(1.0);
+        let gemm = 2.0 * e.params() as f64 * n;
+        let attn = 4.0 * frames * ft * ft * e.hidden as f64 * e.layers as f64;
+        let compute = (gemm + attn) / self.flops_rate(tp);
+        let memory = self.model.encoder_weight_bytes() as f64 / self.hbm_rate(tp);
+        compute.max(memory) + self.iter_overhead
+    }
+
+    /// Audio encode on the (smaller) audio tower: the vision-encoder
+    /// roofline scaled by `audio_encoder_scale` in both FLOPs and
+    /// weight reads.
+    pub fn audio_encode_time(&self, tokens: usize, tp: usize) -> f64 {
+        let s = self.audio_encoder_scale;
+        let flops = self.encode_flops(tokens) * s;
+        let weight_bytes = self.model.encoder_weight_bytes() as f64 * s;
+        let compute = flops / self.flops_rate(tp);
+        let memory = weight_bytes / self.hbm_rate(tp);
+        compute.max(memory) + self.iter_overhead
+    }
+
+    /// Cost of one encoder-pool work unit (CPU preprocessing + the
+    /// class-specific encoder forward). The single entry point every
+    /// serving system charges for media encoding, so the blocking and
+    /// non-blocking paths cannot drift.
+    pub fn encode_job_time(&self, job: &crate::workload::EncodeJob, tp: usize) -> f64 {
+        let pre = self.preprocess_per_tile * job.tiles as f64;
+        pre + match job.class {
+            crate::workload::MediaClass::Image => self.encode_time(job.tokens, tp),
+            crate::workload::MediaClass::Video => {
+                self.video_encode_time(job.tokens, job.frame_tokens, tp)
+            }
+            crate::workload::MediaClass::Audio => self.audio_encode_time(job.tokens, tp),
+        }
+    }
+
+    /// Total encode cost of one media attachment (all of a video's
+    /// chunks summed) — used by blocking-inline paths and load
+    /// estimates. Allocation-free.
+    pub fn media_encode_time(&self, media: &crate::workload::MediaRef, tp: usize) -> f64 {
+        let mut t = 0.0;
+        media.encode_jobs(&self.model, |job| t += self.encode_job_time(&job, tp));
+        t
     }
 
     // --- prefill ----------------------------------------------------------
@@ -559,6 +615,46 @@ mod tests {
     fn preprocess_time_scales_with_tiles() {
         let m = llama();
         assert!(m.preprocess_time(1120, 1120) > m.preprocess_time(500, 500));
+    }
+
+    #[test]
+    fn frame_batched_video_encode_beats_clip_global_attention() {
+        // Same token count: per-frame attention must be cheaper than
+        // treating the whole clip as one giant image.
+        let m = qwen();
+        let ft = m.model.video_frame_tokens(448, 448);
+        let tokens = 48 * ft;
+        let video = m.video_encode_time(tokens, ft, 1);
+        let clip_as_image = m.encode_time(tokens, 1);
+        assert!(video < clip_as_image, "video {video} vs clip-global {clip_as_image}");
+        // And it grows ~linearly with chunk length.
+        let double = m.video_encode_time(2 * tokens, ft, 1);
+        assert!(double < 2.5 * video, "video {video} double {double}");
+    }
+
+    #[test]
+    fn audio_encode_cheaper_than_vision_encode() {
+        let m = qwen();
+        let t = m.audio_encode_time(200, 1);
+        let v = m.encode_time(200, 1);
+        assert!(t < v, "audio {t} vs vision {v}");
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn encode_job_time_dispatches_by_class_and_sums_over_media() {
+        use crate::workload::{EncodeJob, MediaClass, MediaRef};
+        let m = qwen();
+        let img = EncodeJob { class: MediaClass::Image, tokens: 926, frame_tokens: 0, tiles: 4 };
+        let aud = EncodeJob { class: MediaClass::Audio, tokens: 926, frame_tokens: 0, tiles: 4 };
+        assert!(m.encode_job_time(&img, 1) > m.encode_job_time(&aud, 1));
+        // media_encode_time must equal the sum over the clip's chunks.
+        let clip = MediaRef::video(448, 448, 100, 9);
+        let mut sum = 0.0;
+        clip.encode_jobs(&m.model, |j| sum += m.encode_job_time(&j, 1));
+        let total = m.media_encode_time(&clip, 1);
+        assert!((total - sum).abs() < 1e-12, "total {total} sum {sum}");
+        assert!(total > 0.0);
     }
 
     #[test]

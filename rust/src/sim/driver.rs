@@ -313,7 +313,7 @@ mod tests {
             arrival,
             prompt_tokens: 10,
             output_tokens: 2,
-            images: Vec::new().into(),
+            media: Vec::new().into(),
             prefix_id: 0,
             prefix_tokens: 0,
         }
@@ -359,7 +359,7 @@ mod tests {
             self.busy_until = finish;
             let rec = RequestRecord {
                 id: req.id,
-                multimodal: false,
+                modality: crate::workload::Modality::Text,
                 input_len: req.prompt_tokens,
                 output_len: req.output_tokens,
                 arrival: req.arrival,

@@ -10,13 +10,13 @@
 use crate::kvcache::paged::PagedKvCache;
 use crate::model::{CostModel, DecodeItem};
 use crate::sim::slab::{ReqIx, RequestSlab};
-use crate::workload::Request;
+use crate::workload::{EncodeJob, Request};
 
 /// Which inference stage an instance currently serves (stage-level
 /// disaggregation, §3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StageRole {
-    /// Vision encoder replica.
+    /// Media encoder replica.
     Encode,
     /// LLM prefill replica.
     Prefill,
@@ -26,11 +26,17 @@ pub enum StageRole {
     Unified,
 }
 
-/// Which modality group owns an instance (modality-level separation, §3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum GroupId {
-    Text,
-    Multimodal,
+/// Which modality group owns an instance (modality-level separation,
+/// §3). An index into the owning system's modality-group registry —
+/// which modality a group serves is the system's configuration
+/// (`EmpOptions::groups`), not a property of the id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GroupId(pub u8);
+
+impl GroupId {
+    pub const fn index(self) -> usize {
+        self.0 as usize
+    }
 }
 
 /// A simulated elastic instance.
@@ -247,12 +253,34 @@ impl Phase {
 pub struct SimRequest {
     pub req: Request,
     pub phase: Phase,
-    /// Vision tokens for the chosen model.
+    /// Media tokens (vision + audio) for the chosen model.
     pub vision_tokens: usize,
-    /// Full input context (prompt + vision tokens).
+    /// Full input context (prompt + media tokens).
     pub input_len: usize,
-    /// Vision tokens that still need encoding (after image-cache hits).
-    pub encode_pending: Vec<usize>,
+    /// Encoder work units still pending (after media-cache hits); a
+    /// video clip is several jobs — one per chunk — so a long clip's
+    /// later chunks can encode while its earlier tokens already
+    /// prefill. Jobs are consumed back-to-front (`pop`).
+    pub encode_pending: Vec<EncodeJob>,
+    /// When true the pending encode work is charged *inline* inside the
+    /// prefill iteration (blocking-encode mode / fallback) instead of on
+    /// the encoder pool; every pending token then counts as prefillable.
+    pub inline_encode: bool,
+    /// Set at prefill dispatch when the in-flight iteration's duration
+    /// actually charged the pending encode jobs inline; consumed at
+    /// iteration completion to clear `encode_pending`. Guards against
+    /// `inline_encode` flipping on *mid-iteration* (the drain-stuck
+    /// fallback): jobs are only discarded once an iteration has paid
+    /// for them.
+    pub encode_charged_inline: bool,
+    /// Whether this request is currently queued in its group's
+    /// `wait_prefill` (guards against double-enqueue while encode chunks
+    /// and partial prefills interleave).
+    pub in_wait_prefill: bool,
+    /// Tokens admitted to the in-flight prefill iteration (consumed at
+    /// iteration completion; a request is in at most one prefill
+    /// iteration at a time).
+    pub prefill_inflight: usize,
     /// Prefill tokens skipped via unified prefix cache.
     pub cached_prefix: usize,
     /// Prefill tokens completed so far (excluding cached prefix).
@@ -271,16 +299,20 @@ pub struct SimRequest {
 }
 
 impl SimRequest {
-    pub fn new(req: Request, vision_tokens: usize) -> Self {
-        let input_len = req.prompt_tokens + vision_tokens;
-        let phase = if vision_tokens > 0 { Phase::WaitEncode } else { Phase::WaitPrefill };
+    pub fn new(req: Request, media_tokens: usize) -> Self {
+        let input_len = req.prompt_tokens + media_tokens;
+        let phase = if media_tokens > 0 { Phase::WaitEncode } else { Phase::WaitPrefill };
         let t_arrival = req.arrival;
         SimRequest {
             req,
             phase,
-            vision_tokens,
+            vision_tokens: media_tokens,
             input_len,
             encode_pending: Vec::new(),
+            inline_encode: false,
+            encode_charged_inline: false,
+            in_wait_prefill: false,
+            prefill_inflight: 0,
             cached_prefix: 0,
             prefill_done: 0,
             prefill_target: input_len,
@@ -297,6 +329,23 @@ impl SimRequest {
         self.prefill_target.saturating_sub(self.prefill_done)
     }
 
+    /// Media tokens whose encode jobs have not run yet.
+    pub fn pending_media_tokens(&self) -> usize {
+        self.encode_pending.iter().map(|j| j.tokens).sum()
+    }
+
+    /// Prefill tokens admissible *right now*: everything not yet
+    /// prefilled except media tokens still waiting on the encoder pool.
+    /// Inline-encode requests pay encoding inside the prefill iteration,
+    /// so all remaining tokens are admissible.
+    pub fn prefill_admissible(&self) -> usize {
+        if self.inline_encode {
+            self.prefill_remaining()
+        } else {
+            self.prefill_remaining().saturating_sub(self.pending_media_tokens())
+        }
+    }
+
     /// Context length while decoding (input + generated so far).
     pub fn context_len(&self) -> usize {
         self.input_len + self.decoded
@@ -310,7 +359,7 @@ impl SimRequest {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::ImageRef;
+    use crate::workload::{MediaClass, MediaRef};
 
     fn request(images: usize) -> Request {
         Request {
@@ -318,8 +367,8 @@ mod tests {
             arrival: 2.5,
             prompt_tokens: 100,
             output_tokens: 20,
-            images: (0..images)
-                .map(|i| ImageRef { width: 448, height: 448, content_id: i as u64 })
+            media: (0..images)
+                .map(|i| MediaRef::image(448, 448, i as u64))
                 .collect::<Vec<_>>()
                 .into(),
             prefix_id: 0,
@@ -354,8 +403,26 @@ mod tests {
     }
 
     #[test]
+    fn prefill_admissible_excludes_pending_chunks() {
+        let mut r = SimRequest::new(request(0), 2000);
+        // 100 text + 2000 media tokens; 1200 of the media not yet encoded.
+        r.encode_pending = vec![
+            EncodeJob { class: MediaClass::Video, tokens: 800, frame_tokens: 400, tiles: 2 },
+            EncodeJob { class: MediaClass::Video, tokens: 400, frame_tokens: 400, tiles: 1 },
+        ];
+        assert_eq!(r.pending_media_tokens(), 1200);
+        assert_eq!(r.prefill_admissible(), 2100 - 1200);
+        r.prefill_done = 500;
+        assert_eq!(r.prefill_admissible(), 2100 - 500 - 1200);
+        // Inline mode charges encode in the prefill iteration: all
+        // remaining tokens admissible.
+        r.inline_encode = true;
+        assert_eq!(r.prefill_admissible(), r.prefill_remaining());
+    }
+
+    #[test]
     fn instance_iteration_accounting() {
-        let mut inst = Instance::new(0, 1, StageRole::Unified, GroupId::Text, 1600);
+        let mut inst = Instance::new(0, 1, StageRole::Unified, GroupId(0), 1600);
         assert!(inst.idle_at(0.0));
         let done = inst.start_iteration(1.0, 0.5);
         assert_eq!(done, 1.5);

@@ -112,7 +112,7 @@ mod tests {
                 arrival: 0.0,
                 prompt_tokens: 10,
                 output_tokens: 4,
-                images: Vec::new().into(),
+                media: Vec::new().into(),
                 prefix_id: 0,
                 prefix_tokens: 0,
             },

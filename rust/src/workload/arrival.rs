@@ -9,7 +9,7 @@
 //! * [`DiurnalProcess`] — sinusoidal day/night rate for the proactive
 //!   allocator's long-horizon predictability.
 
-use super::{Modality, Request};
+use super::Request;
 use crate::util::rng::Rng;
 
 /// Stamp Poisson arrival times (rate `qps`) onto `requests` in order.
@@ -112,11 +112,11 @@ pub fn concentrate_multimodal_in_bursts(
     let arrivals: Vec<f64> = requests.iter().map(|r| r.arrival).collect();
     let in_burst =
         |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
-    // Partition request payloads: multimodal payloads go to burst slots.
+    // Partition request payloads: media-bearing payloads go to burst slots.
     let mut mm: Vec<Request> =
-        requests.iter().filter(|r| r.modality() == Modality::Multimodal).cloned().collect();
+        requests.iter().filter(|r| r.modality().has_media()).cloned().collect();
     let mut txt: Vec<Request> =
-        requests.iter().filter(|r| r.modality() == Modality::TextOnly).cloned().collect();
+        requests.iter().filter(|r| !r.modality().has_media()).cloned().collect();
     for (i, &t) in arrivals.iter().enumerate() {
         let pick_mm = in_burst(t) && !mm.is_empty();
         let payload = if pick_mm || txt.is_empty() {
@@ -208,17 +208,17 @@ mod tests {
         };
         let bursts = p.stamp(&mut rng, &mut reqs);
         let stamps: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
-        let n_mm = reqs.iter().filter(|r| !r.images.is_empty()).count();
+        let n_mm = reqs.iter().filter(|r| !r.media.is_empty()).count();
         concentrate_multimodal_in_bursts(&mut reqs, &bursts);
         let stamps2: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
         assert_eq!(stamps, stamps2);
-        assert_eq!(reqs.iter().filter(|r| !r.images.is_empty()).count(), n_mm);
+        assert_eq!(reqs.iter().filter(|r| !r.media.is_empty()).count(), n_mm);
         // Multimodal fraction inside bursts should exceed outside.
         let in_burst = |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
         let frac = |inside: bool| {
             let sel: Vec<&Request> =
                 reqs.iter().filter(|r| in_burst(r.arrival) == inside).collect();
-            sel.iter().filter(|r| !r.images.is_empty()).count() as f64
+            sel.iter().filter(|r| !r.media.is_empty()).count() as f64
                 / sel.len().max(1) as f64
         };
         assert!(frac(true) > frac(false));

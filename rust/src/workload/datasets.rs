@@ -1,4 +1,4 @@
-//! Synthetic stand-ins for the paper's two evaluation datasets
+//! Synthetic stand-ins for the evaluation datasets
 //! (DESIGN.md §Substitutions):
 //!
 //! * **ShareGPT-4o-like** — 50K-image-style conversational data:
@@ -6,20 +6,26 @@
 //!   this as its visually-intensive workload.
 //! * **VisualWebInstruct-like** — web-scraped instruction data: *longer
 //!   text inputs*, smaller images.
+//! * **VideoChat-like** — video understanding traffic: few(er) requests
+//!   with *huge* vision-token counts (a clip is tens of encode chunks).
+//! * **VoiceAssistant-like** — conversational audio: short clips, short
+//!   prompts/outputs, tight TTFT expectations.
+//! * **MixedModal** — all four modalities in one trace, the N-way
+//!   modality-group workload.
 //!
-//! Both mix text-only and multimodal requests; image content and text
+//! All mix text-only and media-bearing requests; media content and text
 //! prefixes are drawn from Zipf-distributed pools so real-world
-//! redundancy (repeated images, shared system prompts) is present for
-//! the unified-prefix-cache experiments.
+//! redundancy (repeated images/clips, shared system prompts) is present
+//! for the unified-prefix-cache experiments.
 
-use super::{ImageRef, Request};
+use super::{MediaRef, Request};
 use crate::util::rng::Rng;
 
 /// Distributional description of a dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
     pub name: String,
-    /// Fraction of requests that carry >=1 image.
+    /// Fraction of requests that carry >=1 media attachment.
     pub multimodal_fraction: f64,
     /// Text prompt length ~ LogNormal(mu, sigma), clamped.
     pub prompt_mu: f64,
@@ -29,16 +35,33 @@ pub struct DatasetSpec {
     pub output_mu: f64,
     pub output_sigma: f64,
     pub output_max: usize,
-    /// Image edge ~ LogNormal(mu, sigma) pixels, clamped.
+    /// Image edge ~ LogNormal(mu, sigma) pixels, clamped. Also the
+    /// resolution distribution of video frames.
     pub image_edge_mu: f64,
     pub image_edge_sigma: f64,
     pub image_edge_min: usize,
     pub image_edge_max: usize,
-    /// P(second image | multimodal), applied repeatedly (geometric).
+    /// P(second image | image-bearing), applied repeatedly (geometric).
     pub extra_image_p: f64,
     /// Distinct image pool size + Zipf exponent (content redundancy).
     pub image_pool: usize,
     pub image_zipf_s: f64,
+    /// Of media-bearing requests, fraction carrying a video clip and
+    /// fraction carrying an audio clip (the rest carry images).
+    pub video_fraction: f64,
+    pub audio_fraction: f64,
+    /// Video length in frames ~ LogNormal(mu, sigma), clamped.
+    pub video_frames_mu: f64,
+    pub video_frames_sigma: f64,
+    pub video_frames_max: usize,
+    /// Distinct video content pool (Zipf with `image_zipf_s`).
+    pub video_pool: usize,
+    /// Audio duration in ms ~ LogNormal(mu, sigma), clamped.
+    pub audio_ms_mu: f64,
+    pub audio_ms_sigma: f64,
+    pub audio_ms_max: usize,
+    /// Distinct audio content pool (Zipf with `image_zipf_s`).
+    pub audio_pool: usize,
     /// Distinct shared-prefix pool + prefix token length range.
     pub prefix_pool: usize,
     pub prefix_zipf_s: f64,
@@ -48,9 +71,18 @@ pub struct DatasetSpec {
 }
 
 impl DatasetSpec {
+    /// Image-only defaults for the video/audio knobs (used by the two
+    /// original presets, which carry images exclusively).
+    fn no_av() -> (f64, f64, f64, f64, usize, usize, f64, f64, usize, usize) {
+        // (video_frac, audio_frac, vframes_mu, vframes_sigma, vframes_max,
+        //  video_pool, audio_mu, audio_sigma, audio_max, audio_pool)
+        (0.0, 0.0, 3.9, 0.8, 192, 64, 7.9, 0.6, 15_000, 64)
+    }
+
     /// ShareGPT-4o-like: high-resolution images, moderate text.
     /// Medians: prompt ≈ 150 tokens, output ≈ 180, image edge ≈ 900 px.
     pub fn sharegpt4o() -> DatasetSpec {
+        let (vf, af, vmu, vsig, vmax, vpool, amu, asig, amax, apool) = Self::no_av();
         DatasetSpec {
             name: "ShareGPT-4o".to_string(),
             multimodal_fraction: 0.55,
@@ -67,6 +99,16 @@ impl DatasetSpec {
             extra_image_p: 0.15,
             image_pool: 2000,
             image_zipf_s: 1.05,
+            video_fraction: vf,
+            audio_fraction: af,
+            video_frames_mu: vmu,
+            video_frames_sigma: vsig,
+            video_frames_max: vmax,
+            video_pool: vpool,
+            audio_ms_mu: amu,
+            audio_ms_sigma: asig,
+            audio_ms_max: amax,
+            audio_pool: apool,
             prefix_pool: 24,
             prefix_zipf_s: 1.2,
             prefix_tokens_range: (64, 512),
@@ -97,6 +139,91 @@ impl DatasetSpec {
             prefix_zipf_s: 1.1,
             prefix_tokens_range: (128, 768),
             shared_prefix_fraction: 0.5,
+            ..Self::sharegpt4o()
+        }
+    }
+
+    /// VideoChat-like: video understanding traffic — short prompts, huge
+    /// per-request vision-token counts (a median clip is tens of encode
+    /// chunks), hot clip redundancy. The workload where chunked
+    /// non-blocking encoding earns its keep.
+    pub fn video_chat() -> DatasetSpec {
+        DatasetSpec {
+            name: "VideoChat".to_string(),
+            multimodal_fraction: 0.85,
+            prompt_mu: 4.3,
+            prompt_sigma: 0.7,
+            prompt_max: 2048,
+            output_mu: 5.1,
+            output_sigma: 0.7,
+            output_max: 1024,
+            // Video frame resolution (also used for the few images).
+            image_edge_mu: 6.3,
+            image_edge_sigma: 0.3,
+            image_edge_min: 224,
+            image_edge_max: 1024,
+            extra_image_p: 0.05,
+            image_pool: 500,
+            image_zipf_s: 1.05,
+            video_fraction: 0.9,
+            audio_fraction: 0.0,
+            video_frames_mu: 4.2, // median ≈ 67 frames
+            video_frames_sigma: 0.9,
+            video_frames_max: 192,
+            video_pool: 300,
+            prefix_pool: 16,
+            prefix_zipf_s: 1.2,
+            prefix_tokens_range: (32, 256),
+            shared_prefix_fraction: 0.35,
+            ..Self::sharegpt4o()
+        }
+    }
+
+    /// VoiceAssistant-like: conversational audio — short clips, short
+    /// prompts and outputs, hot system prompts. Tight-TTFT traffic (see
+    /// `Slo::default_for(Modality::Audio)`).
+    pub fn voice_assistant() -> DatasetSpec {
+        DatasetSpec {
+            name: "VoiceAssistant".to_string(),
+            multimodal_fraction: 0.75,
+            prompt_mu: 3.9,
+            prompt_sigma: 0.6,
+            prompt_max: 512,
+            output_mu: 4.0,
+            output_sigma: 0.6,
+            output_max: 512,
+            video_fraction: 0.0,
+            audio_fraction: 1.0,
+            audio_ms_mu: 8.3, // median ≈ 4 s
+            audio_ms_sigma: 0.6,
+            audio_ms_max: 30_000,
+            audio_pool: 4000, // mostly-unique utterances
+            prefix_pool: 8,
+            prefix_zipf_s: 1.3,
+            prefix_tokens_range: (64, 256),
+            shared_prefix_fraction: 0.7,
+            ..Self::sharegpt4o()
+        }
+    }
+
+    /// Mixed 4-modality trace: text, image, video, and audio requests in
+    /// one stream — the N-way modality-group workload.
+    pub fn mixed_modality() -> DatasetSpec {
+        DatasetSpec {
+            name: "MixedModal".to_string(),
+            multimodal_fraction: 0.7,
+            video_fraction: 0.3,
+            audio_fraction: 0.25,
+            video_frames_mu: 3.9, // median ≈ 50 frames
+            video_frames_sigma: 0.8,
+            video_frames_max: 128,
+            video_pool: 64,
+            audio_ms_mu: 7.9, // median ≈ 2.7 s
+            audio_ms_sigma: 0.6,
+            audio_ms_max: 15_000,
+            audio_pool: 48,
+            image_pool: 200,
+            ..Self::sharegpt4o()
         }
     }
 
@@ -106,8 +233,33 @@ impl DatasetSpec {
         (DatasetSpec::sharegpt4o(), DatasetSpec::visualwebinstruct())
     }
 
+    /// The dataset registry: look up a preset by CLI name. `None` means
+    /// the name is unknown — callers must error out, not fall back.
+    pub fn by_name(name: &str) -> Option<DatasetSpec> {
+        match name {
+            "sharegpt" | "sharegpt4o" => Some(Self::sharegpt4o()),
+            "vwi" | "visualwebinstruct" => Some(Self::visualwebinstruct()),
+            "video-chat" | "videochat" => Some(Self::video_chat()),
+            "voice-assistant" | "voice" => Some(Self::voice_assistant()),
+            "mixed-modal" | "mixed" => Some(Self::mixed_modality()),
+            _ => None,
+        }
+    }
+
+    /// Canonical registry names (one per preset), for error messages.
+    pub const REGISTRY: [&'static str; 5] =
+        ["sharegpt", "vwi", "video-chat", "voice-assistant", "mixed-modal"];
+
     fn sample_len(rng: &mut Rng, mu: f64, sigma: f64, max: usize) -> usize {
         (rng.lognormal(mu, sigma).round() as usize).clamp(4, max)
+    }
+
+    /// Sample a content-determined frame/image edge for `content_id`
+    /// from pool-salted stream `salt`. Dimensions are a *deterministic
+    /// property of the content* (repeated transmissions of the same
+    /// media have the same pixels/samples).
+    fn content_rng(&self, content_id: u64, pool: usize, salt: u64) -> Rng {
+        Rng::new(content_id ^ ((pool as u64) << 32) ^ salt)
     }
 
     /// Draw one request (arrival time filled by the arrival process).
@@ -116,29 +268,55 @@ impl DatasetSpec {
             Self::sample_len(rng, self.prompt_mu, self.prompt_sigma, self.prompt_max);
         let output_tokens =
             Self::sample_len(rng, self.output_mu, self.output_sigma, self.output_max);
-        let mut images = Vec::new();
+        let mut media = Vec::new();
         if rng.chance(self.multimodal_fraction) {
-            loop {
-                let content_id = rng.zipf(self.image_pool, self.image_zipf_s) as u64;
-                // Dimensions are a *deterministic property of the image
-                // content* (repeated transmissions of the same image have
-                // the same pixels), drawn from the dataset's resolution
-                // distribution via a content-seeded stream.
-                let mut irng =
-                    Rng::new(content_id ^ ((self.image_pool as u64) << 32) ^ 0x1A6E);
-                let edge = (irng
+            // Media class draw (skipped entirely for image-only specs so
+            // their random streams — and existing traces — are unchanged).
+            let av = self.video_fraction + self.audio_fraction;
+            let class_draw = if av > 0.0 { rng.f64() } else { 1.0 };
+            if class_draw < self.video_fraction {
+                let content_id = rng.zipf(self.video_pool, self.image_zipf_s) as u64;
+                let mut vrng = self.content_rng(content_id, self.video_pool, 0x71DE0);
+                let edge = (vrng
                     .lognormal(self.image_edge_mu, self.image_edge_sigma)
                     .round() as usize)
                     .clamp(self.image_edge_min, self.image_edge_max);
-                // Mild aspect-ratio variation, also content-determined.
-                let h = ((edge as f64) * irng.range_f64(0.75, 1.3)) as usize;
-                images.push(ImageRef {
-                    width: edge,
-                    height: h.clamp(self.image_edge_min, self.image_edge_max),
+                let h = ((edge as f64) * vrng.range_f64(0.55, 1.0)) as usize;
+                let frames = (vrng
+                    .lognormal(self.video_frames_mu, self.video_frames_sigma)
+                    .round() as usize)
+                    .clamp(8, self.video_frames_max.max(8));
+                media.push(MediaRef::video(
+                    edge,
+                    h.clamp(self.image_edge_min, self.image_edge_max),
+                    frames,
                     content_id,
-                });
-                if images.len() >= 8 || !rng.chance(self.extra_image_p) {
-                    break;
+                ));
+            } else if class_draw < self.video_fraction + self.audio_fraction {
+                let content_id = rng.zipf(self.audio_pool, self.image_zipf_s) as u64;
+                let mut arng = self.content_rng(content_id, self.audio_pool, 0xAD10);
+                let ms = (arng.lognormal(self.audio_ms_mu, self.audio_ms_sigma).round()
+                    as usize)
+                    .clamp(500, self.audio_ms_max.max(500));
+                media.push(MediaRef::audio(ms, 16_000, content_id));
+            } else {
+                loop {
+                    let content_id = rng.zipf(self.image_pool, self.image_zipf_s) as u64;
+                    let mut irng = self.content_rng(content_id, self.image_pool, 0x1A6E);
+                    let edge = (irng
+                        .lognormal(self.image_edge_mu, self.image_edge_sigma)
+                        .round() as usize)
+                        .clamp(self.image_edge_min, self.image_edge_max);
+                    // Mild aspect-ratio variation, also content-determined.
+                    let h = ((edge as f64) * irng.range_f64(0.75, 1.3)) as usize;
+                    media.push(MediaRef::image(
+                        edge,
+                        h.clamp(self.image_edge_min, self.image_edge_max),
+                        content_id,
+                    ));
+                    if media.len() >= 8 || !rng.chance(self.extra_image_p) {
+                        break;
+                    }
                 }
             }
         }
@@ -157,7 +335,7 @@ impl DatasetSpec {
             arrival: 0.0,
             prompt_tokens,
             output_tokens,
-            images: images.into(),
+            media: media.into(),
             prefix_id,
             prefix_tokens,
         }
@@ -175,6 +353,7 @@ mod tests {
     use super::*;
     use crate::config::presets;
     use crate::util::stats;
+    use crate::workload::{MediaPayload, Modality};
 
     #[test]
     fn sharegpt_has_higher_resolution_images() {
@@ -184,7 +363,11 @@ mod tests {
         let avg_edge = |rs: &[Request]| {
             let e: Vec<f64> = rs
                 .iter()
-                .flat_map(|r| r.images.iter().map(|i| i.width as f64))
+                .flat_map(|r| r.media.iter())
+                .filter_map(|m| match m.payload {
+                    MediaPayload::Image { width, .. } => Some(width as f64),
+                    _ => None,
+                })
                 .collect();
             stats::mean(&e)
         };
@@ -212,7 +395,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let spec = DatasetSpec::sharegpt4o();
         let rs = spec.generate(&mut rng, 8000);
-        let frac = rs.iter().filter(|r| !r.images.is_empty()).count() as f64
+        let frac = rs.iter().filter(|r| !r.media.is_empty()).count() as f64
             / rs.len() as f64;
         assert!((frac - spec.multimodal_fraction).abs() < 0.03, "frac={frac}");
     }
@@ -226,7 +409,7 @@ mod tests {
         let (mut mm, mut txt) = (Vec::new(), Vec::new());
         for r in &rs {
             let len = r.input_len(&model) as f64;
-            if r.images.is_empty() {
+            if r.media.is_empty() {
                 txt.push(len);
             } else {
                 mm.push(len);
@@ -240,7 +423,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let rs = DatasetSpec::sharegpt4o().generate(&mut rng, 3000);
         let ids: Vec<u64> =
-            rs.iter().flat_map(|r| r.images.iter().map(|i| i.content_id)).collect();
+            rs.iter().flat_map(|r| r.media.iter().map(|m| m.content_id)).collect();
         let mut uniq = ids.clone();
         uniq.sort();
         uniq.dedup();
@@ -277,11 +460,107 @@ mod tests {
             for r in spec.generate(&mut rng, 2000) {
                 assert!(r.prompt_tokens <= spec.prompt_max);
                 assert!(r.output_tokens <= spec.output_max);
-                for img in r.images.iter() {
-                    assert!(img.width >= spec.image_edge_min);
-                    assert!(img.width <= spec.image_edge_max);
+                for m in r.media.iter() {
+                    if let MediaPayload::Image { width, .. } = m.payload {
+                        assert!(width >= spec.image_edge_min);
+                        assert!(width <= spec.image_edge_max);
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn video_chat_is_video_heavy_with_huge_media_tokens() {
+        let mut rng = Rng::new(8);
+        let model = presets::qwen25_vl_7b();
+        let spec = DatasetSpec::video_chat();
+        let rs = spec.generate(&mut rng, 2000);
+        let vids = rs.iter().filter(|r| r.modality() == Modality::Video).count();
+        assert!(
+            vids as f64 > 0.6 * rs.len() as f64,
+            "video-chat must be video-dominated: {vids}/{}",
+            rs.len()
+        );
+        // Median video request carries far more media tokens than a
+        // single high-res image (the "huge vision-token counts" regime).
+        let mut vt: Vec<f64> = rs
+            .iter()
+            .filter(|r| r.modality() == Modality::Video)
+            .map(|r| r.media_tokens(&model) as f64)
+            .collect();
+        vt.sort_by(f64::total_cmp);
+        let median = vt[vt.len() / 2];
+        assert!(
+            median > 1.5 * model.image_tokens(904, 904) as f64,
+            "median video tokens {median}"
+        );
+        // Clips span multiple encode chunks.
+        let multi_chunk = rs.iter().any(|r| {
+            r.media.iter().any(|m| {
+                let mut n = 0;
+                m.encode_jobs(&model, |_| n += 1);
+                n > 2
+            })
+        });
+        assert!(multi_chunk, "video-chat must produce multi-chunk clips");
+    }
+
+    #[test]
+    fn voice_assistant_is_short_audio() {
+        let mut rng = Rng::new(9);
+        let model = presets::qwen25_vl_7b();
+        let spec = DatasetSpec::voice_assistant();
+        let rs = spec.generate(&mut rng, 2000);
+        let auds = rs.iter().filter(|r| r.modality() == Modality::Audio).count();
+        assert!(auds as f64 > 0.6 * rs.len() as f64, "audio-dominated: {auds}");
+        // Inputs are short relative to image traffic.
+        let mean_in = stats::mean(
+            &rs.iter().map(|r| r.input_len(&model) as f64).collect::<Vec<_>>(),
+        );
+        assert!(mean_in < 1000.0, "voice inputs must be short, got {mean_in}");
+    }
+
+    #[test]
+    fn mixed_modality_covers_all_four() {
+        let mut rng = Rng::new(10);
+        let rs = DatasetSpec::mixed_modality().generate(&mut rng, 3000);
+        let mut counts = [0usize; Modality::COUNT];
+        for r in &rs {
+            counts[r.modality().index()] += 1;
+        }
+        for (m, &c) in Modality::ALL.iter().zip(&counts) {
+            assert!(
+                c as f64 > 0.05 * rs.len() as f64,
+                "{} underrepresented: {c}/{}",
+                m.name(),
+                rs.len()
+            );
+        }
+    }
+
+    #[test]
+    fn media_shape_is_content_determined() {
+        // Same content id ⇒ identical payload (required for cache
+        // correctness): collect by id and compare.
+        let mut rng = Rng::new(11);
+        let rs = DatasetSpec::mixed_modality().generate(&mut rng, 4000);
+        let mut by_key = std::collections::HashMap::new();
+        for m in rs.iter().flat_map(|r| r.media.iter()) {
+            let key = (std::mem::discriminant(&m.payload), m.content_id);
+            let prev = by_key.insert(key, m.payload);
+            if let Some(p) = prev {
+                assert_eq!(p, m.payload, "content id {} shape drifted", m.content_id);
+            }
+        }
+    }
+
+    #[test]
+    fn registry_resolves_every_name_and_rejects_unknown() {
+        for name in DatasetSpec::REGISTRY {
+            assert!(DatasetSpec::by_name(name).is_some(), "registry name {name}");
+        }
+        assert!(DatasetSpec::by_name("sharegpt4o").is_some(), "alias");
+        assert!(DatasetSpec::by_name("not-a-dataset").is_none());
     }
 }

@@ -1,0 +1,294 @@
+//! Media taxonomy: the attachments a request can carry — images, video
+//! clips, audio clips — with modality-specific token estimators, encode
+//! job construction (video clips split into fixed frame-window
+//! **chunks** so the non-blocking encoder pool can overlap a long
+//! video's later chunks with the prefill of its earlier ones), and
+//! unified-sequence run emission for the prefix cache.
+//!
+//! [`MediaRef`] generalizes the old image-only `ImageRef`: `content_id`
+//! still identifies the underlying bytes (repeated transmissions of the
+//! same clip share an id — what the media-hash pool of the unified
+//! prefix cache keys on), and the payload carries the shape parameters
+//! the estimators need (pixel dimensions, frame count, duration/sample
+//! rate).
+
+use crate::config::ModelConfig;
+use crate::kvcache::image_cache::{hash_image_desc, hash_media_desc};
+use crate::kvcache::runs::{RunKind, TokenRun};
+
+/// Shape parameters of one media attachment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MediaPayload {
+    /// Still image (resized + tiled, §2.1).
+    Image { width: usize, height: usize },
+    /// Video clip: frames are subsampled (`ModelConfig::video_frame_stride`)
+    /// and each sampled frame encoded at reduced spatial resolution.
+    Video { width: usize, height: usize, frames: usize },
+    /// Audio clip: a fixed token rate per second of audio
+    /// (`ModelConfig::audio_tokens_per_s`), Whisper-style.
+    Audio { duration_ms: usize, sample_hz: usize },
+}
+
+/// One media attachment of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MediaRef {
+    pub payload: MediaPayload,
+    /// Identifies the underlying content (pixels / samples); requests
+    /// repeating the same media share an id.
+    pub content_id: u64,
+}
+
+/// Payload-free media class tag (drives the encode cost model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MediaClass {
+    Image,
+    Video,
+    Audio,
+}
+
+/// One unit of encoder work. Images and audio clips encode as a single
+/// job; a video clip becomes one job **per chunk**
+/// (`ModelConfig::video_chunk_frames` sampled frames each), which is
+/// what lets the encoder pool hand a long video's tokens to prefill
+/// incrementally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncodeJob {
+    pub class: MediaClass,
+    /// Media tokens this job produces.
+    pub tokens: usize,
+    /// Video: tokens per sampled frame (the attention granularity of
+    /// frame-batched encoding). 0 for images/audio.
+    pub frame_tokens: usize,
+    /// CPU preprocessing units (image tiles / sampled frames / audio
+    /// seconds) charged at `CostModel::preprocess_per_tile` each.
+    pub tiles: usize,
+}
+
+impl MediaRef {
+    pub fn image(width: usize, height: usize, content_id: u64) -> MediaRef {
+        MediaRef { payload: MediaPayload::Image { width, height }, content_id }
+    }
+
+    pub fn video(width: usize, height: usize, frames: usize, content_id: u64) -> MediaRef {
+        MediaRef { payload: MediaPayload::Video { width, height, frames }, content_id }
+    }
+
+    pub fn audio(duration_ms: usize, sample_hz: usize, content_id: u64) -> MediaRef {
+        MediaRef { payload: MediaPayload::Audio { duration_ms, sample_hz }, content_id }
+    }
+
+    pub fn class(&self) -> MediaClass {
+        match self.payload {
+            MediaPayload::Image { .. } => MediaClass::Image,
+            MediaPayload::Video { .. } => MediaClass::Video,
+            MediaPayload::Audio { .. } => MediaClass::Audio,
+        }
+    }
+
+    /// Media tokens this attachment contributes to the unified sequence.
+    pub fn tokens(&self, model: &ModelConfig) -> usize {
+        match self.payload {
+            MediaPayload::Image { width, height } => model.image_tokens(width, height),
+            MediaPayload::Video { width, height, frames } => {
+                model.video_tokens(width, height, frames)
+            }
+            MediaPayload::Audio { duration_ms, .. } => model.audio_tokens(duration_ms),
+        }
+    }
+
+    /// Content identity for the media-hash pool and the unified prefix
+    /// cache. Classes are tagged so a video and an image with the same
+    /// numeric `content_id` can never alias; images keep the historical
+    /// `hash_image_desc` value.
+    pub fn content_hash(&self) -> u64 {
+        match self.payload {
+            MediaPayload::Image { width, height } => {
+                hash_image_desc(self.content_id, width, height)
+            }
+            MediaPayload::Video { width, height, frames } => hash_media_desc(
+                0x56_1D_E0,
+                self.content_id,
+                ((width as u64) << 32) | height as u64,
+                frames as u64,
+            ),
+            MediaPayload::Audio { duration_ms, sample_hz } => {
+                hash_media_desc(0xA0_D1_0A, self.content_id, duration_ms as u64, sample_hz as u64)
+            }
+        }
+    }
+
+    /// Emit this attachment's encode jobs (video: one per chunk) to `f`.
+    /// Closure-based so hot paths can cost jobs without allocating.
+    pub fn encode_jobs(&self, model: &ModelConfig, mut f: impl FnMut(EncodeJob)) {
+        match self.payload {
+            MediaPayload::Image { width, height } => {
+                f(EncodeJob {
+                    class: MediaClass::Image,
+                    tokens: model.image_tokens(width, height),
+                    frame_tokens: 0,
+                    tiles: model.spatial_tiles(width, height, model.max_tiles),
+                });
+            }
+            MediaPayload::Video { width, height, frames } => {
+                let ft = model.video_frame_tokens(width, height);
+                let sampled = model.video_sampled_frames(frames);
+                let chunk = model.video_chunk_frames.max(1);
+                let mut start = 0usize;
+                while start < sampled {
+                    let n = chunk.min(sampled - start);
+                    f(EncodeJob {
+                        class: MediaClass::Video,
+                        tokens: n * ft,
+                        frame_tokens: ft,
+                        tiles: n,
+                    });
+                    start += n;
+                }
+            }
+            MediaPayload::Audio { duration_ms, .. } => {
+                f(EncodeJob {
+                    class: MediaClass::Audio,
+                    tokens: model.audio_tokens(duration_ms),
+                    frame_tokens: 0,
+                    tiles: duration_ms.div_ceil(1000).max(1),
+                });
+            }
+        }
+    }
+
+    /// Append this attachment's unified-sequence runs to `out`. Images
+    /// and audio are single arithmetic spans; a video emits one run per
+    /// encode chunk — all with the same [`RunKind::VideoChunk`] identity
+    /// but consecutive absolute offsets, so the radix tree's O(1) in-run
+    /// compare rule treats them as one contiguous token span however the
+    /// chunk boundaries line up.
+    pub fn runs_into(&self, model: &ModelConfig, out: &mut Vec<TokenRun>) {
+        let h = self.content_hash();
+        match self.payload {
+            MediaPayload::Image { width, height } => {
+                let n = model.image_tokens(width, height) as u32;
+                if n > 0 {
+                    out.push(TokenRun::new(RunKind::Vision(h), 0, n));
+                }
+            }
+            MediaPayload::Video { .. } => {
+                let mut offset = 0u32;
+                self.encode_jobs(model, |job| {
+                    if job.tokens > 0 {
+                        out.push(TokenRun::new(
+                            RunKind::VideoChunk(h),
+                            offset,
+                            job.tokens as u32,
+                        ));
+                        offset += job.tokens as u32;
+                    }
+                });
+            }
+            MediaPayload::Audio { duration_ms, .. } => {
+                let n = model.audio_tokens(duration_ms) as u32;
+                if n > 0 {
+                    out.push(TokenRun::new(RunKind::Audio(h), 0, n));
+                }
+            }
+        }
+    }
+}
+
+/// Emit the encode jobs of a whole media list in order (the blocking
+/// baselines charge these inline in the prefill iteration).
+pub fn encode_jobs_for(
+    media: &[MediaRef],
+    model: &ModelConfig,
+    mut f: impl FnMut(EncodeJob),
+) {
+    for m in media {
+        m.encode_jobs(model, &mut f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::kvcache::runs::total_tokens;
+
+    #[test]
+    fn image_media_matches_image_tokens() {
+        let m = presets::qwen25_vl_7b();
+        let r = MediaRef::image(904, 904, 7);
+        assert_eq!(r.tokens(&m), m.image_tokens(904, 904));
+        let mut jobs = Vec::new();
+        r.encode_jobs(&m, |j| jobs.push(j));
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].class, MediaClass::Image);
+        assert_eq!(jobs[0].tokens, r.tokens(&m));
+    }
+
+    #[test]
+    fn video_chunks_partition_the_clip() {
+        let m = presets::qwen25_vl_7b();
+        let r = MediaRef::video(448, 448, 100, 3);
+        let mut jobs = Vec::new();
+        r.encode_jobs(&m, |j| jobs.push(j));
+        assert!(jobs.len() > 1, "a 100-frame clip must split into chunks");
+        let total: usize = jobs.iter().map(|j| j.tokens).sum();
+        assert_eq!(total, r.tokens(&m), "chunks must partition the clip's tokens");
+        for j in &jobs {
+            assert_eq!(j.class, MediaClass::Video);
+            assert!(j.frame_tokens > 0);
+            assert_eq!(j.tokens % j.frame_tokens, 0);
+        }
+    }
+
+    #[test]
+    fn video_runs_cover_contiguous_offsets() {
+        let m = presets::qwen25_vl_7b();
+        let r = MediaRef::video(448, 448, 100, 3);
+        let mut runs = Vec::new();
+        r.runs_into(&m, &mut runs);
+        assert!(runs.len() > 1);
+        assert_eq!(total_tokens(&runs), r.tokens(&m));
+        let mut expect = 0u32;
+        for run in &runs {
+            assert_eq!(run.kind, RunKind::VideoChunk(r.content_hash()));
+            assert_eq!(run.offset, expect, "chunk runs must be contiguous");
+            expect += run.len;
+        }
+    }
+
+    #[test]
+    fn audio_tokens_scale_with_duration() {
+        let m = presets::qwen25_vl_7b();
+        let short = MediaRef::audio(2_000, 16_000, 1);
+        let long = MediaRef::audio(8_000, 16_000, 1);
+        assert!(long.tokens(&m) > 3 * short.tokens(&m));
+        let mut runs = Vec::new();
+        long.runs_into(&m, &mut runs);
+        assert_eq!(runs.len(), 1);
+        assert!(matches!(runs[0].kind, RunKind::Audio(_)));
+        assert_eq!(total_tokens(&runs), long.tokens(&m));
+    }
+
+    #[test]
+    fn content_hashes_never_alias_across_classes() {
+        let img = MediaRef::image(448, 448, 9);
+        let vid = MediaRef::video(448, 448, 16, 9);
+        let aud = MediaRef::audio(448, 448, 9);
+        assert_ne!(img.content_hash(), vid.content_hash());
+        assert_ne!(img.content_hash(), aud.content_hash());
+        assert_ne!(vid.content_hash(), aud.content_hash());
+        // Same class, different content: distinct too.
+        assert_ne!(
+            MediaRef::video(448, 448, 16, 1).content_hash(),
+            MediaRef::video(448, 448, 16, 2).content_hash()
+        );
+    }
+
+    #[test]
+    fn same_content_same_hash() {
+        assert_eq!(
+            MediaRef::video(640, 360, 64, 5).content_hash(),
+            MediaRef::video(640, 360, 64, 5).content_hash()
+        );
+    }
+}

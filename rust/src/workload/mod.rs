@@ -1,43 +1,58 @@
 //! Workload layer: request model, dataset-like generators, arrival
 //! processes, and trace serialization.
 
-pub mod datasets;
 pub mod arrival;
+pub mod datasets;
+pub mod media;
 pub mod trace;
+
+pub use media::{EncodeJob, MediaClass, MediaPayload, MediaRef};
 
 use crate::kvcache::runs::{RunKind, TokenRun};
 
-/// Request modality (the paper's two modality groups).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Request modality — the N-way taxonomy the coordinator's modality
+/// groups partition traffic over (generalizing the paper's binary
+/// text/multimodal split to the three media classes it names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Modality {
-    TextOnly,
-    Multimodal,
+    Text,
+    Image,
+    Video,
+    Audio,
 }
 
 impl Modality {
+    /// All modalities in declaration order; the single source of truth
+    /// for [`Modality::COUNT`] and [`Modality::index`].
+    pub const ALL: [Modality; 4] =
+        [Modality::Text, Modality::Image, Modality::Video, Modality::Audio];
+    pub const COUNT: usize = Modality::ALL.len();
+
+    /// Dense index (the discriminant, matching [`Modality::ALL`]).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
-            Modality::TextOnly => "text",
-            Modality::Multimodal => "multimodal",
+            Modality::Text => "text",
+            Modality::Image => "image",
+            Modality::Video => "video",
+            Modality::Audio => "audio",
         }
     }
-}
 
-/// An image attached to a request. `content_id` identifies the pixel
-/// content (requests repeating the same image share an id — this is what
-/// the image-hash pool of the unified prefix cache keys on).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ImageRef {
-    pub width: usize,
-    pub height: usize,
-    pub content_id: u64,
+    /// Whether requests of this modality carry media needing encoding.
+    pub fn has_media(self) -> bool {
+        self != Modality::Text
+    }
 }
 
 /// A serving request as it enters the frontend.
 ///
-/// `images` lives behind an `Arc<[ImageRef]>` so cloning a request —
+/// `media` lives behind an `Arc<[MediaRef]>` so cloning a request —
 /// which the trace driver does once per arrival — is a refcount bump,
-/// not a heap copy of the image list.
+/// not a heap copy of the attachment list.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -48,7 +63,7 @@ pub struct Request {
     /// Output length (ground truth for the simulator; a real run decides
     /// by sampling / EOS).
     pub output_tokens: usize,
-    pub images: std::sync::Arc<[ImageRef]>,
+    pub media: std::sync::Arc<[MediaRef]>,
     /// Shared-prefix identity: requests with the same `prefix_id` share
     /// their first `prefix_tokens` prompt tokens (system prompts etc.) —
     /// exercised by the unified prefix cache.
@@ -57,32 +72,44 @@ pub struct Request {
 }
 
 impl Request {
+    /// Dominant modality: the most expensive media class present
+    /// (video > audio > image), text otherwise — the key the coordinator
+    /// routes on.
     pub fn modality(&self) -> Modality {
-        if self.images.is_empty() {
-            Modality::TextOnly
+        let (mut img, mut vid, mut aud) = (false, false, false);
+        for m in self.media.iter() {
+            match m.payload {
+                MediaPayload::Image { .. } => img = true,
+                MediaPayload::Video { .. } => vid = true,
+                MediaPayload::Audio { .. } => aud = true,
+            }
+        }
+        if vid {
+            Modality::Video
+        } else if aud {
+            Modality::Audio
+        } else if img {
+            Modality::Image
         } else {
-            Modality::Multimodal
+            Modality::Text
         }
     }
 
-    /// Vision token count for a given model config.
-    pub fn vision_tokens(&self, model: &crate::config::ModelConfig) -> usize {
-        self.images
-            .iter()
-            .map(|img| model.image_tokens(img.width, img.height))
-            .sum()
+    /// Media token count (vision + audio) for a given model config.
+    pub fn media_tokens(&self, model: &crate::config::ModelConfig) -> usize {
+        self.media.iter().map(|m| m.tokens(model)).sum()
     }
 
-    /// Full input context length (text + vision) for a model.
+    /// Full input context length (text + media) for a model.
     pub fn input_len(&self, model: &crate::config::ModelConfig) -> usize {
-        self.prompt_tokens + self.vision_tokens(model)
+        self.prompt_tokens + self.media_tokens(model)
     }
 
     /// Run-length unified sequence (§3.3) — the request's
-    /// `[shared prefix][vision tokens][unique tail]` token stream as a
+    /// `[shared prefix][media tokens][unique tail]` token stream as a
     /// handful of [`TokenRun`] descriptors instead of one id per token.
-    /// O(#images), zero per-token work; clears and reuses `out` so the
-    /// admission hot path allocates nothing once the buffer is warm.
+    /// O(#media chunks), zero per-token work; clears and reuses `out` so
+    /// the admission hot path allocates nothing once the buffer is warm.
     pub fn unified_runs_into(
         &self,
         model: &crate::config::ModelConfig,
@@ -97,19 +124,12 @@ impl Request {
                 self.prefix_tokens as u32,
             ));
         }
-        // Vision tokens, identified by the full 64-bit content hash so
-        // identical images in different requests produce identical runs
-        // and distinct images can never alias.
-        for img in self.images.iter() {
-            let h = crate::kvcache::image_cache::hash_image_desc(
-                img.content_id,
-                img.width,
-                img.height,
-            );
-            let n = model.image_tokens(img.width, img.height) as u32;
-            if n > 0 {
-                out.push(TokenRun::new(RunKind::Vision(h), 0, n));
-            }
+        // Media tokens, identified by the full 64-bit content hash so
+        // identical attachments in different requests produce identical
+        // runs and distinct content can never alias. Videos emit one run
+        // per encode chunk (consecutive offsets of one span).
+        for m in self.media.iter() {
+            m.runs_into(model, out);
         }
         // Unique per-request tail (the rest of the prompt).
         let tail = self.prompt_tokens - self.prefix_tokens.min(self.prompt_tokens);
@@ -123,39 +143,62 @@ impl Request {
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::kvcache::runs::total_tokens;
 
-    fn req(images: Vec<ImageRef>) -> Request {
+    fn req(media: Vec<MediaRef>) -> Request {
         Request {
             id: 1,
             arrival: 0.0,
             prompt_tokens: 100,
             output_tokens: 50,
-            images: images.into(),
+            media: media.into(),
             prefix_id: 0,
             prefix_tokens: 0,
         }
     }
 
     #[test]
-    fn modality_from_images() {
-        assert_eq!(req(vec![]).modality(), Modality::TextOnly);
+    fn modality_from_media() {
+        assert_eq!(req(vec![]).modality(), Modality::Text);
+        assert_eq!(req(vec![MediaRef::image(448, 448, 7)]).modality(), Modality::Image);
         assert_eq!(
-            req(vec![ImageRef { width: 448, height: 448, content_id: 7 }]).modality(),
-            Modality::Multimodal
+            req(vec![MediaRef::video(448, 448, 64, 7)]).modality(),
+            Modality::Video
+        );
+        assert_eq!(
+            req(vec![MediaRef::audio(3000, 16_000, 7)]).modality(),
+            Modality::Audio
+        );
+        // Video dominates a mixed attachment list.
+        assert_eq!(
+            req(vec![MediaRef::image(448, 448, 1), MediaRef::video(448, 448, 8, 2)])
+                .modality(),
+            Modality::Video
         );
     }
 
     #[test]
-    fn input_len_includes_vision_tokens() {
+    fn modality_index_matches_all_order() {
+        for (i, m) in Modality::ALL.iter().enumerate() {
+            assert_eq!(m.index(), i);
+        }
+        assert!(!Modality::Text.has_media());
+        assert!(Modality::Audio.has_media());
+    }
+
+    #[test]
+    fn input_len_includes_media_tokens() {
         let m = presets::qwen25_vl_7b();
-        let r = req(vec![ImageRef { width: 904, height: 904, content_id: 7 }]);
+        let r = req(vec![MediaRef::image(904, 904, 7)]);
         assert_eq!(r.input_len(&m), 100 + m.image_tokens(904, 904));
+        let v = req(vec![MediaRef::video(448, 448, 64, 7)]);
+        assert_eq!(v.input_len(&m), 100 + m.video_tokens(448, 448, 64));
     }
 
     #[test]
     fn unified_runs_cover_exactly_the_input() {
         let m = presets::qwen25_vl_7b();
-        let mut r = req(vec![ImageRef { width: 904, height: 904, content_id: 7 }]);
+        let mut r = req(vec![MediaRef::image(904, 904, 7)]);
         r.prefix_id = 3;
         r.prefix_tokens = 40;
         let mut runs = Vec::new();
@@ -171,11 +214,27 @@ mod tests {
     }
 
     #[test]
-    fn multiple_images_sum() {
+    fn unified_runs_cover_video_and_audio_media() {
         let m = presets::qwen25_vl_7b();
-        let img = ImageRef { width: 452, height: 452, content_id: 1 };
+        let mut r = req(vec![
+            MediaRef::video(448, 448, 100, 5),
+            MediaRef::audio(4000, 16_000, 6),
+        ]);
+        r.prefix_id = 2;
+        r.prefix_tokens = 30;
+        let mut runs = Vec::new();
+        r.unified_runs_into(&m, &mut runs);
+        assert!(runs.iter().any(|x| matches!(x.kind, RunKind::VideoChunk(_))));
+        assert!(runs.iter().any(|x| matches!(x.kind, RunKind::Audio(_))));
+        assert_eq!(total_tokens(&runs), r.input_len(&m));
+    }
+
+    #[test]
+    fn multiple_media_sum() {
+        let m = presets::qwen25_vl_7b();
+        let img = MediaRef::image(452, 452, 1);
         let r1 = req(vec![img]);
         let r2 = req(vec![img, img]);
-        assert_eq!(r2.vision_tokens(&m), 2 * r1.vision_tokens(&m));
+        assert_eq!(r2.media_tokens(&m), 2 * r1.media_tokens(&m));
     }
 }

@@ -2,9 +2,55 @@
 //! experiments are replayable and shareable between the simulator, the
 //! real serving engine, and the bench harnesses.
 
-use super::{ImageRef, Request};
+use super::{MediaPayload, MediaRef, Request};
 use crate::util::json::{Json, JsonError};
 use std::path::Path;
+
+fn media_to_json(m: &MediaRef) -> Json {
+    let mut fields = vec![("content_id", Json::num(m.content_id as f64))];
+    match m.payload {
+        MediaPayload::Image { width, height } => {
+            fields.push(("kind", Json::str("image".to_string())));
+            fields.push(("w", Json::num(width as f64)));
+            fields.push(("h", Json::num(height as f64)));
+        }
+        MediaPayload::Video { width, height, frames } => {
+            fields.push(("kind", Json::str("video".to_string())));
+            fields.push(("w", Json::num(width as f64)));
+            fields.push(("h", Json::num(height as f64)));
+            fields.push(("frames", Json::num(frames as f64)));
+        }
+        MediaPayload::Audio { duration_ms, sample_hz } => {
+            fields.push(("kind", Json::str("audio".to_string())));
+            fields.push(("ms", Json::num(duration_ms as f64)));
+            fields.push(("hz", Json::num(sample_hz as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn media_from_json(j: &Json) -> Result<MediaRef, JsonError> {
+    let content_id = j.get("content_id")?.as_u64()?;
+    match j.get("kind")?.as_str()? {
+        "image" => Ok(MediaRef::image(
+            j.get("w")?.as_usize()?,
+            j.get("h")?.as_usize()?,
+            content_id,
+        )),
+        "video" => Ok(MediaRef::video(
+            j.get("w")?.as_usize()?,
+            j.get("h")?.as_usize()?,
+            j.get("frames")?.as_usize()?,
+            content_id,
+        )),
+        "audio" => Ok(MediaRef::audio(
+            j.get("ms")?.as_usize()?,
+            j.get("hz")?.as_usize()?,
+            content_id,
+        )),
+        _ => Err(JsonError::Type { expected: "media kind image|video|audio", got: "string" }),
+    }
+}
 
 pub fn request_to_json(r: &Request) -> Json {
     Json::obj(vec![
@@ -12,45 +58,25 @@ pub fn request_to_json(r: &Request) -> Json {
         ("arrival", Json::num(r.arrival)),
         ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
         ("output_tokens", Json::num(r.output_tokens as f64)),
-        (
-            "images",
-            Json::Arr(
-                r.images
-                    .iter()
-                    .map(|i| {
-                        Json::obj(vec![
-                            ("w", Json::num(i.width as f64)),
-                            ("h", Json::num(i.height as f64)),
-                            ("content_id", Json::num(i.content_id as f64)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
+        ("media", Json::Arr(r.media.iter().map(media_to_json).collect())),
         ("prefix_id", Json::num(r.prefix_id as f64)),
         ("prefix_tokens", Json::num(r.prefix_tokens as f64)),
     ])
 }
 
 pub fn request_from_json(j: &Json) -> Result<Request, JsonError> {
-    let images = j
-        .get("images")?
+    let media = j
+        .get("media")?
         .as_arr()?
         .iter()
-        .map(|i| {
-            Ok(ImageRef {
-                width: i.get("w")?.as_usize()?,
-                height: i.get("h")?.as_usize()?,
-                content_id: i.get("content_id")?.as_u64()?,
-            })
-        })
+        .map(media_from_json)
         .collect::<Result<Vec<_>, JsonError>>()?;
     Ok(Request {
         id: j.get("id")?.as_u64()?,
         arrival: j.get("arrival")?.as_f64()?,
         prompt_tokens: j.get("prompt_tokens")?.as_usize()?,
         output_tokens: j.get("output_tokens")?.as_usize()?,
-        images: images.into(),
+        media: media.into(),
         prefix_id: j.get("prefix_id")?.as_u64()?,
         prefix_tokens: j.get("prefix_tokens")?.as_usize()?,
     })
@@ -84,7 +110,9 @@ mod tests {
     #[test]
     fn roundtrip_preserves_everything() {
         let mut rng = Rng::new(1);
-        let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, 200);
+        // Mixed-modality spec so image, video, and audio payloads all
+        // round-trip.
+        let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, 300);
         poisson_arrivals(&mut rng, &mut reqs, 3.0);
         let j = trace_to_json(&reqs);
         let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
@@ -94,10 +122,17 @@ mod tests {
             assert!((a.arrival - b.arrival).abs() < 1e-9);
             assert_eq!(a.prompt_tokens, b.prompt_tokens);
             assert_eq!(a.output_tokens, b.output_tokens);
-            assert_eq!(a.images, b.images);
+            assert_eq!(a.media, b.media);
             assert_eq!(a.prefix_id, b.prefix_id);
             assert_eq!(a.prefix_tokens, b.prefix_tokens);
         }
+        // The sample must actually contain every media kind.
+        let kinds: std::collections::HashSet<_> = reqs
+            .iter()
+            .flat_map(|r| r.media.iter())
+            .map(|m| std::mem::discriminant(&m.payload))
+            .collect();
+        assert_eq!(kinds.len(), 3, "trace must carry image+video+audio");
     }
 
     #[test]

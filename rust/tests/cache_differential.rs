@@ -133,6 +133,9 @@ impl Pair {
 #[test]
 fn run_tree_matches_per_token_oracle_on_multimodal_workloads() {
     let model = presets::qwen25_vl_7b();
+    // Accumulated across all generated cases, asserted after the sweep:
+    // the dataset-derived workloads must exercise every media run kind.
+    let mut kinds_seen = (false, false, false);
     check(
         0xD1FF,
         30,
@@ -145,20 +148,37 @@ fn run_tree_matches_per_token_oracle_on_multimodal_workloads() {
         },
         |&(n, cap, seed)| {
             let mut rng = Rng::new(seed);
-            let mut spec = DatasetSpec::sharegpt4o();
-            spec.image_pool = 6; // heavy duplicate image content
+            // Mixed 4-modality spec: image, video-chunk, and audio runs
+            // all flow through both trees.
+            let mut spec = DatasetSpec::mixed_modality();
+            spec.image_pool = 6; // heavy duplicate media content
+            spec.video_pool = 3;
+            spec.audio_pool = 3;
             spec.prefix_pool = 3; // hot shared prefixes
             spec.shared_prefix_fraction = 0.7;
-            spec.multimodal_fraction = 0.7;
+            spec.multimodal_fraction = 0.8;
             let reqs = spec.generate(&mut rng, n);
             let mut pair = Pair::new(cap);
             let mut runs = Vec::new();
             for r in &reqs {
                 r.unified_runs_into(&model, &mut runs);
+                for run in &runs {
+                    match run.kind {
+                        RunKind::Vision(_) => kinds_seen.0 = true,
+                        RunKind::VideoChunk(_) => kinds_seen.1 = true,
+                        RunKind::Audio(_) => kinds_seen.2 = true,
+                        _ => {}
+                    }
+                }
                 pair.step(rng.next_u64(), &runs)?;
             }
             pair.finish()
         },
+    );
+    assert_eq!(
+        kinds_seen,
+        (true, true, true),
+        "differential sweep must cover (vision, video-chunk, audio) runs"
     );
 }
 
@@ -181,9 +201,13 @@ fn run_tree_matches_oracle_on_adversarial_run_sequences() {
                 let mut seq = Vec::new();
                 let n_runs = 1 + rng.below(4) as usize;
                 for _ in 0..n_runs {
-                    let kind = match rng.below(3) {
+                    let kind = match rng.below(5) {
                         0 => RunKind::Prefix(1 + rng.below(2)),
                         1 => RunKind::Vision(1 + rng.below(3)),
+                        // Video chunks re-chunk one span across run
+                        // boundaries; nonzero offsets are the norm.
+                        2 => RunKind::VideoChunk(1 + rng.below(2)),
+                        3 => RunKind::Audio(1 + rng.below(2)),
                         _ => RunKind::Tail(1 + rng.below(5)),
                     };
                     let offset = [0, 0, 5, 17][rng.below(4) as usize];

@@ -173,6 +173,73 @@ fn multimodal_heavy_trace_exercises_cache_hit_paths() {
     assert!(sys.stats.prefix_hit_tokens > 0, "no KV prefix hits despite hot prefixes");
 }
 
+/// Mixed 4-modality trace (text + image + video + audio) with enough
+/// redundancy and video length that chunked encoding and the prefix
+/// cache both fire.
+fn mixed_modality_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+#[test]
+fn mixed_four_modality_trace_upholds_contract_on_all_systems() {
+    use elasticmm::workload::Modality;
+    let reqs = mixed_modality_trace(110, 6.0, 0x40DA);
+    // Sanity: the trace really carries all four modalities.
+    let present: std::collections::HashSet<Modality> =
+        reqs.iter().map(|r| r.modality()).collect();
+    assert_eq!(present.len(), Modality::COUNT, "trace modalities: {present:?}");
+    // Completion, causal timing, KV release, invariants, and
+    // determinism on every system and both decode paths — including the
+    // EMP N-way registry (4 active modality groups).
+    for ff in [false, true] {
+        contract(
+            "EmpSystem/nway",
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full_nway(8)),
+            &reqs,
+        )
+        .unwrap();
+        contract(
+            "EmpSystem",
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full(8)),
+            &reqs,
+        )
+        .unwrap();
+        contract("CoupledVllm", || CoupledVllm::new(cost(), sched(ff), 8), &reqs).unwrap();
+        contract("DecoupledStatic", || DecoupledStatic::new(cost(), sched(ff), 8), &reqs)
+            .unwrap();
+    }
+    // The N-way system must have served every modality group and stayed
+    // internally consistent.
+    let mut nway = EmpSystem::new(cost(), sched(true), 8, EmpOptions::full_nway(8));
+    let rep = nway.run(&reqs);
+    assert_eq!(rep.records.len(), reqs.len());
+    nway.check_invariants().unwrap();
+    let served: std::collections::HashSet<_> =
+        rep.records.iter().map(|r| r.modality).collect();
+    assert!(served.len() >= 3, "at least 3 active modality groups: {served:?}");
+    assert_eq!(nway.group_sizes().len(), 4);
+    // Chunked non-blocking encoding must actually overlap: on the
+    // binary-registry run (4-instance media group) some prefill
+    // iterations admit requests whose later video chunks are still on
+    // the encoder pool — encode of chunk k+1 overlapping the prefill
+    // of chunks ..=k.
+    let mut full = EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8));
+    full.run(&reqs);
+    assert!(
+        full.stats.media_chunks_encoded > 0,
+        "chunk jobs must run on the encoder pool: {:?}",
+        full.stats
+    );
+    assert!(
+        full.stats.encode_overlap_prefills > 0,
+        "video-chunk encode must overlap earlier chunks' prefill: {:?}",
+        full.stats
+    );
+}
+
 #[test]
 fn systems_agree_on_the_workload_not_the_schedule() {
     // Same trace through all three systems: completion sets must be

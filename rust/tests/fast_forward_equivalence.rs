@@ -35,13 +35,13 @@ fn trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
 
 /// Every record field, with timings as raw bits so the comparison is
 /// byte-exact, in record order (order itself must match too).
-fn record_bytes(rep: &Report) -> Vec<(u64, bool, usize, usize, u64, u64, u64)> {
+fn record_bytes(rep: &Report) -> Vec<(u64, usize, usize, usize, u64, u64, u64)> {
     rep.records
         .iter()
         .map(|r| {
             (
                 r.id,
-                r.multimodal,
+                r.modality.index(),
                 r.input_len,
                 r.output_len,
                 r.arrival.to_bits(),
@@ -126,6 +126,23 @@ fn emp_static_reports_identical() {
         |ff| EmpSystem::new(cost(), sched(ff), 8, EmpOptions::static_split(4)),
         &t,
     );
+}
+
+#[test]
+fn emp_nway_mixed_modality_reports_identical() {
+    // The N-way registry + chunked video encode + partial prefill must
+    // stay inside the exactness predicate too: a 4-group mixed trace
+    // (images, video chunks, audio) coalesces to bit-identical reports.
+    for (n, qps, seed) in [(120, 4.0, 71), (90, 1.0, 72)] {
+        let mut rng = Rng::new(seed);
+        let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, n);
+        poisson_arrivals(&mut rng, &mut reqs, qps);
+        assert_equivalent(
+            "EmpSystem/nway",
+            |ff| EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full_nway(8)),
+            &reqs,
+        );
+    }
 }
 
 #[test]

@@ -94,8 +94,8 @@ fn encdec_mixed_batch_penalty_visible() {
     let emp = EmpSystem::new(llama.clone(), SchedulerConfig::default(), 8, EmpOptions::full(8))
         .run(&t);
     let vllm = CoupledVllm::new(llama, SchedulerConfig::default(), 8).run(&t);
-    let (txt_emp, _) = emp.split_by_modality();
-    let (txt_vllm, _) = vllm.split_by_modality();
+    let (txt_emp, _) = emp.split_text_media();
+    let (txt_vllm, _) = vllm.split_text_media();
     assert!(
         txt_emp.mean_norm_output_latency() < txt_vllm.mean_norm_output_latency(),
         "modality-pure text batches must decode faster on EncDec"
