@@ -122,7 +122,7 @@ fn main() {
         "{}",
         render_table(
             &["request class", "mean ctx", "p50", "p90", "p99"],
-            &vec![row("text-only", &txt), row("multimodal", &mm)]
+            &[row("text-only", &txt), row("multimodal", &mm)]
         )
     );
     println!(

@@ -4,6 +4,12 @@
 //! enabled, on a bursty image-heavy ShareGPT-4o-like workload. Metric:
 //! P90 effective throughput (goodput) under scaled SLOs.
 //!
+//! An extra "EMP + elastic TP" row runs the same elastic system with
+//! `max_tp = 4` (the elastic-vs-static TP ablation axis) and prints the
+//! per-group TP reconfiguration timeline alongside the allocation
+//! behaviour — the Fig 7-style view of *parallelism* adjustment, not
+//! just instance counts.
+//!
 //! Flags: --requests N (default 300).
 
 use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
@@ -37,9 +43,13 @@ fn bursty_trace(n: usize, seed: u64) -> Vec<Request> {
     reqs
 }
 
-fn run(opts: EmpOptions, trace: &[Request]) -> Report {
+fn run_sched(opts: EmpOptions, sched: SchedulerConfig, trace: &[Request]) -> Report {
     let cost = CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
-    EmpSystem::new(cost, SchedulerConfig::default(), GPUS, opts).run(trace)
+    EmpSystem::new(cost, sched, GPUS, opts).run(trace)
+}
+
+fn run(opts: EmpOptions, trace: &[Request]) -> Report {
+    run_sched(opts, SchedulerConfig::default(), trace)
 }
 
 fn main() {
@@ -64,6 +74,12 @@ fn main() {
     ];
     let reports: Vec<(&str, Report)> =
         policies.into_iter().map(|(name, o)| (name, run(o, &reqs))).collect();
+    // Elastic-TP ablation: the same elastic system, allowed to merge
+    // prefill instances up to TP-4 during long-prefill regimes. Kept
+    // out of `reports` so the best-static comparison below stays a
+    // comparison against static policies only.
+    let tp_sched = SchedulerConfig { max_tp: 4, ..SchedulerConfig::default() };
+    let tp_rep = run_sched(EmpOptions::full(GPUS), tp_sched, &reqs);
     let mut rows = Vec::new();
     for scale in [1.0, 2.0, 3.0, 4.0, 5.0] {
         let slo = base.scaled(scale);
@@ -71,6 +87,7 @@ fn main() {
         for (_, rep) in &reports {
             cells.push(format!("{:.2}", rep.goodput_rps(&slo)));
         }
+        cells.push(format!("{:.2}", tp_rep.goodput_rps(&slo)));
         // EMP vs best static.
         let emp = reports[0].1.goodput_rps(&slo);
         let best_static = reports[1..]
@@ -93,10 +110,27 @@ fn main() {
                 "text-dom 6:2",
                 "equal 4:4",
                 "mm-dom 2:6",
+                "EMP+elasticTP",
                 "EMP/best-static"
             ],
             &rows
         )
     );
     println!("(paper: EMP 1.8x [Qwen] / 2.3x [Llama] over static allocation)");
+    // Per-group TP timeline of the elastic-TP run (Fig 7-style
+    // parallelism-adjustment view).
+    println!(
+        "elastic-TP: {} reconfigs, {:.2} GPU-seconds re-sharding",
+        tp_rep.tp_reconfigs, tp_rep.tp_busy_gpu_seconds
+    );
+    for e in &tp_rep.tp_timeline {
+        println!(
+            "  t={:>8.2}s group={} instance={} {} -> tp{}",
+            e.t,
+            e.group,
+            e.instance,
+            if e.merge { "merge" } else { "split" },
+            e.tp_after
+        );
+    }
 }

@@ -11,6 +11,17 @@
 //! The fast path is behavior-preserving (bit-identical reports; see
 //! `rust/tests/fast_forward_equivalence.rs`), so both configurations
 //! simulate exactly the same schedule — only the event count differs.
+//!
+//! ## Bench-regression gate (CI)
+//!
+//!     cargo bench --bench sim_throughput -- --smoke --check  # bench + gate
+//!     cargo bench --bench sim_throughput -- --check-only     # gate an existing BENCH_sim.json
+//!
+//! The gate compares the measurement against the committed
+//! `BENCH_baseline.json` via `util::bench::check_regression` and exits
+//! non-zero when events/sec drops more than `--tolerance` (default
+//! 20%) below a baseline floor, or a deterministic event count grows
+//! past its ceiling. `--baseline <path>` overrides the baseline file.
 
 use elasticmm::baselines::coupled::CoupledVllm;
 use elasticmm::baselines::decoupled::DecoupledStatic;
@@ -104,9 +115,55 @@ fn bench_system(
     (j, speedup)
 }
 
+/// Load + run the regression gate; exits the process non-zero on
+/// regression (the CI failure signal).
+fn run_gate(args: &Args, measured: &Json) {
+    let baseline_path = args.get_or(
+        "baseline",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json"),
+    );
+    let text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+    let baseline = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("parse baseline {baseline_path}: {e:?}"));
+    let tolerance = args.get_f64(
+        "tolerance",
+        baseline.opt("tolerance_default").and_then(|t| t.as_f64().ok()).unwrap_or(0.2),
+    );
+    match elasticmm::util::bench::check_regression(&baseline, measured, tolerance) {
+        Ok(checked) => {
+            println!(
+                "bench-regression gate PASSED ({} checks, tolerance {:.0}%):",
+                checked.len(),
+                tolerance * 100.0
+            );
+            for line in checked {
+                println!("  {line}");
+            }
+        }
+        Err(failures) => {
+            eprintln!("bench-regression gate FAILED (tolerance {:.0}%):", tolerance * 100.0);
+            for line in failures {
+                eprintln!("  {line}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let smoke = args.has_flag("smoke");
+    if args.has_flag("check-only") {
+        // Gate a BENCH_sim.json written by an earlier step (CI wires
+        // this right after the smoke bench).
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} (run the bench first)"));
+        let measured = Json::parse(&text).unwrap_or_else(|e| panic!("parse {path}: {e:?}"));
+        run_gate(&args, &measured);
+        return;
+    }
     let n = args.get_usize("requests", if smoke { 600 } else { 10_000 });
     let qps = args.get_f64("qps", 3.0);
     let gpus = args.get_usize("gpus", 4);
@@ -165,4 +222,7 @@ fn main() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json");
     std::fs::write(path, out.to_string()).expect("write BENCH_sim.json");
     println!("wrote {path}");
+    if args.has_flag("check") {
+        run_gate(&args, &out);
+    }
 }

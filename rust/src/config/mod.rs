@@ -25,8 +25,12 @@ impl Architecture {
             Architecture::EncoderDecoder => "Encoder-Decoder",
         }
     }
+}
 
-    pub fn from_str(s: &str) -> Result<Self, JsonError> {
+impl std::str::FromStr for Architecture {
+    type Err = JsonError;
+
+    fn from_str(s: &str) -> Result<Self, JsonError> {
         match s {
             "decoder_only" | "Decoder-only" => Ok(Architecture::DecoderOnly),
             "encoder_decoder" | "Encoder-Decoder" => Ok(Architecture::EncoderDecoder),
@@ -186,7 +190,7 @@ impl ModelConfig {
     pub fn from_json(j: &Json) -> Result<ModelConfig, JsonError> {
         Ok(ModelConfig {
             name: j.get("name")?.as_str()?.to_string(),
-            arch: Architecture::from_str(j.get("arch")?.as_str()?)?,
+            arch: j.get("arch")?.as_str()?.parse()?,
             llm: shape_from_json(j.get("llm")?)?,
             encoder: shape_from_json(j.get("encoder")?)?,
             cross_attn_layers: j.get("cross_attn_layers")?.as_usize()?,
@@ -304,6 +308,18 @@ pub struct SchedulerConfig {
     /// coupled-semantics) replica — vLLM's `max_num_batched_tokens`
     /// (was hardcoded to 8192 in `schedule_unified`).
     pub unified_prefill_token_budget: usize,
+    /// Elastic tensor-parallelism ceiling: prefill instances of a
+    /// modality group may merge into TP groups of up to this many GPUs
+    /// when the queue holds long multimodal prefills, and split back
+    /// into TP-1 data-parallel instances when the bottleneck shifts.
+    /// `1` (the default) disables elastic TP entirely — the static-TP
+    /// behaviour is byte-identical to a build without the feature.
+    pub max_tp: usize,
+    /// Fixed orchestration overhead of one TP reconfiguration (process
+    /// groups, collectives, allocator re-init), added on top of the
+    /// modeled weight re-shard time [`crate::model::CostModel::tp_reshard_time`].
+    /// The affected GPUs serve nothing for the combined delay.
+    pub tp_reconfig_s: f64,
     /// Decode fast-forwarding (event coalescing): when a decode batch
     /// provably cannot change before the next externally-visible event,
     /// simulate many decode steps inside one event instead of one queue
@@ -329,6 +345,8 @@ impl Default for SchedulerConfig {
             chunked_prefill_tokens: 2048,
             prefill_budget_multiplier: 4,
             unified_prefill_token_budget: 8192,
+            max_tp: 1,
+            tp_reconfig_s: 0.5,
             decode_fast_forward: true,
         }
     }

@@ -90,9 +90,15 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
         schedule_unified(sys, g, q);
         return;
     }
-    // R_p: FCFS admission under KV and tipping-point constraints.
+    // R_p: FCFS admission under KV and tipping-point constraints. The
+    // token budget scales with the idle set's *effective width* in
+    // base-TP units — a merged TP-4 group prefills ~4x the tokens per
+    // unit time, so it earns 4 instances' worth of budget. With every
+    // instance at base TP this is exactly `e_p.len()`, byte-identical
+    // to the static-TP behaviour.
+    let width: usize = e_p.iter().map(|&i| sys.instances[i].tp / sys.base_tp).sum();
     let budget =
-        sys.sched.chunked_prefill_tokens * e_p.len().max(1) * sys.sched.prefill_budget_multiplier;
+        sys.sched.chunked_prefill_tokens * width.max(1) * sys.sched.prefill_budget_multiplier;
     let mut ids: Vec<ReqIx> = Vec::new();
     let mut items = Vec::new();
     let mut dests = Vec::new();
@@ -153,11 +159,20 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     }
     let tp = sys.instances[participants[0]].tp;
     let cross = sys.group_serves_media(g);
+    let hetero = participants.iter().any(|&p| sys.instances[p].tp != tp);
     let mut dur = {
         // DP split over participants (leader computes the max-shard
-        // time; modality-pure text batches skip cross-attention).
+        // time; modality-pure text batches skip cross-attention). A
+        // participant set with mixed TP degrees — a merged TP group
+        // prefilling alongside base-TP peers — takes the heterogeneous
+        // LPT path, which routes the longest requests to the widest
+        // shard; with uniform degrees that path is bit-identical to
+        // `prefill_time_dp`, so the static-TP schedule is unchanged.
         if participants.len() == 1 {
             sys.cost.prefill_time_flags(&items, tp, cross)
+        } else if hetero {
+            let tps: Vec<usize> = participants.iter().map(|&p| sys.instances[p].tp).collect();
+            sys.cost.prefill_time_hetero(&items, &tps)
         } else {
             sys.cost.prefill_time_dp(&items, participants.len(), tp)
         }

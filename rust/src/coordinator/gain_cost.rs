@@ -11,6 +11,14 @@
 //!
 //! Both normalize per-token (gain by `input_len`, cost by `output_len`)
 //! and weight the performance-impact term with the tunable penalty `w`.
+//!
+//! [`tp_widen`] extends the Eq. 3 comparison to the TP dimension:
+//! instead of only asking whether a stage should gain or lose an
+//! *instance*, the scheduler also asks whether two idle prefill
+//! instances should merge into one group of twice the degree — "add an
+//! instance" vs. "widen TP on an existing one". DP cannot split a
+//! single long multimodal prefill, TP can; the cost is the re-shard
+//! downtime during which the merged GPUs serve nothing.
 
 use crate::model::{CostModel, DecodeItem, PrefillItem};
 
@@ -53,6 +61,7 @@ impl DecodeSet {
 /// `r_p`: pending prefill batch; `e_p`: current prefill DP width;
 /// `victim`: the batch resident on `e_max` (its sequences migrate to the
 /// surviving decode instances, whose merged batch is `merged_after`).
+#[allow(clippy::too_many_arguments)]
 pub fn prefill_preemption(
     cost: &CostModel,
     r_p: &PrefillSet,
@@ -93,6 +102,7 @@ pub fn prefill_preemption(
 /// per-step latency; `e_d`: current decode width (the candidate joins
 /// it); `r_p_remaining`: prefill work that loses an instance (width
 /// `e_p` → `e_p - 1`).
+#[allow(clippy::too_many_arguments)]
 pub fn decode_scale_up(
     cost: &CostModel,
     b_d: &DecodeSet,
@@ -131,6 +141,39 @@ pub fn decode_scale_up(
         .map(|it| (m + w * l) / (it.new_tokens + it.cached_tokens).max(1) as f64)
         .sum::<f64>();
     GainCost { gain, cost: c }
+}
+
+/// Eq. 3 extended to the TP dimension — should two idle prefill
+/// instances merge into one TP group of twice the degree?
+///
+/// `r_p` is the queued prefill demand. Callers pass each request's
+/// *outstanding* tokens (not just the currently-admissible chunk): the
+/// merge serves the long-prefill regime the queue evidences, not one
+/// iteration, so a video whose later chunks are still encoding counts
+/// in full. `tps_now` / `tps_after` are the idle prefill set's TP
+/// degrees before/after the candidate merge (e.g. `[1,1,1] → [2,1]`),
+/// and `reshard_s` the full reconfiguration delay (fixed overhead +
+/// modeled weight movement).
+///
+/// The verdict: the batch-level speedup of the heterogeneous LPT
+/// schedule must exceed the weighted re-shard downtime. (Eq. 2's
+/// per-token normalization would multiply gain and cost by the same
+/// `Σ 1/len` factor — it cancels from the comparison, so the terms are
+/// kept in plain seconds.) A batch of many short requests never merges
+/// (DP already splits it perfectly); a batch dominated by one long
+/// multimodal prefill does.
+pub fn tp_widen(
+    cost: &CostModel,
+    r_p: &PrefillSet,
+    tps_now: &[usize],
+    tps_after: &[usize],
+    reshard_s: f64,
+    w: f64,
+) -> GainCost {
+    let t_now = cost.prefill_time_hetero(&r_p.items, tps_now);
+    let t_after = cost.prefill_time_hetero(&r_p.items, tps_after);
+    let speedup = (t_now - t_after).max(0.0);
+    GainCost { gain: speedup, cost: w * reshard_s }
 }
 
 /// A gain/cost verdict.
@@ -238,6 +281,37 @@ mod tests {
         let rp = prefill_set(8, 8192);
         let gc = decode_scale_up(&c, &bd, step, 1, &rp, 2, 1, 1.0);
         assert!(!gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
+    }
+
+    #[test]
+    fn long_prefill_justifies_tp_widening_short_ones_do_not() {
+        let c = cost();
+        // One 16k-token multimodal prefill dominating the queue: DP
+        // cannot split it, TP-2 halves it — worth a 0.5s re-shard.
+        let long = prefill_set(1, 16_384);
+        let gc = tp_widen(&c, &long, &[1, 1], &[2], 0.5, 1.0);
+        assert!(gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
+        // Short text prefills: the speedup cannot pay for the re-shard.
+        let short = prefill_set(2, 512);
+        let gc2 = tp_widen(&c, &short, &[1, 1], &[2], 0.5, 1.0);
+        assert!(!gc2.beneficial(), "gain={} cost={}", gc2.gain, gc2.cost);
+        // Many medium prefills: DP already splits them, merging loses
+        // width — speedup is ~0 and the verdict must be negative.
+        let many = prefill_set(8, 2048);
+        let gc3 = tp_widen(&c, &many, &[1, 1, 1, 1], &[2, 1, 1], 0.5, 1.0);
+        assert!(!gc3.beneficial(), "gain={} cost={}", gc3.gain, gc3.cost);
+    }
+
+    #[test]
+    fn tp_widen_penalty_and_reshard_dampen() {
+        let c = cost();
+        let long = prefill_set(1, 16_384);
+        let cheap = tp_widen(&c, &long, &[1, 1], &[2], 0.1, 1.0);
+        let pricey = tp_widen(&c, &long, &[1, 1], &[2], 5.0, 1.0);
+        assert!(cheap.net() > pricey.net());
+        let low_w = tp_widen(&c, &long, &[1, 1], &[2], 0.5, 0.1);
+        let high_w = tp_widen(&c, &long, &[1, 1], &[2], 0.5, 10.0);
+        assert!(low_w.net() > high_w.net());
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub(crate) fn migrate_seqs(
         let reserve = r.input_len + r.req.output_tokens;
         let mut best: Option<usize> = None;
         for (i, &(_, f)) in free.iter().enumerate() {
-            if f >= reserve && best.map_or(true, |b| f > free[b].1) {
+            if f >= reserve && best.is_none_or(|b| f > free[b].1) {
                 best = Some(i);
             }
         }
@@ -98,7 +98,10 @@ pub(crate) fn on_migrate_done(
 /// mid-iteration, holding no resident sequences *and no in-flight KV
 /// reservations* (a mid-prefill request reserved here must be able to
 /// land); prefer Encode, then Prefill, then Unified, and only then
-/// Decode.
+/// Decode. Merged wide TP groups never migrate between modality
+/// groups: inter-group accounting is per *instance*, and moving a
+/// multi-GPU group as one instance would distort the Eq. 1 math — it
+/// must split back to base TP first.
 fn pick_idle_donor(sys: &EmpSystem, donor: GroupId, now: f64) -> Option<usize> {
     sys.members(donor)
         .iter()
@@ -108,6 +111,7 @@ fn pick_idle_donor(sys: &EmpSystem, donor: GroupId, now: f64) -> Option<usize> {
                 && sys.current[i].is_none()
                 && sys.instances[i].decoding.is_empty()
                 && sys.instances[i].kv.num_seqs() == 0
+                && sys.instances[i].tp == sys.base_tp
         })
         .min_by_key(|&i| match sys.instances[i].role {
             StageRole::Encode => 0,
@@ -161,7 +165,7 @@ pub(crate) fn reactive_inter_group(
             continue;
         }
         let bt_after = modality::burst_tolerance(d_n - 1, d_avg);
-        if best.map_or(true, |(_, b)| bt_after > b) {
+        if best.is_none_or(|(_, b)| bt_after > b) {
             best = Some((d, bt_after));
         }
     }
@@ -183,7 +187,9 @@ pub(crate) fn rebalance(sys: &mut EmpSystem, q: &mut SimQueue<'_, EmpEv>) {
     if !sys.opts.elastic {
         return;
     }
-    let total = sys.instances.len();
+    // Only live instances are allocatable (absorbed slots lent their
+    // GPUs to a merged TP group).
+    let total = sys.instances.iter().filter(|i| i.live()).count();
     let demands: Vec<f64> = (0..sys.num_groups())
         .map(|i| sys.groups[i].monitor.avg_instances_needed())
         .collect();
@@ -192,10 +198,10 @@ pub(crate) fn rebalance(sys: &mut EmpSystem, q: &mut SimQueue<'_, EmpEv>) {
     let mut needy: Option<(usize, usize)> = None; // (group, deficit)
     for i in 0..sys.num_groups() {
         let cur = sys.members(GroupId(i as u8)).len();
-        if cur > target[i] && donor.map_or(true, |(_, s)| cur - target[i] > s) {
+        if cur > target[i] && donor.is_none_or(|(_, s)| cur - target[i] > s) {
             donor = Some((i, cur - target[i]));
         }
-        if cur < target[i] && needy.map_or(true, |(_, s)| target[i] - cur > s) {
+        if cur < target[i] && needy.is_none_or(|(_, s)| target[i] - cur > s) {
             needy = Some((i, target[i] - cur));
         }
     }

@@ -36,6 +36,173 @@ pub(crate) fn flip_allowed(sys: &EmpSystem, g: GroupId, now: f64) -> bool {
     now - sys.last_role_flip[gidx(g)] >= sys.role_flip_cooldown_s
 }
 
+/// TP-reconfiguration rate limiter — re-sharding is far costlier than a
+/// role flip, so it gets its own longer cooldown (see
+/// `EmpSystem::last_tp_reconfig`).
+fn tp_reconfig_allowed(sys: &EmpSystem, g: GroupId, now: f64) -> bool {
+    now - sys.last_tp_reconfig[gidx(g)] >= sys.tp_cooldown_s
+}
+
+/// Elastic TP reconfiguration — Eq. 3 extended to the parallelism
+/// dimension. Prefill instances of a group *merge* into a wider TP
+/// group when the queue holds long multimodal prefills that DP cannot
+/// split (verdict from [`gain_cost::tp_widen`]), and *split* back into
+/// narrow data-parallel instances when the bottleneck shifts (queue
+/// holds no long prefill, or decode is starved for width). Both
+/// directions reuse PR 4's reservation-safety rule: only instances with
+/// `kv.num_seqs() == 0` may reconfigure, so no in-flight reservation
+/// can strand on a re-sharding slot. No-op unless
+/// `sched.max_tp > base_tp` — the static-TP path is byte-identical.
+///
+/// Trigger conditions are mirrored by `EmpSystem::can_fast_forward`;
+/// keep them in sync.
+pub(crate) fn try_tp_reconfig(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
+    if sys.sched.max_tp <= sys.base_tp {
+        return;
+    }
+    let now = q.now();
+    if !tp_reconfig_allowed(sys, g, now) {
+        return;
+    }
+    // Split first: a drained wide group with nothing long to prefill is
+    // worth more as DP / decode width than as idle TP.
+    if try_tp_split(sys, g, q) {
+        return;
+    }
+    try_tp_merge(sys, g, q);
+}
+
+/// Split the most recently merged TP group of `g` back into two
+/// instances when the long-prefill regime has passed or decode is the
+/// bottleneck. Returns whether a split happened.
+fn try_tp_split(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) -> bool {
+    let now = q.now();
+    // A drained, idle merged leader (any stage role — a shrunken group
+    // may have left it Unified).
+    let Some(leader) = sys.members(g).iter().copied().find(|&m| {
+        sys.instances[m].tp > sys.base_tp
+            && !sys.instances[m].absorbed.is_empty()
+            && sys.instances[m].idle_at(now)
+            && sys.current[m].is_none()
+            && sys.instances[m].decoding.is_empty()
+            && sys.instances[m].kv.num_seqs() == 0
+    }) else {
+        return false;
+    };
+    // Keep the width only while the queue still holds a prefill long
+    // enough to use it (outstanding tokens, matching the merge test)
+    // and decode is not starved.
+    let long_queued = sys.groups[gidx(g)].wait_prefill.iter().take(16).any(|&ix| {
+        sys.requests.get(ix).prefill_remaining() >= sys.sched.chunked_prefill_tokens
+    });
+    let hot_batch = sys
+        .role_members(g, StageRole::Decode)
+        .iter()
+        .map(|&d| sys.instances[d].decoding.len())
+        .max()
+        .unwrap_or(0);
+    let decode_hot = hot_batch >= sys.sched.decode_scale_up_batch;
+    if long_queued && !decode_hot {
+        return false;
+    }
+    // Back toward data parallelism: the revived instance joins decode
+    // when decode is the bottleneck — but only if it comes back at base
+    // TP. A nested merge (2+2→4) revives a still-wide TP-2 group, and
+    // wide groups never serve decode (§3.2); it stays on prefill until
+    // it splits further.
+    let revived_tp = sys.instances[leader].absorbed.last().map_or(sys.base_tp, |&(_, n)| n);
+    let role = if decode_hot && revived_tp == sys.base_tp {
+        StageRole::Decode
+    } else {
+        StageRole::Prefill
+    };
+    sys.split_tp(leader, role, q);
+    true
+}
+
+/// Merge the two lowest-id idle drained prefill instances of equal
+/// degree into one group of twice the degree when the queued prefill
+/// demand justifies the re-shard downtime. Returns whether a merge
+/// happened.
+fn try_tp_merge(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) -> bool {
+    let now = q.now();
+    // Cheap demand precheck (allocation-free — this runs on every
+    // scheduling pass): merging can only win when the queue holds a
+    // prefill a single instance serves slowly, the same bar
+    // `try_tp_split` uses for the reverse direction. Short-prefill
+    // regimes skip the candidate scan and LPT/gain evaluation entirely.
+    let long_queued = sys.groups[gidx(g)].wait_prefill.iter().take(16).any(|&ix| {
+        sys.requests.get(ix).prefill_remaining() >= sys.sched.chunked_prefill_tokens
+    });
+    if !long_queued {
+        return false;
+    }
+    // Idle, drained, un-booked prefill instances, ascending id.
+    let idle: Vec<usize> = sys
+        .role_members(g, StageRole::Prefill)
+        .iter()
+        .copied()
+        .filter(|&p| {
+            sys.instances[p].idle_at(now)
+                && sys.current[p].is_none()
+                && sys.instances[p].decoding.is_empty()
+                && sys.instances[p].kv.num_seqs() == 0
+        })
+        .collect();
+    // First equal-degree pair within the ceiling (lowest ids win, so
+    // repeated merges are deterministic: 1+1→2, later 2+2→4).
+    let mut pair = None;
+    'outer: for i in 0..idle.len() {
+        let t = sys.instances[idle[i]].tp;
+        if t * 2 > sys.sched.max_tp {
+            continue;
+        }
+        for j in (i + 1)..idle.len() {
+            if sys.instances[idle[j]].tp == t {
+                pair = Some((i, j));
+                break 'outer;
+            }
+        }
+    }
+    let Some((a, b)) = pair else { return false };
+    // Demand = the queued requests' *outstanding* prefill tokens — a
+    // video whose later chunks are still encoding counts in full; the
+    // merge serves the long-prefill regime, not one iteration.
+    let items: Vec<PrefillItem> = sys.groups[gidx(g)]
+        .wait_prefill
+        .iter()
+        .take(16)
+        .map(|&ix| {
+            let r = sys.requests.get(ix);
+            PrefillItem {
+                new_tokens: r.prefill_remaining(),
+                cached_tokens: r.cached_prefix + r.prefill_done,
+                vision_tokens: r.vision_tokens,
+            }
+        })
+        .collect();
+    let tps_now: Vec<usize> = idle.iter().map(|&p| sys.instances[p].tp).collect();
+    let mut tps_after = tps_now.clone();
+    tps_after[a] *= 2;
+    tps_after.remove(b);
+    let t = tps_now[a];
+    let reshard = sys.sched.tp_reconfig_s + sys.cost.tp_reshard_time(t, 2 * t);
+    let rp = PrefillSet { items };
+    let gc = gain_cost::tp_widen(
+        &sys.cost,
+        &rp,
+        &tps_now,
+        &tps_after,
+        reshard,
+        sys.sched.preempt_penalty_w,
+    );
+    if !gc.beneficial() {
+        return false;
+    }
+    sys.merge_tp(idle[a], idle[b], q);
+    true
+}
+
 pub(crate) fn note_flip(sys: &mut EmpSystem, g: GroupId, now: f64) {
     sys.last_role_flip[gidx(g)] = now;
     sys.stats.role_flips += 1;
@@ -139,13 +306,19 @@ pub(crate) fn try_decode_scale_up(
     let now = q.now();
     let decode = sys.role_members(g, StageRole::Decode);
     if decode.is_empty() {
-        // No decode instance at all (can happen transiently): flip
-        // an idle prefill instance immediately.
-        if let Some(&pick) = sys
-            .role_members(g, StageRole::Prefill)
+        // No decode instance at all (can happen transiently): flip an
+        // idle prefill instance immediately — a base-TP one if any
+        // exists; a merged wide group only as a true last resort
+        // (decode scales poorly with TP, and a wide group stuck on
+        // decode cannot split until it drains).
+        let idle = |p: usize| sys.instances[p].idle_at(now) && sys.current[p].is_none();
+        let prefill = sys.role_members(g, StageRole::Prefill);
+        let pick = prefill
             .iter()
-            .find(|&&p| sys.instances[p].idle_at(now) && sys.current[p].is_none())
-        {
+            .copied()
+            .find(|&p| idle(p) && sys.instances[p].tp == sys.base_tp)
+            .or_else(|| prefill.iter().copied().find(|&p| idle(p)));
+        if let Some(pick) = pick {
             sys.set_role(pick, StageRole::Decode);
             sys.stats.decode_scale_ups += 1;
             sys.stats.role_flips += 1;
@@ -165,8 +338,11 @@ pub(crate) fn try_decode_scale_up(
     if !flip_allowed(sys, g, now) {
         return;
     }
-    // Prefer an idle prefill instance in-group (cheap: no Eq. 3 cost
-    // beyond losing DP width — still evaluated).
+    // Prefer an idle *base-TP* prefill instance in-group (cheap: no
+    // Eq. 3 cost beyond losing DP width — still evaluated). Merged
+    // wide TP groups are never flipped to decode: decode is weight-read
+    // bound and scales poorly with TP (§3.2), so their GPUs are worth
+    // more as prefill width until they split.
     let prefill = sys.role_members(g, StageRole::Prefill);
     let prefill_len = prefill.len();
     if prefill_len <= 1 {
@@ -174,10 +350,11 @@ pub(crate) fn try_decode_scale_up(
         migration::reactive_inter_group(sys, g, q);
         return;
     }
-    let Some(&pick) = prefill
-        .iter()
-        .find(|&&p| sys.instances[p].idle_at(now) && sys.current[p].is_none())
-    else {
+    let Some(&pick) = prefill.iter().find(|&&p| {
+        sys.instances[p].idle_at(now)
+            && sys.current[p].is_none()
+            && sys.instances[p].tp == sys.base_tp
+    }) else {
         return;
     };
     // Eq. 3 gain/cost.
@@ -273,28 +450,35 @@ pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
     let backlog = sys.groups[gidx(g)].wait_encode.len();
     let current = sys.role_members(g, StageRole::Encode).len();
     let desired = (backlog.div_ceil(2)).clamp(0, n - 2);
-    if desired > current {
-        // Promote idle prefill instances (keep >=1 prefill).
-        let prefill = sys.role_members(g, StageRole::Prefill);
-        if prefill.len() > 1 {
-            if let Some(&pick) = prefill
+    match desired.cmp(&current) {
+        std::cmp::Ordering::Greater => {
+            // Promote idle base-TP prefill instances (keep >=1 prefill;
+            // merged wide groups stay on prefill — that is what they
+            // were widened for).
+            let prefill = sys.role_members(g, StageRole::Prefill);
+            if prefill.len() > 1 {
+                if let Some(&pick) = prefill.iter().find(|&&p| {
+                    sys.current[p].is_none()
+                        && sys.instances[p].decoding.is_empty()
+                        && sys.instances[p].tp == sys.base_tp
+                }) {
+                    sys.set_role(pick, StageRole::Encode);
+                    note_flip(sys, g, now);
+                }
+            }
+        }
+        std::cmp::Ordering::Less => {
+            // Demote an idle encoder back to prefill.
+            if let Some(&pick) = sys
+                .role_members(g, StageRole::Encode)
                 .iter()
-                .find(|&&p| sys.current[p].is_none() && sys.instances[p].decoding.is_empty())
+                .find(|&&e| sys.current[e].is_none())
             {
-                sys.set_role(pick, StageRole::Encode);
+                sys.set_role(pick, StageRole::Prefill);
                 note_flip(sys, g, now);
             }
         }
-    } else if desired < current {
-        // Demote an idle encoder back to prefill.
-        if let Some(&pick) = sys
-            .role_members(g, StageRole::Encode)
-            .iter()
-            .find(|&&e| sys.current[e].is_none())
-        {
-            sys.set_role(pick, StageRole::Prefill);
-            note_flip(sys, g, now);
-        }
+        std::cmp::Ordering::Equal => {}
     }
 }
 

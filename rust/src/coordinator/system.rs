@@ -49,8 +49,9 @@
 //! proves the step-by-step path would do nothing else in between.
 
 use crate::config::SchedulerConfig;
+use crate::kvcache::paged::PagedKvCache;
 use crate::kvcache::unified::UnifiedCache;
-use crate::metrics::RequestRecord;
+use crate::metrics::{Report, RequestRecord, TpReconfig};
 use crate::model::{CostModel, DecodeItem, PrefillItem};
 use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
@@ -150,6 +151,9 @@ pub(crate) enum Iter {
     /// One encode job (an image, an audio clip, or one video chunk) of
     /// request `ix`.
     Encode { ix: ReqIx },
+    /// TP reconfiguration in flight: the instance's GPUs re-shard
+    /// weights and serve nothing until the completion event.
+    Reshard,
 }
 
 /// Per-group scheduler state.
@@ -190,6 +194,15 @@ pub struct EmpStats {
     /// pending on the encoder pool — i.e. iterations where a later
     /// chunk's encode provably overlapped an earlier chunk's prefill.
     pub encode_overlap_prefills: u64,
+    /// Elastic-TP merges (two prefill instances → one wider TP group).
+    pub tp_merges: u64,
+    /// Elastic-TP splits (one merged group → two narrower instances).
+    pub tp_splits: u64,
+    /// GPU-seconds spent re-sharding weights (GPUs serving nothing).
+    pub tp_busy_gpu_seconds: f64,
+    /// Per-group TP reconfiguration timeline (event order), exported
+    /// into `Report::tp_timeline` for the Fig 7 allocation bench.
+    pub tp_timeline: Vec<TpReconfig>,
 }
 
 /// Incrementally-maintained membership lists: which instances belong to
@@ -258,6 +271,18 @@ pub struct EmpSystem {
     pub(crate) last_role_flip: Vec<f64>,
     /// Minimum seconds between role flips in one group.
     pub(crate) role_flip_cooldown_s: f64,
+    /// Base (minimum) TP degree every instance starts at; elastic TP
+    /// merges only above this, and only when `sched.max_tp > base_tp`.
+    pub(crate) base_tp: usize,
+    /// GPUs handed out at construction (`n_inst * base_tp`) — the
+    /// expected coverage of the GPU-partition invariant.
+    pub(crate) total_gpus: usize,
+    /// Last TP reconfiguration per group. Re-sharding is far more
+    /// expensive than a role flip, so it gets its own, longer cooldown
+    /// against merge/split thrash.
+    pub(crate) last_tp_reconfig: Vec<f64>,
+    /// Minimum seconds between TP reconfigurations in one group.
+    pub(crate) tp_cooldown_s: f64,
     /// Cached (group, role) membership lists.
     pub(crate) roles: RoleCache,
     /// Modality → group routing (exact match, else first media group).
@@ -374,6 +399,10 @@ impl EmpSystem {
             marginal_decode_s,
             last_role_flip: vec![-1e9; n_groups],
             role_flip_cooldown_s: 0.25,
+            base_tp: tp,
+            total_gpus: n_inst * tp,
+            last_tp_reconfig: vec![-1e9; n_groups],
+            tp_cooldown_s: 2.0,
             roles,
             modality_group,
             group_media,
@@ -413,6 +442,7 @@ impl EmpSystem {
     /// sync. Every role mutation must go through here (or
     /// [`Self::set_group`]).
     pub(crate) fn set_role(&mut self, i: usize, role: StageRole) {
+        debug_assert!(self.instances[i].live(), "role flip on absorbed instance {i}");
         let old = self.instances[i].role;
         if old == role {
             return;
@@ -424,8 +454,10 @@ impl EmpSystem {
     }
 
     /// Move an instance to another modality group with a new role,
-    /// keeping the membership cache in sync.
+    /// keeping the membership cache in sync. A merged TP group moves as
+    /// one unit — its whole GPU set follows the instance.
     pub(crate) fn set_group(&mut self, i: usize, g: GroupId, role: StageRole) {
+        debug_assert!(self.instances[i].live(), "group move on absorbed instance {i}");
         let old_g = self.instances[i].group;
         let old_r = self.instances[i].role;
         let (ogi, ngi) = (gidx(old_g), gidx(g));
@@ -435,6 +467,129 @@ impl EmpSystem {
         self.instances[i].role = role;
         RoleCache::insert(&mut self.roles.members[ngi], i);
         RoleCache::insert(&mut self.roles.by_role[ngi][ridx(role)], i);
+    }
+
+    // --- elastic TP reconfiguration (drain-then-reshard) ----------------
+
+    /// Remove a drained, idle instance from every scheduling membership
+    /// list: its GPUs are about to belong to another instance's TP
+    /// group and nothing may dispatch onto the slot until a split
+    /// revives it.
+    fn deactivate(&mut self, i: usize) {
+        let gi = gidx(self.instances[i].group);
+        let r = ridx(self.instances[i].role);
+        RoleCache::remove(&mut self.roles.by_role[gi][r], i);
+        RoleCache::remove(&mut self.roles.members[gi], i);
+    }
+
+    /// Re-activate a previously absorbed instance slot in group `g`
+    /// with `role` (the inverse of [`Self::deactivate`]).
+    fn activate(&mut self, i: usize, g: GroupId, role: StageRole) {
+        self.instances[i].group = g;
+        self.instances[i].role = role;
+        let gi = gidx(g);
+        RoleCache::insert(&mut self.roles.members[gi], i);
+        RoleCache::insert(&mut self.roles.by_role[gi][ridx(role)], i);
+    }
+
+    /// Put instance `i` into the re-shard state: busy (serving
+    /// nothing) for the fixed orchestration overhead plus the modeled
+    /// weight movement from `old_tp` to its new degree, with the
+    /// completion event queued. `busy_time` is *not* charged — these
+    /// GPU-seconds are idle by design and accounted separately in
+    /// `tp_busy_gpu_seconds`.
+    fn begin_reshard(&mut self, i: usize, old_tp: usize, q: &mut SimQueue<'_, EmpEv>) {
+        let now = q.now();
+        let new_tp = self.instances[i].tp;
+        let d = self.sched.tp_reconfig_s + self.cost.tp_reshard_time(old_tp, new_tp);
+        self.instances[i].busy_until = now + d;
+        self.current[i] = Some(Iter::Reshard);
+        self.stats.tp_busy_gpu_seconds += d * new_tp as f64;
+        q.push(now + d, EmpEv::IterDone(i));
+    }
+
+    /// Merge instance `other` into `leader`'s TP group (both drained,
+    /// idle prefill instances of the same group and degree). `other`
+    /// disappears from scheduling; `leader` re-shards to the combined
+    /// degree with a KV pool sized for it, and serves nothing until
+    /// the re-shard completes.
+    pub(crate) fn merge_tp(&mut self, leader: usize, other: usize, q: &mut SimQueue<'_, EmpEv>) {
+        let now = q.now();
+        debug_assert_ne!(leader, other);
+        debug_assert!(self.instances[leader].kv.num_seqs() == 0, "merge leader not drained");
+        debug_assert!(self.instances[other].kv.num_seqs() == 0, "merge victim not drained");
+        debug_assert!(self.current[leader].is_none() && self.current[other].is_none());
+        let old_tp = self.instances[leader].tp;
+        self.deactivate(other);
+        let moved: Vec<usize> = std::mem::take(&mut self.instances[other].gpus);
+        self.instances[other].tp = 0;
+        self.instances[leader].absorbed.push((other, moved.len()));
+        self.instances[leader].gpus.extend(moved);
+        let new_tp = self.instances[leader].gpus.len();
+        self.instances[leader].tp = new_tp;
+        // The merged group backs one weight shard set across new_tp
+        // GPUs' HBM: a proportionally larger KV pool (safe to swap —
+        // the leader is drained).
+        self.instances[leader].kv = PagedKvCache::new(
+            self.cost.kv_pool_tokens(new_tp, self.sched.kv_memory_fraction),
+            16,
+        );
+        self.begin_reshard(leader, old_tp, q);
+        let g = self.instances[leader].group;
+        self.stats.tp_merges += 1;
+        self.stats.tp_timeline.push(TpReconfig {
+            t: now,
+            group: gidx(g),
+            instance: leader,
+            tp_after: new_tp,
+            merge: true,
+        });
+        self.last_tp_reconfig[gidx(g)] = now;
+        debug_assert!(self.check_invariants().is_ok(), "{:?}", self.check_invariants());
+    }
+
+    /// Split the most recent merge off `leader` (drained, idle): the
+    /// absorbed slot gets its GPU set back and revives in `leader`'s
+    /// current group with `revived_role`; both halves re-shard to their
+    /// new degrees and serve nothing meanwhile.
+    pub(crate) fn split_tp(
+        &mut self,
+        leader: usize,
+        revived_role: StageRole,
+        q: &mut SimQueue<'_, EmpEv>,
+    ) {
+        let now = q.now();
+        debug_assert!(self.instances[leader].kv.num_seqs() == 0, "split leader not drained");
+        debug_assert!(self.current[leader].is_none());
+        let (other, n) = self.instances[leader].absorbed.pop().expect("split needs a merge");
+        let old_tp = self.instances[leader].tp;
+        let at = self.instances[leader].gpus.len() - n;
+        let returned = self.instances[leader].gpus.split_off(at);
+        self.instances[leader].tp = self.instances[leader].gpus.len();
+        self.instances[other].gpus = returned;
+        self.instances[other].tp = n;
+        let frac = self.sched.kv_memory_fraction;
+        self.instances[leader].kv =
+            PagedKvCache::new(self.cost.kv_pool_tokens(self.instances[leader].tp, frac), 16);
+        self.instances[other].kv = PagedKvCache::new(self.cost.kv_pool_tokens(n, frac), 16);
+        let g = self.instances[leader].group;
+        self.activate(other, g, revived_role);
+        self.begin_reshard(leader, old_tp, q);
+        self.begin_reshard(other, old_tp, q);
+        self.stats.tp_splits += 1;
+        self.stats.tp_timeline.push(TpReconfig {
+            t: now,
+            group: gidx(g),
+            instance: leader,
+            tp_after: self.instances[leader].tp,
+            merge: false,
+        });
+        self.last_tp_reconfig[gidx(g)] = now;
+        // Re-establish the group's stage-role invariants with the
+        // revived member counted (e.g. a single-member Unified leader
+        // becomes a prefill/decode pair).
+        self.assign_initial_roles(g);
+        debug_assert!(self.check_invariants().is_ok(), "{:?}", self.check_invariants());
     }
 
     /// Take a pooled `ids` buffer (empty) for a decode iteration.
@@ -475,11 +630,20 @@ impl EmpSystem {
             }
         }
         if self.role_members(g, StageRole::Decode).is_empty() {
-            // Prefer an instance already holding sequences; else last.
+            // Prefer an instance already holding sequences; else the
+            // last base-TP instance (merged wide groups stay on prefill
+            // — decode scales poorly with TP, §3.2); else last.
             let pick = members
                 .iter()
                 .copied()
                 .find(|&m| !self.instances[m].decoding.is_empty())
+                .or_else(|| {
+                    members
+                        .iter()
+                        .copied()
+                        .rev()
+                        .find(|&m| self.instances[m].tp == self.base_tp)
+                })
                 .unwrap_or(*members.last().unwrap());
             self.set_role(pick, StageRole::Decode);
         }
@@ -534,6 +698,7 @@ impl EmpSystem {
     /// dispatch, prefill dispatch (with Eq. 2 preemption inside), decode
     /// steps, and the unified single-instance path.
     pub(crate) fn schedule_group(&mut self, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
+        scaling::try_tp_reconfig(self, g, q);
         scaling::try_encoder_scaling(self, g, q.now());
         scaling::drain_stuck_encode_queue(self, g);
         dispatch::schedule_encoders(self, g, q);
@@ -636,6 +801,30 @@ impl EmpSystem {
         let prefill = self.role_members(g, StageRole::Prefill);
         let decode = self.role_members(g, StageRole::Decode);
         let encoders = self.role_members(g, StageRole::Encode);
+        // try_tp_reconfig must be unable to act (elastic TP only; with
+        // the default `max_tp == base_tp` this block vanishes and the
+        // static-TP fast path is untouched). Conservative mirror of
+        // scaling::try_tp_reconfig: candidate availability is checked,
+        // the gain/cost verdict and the TP cooldown are not — a veto
+        // too many only costs coalescing opportunity, never exactness.
+        if self.sched.max_tp > self.base_tp {
+            // A drained idle merged leader could split.
+            if self.members(g).iter().any(|&m| {
+                self.instances[m].tp > self.base_tp
+                    && !self.instances[m].absorbed.is_empty()
+                    && self.instances[m].idle_at(now)
+                    && self.current[m].is_none()
+                    && self.instances[m].decoding.is_empty()
+                    && self.instances[m].kv.num_seqs() == 0
+            }) {
+                return false;
+            }
+            // A merge needs >=2 idle drained prefill instances *and* a
+            // non-empty prefill queue — every such state is already
+            // vetoed by the dispatch_prefill rule below
+            // (`idle_prefill_exists && !wait_prefill_empty`), so no
+            // separate merge scan is needed here.
+        }
         // dispatch_prefill must admit nothing: either no idle prefill
         // width or nothing waiting (otherwise admission, or the
         // KV-blocked forced scale-up, could fire mid-window).
@@ -867,6 +1056,11 @@ impl EmpSystem {
                     debug_assert!(self.instances[p].idle_at(now));
                 }
             }
+            Iter::Reshard => {
+                // Weights are in place at the new degree; the instance
+                // resumes scheduling through the hooks below. The
+                // re-shard window itself did no work to account.
+            }
             Iter::Decode { ids } => {
                 let mut any_completed = false;
                 let mut all_resident = true;
@@ -915,6 +1109,16 @@ impl EmpSystem {
     /// Verify cross-instance invariants (used by tests).
     pub fn check_invariants(&self) -> Result<(), String> {
         crate::sim::instance::check_instances(&self.instances, &self.requests)?;
+        // Every GPU belongs to exactly one live TP group, always.
+        crate::sim::instance::check_gpu_partition(&self.instances, self.total_gpus)?;
+        for inst in &self.instances {
+            if inst.live() && inst.tp > self.sched.max_tp.max(self.base_tp) {
+                return Err(format!(
+                    "instance {} runs tp={} above the configured ceiling {}",
+                    inst.id, inst.tp, self.sched.max_tp
+                ));
+            }
+        }
         for i in 0..self.num_groups() {
             let g = GroupId(i as u8);
             if self.members(g).is_empty() {
@@ -931,6 +1135,11 @@ impl EmpSystem {
                 StageRole::Unified,
             ] {
                 for &m in self.role_members(g, role) {
+                    if !self.instances[m].live() {
+                        return Err(format!(
+                            "absorbed instance {m} still listed as {g:?}/{role:?}"
+                        ));
+                    }
                     if self.instances[m].group != g || self.instances[m].role != role {
                         return Err(format!(
                             "role cache stale: instance {m} listed as {g:?}/{role:?} \
@@ -941,13 +1150,11 @@ impl EmpSystem {
                 }
             }
         }
+        let live = self.instances.iter().filter(|i| i.live()).count();
         let cached: usize =
             (0..self.num_groups()).map(|i| self.members(GroupId(i as u8)).len()).sum();
-        if cached != self.instances.len() {
-            return Err(format!(
-                "role cache covers {cached} of {} instances",
-                self.instances.len()
-            ));
+        if cached != live {
+            return Err(format!("role cache covers {cached} of {live} live instances"));
         }
         Ok(())
     }
@@ -998,5 +1205,11 @@ impl ServingSystem for EmpSystem {
 
     fn outstanding_by_phase(&self) -> Vec<(&'static str, usize)> {
         self.requests.phase_histogram()
+    }
+
+    fn annotate_report(&self, rep: &mut Report) {
+        rep.tp_reconfigs = self.stats.tp_merges + self.stats.tp_splits;
+        rep.tp_busy_gpu_seconds = self.stats.tp_busy_gpu_seconds;
+        rep.tp_timeline = self.stats.tp_timeline.clone();
     }
 }

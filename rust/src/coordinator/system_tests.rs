@@ -236,6 +236,52 @@ fn single_instance_groups_work() {
 }
 
 #[test]
+fn elastic_tp_merges_and_splits_on_video_load() {
+    // A video-heavy trace at moderate load: the media group's prefill
+    // queue holds multi-thousand-token clips a single instance serves
+    // slowly and DP cannot split — the scheduler must merge prefill
+    // instances into a wider TP group, and split back once the long
+    // prefills drain. `check_invariants` (called after every
+    // reconfiguration under debug assertions, and here at the end)
+    // guarantees every GPU stayed in exactly one live TP group.
+    let mut rng = Rng::new(31);
+    let mut reqs = DatasetSpec::video_chat().generate(&mut rng, 90);
+    poisson_arrivals(&mut rng, &mut reqs, 1.2);
+    let sched = SchedulerConfig { max_tp: 4, ..SchedulerConfig::default() };
+    let mut sys = EmpSystem::new(cost_qwen(), sched, 8, EmpOptions::full(8));
+    let rep = sys.run(&reqs);
+    assert_eq!(rep.records.len(), reqs.len());
+    sys.check_invariants().unwrap();
+    assert!(sys.stats.tp_merges >= 1, "no TP merge under long video prefills: {:?}", sys.stats);
+    assert!(sys.stats.tp_splits >= 1, "no TP split after the queue drained: {:?}", sys.stats);
+    // The driver exports the counters on the Report.
+    assert_eq!(rep.tp_reconfigs, sys.stats.tp_merges + sys.stats.tp_splits);
+    assert!(rep.tp_busy_gpu_seconds > 0.0, "re-shards must cost GPU time");
+    assert_eq!(rep.tp_timeline.len() as u64, rep.tp_reconfigs);
+    // Timeline events are well-formed and time-ordered.
+    for w in rep.tp_timeline.windows(2) {
+        assert!(w[0].t <= w[1].t);
+    }
+    assert!(rep.tp_timeline.iter().all(|e| e.tp_after >= 1 && e.tp_after <= 4));
+    // After the run every instance is back to a consistent state and
+    // all KV released.
+    assert_eq!(sys.kv_in_use(), 0);
+}
+
+#[test]
+fn static_max_tp_never_reconfigures() {
+    let mut rng = Rng::new(32);
+    let mut reqs = DatasetSpec::video_chat().generate(&mut rng, 40);
+    poisson_arrivals(&mut rng, &mut reqs, 1.5);
+    let mut sys =
+        EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));
+    let rep = sys.run(&reqs);
+    assert_eq!(sys.stats.tp_merges + sys.stats.tp_splits, 0);
+    assert_eq!(rep.tp_reconfigs, 0);
+    assert!(rep.tp_timeline.is_empty());
+}
+
+#[test]
 fn stats_reflect_stage_elasticity() {
     let mut sys =
         EmpSystem::new(cost_qwen(), SchedulerConfig::default(), 8, EmpOptions::full(8));

@@ -344,10 +344,10 @@ impl RadixTree {
                 if n.label.iter().any(|r| r.len == 0) {
                     return Err(format!("node {id} label contains a zero-length run"));
                 }
-                let p = n.parent.ok_or(format!("node {id} missing parent"))?;
+                let p = n.parent.ok_or_else(|| format!("node {id} missing parent"))?;
                 let pn = self.nodes[p]
                     .as_ref()
-                    .ok_or(format!("node {id} parent {p} is dead"))?;
+                    .ok_or_else(|| format!("node {id} parent {p} is dead"))?;
                 if pn.children.get(&n.label[0].first_token()) != Some(&id) {
                     return Err(format!("node {id} not linked from parent"));
                 }
@@ -362,7 +362,7 @@ impl RadixTree {
             for (&k, &c) in &n.children {
                 let cn = self.nodes[c]
                     .as_ref()
-                    .ok_or(format!("node {id} child {c} is dead"))?;
+                    .ok_or_else(|| format!("node {id} child {c} is dead"))?;
                 if cn.label[0].first_token() != k {
                     return Err(format!("child key mismatch at node {id}"));
                 }

@@ -254,10 +254,10 @@ impl TokenRadixTree {
                 if n.label.is_empty() {
                     return Err(format!("non-root node {id} with empty label"));
                 }
-                let p = n.parent.ok_or(format!("node {id} missing parent"))?;
+                let p = n.parent.ok_or_else(|| format!("node {id} missing parent"))?;
                 let pn = self.nodes[p]
                     .as_ref()
-                    .ok_or(format!("node {id} parent {p} is dead"))?;
+                    .ok_or_else(|| format!("node {id} parent {p} is dead"))?;
                 if pn.children.get(&n.label[0]) != Some(&id) {
                     return Err(format!("node {id} not linked from parent"));
                 }
@@ -266,7 +266,7 @@ impl TokenRadixTree {
             for (&k, &c) in &n.children {
                 let cn = self.nodes[c]
                     .as_ref()
-                    .ok_or(format!("node {id} child {c} is dead"))?;
+                    .ok_or_else(|| format!("node {id} child {c} is dead"))?;
                 if cn.label[0] != k {
                     return Err(format!("child key mismatch at node {id}"));
                 }

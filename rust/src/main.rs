@@ -87,7 +87,17 @@ fn make_trace(args: &Args) -> Result<Vec<Request>> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cost = cost_model(args);
-    let sched = SchedulerConfig::default();
+    let mut sched = SchedulerConfig::default();
+    // Elastic tensor-parallelism: `--max-tp {1|2|4}` lets prefill
+    // instances merge into TP groups up to that degree (1 = static TP,
+    // byte-identical to builds without the feature);
+    // `--tp-reconfig-s` overrides the fixed re-shard overhead.
+    let max_tp = args.get_usize("max-tp", 1);
+    if !matches!(max_tp, 1 | 2 | 4) {
+        elasticmm::bail!("--max-tp must be 1, 2 or 4, got {max_tp}");
+    }
+    sched.max_tp = max_tp;
+    sched.tp_reconfig_s = args.get_f64("tp-reconfig-s", sched.tp_reconfig_s);
     let gpus = args.get_usize("gpus", 8);
     let t = make_trace(args)?;
     let system = args.get_or("system", "elasticmm");
@@ -98,6 +108,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let groups = args.get_usize("groups", 2);
     if args.get("groups").is_some() && system != "elasticmm" {
         elasticmm::bail!("--groups only applies to --system elasticmm (got `{system}`)");
+    }
+    // Every baseline — including the elasticity-frozen `static` split —
+    // keeps static TP, so the elastic-vs-static TP ablation is
+    // `--max-tp 4` vs `--max-tp 1` on `elasticmm` alone; reject the
+    // flag elsewhere rather than silently ignoring it.
+    if max_tp != 1 && system != "elasticmm" {
+        elasticmm::bail!("--max-tp only applies to --system elasticmm (got `{system}`)");
     }
     // Each group keeps >=1 *instance*; an instance spans the model's
     // minimum tensor-parallel degree worth of GPUs, so validate
@@ -132,6 +149,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ),
     };
     println!("system={system} gpus={gpus} requests={}", report.records.len());
+    if max_tp > 1 {
+        println!(
+            "elastic-tp: max_tp={max_tp} tp_reconfigs={} tp_busy_gpu_seconds={:.3}",
+            report.tp_reconfigs, report.tp_busy_gpu_seconds
+        );
+        for e in &report.tp_timeline {
+            println!(
+                "  t={:>8.3}s group={} instance={} {} -> tp{}",
+                e.t,
+                e.group,
+                e.instance,
+                if e.merge { "merge" } else { "split" },
+                e.tp_after
+            );
+        }
+    }
+    // CI hook: `--assert-tp-reconfigs` fails the run (non-zero exit)
+    // when elastic TP never reconfigured — the elastic-TP smoke uses it
+    // to prove the merge/split path actually fires.
+    if args.has_flag("assert-tp-reconfigs") && report.tp_reconfigs == 0 {
+        elasticmm::bail!(
+            "--assert-tp-reconfigs: no TP reconfiguration happened \
+             (max_tp={max_tp}, {} requests)",
+            report.records.len()
+        );
+    }
     let row = |name: &str, r: &Report| {
         vec![
             name.to_string(),

@@ -77,15 +77,55 @@ impl RequestRecord {
     }
 }
 
+/// One elastic-TP reconfiguration event — the per-group TP timeline the
+/// Fig 7-style allocation benches plot alongside instance counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TpReconfig {
+    /// Sim time the re-shard began.
+    pub t: f64,
+    /// Modality-group index (registry order).
+    pub group: usize,
+    /// Leading instance id of the affected TP group.
+    pub instance: usize,
+    /// TP degree of the group after the reconfiguration.
+    pub tp_after: usize,
+    /// True for a merge (widening), false for a split.
+    pub merge: bool,
+}
+
+impl TpReconfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t", Json::num(self.t)),
+            ("group", Json::num(self.group as f64)),
+            ("instance", Json::num(self.instance as f64)),
+            ("tp_after", Json::num(self.tp_after as f64)),
+            ("merge", Json::Bool(self.merge)),
+        ])
+    }
+}
+
 /// Aggregate report over a run.
 #[derive(Debug, Clone)]
 pub struct Report {
     pub records: Vec<RequestRecord>,
+    /// Elastic-TP reconfigurations (merges + splits) performed during
+    /// the run; 0 for systems or configs without elastic TP.
+    pub tp_reconfigs: u64,
+    /// GPU-seconds spent re-sharding weights (GPUs serving nothing).
+    pub tp_busy_gpu_seconds: f64,
+    /// Per-group TP reconfiguration timeline, in event order.
+    pub tp_timeline: Vec<TpReconfig>,
 }
 
 impl Report {
     pub fn new(records: Vec<RequestRecord>) -> Report {
-        Report { records }
+        Report {
+            records,
+            tp_reconfigs: 0,
+            tp_busy_gpu_seconds: 0.0,
+            tp_timeline: Vec::new(),
+        }
     }
 
     pub fn mean_norm_input_latency(&self) -> f64 {
@@ -219,6 +259,9 @@ impl Report {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("per_modality", self.per_modality_json()),
+            ("tp_reconfigs", Json::num(self.tp_reconfigs as f64)),
+            ("tp_busy_gpu_seconds", Json::num(self.tp_busy_gpu_seconds)),
+            ("tp_timeline", Json::Arr(self.tp_timeline.iter().map(|e| e.to_json()).collect())),
             ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
         ])
     }
@@ -355,6 +398,30 @@ mod tests {
         for m in [Modality::Text, Modality::Image, Modality::Video] {
             assert!(audio.norm_input_s < Slo::default_for(m).norm_input_s);
         }
+    }
+
+    #[test]
+    fn tp_stats_default_zero_and_serialize() {
+        let mut rep = Report::new(vec![rec(0.0, 1.0, 2.0, 10, 5)]);
+        assert_eq!(rep.tp_reconfigs, 0);
+        assert_eq!(rep.tp_busy_gpu_seconds, 0.0);
+        assert!(rep.tp_timeline.is_empty());
+        rep.tp_reconfigs = 2;
+        rep.tp_busy_gpu_seconds = 1.25;
+        rep.tp_timeline.push(TpReconfig {
+            t: 3.5,
+            group: 1,
+            instance: 4,
+            tp_after: 2,
+            merge: true,
+        });
+        let j = rep.to_json();
+        assert_eq!(j.get("tp_reconfigs").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("tp_busy_gpu_seconds").unwrap().as_f64().unwrap(), 1.25);
+        let tl = j.get("tp_timeline").unwrap().as_arr().unwrap();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].get("tp_after").unwrap().as_f64().unwrap(), 2.0);
+        assert!(tl[0].get("merge").unwrap().as_bool().unwrap());
     }
 
     #[test]

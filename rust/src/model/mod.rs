@@ -234,6 +234,49 @@ impl CostModel {
         compute.max(memory) + self.iter_overhead
     }
 
+    /// Prefill latency for a batch data-parallel over instances of
+    /// *heterogeneous* TP degree (`tps[i]` ranks each): greedy LPT by
+    /// estimated completion time (`load / tp` — prefill scales
+    /// near-linearly with TP), overall time = the slowest shard. The
+    /// elastic-TP scheduler uses this when a merged TP-k prefill group
+    /// serves iterations alongside TP-1 peers; the LPT-by-completion
+    /// rule naturally routes the longest requests to the widest shard.
+    ///
+    /// With all degrees equal this performs *exactly* the assignment of
+    /// [`Self::prefill_time_dp`]: the per-step argmin over
+    /// `(load + tokens) / tp` reduces to the argmin over `load` (same
+    /// first-minimum tie-break), so homogeneous callers may use either
+    /// path interchangeably — bit for bit.
+    pub fn prefill_time_hetero(&self, batch: &[PrefillItem], tps: &[usize]) -> f64 {
+        if batch.is_empty() || tps.is_empty() {
+            return 0.0;
+        }
+        if tps.len() == 1 {
+            return self.prefill_time(batch, tps[0]);
+        }
+        let mut idx: Vec<usize> = (0..batch.len()).collect();
+        idx.sort_by(|&a, &b| batch[b].new_tokens.cmp(&batch[a].new_tokens));
+        let mut shards: Vec<Vec<PrefillItem>> = vec![Vec::new(); tps.len()];
+        let mut loads = vec![0usize; tps.len()];
+        for i in idx {
+            let t = batch[i].new_tokens;
+            let s = (0..tps.len())
+                .min_by(|&a, &b| {
+                    let ca = (loads[a] + t) as f64 / tps[a] as f64;
+                    let cb = (loads[b] + t) as f64 / tps[b] as f64;
+                    ca.total_cmp(&cb)
+                })
+                .unwrap();
+            loads[s] += t;
+            shards[s].push(batch[i]);
+        }
+        shards
+            .iter()
+            .zip(tps)
+            .map(|(s, &tp)| self.prefill_time(s, tp))
+            .fold(0.0, f64::max)
+    }
+
     /// Prefill latency for a batch data-parallel over `dp` instances
     /// (each with `tp` ranks): greedy LPT split by tokens, time = the
     /// slowest shard. This is T(R_p, E_p) in Eq. 2.
@@ -389,6 +432,24 @@ impl CostModel {
         let weights = self.model.llm_weight_bytes() as f64;
         let pool = (total - weights).max(0.0) * kv_fraction;
         (pool / self.model.llm.kv_bytes_per_token() as f64) as usize
+    }
+
+    /// Weight-movement time of a TP reconfiguration: each GPU of the
+    /// reconfigured group goes from holding a `1/old_tp` shard of the
+    /// LLM weights to a `1/new_tp` shard, and the bytes it does not
+    /// already hold stream over the interconnect. Widening (merging
+    /// TP-1 instances into TP-k) moves no weights — every GPU already
+    /// holds a superset of its new shard and merely drops the rest — so
+    /// the fixed orchestration overhead
+    /// (`SchedulerConfig::tp_reconfig_s`, charged by the scheduler on
+    /// top of this) dominates; narrowing (splitting TP-k back to TP-1)
+    /// must re-gather `(1 - 1/old_tp)` of the weights per GPU. The
+    /// affected GPUs serve nothing for the whole delay.
+    pub fn tp_reshard_time(&self, old_tp: usize, new_tp: usize) -> f64 {
+        let w = self.model.llm_weight_bytes() as f64;
+        let have = w / old_tp.max(1) as f64;
+        let need = w / new_tp.max(1) as f64;
+        (need - have).max(0.0) / self.gpu.interconnect_bandwidth
     }
 
     /// Time to migrate `tokens` of KV cache between instances over
@@ -569,8 +630,7 @@ mod tests {
     #[test]
     fn multi_step_decode_respects_horizon_and_step_cap() {
         let m = qwen();
-        let mut batch =
-            vec![DecodeItem { context_len: 512, vision_tokens: 0 }; 4];
+        let mut batch = [DecodeItem { context_len: 512, vision_tokens: 0 }; 4];
         let one = m.decode_step_time_flags(&batch, 1, true);
         // Horizon after ~2.5 steps: exactly 2 steps must commit.
         let horizon = 2.5 * one;
@@ -580,8 +640,7 @@ mod tests {
         assert_eq!(steps, 2, "stops before crossing the horizon");
         assert!(t < horizon);
         // Step cap binds when the horizon does not.
-        let mut batch2 =
-            vec![DecodeItem { context_len: 512, vision_tokens: 0 }; 4];
+        let mut batch2 = [DecodeItem { context_len: 512, vision_tokens: 0 }; 4];
         let mut busy2 = 0.0;
         let (steps2, _) =
             m.decode_run_time_flags(&mut batch2, 1, true, 3, 0.0, None, &mut busy2);
@@ -680,6 +739,61 @@ mod tests {
         let mixed = l.decode_step_time_flags(&batch, 1, true);
         let pure = l.decode_step_time_flags(&batch, 1, false);
         assert!(pure <= mixed);
+    }
+
+    #[test]
+    fn hetero_prefill_matches_dp_for_equal_degrees() {
+        // Mixed item sizes so the LPT assignment is non-trivial.
+        let m = qwen();
+        let batch: Vec<PrefillItem> = [4096, 512, 2048, 2048, 8192, 64, 1024]
+            .iter()
+            .map(|&t| PrefillItem { new_tokens: t, cached_tokens: 0, vision_tokens: 0 })
+            .collect();
+        for dp in [2usize, 3, 4] {
+            for tp in [1usize, 2] {
+                let a = m.prefill_time_dp(&batch, dp, tp);
+                let b = m.prefill_time_hetero(&batch, &vec![tp; dp]);
+                assert_eq!(a.to_bits(), b.to_bits(), "dp={dp} tp={tp}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_prefill_routes_long_item_to_wide_shard() {
+        // One giant request + short fillers: a [4, 1] set must beat a
+        // [1, 1, 1, 1] set of the same GPU count, because DP cannot
+        // split the giant item but TP can accelerate it.
+        let m = qwen();
+        let mut batch = vec![PrefillItem {
+            new_tokens: 16_384,
+            cached_tokens: 0,
+            vision_tokens: 0,
+        }];
+        for _ in 0..3 {
+            batch.push(PrefillItem { new_tokens: 256, cached_tokens: 0, vision_tokens: 0 });
+        }
+        let narrow = m.prefill_time_hetero(&batch, &[1, 1, 1, 1]);
+        let wide = m.prefill_time_hetero(&batch, &[4, 1]);
+        assert!(wide < narrow * 0.5, "wide={wide} narrow={narrow}");
+        // Empty inputs are well-defined.
+        assert_eq!(m.prefill_time_hetero(&[], &[1, 2]), 0.0);
+        assert_eq!(m.prefill_time_hetero(&batch, &[]), 0.0);
+    }
+
+    #[test]
+    fn tp_reshard_widening_free_narrowing_pays_weight_gather() {
+        let m = qwen();
+        // Widening: every GPU already holds a superset of its new shard.
+        assert_eq!(m.tp_reshard_time(1, 2), 0.0);
+        assert_eq!(m.tp_reshard_time(1, 4), 0.0);
+        assert_eq!(m.tp_reshard_time(2, 2), 0.0);
+        // Narrowing: each GPU re-gathers the weights it dropped.
+        let w = m.model.llm_weight_bytes() as f64;
+        let t21 = m.tp_reshard_time(2, 1);
+        assert!((t21 - (w / 2.0) / m.gpu.interconnect_bandwidth).abs() < 1e-12);
+        let t41 = m.tp_reshard_time(4, 1);
+        assert!(t41 > t21, "deeper narrowing moves more: {t41} vs {t21}");
+        assert!(t21 > 0.0 && t21 < 1.0, "7B reshard is tens of ms: {t21}");
     }
 
     #[test]

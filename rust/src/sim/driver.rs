@@ -160,6 +160,13 @@ pub trait ServingSystem {
         Vec::new()
     }
 
+    /// Attach system-specific summary stats to the finished report
+    /// (e.g. `EmpSystem` copies its elastic-TP reconfiguration counters
+    /// into `Report::tp_reconfigs` / `tp_busy_gpu_seconds` /
+    /// `tp_timeline`). Called once by the driver after the run
+    /// completes; the default attaches nothing.
+    fn annotate_report(&self, _rep: &mut Report) {}
+
     /// Run a trace to completion through the shared driver.
     fn run(&mut self, trace: &[Request]) -> Report
     where
@@ -289,7 +296,9 @@ pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
             }
         }
     }
-    (Report::new(sys.drain_records()), stats)
+    let mut report = Report::new(sys.drain_records());
+    sys.annotate_report(&mut report);
+    (report, stats)
 }
 
 /// The generic discrete-event loop: inject arrivals, arm the periodic

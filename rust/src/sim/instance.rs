@@ -3,9 +3,15 @@
 //!
 //! An *elastic instance* (paper Fig 2/3) is the schedulable unit: one
 //! model replica on `tp` GPUs. Within a stage the paper prioritizes data
-//! parallelism, so for the 7B/11B models of the evaluation each instance
-//! occupies exactly `CostModel::min_tp()` GPUs (=1), and elasticity =
-//! moving instances between modality groups and stages.
+//! parallelism — each instance starts at `CostModel::min_tp()` GPUs —
+//! but the TP dimension is elastic too (Elastic Partition Scheduling
+//! "enables parallelism adjustment"): under `SchedulerConfig::max_tp >
+//! min_tp` the coordinator may *merge* drained prefill instances into a
+//! wider TP group (the absorbed instance slot lends its GPU set to the
+//! leader and disappears from scheduling) and later *split* them back.
+//! Each instance therefore owns an explicit GPU set; the invariant that
+//! every GPU belongs to exactly one live TP group at all times is
+//! checked by [`check_gpu_partition`].
 
 use crate::kvcache::paged::PagedKvCache;
 use crate::model::{CostModel, DecodeItem};
@@ -43,9 +49,19 @@ impl GroupId {
 #[derive(Debug)]
 pub struct Instance {
     pub id: usize,
+    /// Tensor-parallel degree == `gpus.len()` while live, 0 while
+    /// absorbed into another instance's TP group.
     pub tp: usize,
     pub role: StageRole,
     pub group: GroupId,
+    /// GPU ids this instance's TP group owns. Empty while the slot is
+    /// absorbed (its GPUs moved to the absorbing leader).
+    pub gpus: Vec<usize>,
+    /// Instance slots this leader has absorbed, in merge order, as
+    /// `(instance id, gpu count it brought)`. A split pops the most
+    /// recent entry and hands back exactly the tail of `gpus` — merges
+    /// and splits are symmetric by construction.
+    pub absorbed: Vec<(usize, usize)>,
     /// Busy with the current iteration until this sim time.
     pub busy_until: f64,
     /// Sequences currently resident for decode (slab indices into the
@@ -55,23 +71,36 @@ pub struct Instance {
     pub kv: PagedKvCache,
     /// Tokens decoded on this instance (utilization accounting).
     pub tokens_processed: u64,
-    /// Total busy seconds (utilization accounting).
+    /// Total busy seconds (utilization accounting). Excludes TP
+    /// re-shard delays — those GPUs serve nothing.
     pub busy_time: f64,
 }
 
 impl Instance {
+    /// Instances are constructed back to back at system start, each
+    /// spanning `tp` contiguous GPUs — so instance `i` owns GPUs
+    /// `i*tp .. (i+1)*tp`, and together they partition the cluster.
     pub fn new(id: usize, tp: usize, role: StageRole, group: GroupId, kv_tokens: usize) -> Self {
         Instance {
             id,
             tp,
             role,
             group,
+            gpus: (id * tp..(id + 1) * tp).collect(),
+            absorbed: Vec::new(),
             busy_until: 0.0,
             decoding: Vec::new(),
             kv: PagedKvCache::new(kv_tokens, 16),
             tokens_processed: 0,
             busy_time: 0.0,
         }
+    }
+
+    /// Whether this slot heads a live TP group (false while absorbed
+    /// into another instance — then it owns no GPUs and must not be
+    /// scheduled).
+    pub fn live(&self) -> bool {
+        !self.gpus.is_empty()
     }
 
     pub fn idle_at(&self, now: f64) -> bool {
@@ -102,14 +131,67 @@ pub fn check_instances(
 ) -> Result<(), String> {
     for inst in instances {
         inst.kv.check_invariants()?;
+        if !inst.live() {
+            // Absorbed slots lent their GPUs away drained: they may
+            // hold no sequences, reservations, or in-flight work.
+            if !inst.decoding.is_empty() || inst.kv.num_seqs() != 0 {
+                return Err(format!(
+                    "absorbed instance {} still holds sequences ({} decoding, {} in kv)",
+                    inst.id,
+                    inst.decoding.len(),
+                    inst.kv.num_seqs()
+                ));
+            }
+            continue;
+        }
         for &ix in &inst.decoding {
             let r = requests
                 .try_get(ix)
-                .ok_or(format!("decoding unknown request slot {ix}"))?;
+                .ok_or_else(|| format!("decoding unknown request slot {ix}"))?;
             if r.home != Some(inst.id) {
                 return Err(format!("request {} home mismatch", r.req.id));
             }
         }
+    }
+    Ok(())
+}
+
+/// GPU-set ownership invariant for elastic TP: every GPU of the cluster
+/// belongs to exactly one *live* TP group — live instances' GPU sets
+/// are disjoint, sized `tp`, and together cover exactly the
+/// `expected_gpus` handed out at construction; absorbed slots own
+/// nothing and carry `tp == 0`.
+pub fn check_gpu_partition(instances: &[Instance], expected_gpus: usize) -> Result<(), String> {
+    let mut seen = std::collections::BTreeSet::new();
+    for inst in instances {
+        if !inst.live() {
+            if inst.tp != 0 {
+                return Err(format!(
+                    "absorbed instance {} has tp={} but owns no GPUs",
+                    inst.id, inst.tp
+                ));
+            }
+            continue;
+        }
+        if inst.tp != inst.gpus.len() {
+            return Err(format!(
+                "instance {} tp={} but owns {} GPUs",
+                inst.id,
+                inst.tp,
+                inst.gpus.len()
+            ));
+        }
+        for &g in &inst.gpus {
+            if !seen.insert(g) {
+                return Err(format!("GPU {g} owned by more than one live TP group"));
+            }
+        }
+    }
+    if seen.len() != expected_gpus {
+        return Err(format!(
+            "live TP groups cover {} of {expected_gpus} GPUs",
+            seen.len()
+        ));
     }
     Ok(())
 }
@@ -152,6 +234,7 @@ pub fn decode_batch_time(
 /// [`CostModel::decode_run_time_flags`] — systems must not reimplement
 /// it, or the fast/step-by-step report equivalence can drift.
 /// `scratch` is a reusable `DecodeItem` buffer (cleared here).
+#[allow(clippy::too_many_arguments)]
 pub fn fast_forward_decode_batch(
     cost: &CostModel,
     requests: &mut RequestSlab,
@@ -436,5 +519,53 @@ mod tests {
         let mut r = SimRequest::new(request(0), 0);
         r.decoded = 7;
         assert_eq!(r.context_len(), 107);
+    }
+
+    #[test]
+    fn instances_own_contiguous_gpu_sets() {
+        let a = Instance::new(0, 2, StageRole::Prefill, GroupId(0), 1600);
+        let b = Instance::new(1, 2, StageRole::Prefill, GroupId(0), 1600);
+        assert_eq!(a.gpus, vec![0, 1]);
+        assert_eq!(b.gpus, vec![2, 3]);
+        assert!(a.live() && b.live());
+        check_gpu_partition(&[a, b], 4).unwrap();
+    }
+
+    #[test]
+    fn gpu_partition_detects_duplicates_gaps_and_stale_absorbed() {
+        let mk = |id, tp| Instance::new(id, tp, StageRole::Prefill, GroupId(0), 1600);
+        // A merge: instance 0 takes instance 1's GPU.
+        let mut leader = mk(0, 1);
+        let mut other = mk(1, 1);
+        leader.gpus.extend(other.gpus.drain(..));
+        leader.tp = 2;
+        leader.absorbed.push((1, 1));
+        other.tp = 0;
+        check_gpu_partition(&[leader, other], 2).unwrap();
+        // Duplicate ownership.
+        let dup = [mk(0, 1), mk(0, 1)];
+        assert!(check_gpu_partition(&dup, 2).is_err());
+        // Coverage gap (a GPU vanished).
+        assert!(check_gpu_partition(&[mk(0, 1)], 2).is_err());
+        // tp out of sync with the owned set.
+        let mut bad = mk(0, 1);
+        bad.tp = 2;
+        assert!(check_gpu_partition(&[bad], 1).is_err());
+        // Absorbed slot that kept a stale tp.
+        let mut stale = mk(1, 1);
+        stale.gpus.clear();
+        stale.tp = 1;
+        let full = mk(0, 1);
+        assert!(check_gpu_partition(&[full, stale], 1).is_err());
+    }
+
+    #[test]
+    fn absorbed_instances_must_be_drained() {
+        let requests = RequestSlab::new();
+        let mut inst = Instance::new(0, 1, StageRole::Prefill, GroupId(0), 1600);
+        inst.gpus.clear();
+        inst.tp = 0;
+        inst.kv.allocate(7, 64).unwrap();
+        assert!(check_instances(&[inst], &requests).is_err());
     }
 }

@@ -4,7 +4,13 @@
 //! iteration count and a minimum wall-time are reached, and reports
 //! mean / p50 / p99 per-iteration latency. Used by every `benches/*.rs`
 //! binary (declared with `harness = false`).
+//!
+//! [`check_regression`] is the CI bench-regression gate: it compares a
+//! fresh `BENCH_sim.json`-style measurement against the committed
+//! `BENCH_baseline.json` and fails when throughput floors drop (or
+//! deterministic event counts blow up) beyond the tolerance.
 
+use crate::util::json::Json;
 use crate::util::stats;
 use std::time::{Duration, Instant};
 
@@ -84,6 +90,83 @@ impl Bench {
     }
 }
 
+/// Per-system keys treated as **floors**: the measurement must reach at
+/// least `baseline * (1 - tolerance)`. Wall-clock dependent, so the
+/// committed baselines are deliberately conservative (documented in
+/// `BENCH_baseline.json`) — they catch order-of-magnitude regressions
+/// (an accidental O(n²) hot loop, allocation storms) without flaking on
+/// runner speed.
+const FLOOR_KEYS: [&str; 3] = ["events_per_sec_ff_on", "events_per_sec_ff_off", "speedup"];
+
+/// Per-system keys treated as **ceilings**: the measurement must stay
+/// under `baseline * (1 + tolerance)`. Event counts are deterministic
+/// for a fixed seed/trace, so a blowup here is a machine-independent
+/// algorithmic regression (e.g. the fast-forward predicate rotting to
+/// `false`, or coalescing silently disabled).
+const CEILING_KEYS: [&str; 2] = ["events_ff_on", "events_ff_off"];
+
+/// Bench-regression gate: compare a fresh measurement (the JSON a bench
+/// binary just wrote) against the committed baseline. Only keys present
+/// in the baseline are checked — a baseline may gate a subset; but a
+/// system or key named by the baseline and *missing from the
+/// measurement* fails (the gate must not silently pass on schema
+/// drift). Returns the list of performed checks on success, the list of
+/// failures otherwise.
+pub fn check_regression(
+    baseline: &Json,
+    measured: &Json,
+    tolerance: f64,
+) -> Result<Vec<String>, Vec<String>> {
+    let mut checked = Vec::new();
+    let mut failures = Vec::new();
+    let Ok(base_systems) = baseline.get("systems").and_then(|s| s.as_obj()) else {
+        return Err(vec!["baseline has no `systems` object".to_string()]);
+    };
+    for (name, base) in base_systems {
+        let Some(meas) = measured.opt("systems").and_then(|s| s.opt(name)) else {
+            failures.push(format!("system `{name}` missing from measurement"));
+            continue;
+        };
+        let Ok(base) = base.as_obj() else {
+            failures.push(format!("baseline entry for `{name}` is not an object"));
+            continue;
+        };
+        for (key, base_v) in base {
+            let is_floor = FLOOR_KEYS.contains(&key.as_str());
+            let is_ceiling = CEILING_KEYS.contains(&key.as_str());
+            if !is_floor && !is_ceiling {
+                continue; // descriptive baseline fields (comments etc.)
+            }
+            let Ok(b) = base_v.as_f64() else {
+                failures.push(format!("baseline `{name}.{key}` is not a number"));
+                continue;
+            };
+            let Some(m) = meas.opt(key).and_then(|v| v.as_f64().ok()) else {
+                failures.push(format!("`{name}.{key}` missing from measurement"));
+                continue;
+            };
+            if is_floor && m < b * (1.0 - tolerance) {
+                failures.push(format!(
+                    "{name}.{key} regressed: {m:.1} < floor {b:.1} - {:.0}%",
+                    tolerance * 100.0
+                ));
+            } else if is_ceiling && m > b * (1.0 + tolerance) {
+                failures.push(format!(
+                    "{name}.{key} blew up: {m:.1} > ceiling {b:.1} + {:.0}%",
+                    tolerance * 100.0
+                ));
+            } else {
+                checked.push(format!("{name}.{key}: {m:.1} vs baseline {b:.1} ok"));
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(checked)
+    } else {
+        Err(failures)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +192,62 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("µs"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+
+    fn system(eps: f64, events: f64) -> Json {
+        Json::obj(vec![
+            ("events_per_sec_ff_on", Json::num(eps)),
+            ("events_ff_on", Json::num(events)),
+            ("comment", Json::str("ignored")),
+        ])
+    }
+
+    fn report(eps: f64, events: f64) -> Json {
+        Json::obj(vec![("systems", Json::obj(vec![("emp", system(eps, events))]))])
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = report(100_000.0, 50_000.0);
+        // 10% slower and 10% more events: inside the 20% band.
+        let meas = report(90_000.0, 55_000.0);
+        let checked = check_regression(&base, &meas, 0.2).unwrap();
+        assert_eq!(checked.len(), 2, "{checked:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_injected_slowdown() {
+        // The CI acceptance case: events/sec dropping >20% vs baseline
+        // must fail the gate.
+        let base = report(100_000.0, 50_000.0);
+        let slow = report(70_000.0, 50_000.0);
+        let failures = check_regression(&base, &slow, 0.2).unwrap_err();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("events_per_sec_ff_on"), "{failures:?}");
+        // ...and a measurement exactly at the 20% edge passes.
+        let edge = report(80_000.0, 50_000.0);
+        assert!(check_regression(&base, &edge, 0.2).is_ok());
+    }
+
+    #[test]
+    fn gate_fails_on_event_count_blowup() {
+        // Deterministic event counts growing past the ceiling =
+        // coalescing regression, machine-independent.
+        let base = report(100_000.0, 50_000.0);
+        let blown = report(100_000.0, 500_000.0);
+        let failures = check_regression(&base, &blown, 0.2).unwrap_err();
+        assert!(failures[0].contains("events_ff_on"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_missing_system_or_key() {
+        let base = report(100_000.0, 50_000.0);
+        let empty = Json::obj(vec![("systems", Json::obj(vec![]))]);
+        assert!(check_regression(&base, &empty, 0.2).is_err());
+        let no_key = Json::obj(vec![("systems", Json::obj(vec![("emp", Json::obj(vec![]))]))]);
+        let failures = check_regression(&base, &no_key, 0.2).unwrap_err();
+        assert_eq!(failures.len(), 2, "{failures:?}"); // both gated keys missing
+        // A broken baseline is a failure, not a silent pass.
+        assert!(check_regression(&Json::obj(vec![]), &base, 0.2).is_err());
     }
 }

@@ -162,13 +162,6 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Str(x.to_string())).collect())
     }
 
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
-
     /// Pretty serialization with 2-space indent.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();
@@ -225,9 +218,13 @@ impl Json {
     }
 }
 
+/// Compact serialization; `Json::to_string()` comes from the blanket
+/// `ToString` impl.
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 

@@ -111,7 +111,7 @@ pub fn concentrate_multimodal_in_bursts(
 ) {
     let arrivals: Vec<f64> = requests.iter().map(|r| r.arrival).collect();
     let in_burst =
-        |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
+        |t: f64| bursts.iter().any(|&(a, b)| (a..=b).contains(&t));
     // Partition request payloads: media-bearing payloads go to burst slots.
     let mut mm: Vec<Request> =
         requests.iter().filter(|r| r.modality().has_media()).cloned().collect();
@@ -175,7 +175,7 @@ mod tests {
             assert!(w[1].arrival >= w[0].arrival);
         }
         // Rate inside bursts should be much higher than outside.
-        let in_burst = |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
+        let in_burst = |t: f64| bursts.iter().any(|&(a, b)| (a..=b).contains(&t));
         let burst_time: f64 = bursts.iter().map(|&(a, b)| b - a).sum();
         let total = reqs.last().unwrap().arrival;
         let n_in = reqs.iter().filter(|r| in_burst(r.arrival)).count() as f64;
@@ -214,7 +214,7 @@ mod tests {
         assert_eq!(stamps, stamps2);
         assert_eq!(reqs.iter().filter(|r| !r.media.is_empty()).count(), n_mm);
         // Multimodal fraction inside bursts should exceed outside.
-        let in_burst = |t: f64| bursts.iter().any(|&(a, b)| t >= a && t <= b);
+        let in_burst = |t: f64| bursts.iter().any(|&(a, b)| (a..=b).contains(&t));
         let frac = |inside: bool| {
             let sel: Vec<&Request> =
                 reqs.iter().filter(|r| in_burst(r.arrival) == inside).collect();

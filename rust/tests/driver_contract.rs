@@ -33,6 +33,10 @@ fn sched(ff: bool) -> SchedulerConfig {
     SchedulerConfig { decode_fast_forward: ff, ..SchedulerConfig::default() }
 }
 
+fn sched_tp(ff: bool, max_tp: usize) -> SchedulerConfig {
+    SchedulerConfig { max_tp, ..sched(ff) }
+}
+
 /// Per-request (id, first_token, finish) triples, id-sorted so record
 /// order (which differs legitimately between systems) is irrelevant.
 fn timing_key(rep: &Report) -> Vec<(u64, f64, f64)> {
@@ -238,6 +242,60 @@ fn mixed_four_modality_trace_upholds_contract_on_all_systems() {
         "video-chunk encode must overlap earlier chunks' prefill: {:?}",
         full.stats
     );
+}
+
+/// Elastic TP (`--max-tp 4`): the mixed 4-modality workload through the
+/// N-way registry must uphold the full driver contract (completion,
+/// causal timing, KV release, invariants incl. the GPU-partition check,
+/// determinism) on both decode paths, actually perform ≥1 TP merge and
+/// ≥1 split, and report them via `Report::tp_reconfigs`. 16 GPUs give
+/// each of the 4 groups enough instances that the video group can form
+/// a wide prefill TP group.
+#[test]
+fn elastic_tp_contract_and_reconfiguration_on_mixed_modal() {
+    let reqs = mixed_modality_trace(150, 3.0, 0x7E54);
+    for ff in [false, true] {
+        contract(
+            "EmpSystem/nway-tp4",
+            || EmpSystem::new(cost(), sched_tp(ff, 4), 16, EmpOptions::full_nway(16)),
+            &reqs,
+        )
+        .unwrap();
+        contract(
+            "EmpSystem/full-tp4",
+            || EmpSystem::new(cost(), sched_tp(ff, 4), 8, EmpOptions::full(8)),
+            &reqs,
+        )
+        .unwrap();
+    }
+    // The mixed-modal N-way run must exercise the elastic-TP lever in
+    // both directions, and the driver must export the counters.
+    let mut sys = EmpSystem::new(cost(), sched_tp(true, 4), 16, EmpOptions::full_nway(16));
+    let rep = sys.run(&reqs);
+    assert_eq!(rep.records.len(), reqs.len());
+    assert!(sys.stats.tp_merges >= 1, "no TP merge: {:?}", sys.stats);
+    assert!(sys.stats.tp_splits >= 1, "no TP split: {:?}", sys.stats);
+    assert_eq!(rep.tp_reconfigs, sys.stats.tp_merges + sys.stats.tp_splits);
+    assert!(rep.tp_reconfigs >= 2);
+    assert!(rep.tp_busy_gpu_seconds > 0.0);
+    // Every GPU belongs to exactly one live TP group — enforced after
+    // every reconfiguration under debug assertions, and here at the
+    // end through the system invariants.
+    sys.check_invariants().unwrap();
+    assert_eq!(sys.kv_in_use(), 0);
+}
+
+/// `--max-tp 1` (the default) must leave elastic TP fully inert: no
+/// reconfigurations, empty timeline, zeroed Report stats.
+#[test]
+fn max_tp_one_is_static() {
+    let reqs = mixed_modality_trace(60, 4.0, 0xA11);
+    let mut sys = EmpSystem::new(cost(), sched_tp(true, 1), 8, EmpOptions::full(8));
+    let rep = sys.run(&reqs);
+    assert_eq!(rep.tp_reconfigs, 0);
+    assert_eq!(rep.tp_busy_gpu_seconds, 0.0);
+    assert!(rep.tp_timeline.is_empty());
+    assert_eq!(sys.stats.tp_merges + sys.stats.tp_splits, 0);
 }
 
 #[test]

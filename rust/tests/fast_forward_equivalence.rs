@@ -145,6 +145,61 @@ fn emp_nway_mixed_modality_reports_identical() {
     }
 }
 
+/// Elastic TP on (`max_tp = 4`): merges, reshard windows, and splits
+/// must stay inside the exactness predicate — the coalesced run makes
+/// the *same* reconfiguration decisions at the same times, so the
+/// records **and** the TP stats come out byte-identical.
+#[test]
+fn emp_elastic_tp_reports_identical_with_resharding() {
+    let sched_tp = |ff: bool| SchedulerConfig {
+        max_tp: 4,
+        decode_fast_forward: ff,
+        ..SchedulerConfig::default()
+    };
+    // Video-heavy (binary registry) and mixed 4-modality (N-way)
+    // traces, both of which actually reconfigure.
+    let mut rng = Rng::new(81);
+    let mut video = DatasetSpec::video_chat().generate(&mut rng, 70);
+    poisson_arrivals(&mut rng, &mut video, 1.2);
+    let mut rng2 = Rng::new(82);
+    let mut mixed = DatasetSpec::mixed_modality().generate(&mut rng2, 110);
+    poisson_arrivals(&mut rng2, &mut mixed, 3.0);
+    fn assert_tp_equivalent(name: &str, on: &Report, off: &Report) {
+        // TP policy decisions are part of the report contract too.
+        assert_eq!(on.tp_reconfigs, off.tp_reconfigs, "{name}: reconfig counts diverge");
+        assert_eq!(
+            on.tp_busy_gpu_seconds.to_bits(),
+            off.tp_busy_gpu_seconds.to_bits(),
+            "{name}: reshard accounting diverges"
+        );
+        assert_eq!(on.tp_timeline.len(), off.tp_timeline.len());
+        for (a, b) in on.tp_timeline.iter().zip(&off.tp_timeline) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits(), "{name}: timeline times diverge");
+            assert_eq!(
+                (a.group, a.instance, a.tp_after, a.merge),
+                (b.group, b.instance, b.tp_after, b.merge),
+                "{name}: timeline events diverge"
+            );
+        }
+    }
+    let (v_on, v_off) = assert_equivalent(
+        "EmpSystem/full-tp4",
+        |ff| EmpSystem::new(cost(), sched_tp(ff), 8, EmpOptions::full(8)),
+        &video,
+    );
+    assert_tp_equivalent("EmpSystem/full-tp4", &v_on, &v_off);
+    let (m_on, m_off) = assert_equivalent(
+        "EmpSystem/nway-tp4",
+        |ff| EmpSystem::new(cost(), sched_tp(ff), 16, EmpOptions::full_nway(16)),
+        &mixed,
+    );
+    assert_tp_equivalent("EmpSystem/nway-tp4", &m_on, &m_off);
+    assert!(
+        v_on.tp_reconfigs + m_on.tp_reconfigs > 0,
+        "equivalence is vacuous if nothing ever resharded"
+    );
+}
+
 #[test]
 fn emp_fast_path_exercised_at_light_load() {
     // Light load → queues drain, decode dominates → the EMP predicate
