@@ -1,4 +1,4 @@
-//! Design-choice ablations (DESIGN.md §9): sensitivity of ElasticMM to
+//! Design-choice ablations (DESIGN.md §10): sensitivity of ElasticMM to
 //! its scheduler knobs on a bursty multimodal workload —
 //!
 //! * the preemption penalty factor `w` (Eq. 2/3): low w = aggressive

@@ -1,0 +1,85 @@
+//! Sweep-engine scaling bench: run the same grid at 1 / 2 / 4 workers,
+//! assert the deterministic aggregate is byte-identical at every
+//! thread count (the DESIGN.md §8 invariance contract, measured here on
+//! a bigger grid than the CI smoke), and report wall-clock scaling.
+//!
+//!   cargo bench --bench sweep_scaling            # smoke-sized grid
+//!   cargo bench --bench sweep_scaling -- --full  # the 135-run default grid
+//!   cargo bench --bench sweep_scaling -- --out BENCH_sweep_scaling.json
+//!
+//! Not wired into CI: shared runners make multi-thread speedups too
+//! noisy to gate on. The `sweep --smoke --check` CLI path gates the
+//! deterministic counts and a conservative runs-per-second floor
+//! instead; this bench is for humans measuring scaling on real
+//! hardware.
+
+use elasticmm::sim::sweep::SweepSpec;
+use elasticmm::util::cli::Args;
+use elasticmm::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let spec = if args.has_flag("full") {
+        SweepSpec::default_grid()
+    } else {
+        let mut s = SweepSpec::smoke();
+        // Bench-sized: the CI smoke grid but with enough requests per
+        // run that per-run work dominates thread startup.
+        s.requests = args.get_usize("requests", 200);
+        s
+    };
+    let runs = spec.expand().len();
+    println!(
+        "sweep scaling: {} variants x {} datasets x {} loads x {} seeds = {runs} runs",
+        spec.variants.len(),
+        spec.datasets.len(),
+        spec.qps_scales.len(),
+        spec.seeds
+    );
+    let mut expected: Option<String> = None;
+    let mut walls: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let out = spec.run(threads).expect("sweep run");
+        let agg = out.deterministic_json().to_string();
+        if let Some(e) = &expected {
+            assert_eq!(e, &agg, "aggregate diverged at {threads} workers — determinism bug");
+        } else {
+            expected = Some(agg);
+        }
+        println!(
+            "  threads={threads}  wall {:>7.2}s  {:>6.2} runs/s  {:>9} events",
+            out.wall_s,
+            out.runs_per_sec(),
+            out.events_total()
+        );
+        walls.push((threads, out.wall_s));
+    }
+    let wall_1 = walls[0].1;
+    let mut sections: Vec<(&str, Json)> = Vec::new();
+    let labels = ["threads_1", "threads_2", "threads_4"];
+    for (label, &(threads, wall)) in labels.into_iter().zip(&walls) {
+        sections.push((
+            label,
+            Json::obj(vec![
+                ("threads", Json::num(threads as f64)),
+                ("wall_s", Json::num(wall)),
+                ("runs_per_sec", Json::num(runs as f64 / wall.max(1e-9))),
+                ("speedup_vs_1_thread", Json::num(wall_1 / wall.max(1e-9))),
+            ]),
+        ));
+    }
+    println!(
+        "speedup: 2 threads {:.2}x, 4 threads {:.2}x (aggregates byte-identical)",
+        wall_1 / walls[1].1.max(1e-9),
+        wall_1 / walls[2].1.max(1e-9)
+    );
+    let j = Json::obj(vec![
+        ("bench", Json::str("sweep_scaling")),
+        ("runs", Json::num(runs as f64)),
+        ("scaling", Json::obj(sections)),
+    ]);
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, j.to_pretty()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

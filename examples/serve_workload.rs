@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §8): serve a real mixed workload on the
+//! End-to-end driver (DESIGN.md §9): serve a real mixed workload on the
 //! AOT tiny MLLM, comparing the coupled sequential pipeline against
 //! ElasticMM's staged non-blocking-encode pipeline, and report
 //! latency/throughput. Results are recorded in EXPERIMENTS.md.

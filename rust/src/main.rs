@@ -8,6 +8,10 @@
 //!                model (systems: elasticmm | vllm | vllm-decouple | static;
 //!                datasets: sharegpt | vwi | video-chat | voice-assistant |
 //!                mixed-modal; `--groups 4` = N-way modality groups)
+//!   sweep      — fan a {variant × dataset × load × seed} grid across
+//!                threads (`--threads 0` = all cores; `--smoke` = the
+//!                16-run CI grid; `--check` = bench-regression gate);
+//!                writes BENCH_sweep.json
 //!   gen-trace  — generate a workload trace JSON
 //!   models     — print the Table-1 model presets
 //!
@@ -15,6 +19,8 @@
 //!   elasticmm simulate --system elasticmm --model qwen --dataset sharegpt \
 //!       --qps 8 --requests 400 --gpus 8
 //!   elasticmm simulate --system elasticmm --dataset mixed-modal --groups 4
+//!   elasticmm sweep --threads 0 --variants emp,emp-tp4,vllm --seeds 3
+//!   elasticmm sweep --smoke --threads 2 --check
 //!   elasticmm serve --requests 8 --staged
 //!   elasticmm gen-trace --dataset video-chat --requests 1000 --qps 5 --out trace.json
 
@@ -25,8 +31,11 @@ use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::metrics::Report;
 use elasticmm::model::CostModel;
 use elasticmm::ServingSystem;
+use elasticmm::sim::sweep::{SweepOutcome, SweepSpec};
+use elasticmm::util::bench;
 use elasticmm::util::cli::Args;
 use elasticmm::util::error::Result;
+use elasticmm::util::json::Json;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;
 use elasticmm::workload::arrival::poisson_arrivals;
@@ -40,11 +49,13 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("serve-http") => cmd_serve_http(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("gen-trace") => cmd_gen_trace(&args),
         Some("models") => cmd_models(),
         _ => {
             eprintln!(
-                "usage: elasticmm <serve|serve-http|simulate|gen-trace|models> [--options]\n\
+                "usage: elasticmm <serve|serve-http|simulate|sweep|gen-trace|models> \
+                 [--options]\n\
                  run with a subcommand; see rust/src/main.rs header for examples"
             );
             Ok(())
@@ -201,6 +212,162 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("wrote records + per-modality summary to {path}");
     }
     Ok(())
+}
+
+fn split_list(list: &str) -> Vec<String> {
+    list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+fn sweep_spec(args: &Args) -> Result<SweepSpec> {
+    let mut spec = if args.has_flag("smoke") {
+        SweepSpec::smoke()
+    } else {
+        SweepSpec::default_grid()
+    };
+    if let Some(list) = args.get("datasets") {
+        spec.datasets = split_list(list);
+    }
+    if let Some(list) = args.get("variants") {
+        spec.variants = split_list(list);
+    }
+    if let Some(list) = args.get("qps-scales") {
+        spec.qps_scales.clear();
+        for part in split_list(list) {
+            match part.parse::<f64>() {
+                Ok(v) => spec.qps_scales.push(v),
+                Err(_) => elasticmm::bail!("bad --qps-scales entry `{part}`"),
+            }
+        }
+    }
+    spec.master_seed = args.get_u64("master-seed", spec.master_seed);
+    spec.seeds = args.get_usize("seeds", spec.seeds);
+    spec.base_qps = args.get_f64("qps", spec.base_qps);
+    spec.requests = args.get_usize("requests", spec.requests);
+    spec.gpus = args.get_usize("gpus", spec.gpus);
+    if let Err(e) = spec.validate() {
+        elasticmm::bail!("sweep: {e}");
+    }
+    Ok(spec)
+}
+
+fn run_sweep(spec: &SweepSpec, threads: usize) -> Result<SweepOutcome> {
+    match spec.run(threads) {
+        Ok(out) => Ok(out),
+        Err(e) => elasticmm::bail!("sweep: {e}"),
+    }
+}
+
+/// `sweep` subcommand: expand the grid, fan it across workers, print
+/// the Pareto frontier, and write `BENCH_sweep.json`. In `--smoke` mode
+/// it re-runs the grid at 1 and 4 workers to (a) assert the aggregate is
+/// byte-identical at every thread count and (b) record the measured
+/// 4-thread speedup — the CI acceptance signals.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec = sweep_spec(args)?;
+    let threads = args.get_usize("threads", 0);
+    let smoke = args.has_flag("smoke");
+    let out = run_sweep(&spec, threads)?;
+    let mode = if smoke { "smoke" } else { "grid" };
+    let (mut wall_1, mut wall_4) = (None, None);
+    if smoke {
+        let expect = out.deterministic_json().to_string();
+        let reference = |n: usize| -> Result<f64> {
+            if out.threads == n {
+                return Ok(out.wall_s);
+            }
+            let rerun = run_sweep(&spec, n)?;
+            if rerun.deterministic_json().to_string() != expect {
+                elasticmm::bail!(
+                    "sweep aggregate differs between {} and {n} workers — \
+                     thread-count invariance is broken",
+                    out.threads
+                );
+            }
+            Ok(rerun.wall_s)
+        };
+        wall_1 = Some(reference(1)?);
+        wall_4 = Some(reference(4)?);
+    }
+    println!(
+        "sweep mode={mode} runs={} threads={} wall={:.2}s ({:.1} runs/s, {} events)",
+        out.results.len(),
+        out.threads,
+        out.wall_s,
+        out.runs_per_sec(),
+        out.events_total()
+    );
+    if let (Some(w1), Some(w4)) = (wall_1, wall_4) {
+        println!("  1-thread {w1:.2}s vs 4-thread {w4:.2}s: speedup {:.2}x", w1 / w4.max(1e-9));
+    }
+    let rows: Vec<Vec<String>> = out
+        .frontier()
+        .into_iter()
+        .map(|i| {
+            let r = &out.results[i];
+            vec![
+                format!("{i}"),
+                r.point.variant.clone(),
+                r.point.dataset.clone(),
+                format!("{:.1}", r.point.qps),
+                format!("{:.2}", r.metrics.goodput_rps),
+                format!("{:.3}", r.metrics.slo_attainment),
+                format!("{:.3}", r.metrics.p99_ttft_s),
+                format!("{:.3}", r.metrics.gpu_hours),
+            ]
+        })
+        .collect();
+    println!("Pareto frontier (goodput ↑, SLO attainment ↑, GPU-hours ↓):");
+    println!(
+        "{}",
+        render_table(
+            &["run", "variant", "dataset", "qps", "goodput rps", "slo", "p99 ttft", "gpu-h"],
+            &rows
+        )
+    );
+    let bench = out.bench_json(mode, wall_1, wall_4);
+    let path = args.get_or("out", "BENCH_sweep.json");
+    std::fs::write(&path, bench.to_string())?;
+    println!("wrote {} runs + frontier + marginals to {path}", out.results.len());
+    if args.has_flag("check") {
+        sweep_gate(args, &bench)?;
+    }
+    Ok(())
+}
+
+/// Bench-regression gate over the `"sweep"` baseline section: a floor
+/// on runs-per-second and ceilings on the deterministic aggregate
+/// counts (`runs_total`, `events_total`).
+fn sweep_gate(args: &Args, measured: &Json) -> Result<()> {
+    let path = args.get_or("baseline", "BENCH_baseline.json");
+    let text = std::fs::read_to_string(&path)?;
+    let baseline = match Json::parse(&text) {
+        Ok(b) => b,
+        Err(e) => elasticmm::bail!("parse baseline {path}: {e:?}"),
+    };
+    let tolerance = args.get_f64(
+        "tolerance",
+        baseline.opt("tolerance_default").and_then(|t| t.as_f64().ok()).unwrap_or(0.2),
+    );
+    match bench::check_regression_section(&baseline, measured, tolerance, "sweep") {
+        Ok(checked) => {
+            println!(
+                "sweep bench gate PASSED ({} checks, tolerance {:.0}%):",
+                checked.len(),
+                tolerance * 100.0
+            );
+            for line in checked {
+                println!("  {line}");
+            }
+            Ok(())
+        }
+        Err(failures) => {
+            eprintln!("sweep bench gate FAILED (tolerance {:.0}%):", tolerance * 100.0);
+            for line in &failures {
+                eprintln!("  {line}");
+            }
+            elasticmm::bail!("sweep bench gate failed ({} violations)", failures.len())
+        }
+    }
 }
 
 #[cfg(feature = "pjrt")]

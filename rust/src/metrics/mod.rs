@@ -265,6 +265,131 @@ impl Report {
             ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
         ])
     }
+
+    /// Canonical serialization for determinism checks: **only**
+    /// simulation-derived state (request records and TP-reconfiguration
+    /// stats), with deterministic key order. Deliberately excludes
+    /// wall-clock / host-dependent data and the derived summary
+    /// sections (`per_modality`), which may grow new fields without
+    /// breaking stored equivalence digests. Two runs of the same
+    /// configuration must produce byte-identical canonical JSON on any
+    /// machine, at any worker count.
+    pub fn canonical_json(&self) -> Json {
+        Json::obj(vec![
+            ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+            ("tp_reconfigs", Json::num(self.tp_reconfigs as f64)),
+            ("tp_busy_gpu_seconds", Json::num(self.tp_busy_gpu_seconds)),
+            ("tp_timeline", Json::Arr(self.tp_timeline.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// FNV-1a digest of [`Report::canonical_json`] — the per-run
+    /// fingerprint the sweep engine records so aggregate files stay
+    /// small while still proving each run matched a direct
+    /// `run_trace` of the same configuration.
+    pub fn canonical_digest(&self) -> u64 {
+        crate::util::bench::fnv1a64(self.canonical_json().to_string().as_bytes())
+    }
+
+    /// Simulated span from t=0 to the last completion (the GPU-hours
+    /// denominator: every GPU is held for the whole run).
+    pub fn makespan(&self) -> f64 {
+        self.records.iter().map(|r| r.finish).fold(0.0, f64::max)
+    }
+
+    /// Fraction of requests meeting their own modality's default SLO
+    /// ([`Slo::default_for`]) — the scalar SLO objective the sweep
+    /// engine optimizes over mixed-modality traces, where one uniform
+    /// SLO would misprice voice vs video traffic.
+    pub fn default_slo_attainment(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let ok = self
+            .records
+            .iter()
+            .filter(|r| {
+                let slo = Slo::default_for(r.modality);
+                r.norm_input_latency() <= slo.norm_input_s
+                    && r.norm_output_latency() <= slo.norm_output_s
+            })
+            .count();
+        ok as f64 / self.records.len() as f64
+    }
+}
+
+/// Scalar objectives extracted from one run's [`Report`] — the
+/// coordinates the sweep engine's Pareto frontier and per-axis
+/// marginals are computed over.
+#[derive(Debug, Clone, Copy)]
+pub struct RunMetrics {
+    pub requests: usize,
+    pub throughput_rps: f64,
+    /// Throughput × per-modality default-SLO attainment.
+    pub goodput_rps: f64,
+    /// See [`Report::default_slo_attainment`].
+    pub slo_attainment: f64,
+    pub p99_ttft_s: f64,
+    pub mean_ttft_s: f64,
+    /// GPUs held × simulated makespan — the cost axis.
+    pub gpu_hours: f64,
+}
+
+impl RunMetrics {
+    pub fn from_report(rep: &Report, gpus: usize) -> RunMetrics {
+        let attainment = rep.default_slo_attainment();
+        let throughput = rep.throughput_rps();
+        RunMetrics {
+            requests: rep.records.len(),
+            throughput_rps: throughput,
+            goodput_rps: throughput * attainment,
+            slo_attainment: attainment,
+            p99_ttft_s: rep.p_ttft(99.0),
+            mean_ttft_s: rep.mean_ttft(),
+            gpu_hours: gpus as f64 * rep.makespan() / 3600.0,
+        }
+    }
+
+    /// Pareto dominance over (goodput ↑, SLO attainment ↑, GPU-hours ↓):
+    /// at least as good on every axis and strictly better on one.
+    /// Identical points do not dominate each other, so exact duplicates
+    /// both stay on the frontier.
+    pub fn dominates(&self, other: &RunMetrics) -> bool {
+        let no_worse = self.goodput_rps >= other.goodput_rps
+            && self.slo_attainment >= other.slo_attainment
+            && self.gpu_hours <= other.gpu_hours;
+        let strictly_better = self.goodput_rps > other.goodput_rps
+            || self.slo_attainment > other.slo_attainment
+            || self.gpu_hours < other.gpu_hours;
+        no_worse && strictly_better
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("slo_attainment", Json::num(self.slo_attainment)),
+            ("p99_ttft_s", Json::num(self.p99_ttft_s)),
+            ("mean_ttft_s", Json::num(self.mean_ttft_s)),
+            ("gpu_hours", Json::num(self.gpu_hours)),
+        ])
+    }
+}
+
+/// Indices of the non-dominated points (see [`RunMetrics::dominates`]),
+/// in input order — so the result is independent of how the points were
+/// produced (sweep worker count, scheduling). O(n²), fine for the
+/// hundreds-of-runs grids the sweep engine produces.
+pub fn pareto_frontier(points: &[RunMetrics]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && p.dominates(&points[i]))
+        })
+        .collect()
 }
 
 /// A service-level objective on normalized latencies. The paper sets the
@@ -429,5 +554,73 @@ mod tests {
         let slo = Slo::from_light_load(0.01, 0.05, 2.0);
         assert!((slo.norm_input_s - 0.2).abs() < 1e-12);
         assert!((slo.norm_output_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn canonical_json_excludes_derived_sections() {
+        let mut rep = Report::new(vec![rec(0.0, 1.0, 2.0, 10, 5)]);
+        rep.tp_reconfigs = 1;
+        let c = rep.canonical_json();
+        assert!(c.get("records").is_ok());
+        assert!(c.get("tp_reconfigs").is_ok());
+        assert!(c.get("tp_timeline").is_ok());
+        // The derived per-modality summary (which may grow fields) is
+        // excluded so stored digests stay stable.
+        assert!(c.get("per_modality").is_err());
+        // Digest is a pure function of canonical content.
+        assert_eq!(rep.canonical_digest(), rep.clone().canonical_digest());
+        let other = Report::new(vec![rec(0.0, 1.5, 2.0, 10, 5)]);
+        assert_ne!(rep.canonical_digest(), other.canonical_digest());
+    }
+
+    #[test]
+    fn makespan_and_default_attainment() {
+        let fast = rec(0.0, 0.5, 1.0, 100, 11); // norm_in 0.005 <= 0.010 ok
+        let slow = rec(0.0, 9.0, 12.0, 100, 11); // norm_in 0.09 fails text SLO
+        let rep = Report::new(vec![fast, slow]);
+        assert!((rep.makespan() - 12.0).abs() < 1e-12);
+        assert!((rep.default_slo_attainment() - 0.5).abs() < 1e-9);
+        assert_eq!(Report::new(vec![]).default_slo_attainment(), 0.0);
+        assert_eq!(Report::new(vec![]).makespan(), 0.0);
+    }
+
+    fn pt(goodput: f64, attain: f64, gpu_hours: f64) -> RunMetrics {
+        RunMetrics {
+            requests: 1,
+            throughput_rps: goodput,
+            goodput_rps: goodput,
+            slo_attainment: attain,
+            p99_ttft_s: 1.0,
+            mean_ttft_s: 0.5,
+            gpu_hours,
+        }
+    }
+
+    #[test]
+    fn pareto_dominance_and_frontier() {
+        let a = pt(10.0, 0.9, 5.0);
+        let b = pt(8.0, 0.8, 6.0); // dominated by a on all axes
+        let c = pt(12.0, 0.5, 4.0); // trades attainment for goodput+cost
+        let d = pt(10.0, 0.9, 5.0); // duplicate of a: kept too
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&c) && !c.dominates(&a));
+        assert!(!a.dominates(&d) && !d.dominates(&a), "equal points tie");
+        let frontier = pareto_frontier(&[a, b, c, d]);
+        assert_eq!(frontier, vec![0, 2, 3]);
+        assert!(pareto_frontier(&[]).is_empty());
+    }
+
+    #[test]
+    fn run_metrics_from_report() {
+        // One fast request meeting the text SLO, one slow one missing it.
+        let recs = vec![rec(0.0, 0.5, 1.0, 100, 11), rec(0.0, 9.0, 18.0, 100, 11)];
+        let rep = Report::new(recs);
+        let m = RunMetrics::from_report(&rep, 8);
+        assert_eq!(m.requests, 2);
+        assert!((m.slo_attainment - 0.5).abs() < 1e-9);
+        assert!((m.goodput_rps - m.throughput_rps * 0.5).abs() < 1e-12);
+        assert!((m.gpu_hours - 8.0 * 18.0 / 3600.0).abs() < 1e-12);
+        assert!(m.to_json().get("goodput_rps").is_ok());
     }
 }

@@ -3,9 +3,11 @@
 //! [`instance`] the elastic-instance and request state shared by the
 //! EMP coordinator and all baselines, and [`driver`] the shared
 //! [`driver::ServingSystem`] trait plus the generic trace driver every
-//! system runs on.
+//! system runs on. [`sweep`] fans grids of independent runs across
+//! threads with deterministic, worker-count-invariant aggregation.
 
 pub mod driver;
 pub mod engine;
 pub mod instance;
 pub mod slab;
+pub mod sweep;

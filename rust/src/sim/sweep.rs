@@ -1,0 +1,698 @@
+//! Parallel deterministic sweep engine (DESIGN.md §8).
+//!
+//! The paper's headline numbers come from sweeping configurations across
+//! datasets and load levels; answering production questions ("what
+//! `--gpus/--max-tp/--groups` config survives a 10x flash crowd?") needs
+//! hundreds of runs. This module turns the simulator's *per-run*
+//! determinism (the shared [`crate::sim::driver`] event loop) into
+//! *wall-clock* throughput: a [`SweepSpec`] describes a cartesian grid of
+//! {system variant × dataset × arrival scale × seed}, the grid is
+//! pre-expanded into self-contained [`RunPoint`]s, and `std::thread`
+//! workers drain an atomic-index work queue, each constructing its own
+//! [`ServingSystem`](crate::sim::driver::ServingSystem) + trace so
+//! nothing is shared mutably.
+//!
+//! **Determinism rule**: results land in a pre-sized slot vector by run
+//! index, every per-run seed is a pure function of
+//! `(master_seed, stream_id)` (see [`crate::util::rng::stream_seed`]),
+//! and the aggregate JSON ([`SweepOutcome::deterministic_json`]) carries
+//! no wall-clock data — so worker count and OS scheduling can never
+//! change the output byte stream (asserted by
+//! `rust/tests/sweep_determinism.rs`).
+//!
+//! **Paired comparisons**: the trace stream id depends only on
+//! `(dataset, qps_scale, seed)` — *not* on the variant — so every system
+//! variant at a grid point replays the identical trace (common random
+//! numbers), which slashes the variance of cross-variant deltas.
+
+use crate::baselines::coupled::CoupledVllm;
+use crate::baselines::decoupled::DecoupledStatic;
+use crate::config::{presets, GpuSpec, SchedulerConfig};
+use crate::coordinator::{EmpOptions, EmpSystem};
+use crate::metrics::{pareto_frontier, RunMetrics};
+use crate::model::CostModel;
+use crate::sim::driver::run_trace_with_stats;
+use crate::util::bench::fnv1a64;
+use crate::util::json::Json;
+use crate::util::rng::stream_seed;
+use crate::workload::datasets::DatasetSpec;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The serving-system variants a sweep can compare. Each maps to the
+/// same constructions `main.rs`'s `simulate` subcommand performs, so a
+/// sweep run is bit-for-bit reproducible as a single `simulate` run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Full ElasticMM ([`EmpOptions::full`] / [`EmpOptions::full_nway`])
+    /// with elastic TP up to `max_tp`.
+    Emp { nway: bool, max_tp: usize },
+    /// Elasticity-frozen split ([`EmpOptions::static_split`]).
+    StaticSplit,
+    /// Coupled vLLM-style baseline.
+    Coupled,
+    /// Decoupled static encode/LLM baseline.
+    Decoupled,
+}
+
+impl Variant {
+    /// Canonical variant names, for CLI parsing and error messages.
+    pub const REGISTRY: [&'static str; 7] =
+        ["emp", "emp-nway", "emp-tp2", "emp-tp4", "static", "vllm", "vllm-decouple"];
+
+    /// Look up a variant by registry name. `None` means unknown —
+    /// callers must error out, not fall back.
+    pub fn by_name(name: &str) -> Option<Variant> {
+        match name {
+            "emp" => Some(Variant::Emp { nway: false, max_tp: 1 }),
+            "emp-nway" => Some(Variant::Emp { nway: true, max_tp: 1 }),
+            "emp-tp2" => Some(Variant::Emp { nway: false, max_tp: 2 }),
+            "emp-tp4" => Some(Variant::Emp { nway: false, max_tp: 4 }),
+            "static" => Some(Variant::StaticSplit),
+            "vllm" => Some(Variant::Coupled),
+            "vllm-decouple" => Some(Variant::Decoupled),
+            _ => None,
+        }
+    }
+}
+
+/// The sweep's fixed cost model (Table-1 reference config): every run
+/// prices on Qwen2.5-VL-7B over A800-80G, matching `simulate` defaults.
+fn sweep_cost_model() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+/// Grid definition: the cartesian product
+/// `variants × datasets × qps_scales × seeds` expands to
+/// [`SweepSpec::expand`]'s run list in variant-major order.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Master seed; every run's seed is forked from it per-stream.
+    pub master_seed: u64,
+    /// Independent seed replicates per (variant, dataset, qps) point.
+    pub seeds: usize,
+    /// Dataset registry names ([`DatasetSpec::REGISTRY`]).
+    pub datasets: Vec<String>,
+    /// Variant registry names ([`Variant::REGISTRY`]).
+    pub variants: Vec<String>,
+    /// Arrival-rate multipliers applied to `base_qps`.
+    pub qps_scales: Vec<f64>,
+    pub base_qps: f64,
+    /// Requests per run.
+    pub requests: usize,
+    /// GPUs per simulated cluster (also the GPU-hours cost basis).
+    pub gpus: usize,
+}
+
+impl SweepSpec {
+    /// CI-sized grid: 2 variants × 2 datasets × 2 load levels × 2 seeds
+    /// = 16 runs, small enough to finish in seconds yet wide enough to
+    /// exercise every aggregation path.
+    pub fn smoke() -> SweepSpec {
+        SweepSpec {
+            master_seed: 42,
+            seeds: 2,
+            datasets: vec!["sharegpt".to_string(), "mixed-modal".to_string()],
+            variants: vec!["emp".to_string(), "vllm".to_string()],
+            qps_scales: vec![1.0, 2.0],
+            base_qps: 4.0,
+            requests: 120,
+            gpus: 8,
+        }
+    }
+
+    /// Default exploration grid: 5 variants × 3 datasets × 3 load levels
+    /// × 3 seeds = 135 runs — a Fig 6/7-style sweep.
+    pub fn default_grid() -> SweepSpec {
+        SweepSpec {
+            master_seed: 42,
+            seeds: 3,
+            datasets: vec!["sharegpt".to_string(), "vwi".to_string(), "mixed-modal".to_string()],
+            variants: vec![
+                "emp".to_string(),
+                "emp-tp4".to_string(),
+                "static".to_string(),
+                "vllm".to_string(),
+                "vllm-decouple".to_string(),
+            ],
+            qps_scales: vec![0.5, 1.0, 2.0],
+            base_qps: 6.0,
+            requests: 300,
+            gpus: 8,
+        }
+    }
+
+    /// Reject malformed grids before any thread spawns.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.seeds == 0 {
+            return Err("seeds must be >= 1".to_string());
+        }
+        if self.requests == 0 {
+            return Err("requests must be >= 1".to_string());
+        }
+        if self.datasets.is_empty() {
+            return Err("at least one dataset required".to_string());
+        }
+        for d in &self.datasets {
+            if DatasetSpec::by_name(d).is_none() {
+                return Err(format!(
+                    "unknown dataset `{d}`; valid: {}",
+                    DatasetSpec::REGISTRY.join(", ")
+                ));
+            }
+        }
+        if self.variants.is_empty() {
+            return Err("at least one variant required".to_string());
+        }
+        for v in &self.variants {
+            if Variant::by_name(v).is_none() {
+                return Err(format!(
+                    "unknown variant `{v}`; valid: {}",
+                    Variant::REGISTRY.join(", ")
+                ));
+            }
+        }
+        if self.qps_scales.is_empty() {
+            return Err("at least one qps scale required".to_string());
+        }
+        for &q in &self.qps_scales {
+            if !q.is_finite() || q <= 0.0 {
+                return Err(format!("qps scales must be positive, got {q}"));
+            }
+        }
+        if !self.base_qps.is_finite() || self.base_qps <= 0.0 {
+            return Err(format!("base qps must be positive, got {}", self.base_qps));
+        }
+        // Instances, not raw GPUs: an instance spans the model's minimum
+        // TP degree worth of GPUs (mirrors `simulate`'s validation).
+        let instances = self.gpus / sweep_cost_model().min_tp().max(1);
+        if instances < 2 {
+            return Err(format!("{} GPUs give {instances} instances; need >= 2", self.gpus));
+        }
+        for v in &self.variants {
+            if Variant::by_name(v) == Some(Variant::Emp { nway: true, max_tp: 1 })
+                && instances < 4
+            {
+                return Err(format!(
+                    "variant `{v}` needs >= 4 instances (one per modality group); \
+                     {} GPUs give only {instances}",
+                    self.gpus
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the grid into self-contained run points, variant-major:
+    /// `for variant { for dataset { for qps_scale { for seed } } }`.
+    /// The trace stream id is a pure function of
+    /// `(dataset, qps_scale, seed)` so all variants at a grid point
+    /// share one trace (paired comparisons).
+    pub fn expand(&self) -> Vec<RunPoint> {
+        let mut points = Vec::new();
+        for variant in &self.variants {
+            for (di, dataset) in self.datasets.iter().enumerate() {
+                for (qi, &scale) in self.qps_scales.iter().enumerate() {
+                    for si in 0..self.seeds {
+                        let stream = (si + self.seeds * (qi + self.qps_scales.len() * di)) as u64;
+                        points.push(RunPoint {
+                            index: points.len(),
+                            variant: variant.clone(),
+                            dataset: dataset.clone(),
+                            qps_scale: scale,
+                            qps: self.base_qps * scale,
+                            seed_stream: stream,
+                            seed: stream_seed(self.master_seed, stream),
+                        });
+                    }
+                }
+            }
+        }
+        points
+    }
+
+    /// Execute one grid point to completion on the calling thread.
+    /// Pure: same spec + point ⇒ same [`RunResult`] on any machine, so
+    /// a sweep entry can be re-verified by running its point directly.
+    pub fn run_point(&self, point: &RunPoint) -> RunResult {
+        let ds = DatasetSpec::by_name(&point.dataset).expect("validated dataset");
+        let trace = ds.sample_trace(self.master_seed, point.seed_stream, self.requests, point.qps);
+        let cost = sweep_cost_model();
+        let mut sched = SchedulerConfig::default();
+        let variant = Variant::by_name(&point.variant).expect("validated variant");
+        let (report, stats) = match variant {
+            Variant::Emp { nway, max_tp } => {
+                sched.max_tp = max_tp;
+                let opts = if nway {
+                    EmpOptions::full_nway(self.gpus)
+                } else {
+                    EmpOptions::full(self.gpus)
+                };
+                run_trace_with_stats(&mut EmpSystem::new(cost, sched, self.gpus, opts), &trace)
+            }
+            Variant::StaticSplit => {
+                let opts = EmpOptions::static_split(self.gpus / 2);
+                run_trace_with_stats(&mut EmpSystem::new(cost, sched, self.gpus, opts), &trace)
+            }
+            Variant::Coupled => {
+                run_trace_with_stats(&mut CoupledVllm::new(cost, sched, self.gpus), &trace)
+            }
+            Variant::Decoupled => {
+                run_trace_with_stats(&mut DecoupledStatic::new(cost, sched, self.gpus), &trace)
+            }
+        };
+        RunResult {
+            metrics: RunMetrics::from_report(&report, self.gpus),
+            events: stats.events,
+            digest: report.canonical_digest(),
+            point: point.clone(),
+        }
+    }
+
+    /// Run the whole grid across `threads` workers (`0` =
+    /// `available_parallelism`). Workers pull run indices from one
+    /// atomic counter and each result lands in its pre-assigned slot,
+    /// so the output is identical at any worker count.
+    pub fn run(&self, threads: usize) -> Result<SweepOutcome, String> {
+        self.validate()?;
+        let points = self.expand();
+        let threads = effective_threads(threads, points.len());
+        let t0 = std::time::Instant::now();
+        let next = AtomicUsize::new(0);
+        let indexed: Vec<(usize, RunResult)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let (next, points) = (&next, &points);
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= points.len() {
+                                break;
+                            }
+                            out.push((i, self.run_point(&points[i])));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        });
+        // Deterministic ordering: slot vector by run index. Worker count
+        // and scheduling decide only *who* fills a slot, never *what*.
+        let mut slots: Vec<Option<RunResult>> = Vec::with_capacity(points.len());
+        slots.resize_with(points.len(), || None);
+        for (i, r) in indexed {
+            slots[i] = Some(r);
+        }
+        let results = slots
+            .into_iter()
+            .map(|s| s.expect("every run index filled exactly once"))
+            .collect();
+        Ok(SweepOutcome {
+            spec: self.clone(),
+            results,
+            threads,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("master_seed", Json::str(format!("{:016x}", self.master_seed))),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("datasets", Json::Arr(self.datasets.iter().map(|d| Json::str(d.clone())).collect())),
+            ("variants", Json::Arr(self.variants.iter().map(|v| Json::str(v.clone())).collect())),
+            ("qps_scales", Json::Arr(self.qps_scales.iter().map(|&q| Json::num(q)).collect())),
+            ("base_qps", Json::num(self.base_qps)),
+            ("requests", Json::num(self.requests as f64)),
+            ("gpus", Json::num(self.gpus as f64)),
+        ])
+    }
+}
+
+/// Resolve a requested worker count: `0` means every available core,
+/// and there is never a reason to spawn more workers than runs.
+pub fn effective_threads(requested: usize, runs: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, runs.max(1))
+}
+
+/// One fully-specified cell of the expanded grid. Self-contained: a
+/// worker needs nothing else (plus the spec's shared constants) to
+/// execute it.
+#[derive(Debug, Clone)]
+pub struct RunPoint {
+    /// Position in the expanded run list — the slot this run's result
+    /// lands in, and its id in the aggregate JSON.
+    pub index: usize,
+    pub variant: String,
+    pub dataset: String,
+    pub qps_scale: f64,
+    /// `base_qps * qps_scale`, precomputed.
+    pub qps: f64,
+    /// Trace stream id — shared by all variants at a grid point.
+    pub seed_stream: u64,
+    /// `stream_seed(master_seed, seed_stream)` — the actual RNG seed.
+    pub seed: u64,
+}
+
+/// One completed run: scalar objectives + the event count + the
+/// canonical-report digest that proves this run matches a direct
+/// `run_trace` of the same configuration.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub point: RunPoint,
+    pub metrics: RunMetrics,
+    /// Driver events dispatched (arrivals + ticks + system events).
+    pub events: u64,
+    /// [`crate::metrics::Report::canonical_digest`] of the run's report.
+    pub digest: u64,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Json {
+        // u64 seeds/digests exceed f64's exact-integer range, so they
+        // serialize as fixed-width hex strings.
+        Json::obj(vec![
+            ("index", Json::num(self.point.index as f64)),
+            ("variant", Json::str(self.point.variant.clone())),
+            ("dataset", Json::str(self.point.dataset.clone())),
+            ("qps_scale", Json::num(self.point.qps_scale)),
+            ("qps", Json::num(self.point.qps)),
+            ("seed_stream", Json::num(self.point.seed_stream as f64)),
+            ("seed", Json::str(format!("{:016x}", self.point.seed))),
+            ("events", Json::num(self.events as f64)),
+            ("digest", Json::str(format!("{:016x}", self.digest))),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// A finished sweep: the spec, one result per run point (in run-index
+/// order), and the timing of this particular execution. Everything
+/// except `threads`/`wall_s` is deterministic.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub spec: SweepSpec,
+    pub results: Vec<RunResult>,
+    pub threads: usize,
+    pub wall_s: f64,
+}
+
+impl SweepOutcome {
+    /// Indices of the Pareto-optimal runs over
+    /// (goodput ↑, SLO attainment ↑, GPU-hours ↓).
+    pub fn frontier(&self) -> Vec<usize> {
+        let points: Vec<RunMetrics> = self.results.iter().map(|r| r.metrics).collect();
+        pareto_frontier(&points)
+    }
+
+    /// Total driver events across all runs — the deterministic "work
+    /// done" measure the bench gate puts a ceiling on.
+    pub fn events_total(&self) -> u64 {
+        self.results.iter().map(|r| r.events).sum()
+    }
+
+    pub fn runs_per_sec(&self) -> f64 {
+        self.results.len() as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn axis_marginal(&self, key: impl Fn(&RunResult) -> String) -> Json {
+        let mut groups: BTreeMap<String, Vec<&RunMetrics>> = BTreeMap::new();
+        for r in &self.results {
+            groups.entry(key(r)).or_default().push(&r.metrics);
+        }
+        let mut out = BTreeMap::new();
+        for (k, ms) in groups {
+            let n = ms.len() as f64;
+            let mean = |f: fn(&RunMetrics) -> f64| ms.iter().copied().map(f).sum::<f64>() / n;
+            out.insert(
+                k,
+                Json::obj(vec![
+                    ("runs", Json::num(n)),
+                    ("mean_goodput_rps", Json::num(mean(|m| m.goodput_rps))),
+                    ("mean_slo_attainment", Json::num(mean(|m| m.slo_attainment))),
+                    ("mean_p99_ttft_s", Json::num(mean(|m| m.p99_ttft_s))),
+                    ("mean_gpu_hours", Json::num(mean(|m| m.gpu_hours))),
+                ]),
+            );
+        }
+        Json::Obj(out)
+    }
+
+    /// Per-axis marginal means: collapse the grid onto each axis in turn
+    /// — the "which knob matters" view of the sweep.
+    pub fn marginals(&self) -> Json {
+        Json::obj(vec![
+            ("variant", self.axis_marginal(|r| r.point.variant.clone())),
+            ("dataset", self.axis_marginal(|r| r.point.dataset.clone())),
+            ("qps_scale", self.axis_marginal(|r| r.point.qps_scale.to_string())),
+            ("seed_stream", self.axis_marginal(|r| r.point.seed_stream.to_string())),
+        ])
+    }
+
+    /// The thread-count-invariant aggregate: spec, per-run results,
+    /// Pareto frontier, and marginals — **no wall-clock or host data**.
+    /// `aggregate_digest` fingerprints the body so two executions can be
+    /// compared with one string. Byte-identical at any worker count.
+    pub fn deterministic_json(&self) -> Json {
+        let body = Json::obj(vec![
+            ("spec", self.spec.to_json()),
+            ("runs_total", Json::num(self.results.len() as f64)),
+            ("events_total", Json::num(self.events_total() as f64)),
+            ("runs", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+            (
+                "pareto_frontier",
+                Json::Arr(self.frontier().into_iter().map(|i| Json::num(i as f64)).collect()),
+            ),
+            ("marginals", self.marginals()),
+        ]);
+        let digest = fnv1a64(body.to_string().as_bytes());
+        let Json::Obj(mut map) = body else { unreachable!("obj built above") };
+        map.insert("aggregate_digest".to_string(), Json::str(format!("{digest:016x}")));
+        Json::Obj(map)
+    }
+
+    /// Full BENCH_sweep.json payload: the deterministic aggregate plus
+    /// this execution's timing and the regression-gate section
+    /// (`"sweep" → {mode}`) that `check_regression_section` reads.
+    /// Timing keys live outside the gate section except `runs_per_sec`
+    /// (floored) and the deterministic counts (ceilinged).
+    pub fn bench_json(
+        &self,
+        mode: &str,
+        wall_s_1_thread: Option<f64>,
+        wall_s_4_threads: Option<f64>,
+    ) -> Json {
+        let Json::Obj(mut map) = self.deterministic_json() else {
+            unreachable!("deterministic_json returns an object")
+        };
+        map.insert("bench".to_string(), Json::str("sweep"));
+        let speedup = match (wall_s_1_thread, wall_s_4_threads) {
+            (Some(w1), Some(w4)) if w4 > 0.0 => Some(w1 / w4),
+            _ => None,
+        };
+        let mut timing = vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("runs_per_sec", Json::num(self.runs_per_sec())),
+        ];
+        if let Some(w) = wall_s_1_thread {
+            timing.push(("wall_s_1_thread", Json::num(w)));
+        }
+        if let Some(w) = wall_s_4_threads {
+            timing.push(("wall_s_4_threads", Json::num(w)));
+        }
+        if let Some(s) = speedup {
+            timing.push(("speedup_4_threads", Json::num(s)));
+        }
+        map.insert("timing".to_string(), Json::obj(timing));
+        let mut gate = vec![
+            ("runs_per_sec", Json::num(self.runs_per_sec())),
+            ("runs_total", Json::num(self.results.len() as f64)),
+            ("events_total", Json::num(self.events_total() as f64)),
+        ];
+        if let Some(s) = speedup {
+            gate.push(("speedup_4_threads", Json::num(s)));
+        }
+        map.insert("sweep".to_string(), Json::obj(vec![(mode, Json::obj(gate))]));
+        Json::Obj(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_registry_resolves_and_rejects() {
+        for name in Variant::REGISTRY {
+            assert!(Variant::by_name(name).is_some(), "registry name {name}");
+        }
+        assert_eq!(Variant::by_name("emp-tp4"), Some(Variant::Emp { nway: false, max_tp: 4 }));
+        assert!(Variant::by_name("sglang").is_none());
+    }
+
+    #[test]
+    fn smoke_and_default_specs_validate() {
+        assert_eq!(SweepSpec::smoke().validate(), Ok(()));
+        assert_eq!(SweepSpec::default_grid().validate(), Ok(()));
+        assert_eq!(SweepSpec::smoke().expand().len(), 16);
+        assert_eq!(SweepSpec::default_grid().expand().len(), 135);
+    }
+
+    #[test]
+    fn validate_rejects_bad_grids() {
+        let mut s = SweepSpec::smoke();
+        s.datasets = vec!["not-a-dataset".to_string()];
+        assert!(s.validate().unwrap_err().contains("unknown dataset"));
+        let mut s = SweepSpec::smoke();
+        s.variants = vec!["sglang".to_string()];
+        assert!(s.validate().unwrap_err().contains("unknown variant"));
+        let mut s = SweepSpec::smoke();
+        s.qps_scales = vec![0.0];
+        assert!(s.validate().unwrap_err().contains("positive"));
+        let mut s = SweepSpec::smoke();
+        s.seeds = 0;
+        assert!(s.validate().is_err());
+        let mut s = SweepSpec::smoke();
+        s.variants.push("emp-nway".to_string());
+        s.gpus = 2;
+        assert!(s.validate().unwrap_err().contains("4 instances"));
+    }
+
+    #[test]
+    fn expansion_is_variant_major_with_shared_trace_streams() {
+        let spec = SweepSpec::smoke();
+        let points = spec.expand();
+        assert_eq!(points.len(), 16);
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.index, i, "slot index mismatch");
+            assert_eq!(p.seed, stream_seed(spec.master_seed, p.seed_stream));
+            assert!((p.qps - spec.base_qps * p.qps_scale).abs() < 1e-12);
+        }
+        // First half is variant 0, second half variant 1 (variant-major),
+        // and the trace stream id is variant-independent: run i and run
+        // i+8 replay the same (dataset, qps, seed) trace.
+        let half = points.len() / 2;
+        for i in 0..half {
+            assert_eq!(points[i].variant, "emp");
+            assert_eq!(points[i + half].variant, "vllm");
+            assert_eq!(points[i].seed_stream, points[i + half].seed_stream);
+            assert_eq!(points[i].seed, points[i + half].seed);
+            assert_eq!(points[i].dataset, points[i + half].dataset);
+        }
+        // Distinct (dataset, qps, seed) points get distinct streams.
+        let mut streams: Vec<u64> = points[..half].iter().map(|p| p.seed_stream).collect();
+        streams.sort_unstable();
+        streams.dedup();
+        assert_eq!(streams.len(), half, "stream ids must be unique per trace point");
+    }
+
+    #[test]
+    fn effective_threads_resolution() {
+        assert_eq!(effective_threads(3, 100), 3);
+        assert_eq!(effective_threads(8, 2), 2, "never more workers than runs");
+        assert_eq!(effective_threads(1, 0), 1);
+        assert!(effective_threads(0, 100) >= 1, "0 = available parallelism");
+    }
+
+    fn fake_result(index: usize, variant: &str, goodput: f64, gpu_hours: f64) -> RunResult {
+        RunResult {
+            point: RunPoint {
+                index,
+                variant: variant.to_string(),
+                dataset: "sharegpt".to_string(),
+                qps_scale: 1.0,
+                qps: 4.0,
+                seed_stream: index as u64,
+                seed: stream_seed(42, index as u64),
+            },
+            metrics: RunMetrics {
+                requests: 10,
+                throughput_rps: goodput,
+                goodput_rps: goodput,
+                slo_attainment: 0.9,
+                p99_ttft_s: 1.0,
+                mean_ttft_s: 0.5,
+                gpu_hours,
+            },
+            events: 1000,
+            digest: 0xDEAD_BEEF,
+        }
+    }
+
+    fn fake_outcome() -> SweepOutcome {
+        SweepOutcome {
+            spec: SweepSpec::smoke(),
+            results: vec![
+                fake_result(0, "emp", 10.0, 4.0),
+                fake_result(1, "vllm", 6.0, 5.0), // dominated by run 0
+            ],
+            threads: 2,
+            wall_s: 4.0,
+        }
+    }
+
+    #[test]
+    fn aggregate_excludes_wall_clock_and_digests_stably() {
+        let out = fake_outcome();
+        let agg = out.deterministic_json();
+        assert!(agg.get("timing").is_err(), "no wall-clock in the aggregate");
+        assert!(agg.get("threads").is_err());
+        assert_eq!(agg.get("runs_total").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(agg.get("events_total").unwrap().as_f64().unwrap(), 2000.0);
+        let frontier = agg.get("pareto_frontier").unwrap().as_arr().unwrap();
+        assert_eq!(frontier.len(), 1, "run 1 is dominated");
+        assert_eq!(frontier[0].as_f64().unwrap(), 0.0);
+        // Identical results at a different thread count / wall time give
+        // a byte-identical aggregate (the thread-invariance contract).
+        let mut other = fake_outcome();
+        other.threads = 1;
+        other.wall_s = 99.0;
+        assert_eq!(agg.to_string(), other.deterministic_json().to_string());
+        // The embedded digest matches a recomputation over the body.
+        let digest = agg.get("aggregate_digest").unwrap().as_str().unwrap().to_string();
+        assert_eq!(digest.len(), 16);
+    }
+
+    #[test]
+    fn marginals_group_by_axis_value() {
+        let out = fake_outcome();
+        let m = out.marginals();
+        let by_variant = m.get("variant").unwrap();
+        assert_eq!(by_variant.get("emp").unwrap().get("runs").unwrap().as_f64().unwrap(), 1.0);
+        let g = by_variant.get("emp").unwrap().get("mean_goodput_rps").unwrap();
+        assert_eq!(g.as_f64().unwrap(), 10.0);
+        // Both runs share qps_scale 1.0 → one group of two.
+        let by_scale = m.get("qps_scale").unwrap();
+        assert_eq!(by_scale.get("1").unwrap().get("runs").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn bench_json_adds_timing_and_gate_sections() {
+        let out = fake_outcome();
+        let b = out.bench_json("smoke", Some(8.0), Some(2.0));
+        assert_eq!(b.get("bench").unwrap().as_str().unwrap(), "sweep");
+        let timing = b.get("timing").unwrap();
+        assert_eq!(timing.get("threads").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(timing.get("speedup_4_threads").unwrap().as_f64().unwrap(), 4.0);
+        let gate = b.get("sweep").unwrap().get("smoke").unwrap();
+        assert_eq!(gate.get("runs_total").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(gate.get("runs_per_sec").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(gate.get("events_total").unwrap().as_f64().unwrap(), 2000.0);
+        // Without both reference walls there is no speedup claim.
+        let b = out.bench_json("smoke", None, None);
+        assert!(b.get("timing").unwrap().get("speedup_4_threads").is_err());
+        assert!(b.get("sweep").unwrap().get("smoke").unwrap().get("runs_total").is_ok());
+    }
+}

@@ -90,40 +90,69 @@ impl Bench {
     }
 }
 
+/// 64-bit FNV-1a over raw bytes — the digest used for canonical-report
+/// and sweep-aggregate equivalence checks. Stable across platforms and
+/// Rust versions, unlike `DefaultHasher`, whose output is unspecified.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 /// Per-system keys treated as **floors**: the measurement must reach at
 /// least `baseline * (1 - tolerance)`. Wall-clock dependent, so the
 /// committed baselines are deliberately conservative (documented in
 /// `BENCH_baseline.json`) — they catch order-of-magnitude regressions
 /// (an accidental O(n²) hot loop, allocation storms) without flaking on
-/// runner speed.
-const FLOOR_KEYS: [&str; 3] = ["events_per_sec_ff_on", "events_per_sec_ff_off", "speedup"];
+/// runner speed. `runs_per_sec` is the sweep engine's throughput floor.
+const FLOOR_KEYS: [&str; 4] =
+    ["events_per_sec_ff_on", "events_per_sec_ff_off", "speedup", "runs_per_sec"];
 
 /// Per-system keys treated as **ceilings**: the measurement must stay
 /// under `baseline * (1 + tolerance)`. Event counts are deterministic
 /// for a fixed seed/trace, so a blowup here is a machine-independent
 /// algorithmic regression (e.g. the fast-forward predicate rotting to
-/// `false`, or coalescing silently disabled).
-const CEILING_KEYS: [&str; 2] = ["events_ff_on", "events_ff_off"];
+/// `false`, or coalescing silently disabled). `runs_total` /
+/// `events_total` are the sweep's deterministic aggregate counts.
+const CEILING_KEYS: [&str; 4] =
+    ["events_ff_on", "events_ff_off", "runs_total", "events_total"];
 
-/// Bench-regression gate: compare a fresh measurement (the JSON a bench
-/// binary just wrote) against the committed baseline. Only keys present
-/// in the baseline are checked — a baseline may gate a subset; but a
-/// system or key named by the baseline and *missing from the
-/// measurement* fails (the gate must not silently pass on schema
-/// drift). Returns the list of performed checks on success, the list of
-/// failures otherwise.
+/// [`check_regression_section`] against the conventional `systems`
+/// section (the per-serving-system layout of `BENCH_sim.json`).
 pub fn check_regression(
     baseline: &Json,
     measured: &Json,
     tolerance: f64,
 ) -> Result<Vec<String>, Vec<String>> {
+    check_regression_section(baseline, measured, tolerance, "systems")
+}
+
+/// Bench-regression gate: compare a fresh measurement (the JSON a bench
+/// binary just wrote) against the committed baseline. Only keys present
+/// in the baseline's `section` object are checked — a baseline may gate
+/// a subset; but an entry or key named by the baseline and *missing
+/// from the measurement* fails (the gate must not silently pass on
+/// schema drift). Distinct benches gate distinct sections of the one
+/// committed `BENCH_baseline.json` (`systems` for the simulator bench,
+/// `sweep` for the sweep engine), so each gate only requires its own
+/// measurement file. Returns the list of performed checks on success,
+/// the list of failures otherwise.
+pub fn check_regression_section(
+    baseline: &Json,
+    measured: &Json,
+    tolerance: f64,
+    section: &str,
+) -> Result<Vec<String>, Vec<String>> {
     let mut checked = Vec::new();
     let mut failures = Vec::new();
-    let Ok(base_systems) = baseline.get("systems").and_then(|s| s.as_obj()) else {
-        return Err(vec!["baseline has no `systems` object".to_string()]);
+    let Ok(base_systems) = baseline.get(section).and_then(|s| s.as_obj()) else {
+        return Err(vec![format!("baseline has no `{section}` object")]);
     };
     for (name, base) in base_systems {
-        let Some(meas) = measured.opt("systems").and_then(|s| s.opt(name)) else {
+        let Some(meas) = measured.opt(section).and_then(|s| s.opt(name)) else {
             failures.push(format!("system `{name}` missing from measurement"));
             continue;
         };
@@ -237,6 +266,65 @@ mod tests {
         let blown = report(100_000.0, 500_000.0);
         let failures = check_regression(&base, &blown, 0.2).unwrap_err();
         assert!(failures[0].contains("events_ff_on"), "{failures:?}");
+    }
+
+    #[test]
+    fn fnv1a64_stable_and_sensitive() {
+        // Reference FNV-1a vectors (64-bit).
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+        assert_eq!(fnv1a64(b"abc"), fnv1a64(b"abc"));
+    }
+
+    #[test]
+    fn gate_checks_sweep_section_independently() {
+        let base = Json::obj(vec![
+            ("systems", Json::obj(vec![("emp", system(100_000.0, 50_000.0))])),
+            (
+                "sweep",
+                Json::obj(vec![(
+                    "smoke",
+                    Json::obj(vec![
+                        ("runs_per_sec", Json::num(2.0)),
+                        ("runs_total", Json::num(16.0)),
+                        ("events_total", Json::num(100_000.0)),
+                    ]),
+                )]),
+            ),
+        ]);
+        let sweep_meas = |rps: f64, runs: f64, events: f64| {
+            Json::obj(vec![(
+                "sweep",
+                Json::obj(vec![(
+                    "smoke",
+                    Json::obj(vec![
+                        ("runs_per_sec", Json::num(rps)),
+                        ("runs_total", Json::num(runs)),
+                        ("events_total", Json::num(events)),
+                    ]),
+                )]),
+            )])
+        };
+        // A sweep measurement (no `systems` object) passes the sweep
+        // gate without the simulator bench's sections being present.
+        let ok = sweep_meas(3.0, 16.0, 90_000.0);
+        let checked = check_regression_section(&base, &ok, 0.2, "sweep").unwrap();
+        assert_eq!(checked.len(), 3, "{checked:?}");
+        // Runs-per-second floor.
+        let slow = sweep_meas(1.0, 16.0, 90_000.0);
+        let failures = check_regression_section(&base, &slow, 0.2, "sweep").unwrap_err();
+        assert!(failures[0].contains("runs_per_sec"), "{failures:?}");
+        // Deterministic aggregate-count ceilings.
+        let blown = sweep_meas(3.0, 64.0, 90_000.0);
+        let failures = check_regression_section(&base, &blown, 0.2, "sweep").unwrap_err();
+        assert!(failures[0].contains("runs_total"), "{failures:?}");
+        let storm = sweep_meas(3.0, 16.0, 10_000_000.0);
+        let failures = check_regression_section(&base, &storm, 0.2, "sweep").unwrap_err();
+        assert!(failures[0].contains("events_total"), "{failures:?}");
+        // The `systems` gate still works against the same baseline.
+        let sim_meas = report(95_000.0, 50_000.0);
+        assert!(check_regression(&base, &sim_meas, 0.2).is_ok());
     }
 
     #[test]

@@ -21,6 +21,23 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Derive the seed of the `stream_id`-th independent child stream of
+/// `master`. Both inputs pass through the full SplitMix64 finalizer, so
+/// streams for adjacent ids — and adjacent master seeds — share no
+/// low-dimensional structure. This is what sweep runs use to derive
+/// per-run seeds: `master + i` seeding would feed *correlated* states
+/// into the xoshiro initializer (adjacent seeds differ in one counter
+/// increment before mixing), while here every (master, stream) pair is
+/// scrambled twice through a full-avalanche mix.
+pub fn stream_seed(master: u64, stream_id: u64) -> u64 {
+    let mut s = master;
+    let finalized = splitmix64(&mut s);
+    // Spread the stream id over all 64 bits (golden-ratio multiply)
+    // before the second finalizer pass.
+    let mut t = finalized ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut t)
+}
+
 impl Rng {
     /// Seed via SplitMix64 so that nearby seeds give uncorrelated streams.
     pub fn new(seed: u64) -> Self {
@@ -37,6 +54,14 @@ impl Rng {
     /// Derive an independent child stream (for per-component RNGs).
     pub fn fork(&mut self) -> Rng {
         Rng::new(self.next_u64())
+    }
+
+    /// The `stream_id`-th independent child stream of `master`,
+    /// reproducible from the pair alone (see [`stream_seed`]). Sweep
+    /// runs use this so hundreds of grid points draw statistically
+    /// independent randomness from one master seed.
+    pub fn fork_stream(master: u64, stream_id: u64) -> Rng {
+        Rng::new(stream_seed(master, stream_id))
     }
 
     #[inline]
@@ -319,6 +344,46 @@ mod tests {
         let mut root = Rng::new(31);
         let mut a = root.fork();
         let mut b = root.fork();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn stream_fork_reproducible() {
+        for stream in [0u64, 1, 7, u64::MAX] {
+            let mut a = Rng::fork_stream(42, stream);
+            let mut b = Rng::fork_stream(42, stream);
+            for _ in 0..32 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn stream_forks_differ_pairwise() {
+        // Adjacent stream ids (the sweep's run indices) must give
+        // divergent streams, and differ from the master stream itself.
+        let streams: Vec<u64> = (0..8).map(|i| stream_seed(42, i)).collect();
+        for (i, &a) in streams.iter().enumerate() {
+            assert_ne!(a, 42, "stream seed collided with master");
+            for &b in &streams[i + 1..] {
+                assert_ne!(a, b, "adjacent stream seeds collided");
+            }
+        }
+        let mut x = Rng::fork_stream(42, 0);
+        let mut y = Rng::fork_stream(42, 1);
+        let same = (0..64).filter(|_| x.next_u64() == y.next_u64()).count();
+        assert!(same < 2, "adjacent streams correlated: {same}/64 equal draws");
+    }
+
+    #[test]
+    fn stream_fork_beats_additive_seeding() {
+        // The whole point vs `seed + i`: different masters give
+        // different stream families even when master ^ stream collides
+        // additively (master=5/stream=1 vs master=6/stream=0).
+        assert_ne!(stream_seed(5, 1), stream_seed(6, 0));
+        let mut a = Rng::fork_stream(5, 1);
+        let mut b = Rng::fork_stream(6, 0);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
     }

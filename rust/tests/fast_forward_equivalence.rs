@@ -67,6 +67,15 @@ fn assert_equivalent<S: ServingSystem>(
         record_bytes(&rep_off),
         "{name}: fast-forward on/off reports diverge"
     );
+    // Same contract through the sweep engine's lens: the canonical
+    // serialization (records + TP stats, no derived sections) must be
+    // byte-identical, so the fingerprints the sweep stores match too.
+    assert_eq!(
+        rep_on.canonical_json().to_string(),
+        rep_off.canonical_json().to_string(),
+        "{name}: canonical JSON diverges"
+    );
+    assert_eq!(rep_on.canonical_digest(), rep_off.canonical_digest(), "{name}: digest");
     on.verify_invariants().unwrap();
     off.verify_invariants().unwrap();
     (rep_on, rep_off)

@@ -1,0 +1,134 @@
+//! The sweep engine's determinism contract (DESIGN.md §8):
+//!
+//! 1. **Thread-count invariance** — the same `SweepSpec` run with 1 and
+//!    4 workers produces *byte-identical* aggregate JSON. Workers only
+//!    decide who fills a result slot, never what lands in it.
+//! 2. **Run-level faithfulness** — every entry in the aggregate matches
+//!    a direct `run_trace` of the same configuration, verified through
+//!    `Report::canonical_digest` and the recorded scalar metrics.
+//! 3. **Frontier soundness** — no Pareto-frontier member is dominated,
+//!    and every non-member is dominated by someone.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::RunMetrics;
+use elasticmm::model::CostModel;
+use elasticmm::sim::driver::run_trace_with_stats;
+use elasticmm::sim::sweep::SweepSpec;
+use elasticmm::util::rng::stream_seed;
+use elasticmm::workload::datasets::DatasetSpec;
+
+/// 2 variants × 1 dataset × 2 load levels × 2 seeds = 8 runs, sized so
+/// the whole file stays in test-suite budget while still spanning
+/// multiple workers, variants, and trace streams.
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        master_seed: 7,
+        seeds: 2,
+        datasets: vec!["sharegpt".to_string()],
+        variants: vec!["emp".to_string(), "vllm".to_string()],
+        qps_scales: vec![1.0, 2.5],
+        base_qps: 3.0,
+        requests: 60,
+        gpus: 4,
+    }
+}
+
+#[test]
+fn aggregate_json_is_thread_count_invariant() {
+    let spec = tiny_spec();
+    let one = spec.run(1).expect("1-thread sweep");
+    let four = spec.run(4).expect("4-thread sweep");
+    assert_eq!(one.threads, 1);
+    assert_eq!(four.threads, 4);
+    assert_eq!(one.results.len(), 8);
+    // The whole deterministic aggregate — spec, per-run results,
+    // frontier, marginals, digest — must match byte for byte.
+    assert_eq!(
+        one.deterministic_json().to_string(),
+        four.deterministic_json().to_string(),
+        "worker count changed the aggregate"
+    );
+    // Results land in slot order regardless of completion order.
+    for (i, r) in four.results.iter().enumerate() {
+        assert_eq!(r.point.index, i, "slot {i} holds run {}", r.point.index);
+    }
+}
+
+#[test]
+fn each_run_matches_a_direct_run_trace() {
+    let spec = tiny_spec();
+    let out = spec.run(3).expect("sweep");
+    let cost = || CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+    for r in &out.results {
+        // Rebuild the exact same trace from (master_seed, stream) and
+        // drive the same system construction by hand.
+        let ds = DatasetSpec::by_name(&r.point.dataset).unwrap();
+        let trace =
+            ds.sample_trace(spec.master_seed, r.point.seed_stream, spec.requests, r.point.qps);
+        let sched = SchedulerConfig::default();
+        let (report, stats) = match r.point.variant.as_str() {
+            "emp" => run_trace_with_stats(
+                &mut EmpSystem::new(cost(), sched, spec.gpus, EmpOptions::full(spec.gpus)),
+                &trace,
+            ),
+            "vllm" => run_trace_with_stats(&mut CoupledVllm::new(cost(), sched, spec.gpus), &trace),
+            other => panic!("unexpected variant {other}"),
+        };
+        assert_eq!(
+            r.digest,
+            report.canonical_digest(),
+            "run {} ({} {} qps={}) diverges from direct run_trace",
+            r.point.index,
+            r.point.variant,
+            r.point.dataset,
+            r.point.qps
+        );
+        assert_eq!(r.events, stats.events, "run {}: event count", r.point.index);
+        let direct = RunMetrics::from_report(&report, spec.gpus);
+        assert_eq!(r.metrics.requests, direct.requests);
+        assert_eq!(r.metrics.goodput_rps.to_bits(), direct.goodput_rps.to_bits());
+        assert_eq!(r.metrics.gpu_hours.to_bits(), direct.gpu_hours.to_bits());
+        // And the recorded seed is the forked stream seed, not seed+i.
+        assert_eq!(r.point.seed, stream_seed(spec.master_seed, r.point.seed_stream));
+    }
+}
+
+#[test]
+fn frontier_members_are_undominated_and_cover() {
+    let out = tiny_spec().run(2).expect("sweep");
+    let frontier = out.frontier();
+    assert!(!frontier.is_empty(), "a non-empty sweep has a frontier");
+    let metrics: Vec<RunMetrics> = out.results.iter().map(|r| r.metrics).collect();
+    for &i in &frontier {
+        for (j, m) in metrics.iter().enumerate() {
+            assert!(
+                j == i || !m.dominates(&metrics[i]),
+                "frontier member {i} is dominated by {j}"
+            );
+        }
+    }
+    for (i, m) in metrics.iter().enumerate() {
+        if !frontier.contains(&i) {
+            assert!(
+                metrics.iter().any(|p| p.dominates(m)),
+                "non-frontier run {i} is dominated by nobody"
+            );
+        }
+    }
+}
+
+#[test]
+fn variants_share_traces_for_paired_comparison() {
+    // Common-random-numbers design: at a (dataset, qps, seed) grid
+    // point, both variants must replay the identical trace stream.
+    let spec = tiny_spec();
+    let points = spec.expand();
+    let half = points.len() / 2;
+    for i in 0..half {
+        assert_eq!(points[i].seed_stream, points[i + half].seed_stream);
+        assert_eq!(points[i].seed, points[i + half].seed);
+        assert_ne!(points[i].variant, points[i + half].variant);
+    }
+}
