@@ -1,0 +1,237 @@
+//! Trace-I/O throughput benchmark: DOM vs streamed JSON on a large
+//! synthetic multi-modal trace. Reports read/write MiB/s for both
+//! paths, the streamed-vs-DOM read speedup, and a peak-RSS proxy
+//! (bytes the reader ever had buffered vs bytes the DOM path must
+//! materialize), and writes `BENCH_trace.json` at the repo root.
+//!
+//!     cargo bench --bench trace_io              # full (100 MiB trace)
+//!     cargo bench --bench trace_io -- --smoke   # CI-sized (10 MiB)
+//!     cargo bench --bench trace_io -- --mb 25   # explicit size
+//!
+//! Both write paths must produce byte-identical files (asserted here
+//! with an FNV digest), and the streamed reader must stay under a hard
+//! 1 MiB buffering cap regardless of trace size — the constant-memory
+//! guarantee that lets `simulate --trace` run 100 MiB traces without
+//! materializing them.
+//!
+//! ## Bench-regression gate (CI)
+//!
+//!     cargo bench --bench trace_io -- --smoke --check  # bench + gate
+//!     cargo bench --bench trace_io -- --check-only     # gate an existing BENCH_trace.json
+//!
+//! The gate compares the measurement's `trace` section against the
+//! committed `BENCH_baseline.json`: floors on streamed read/write
+//! MiB/s and on the streamed-vs-DOM read speedup, and a deterministic
+//! ceiling on `streamed_peak_buffered_bytes`.
+
+use elasticmm::util::bench::fnv1a64;
+use elasticmm::util::cli::Args;
+use elasticmm::util::json::Json;
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::trace::{load_trace, open_trace, trace_to_json, TraceWriter};
+use elasticmm::workload::Request;
+use std::path::PathBuf;
+use std::time::Instant;
+
+const MIB: f64 = 1024.0 * 1024.0;
+/// Hard cap on the streamed reader's buffering — the constant-memory
+/// guarantee. Default chunk is 64 KiB; anything near a megabyte means
+/// the reader started accumulating instead of streaming.
+const PEAK_BUFFER_CAP: usize = 1 << 20;
+
+/// Sample mixed-modality requests until their streamed serialization
+/// reaches `target_bytes`. Mirrors `gen-trace --target-mb`: two forked
+/// RNG streams (samples, arrivals) so the trace is deterministic for a
+/// seed regardless of target size.
+fn build_requests(target_bytes: u64, qps: f64, seed: u64) -> Vec<Request> {
+    let spec = DatasetSpec::mixed_modality();
+    let mut sample_rng = Rng::fork_stream(seed, 0);
+    let mut arrival_rng = Rng::fork_stream(seed, 1);
+    let mut w = TraceWriter::new(std::io::sink()).expect("sink writer");
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    while w.bytes_written() < target_bytes {
+        let mut r = spec.sample(&mut sample_rng, reqs.len() as u64);
+        t += arrival_rng.exp(qps);
+        r.arrival = t;
+        w.write_request(&r).expect("sink write");
+        reqs.push(r);
+    }
+    reqs
+}
+
+fn mib_per_sec(bytes: u64, secs: f64) -> f64 {
+    bytes as f64 / MIB / secs.max(1e-9)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    if args.has_flag("check-only") {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace.json");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} (run the bench first)"));
+        let measured = Json::parse(&text).unwrap_or_else(|e| panic!("parse {path}: {e:?}"));
+        run_gate(&args, &measured);
+        return;
+    }
+    let mb = args.get_f64("mb", if smoke { 10.0 } else { 100.0 });
+    let seed = args.get_u64("seed", 11);
+    let qps = args.get_f64("qps", 6.0);
+    let target_bytes = (mb * MIB) as u64;
+    println!(
+        "=== trace_io: {mb:.0} MiB mixed-modal trace, seed {seed}{} ===",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let reqs = build_requests(target_bytes, qps, seed);
+    println!("generated {} requests (~{mb:.0} MiB serialized)", reqs.len());
+
+    let dir = std::env::temp_dir();
+    let streamed_path: PathBuf = dir.join("elasticmm_trace_io_streamed.json");
+    let dom_path: PathBuf = dir.join("elasticmm_trace_io_dom.json");
+
+    // -- write: streamed (constant memory: one request + flush buffer) --
+    let t0 = Instant::now();
+    let f = std::fs::File::create(&streamed_path).expect("create streamed file");
+    let mut w = TraceWriter::new(f).expect("trace writer");
+    for r in &reqs {
+        w.write_request(r).expect("streamed write");
+    }
+    let streamed_bytes = w.bytes_written();
+    w.finish().expect("finish streamed write");
+    let write_streamed_s = t0.elapsed().as_secs_f64();
+
+    // -- write: DOM (materializes the whole Json tree + string) --
+    let t0 = Instant::now();
+    let dom_string = trace_to_json(&reqs).to_string();
+    std::fs::write(&dom_path, &dom_string).expect("dom write");
+    let write_dom_s = t0.elapsed().as_secs_f64();
+    let dom_bytes_materialized = dom_string.len() as u64;
+    drop(dom_string);
+
+    // Byte-identity: the streamed writer must emit exactly the DOM
+    // serialization (key order, number formatting, escapes).
+    let a = std::fs::read(&streamed_path).expect("read back streamed");
+    let b = std::fs::read(&dom_path).expect("read back dom");
+    assert_eq!(a.len() as u64, streamed_bytes, "bytes_written miscounted");
+    assert_eq!(
+        (a.len(), fnv1a64(&a)),
+        (b.len(), fnv1a64(&b)),
+        "streamed and DOM trace files differ"
+    );
+    drop(a);
+    drop(b);
+
+    // -- read: streamed (event reader, bounded buffer) --
+    let t0 = Instant::now();
+    let mut reader = open_trace(&streamed_path).expect("open streamed");
+    let mut streamed_count = 0usize;
+    for r in &mut reader {
+        r.expect("streamed read");
+        streamed_count += 1;
+    }
+    let read_streamed_s = t0.elapsed().as_secs_f64();
+    let read_bytes = reader.bytes_read();
+    let peak_buffered = reader.peak_buffered();
+    assert_eq!(streamed_count, reqs.len(), "streamed read dropped requests");
+    assert!(
+        peak_buffered < PEAK_BUFFER_CAP,
+        "streamed reader buffered {peak_buffered} bytes (cap {PEAK_BUFFER_CAP}): \
+         not constant-memory"
+    );
+
+    // -- read: DOM (read_to_string + Json::parse + conversion) --
+    let t0 = Instant::now();
+    let dom_reqs = load_trace(&dom_path).expect("dom read");
+    let read_dom_s = t0.elapsed().as_secs_f64();
+    assert_eq!(dom_reqs.len(), reqs.len(), "dom read dropped requests");
+    drop(dom_reqs);
+
+    let read_streamed = mib_per_sec(read_bytes, read_streamed_s);
+    let read_dom = mib_per_sec(read_bytes, read_dom_s);
+    let write_streamed = mib_per_sec(streamed_bytes, write_streamed_s);
+    let write_dom = mib_per_sec(streamed_bytes, write_dom_s);
+    let read_speedup = read_streamed / read_dom.max(1e-9);
+    println!(
+        "read   streamed {read_streamed:>8.1} MiB/s   dom {read_dom:>8.1} MiB/s   speedup {read_speedup:.2}x"
+    );
+    println!(
+        "write  streamed {write_streamed:>8.1} MiB/s   dom {write_dom:>8.1} MiB/s"
+    );
+    println!(
+        "memory streamed peak-buffered {peak_buffered} B   dom materialized {dom_bytes_materialized} B \
+         ({:.0}x less)",
+        dom_bytes_materialized as f64 / (peak_buffered as f64).max(1.0)
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("trace_io".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("trace_mib", Json::num(mb)),
+        ("seed", Json::num(seed as f64)),
+        ("requests", Json::num(reqs.len() as f64)),
+        ("trace_bytes", Json::num(streamed_bytes as f64)),
+        (
+            "trace",
+            Json::obj(vec![(
+                "io",
+                Json::obj(vec![
+                    ("read_mib_per_sec_streamed", Json::num(read_streamed)),
+                    ("read_mib_per_sec_dom", Json::num(read_dom)),
+                    ("write_mib_per_sec_streamed", Json::num(write_streamed)),
+                    ("write_mib_per_sec_dom", Json::num(write_dom)),
+                    ("streamed_vs_dom_read_speedup", Json::num(read_speedup)),
+                    ("streamed_peak_buffered_bytes", Json::num(peak_buffered as f64)),
+                    ("dom_bytes_materialized", Json::num(dom_bytes_materialized as f64)),
+                ]),
+            )]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace.json");
+    std::fs::write(path, out.to_string()).expect("write BENCH_trace.json");
+    println!("wrote {path}");
+    let _ = std::fs::remove_file(&streamed_path);
+    let _ = std::fs::remove_file(&dom_path);
+    if args.has_flag("check") {
+        run_gate(&args, &out);
+    }
+}
+
+/// Gate the `trace` section against the committed baseline; exits the
+/// process non-zero on regression (the CI failure signal).
+fn run_gate(args: &Args, measured: &Json) {
+    let baseline_path = args.get_or(
+        "baseline",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json"),
+    );
+    let text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+    let baseline = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("parse baseline {baseline_path}: {e:?}"));
+    let tolerance = args.get_f64(
+        "tolerance",
+        baseline.opt("tolerance_default").and_then(|t| t.as_f64().ok()).unwrap_or(0.2),
+    );
+    match elasticmm::util::bench::check_regression_section(
+        &baseline, measured, tolerance, "trace",
+    ) {
+        Ok(checked) => {
+            println!(
+                "trace-io bench gate PASSED ({} checks, tolerance {:.0}%):",
+                checked.len(),
+                tolerance * 100.0
+            );
+            for line in checked {
+                println!("  {line}");
+            }
+        }
+        Err(failures) => {
+            eprintln!("trace-io bench gate FAILED (tolerance {:.0}%):", tolerance * 100.0);
+            for line in &failures {
+                eprintln!("  {line}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

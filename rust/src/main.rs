@@ -12,17 +12,20 @@
 //!                threads (`--threads 0` = all cores; `--smoke` = the
 //!                16-run CI grid; `--check` = bench-regression gate);
 //!                writes BENCH_sweep.json
-//!   gen-trace  — generate a workload trace JSON
+//!   gen-trace  — generate a workload trace JSON (`--target-mb N` streams
+//!                a size-targeted trace in constant memory)
 //!   models     — print the Table-1 model presets
 //!
 //! Examples:
 //!   elasticmm simulate --system elasticmm --model qwen --dataset sharegpt \
 //!       --qps 8 --requests 400 --gpus 8
 //!   elasticmm simulate --system elasticmm --dataset mixed-modal --groups 4
+//!   elasticmm simulate --system elasticmm --trace trace.json --trace-limit 500
 //!   elasticmm sweep --threads 0 --variants emp,emp-tp4,vllm --seeds 3
 //!   elasticmm sweep --smoke --threads 2 --check
 //!   elasticmm serve --requests 8 --staged
 //!   elasticmm gen-trace --dataset video-chat --requests 1000 --qps 5 --out trace.json
+//!   elasticmm gen-trace --dataset mixed-modal --target-mb 100 --out big.json
 
 use elasticmm::baselines::coupled::CoupledVllm;
 use elasticmm::baselines::decoupled::DecoupledStatic;
@@ -31,6 +34,7 @@ use elasticmm::coordinator::{EmpOptions, EmpSystem};
 use elasticmm::metrics::Report;
 use elasticmm::model::CostModel;
 use elasticmm::ServingSystem;
+use elasticmm::sim::driver::{run_trace_source, Limited, DEFAULT_TRACE_LOOKAHEAD};
 use elasticmm::sim::sweep::{SweepOutcome, SweepSpec};
 use elasticmm::util::bench;
 use elasticmm::util::cli::Args;
@@ -96,6 +100,32 @@ fn make_trace(args: &Args) -> Result<Vec<Request>> {
     Ok(reqs)
 }
 
+/// Where `simulate` pulls its requests from: a synthetic in-memory trace
+/// or a trace file streamed request-by-request (never materialized).
+enum TraceInput {
+    Slice(Vec<Request>),
+    Stream { path: String, limit: usize, lookahead: usize },
+}
+
+/// Drive `sys` over the input through the shared driver. The streamed
+/// path produces byte-identical canonical reports to the slice path
+/// (asserted by `tests/trace_stream_equivalence.rs`).
+fn run_input<S: ServingSystem>(mut sys: S, input: &TraceInput) -> Result<Report> {
+    match input {
+        TraceInput::Slice(t) => Ok(sys.run(t)),
+        TraceInput::Stream { path, limit, lookahead } => {
+            let reader = trace::open_trace(std::path::Path::new(path))?;
+            if *limit > 0 {
+                let mut src = Limited::new(reader, *limit);
+                run_trace_source(&mut sys, &mut src, *lookahead)
+            } else {
+                let mut src = reader;
+                run_trace_source(&mut sys, &mut src, *lookahead)
+            }
+        }
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cost = cost_model(args);
     let mut sched = SchedulerConfig::default();
@@ -110,7 +140,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     sched.max_tp = max_tp;
     sched.tp_reconfig_s = args.get_f64("tp-reconfig-s", sched.tp_reconfig_s);
     let gpus = args.get_usize("gpus", 8);
-    let t = make_trace(args)?;
+    // `--trace file.json` streams requests from a trace file instead of
+    // generating a synthetic trace; `--trace-limit N` caps the prefix
+    // read (0 = whole file), `--lookahead K` sizes the driver's
+    // arrival re-sort window.
+    let input = match args.get("trace") {
+        Some(p) => {
+            let limit = args.get_usize("trace-limit", 0);
+            let lookahead = args.get_usize("lookahead", DEFAULT_TRACE_LOOKAHEAD);
+            println!(
+                "streaming trace from {p} (limit {}, lookahead {lookahead})",
+                if limit == 0 { "none".to_string() } else { limit.to_string() }
+            );
+            TraceInput::Stream { path: p.to_string(), limit, lookahead }
+        }
+        None => TraceInput::Slice(make_trace(args)?),
+    };
     let system = args.get_or("system", "elasticmm");
     // `--groups 4` runs ElasticMM with the full N-way modality-group
     // registry (Text | Image | Video | Audio) instead of the binary
@@ -141,11 +186,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // Every system runs through the shared driver (sim::driver), so the
     // comparison is apples-to-apples.
     let report: Report = match system.as_str() {
-        "vllm" => CoupledVllm::new(cost, sched, gpus).run(&t),
-        "vllm-decouple" => DecoupledStatic::new(cost, sched, gpus).run(&t),
+        "vllm" => run_input(CoupledVllm::new(cost, sched, gpus), &input)?,
+        "vllm-decouple" => run_input(DecoupledStatic::new(cost, sched, gpus), &input)?,
         "static" => {
             let text = args.get_usize("text-instances", gpus / 2);
-            EmpSystem::new(cost, sched, gpus, EmpOptions::static_split(text)).run(&t)
+            run_input(EmpSystem::new(cost, sched, gpus, EmpOptions::static_split(text)), &input)?
         }
         "elasticmm" => {
             let opts = match groups {
@@ -153,7 +198,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 2 => EmpOptions::full(gpus),
                 other => elasticmm::bail!("--groups must be 2 or 4, got {other}"),
             };
-            EmpSystem::new(cost, sched, gpus, opts).run(&t)
+            run_input(EmpSystem::new(cost, sched, gpus, opts), &input)?
         }
         other => elasticmm::bail!(
             "unknown system `{other}`; valid: elasticmm, vllm, vllm-decouple, static"
@@ -208,8 +253,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         )
     );
     if let Some(path) = args.get("out") {
-        std::fs::write(path, report.to_json().to_string())?;
-        println!("wrote records + per-modality summary to {path}");
+        // Streamed report writer: byte-identical to the DOM
+        // serialization without materializing the whole string.
+        let bytes = report.write_json(std::fs::File::create(path)?)?;
+        println!("wrote records + per-modality summary to {path} ({bytes} bytes)");
     }
     Ok(())
 }
@@ -447,8 +494,43 @@ fn cmd_serve_http(_args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_trace(args: &Args) -> Result<()> {
-    let t = make_trace(args)?;
     let path = args.get_or("out", "trace.json");
+    let target_mb = args.get_f64("target-mb", 0.0);
+    if target_mb > 0.0 {
+        // Size-targeted mode: stream requests straight to disk until the
+        // file reaches `--target-mb` MiB. Memory stays constant no
+        // matter the target — nothing is materialized beyond one
+        // request and the writer's flush buffer.
+        let target_bytes = (target_mb * 1024.0 * 1024.0) as u64;
+        let spec = dataset(args)?;
+        let qps = args.get_f64("qps", 6.0);
+        let seed = args.get_u64("seed", 42);
+        // Two forked streams, mirroring generate() + poisson_arrivals():
+        // interleaving sample and arrival draws on one stream would
+        // change every draw relative to the materialized path.
+        let mut sample_rng = Rng::fork_stream(seed, 0);
+        let mut arrival_rng = Rng::fork_stream(seed, 1);
+        let f = std::fs::File::create(&path)?;
+        let mut w = trace::TraceWriter::new(f)?;
+        let mut t = 0.0;
+        let mut id: u64 = 0;
+        while w.bytes_written() < target_bytes {
+            let mut r = spec.sample(&mut sample_rng, id);
+            t += arrival_rng.exp(qps);
+            r.arrival = t;
+            w.write_request(&r)?;
+            id += 1;
+        }
+        let count = w.count();
+        let bytes = w.bytes_written();
+        w.finish()?;
+        println!(
+            "wrote {count} requests to {path} ({:.1} MiB, streamed, constant memory)",
+            bytes as f64 / (1024.0 * 1024.0)
+        );
+        return Ok(());
+    }
+    let t = make_trace(args)?;
     trace::save_trace(std::path::Path::new(&path), &t)?;
     println!("wrote {} requests to {path}", t.len());
     Ok(())

@@ -11,7 +11,7 @@
 //! * per-modality breakdowns over the N-way taxonomy.
 
 use crate::sim::instance::SimRequest;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 use crate::util::stats;
 use crate::workload::Modality;
 
@@ -281,6 +281,40 @@ impl Report {
             ("tp_busy_gpu_seconds", Json::num(self.tp_busy_gpu_seconds)),
             ("tp_timeline", Json::Arr(self.tp_timeline.iter().map(|e| e.to_json()).collect())),
         ])
+    }
+
+    /// Stream the full report JSON to `out` one record at a time —
+    /// byte-identical to `self.to_json().to_string()` (the streaming
+    /// writer shares the DOM's key order, number formatting, and
+    /// escaping) but never materializes the whole serialization, so
+    /// reports from 100MB-trace runs write in bounded memory. Returns
+    /// the number of bytes written.
+    pub fn write_json<W: std::io::Write>(&self, out: W) -> std::io::Result<u64> {
+        let mut w = JsonWriter::new(out);
+        w.begin_object()?;
+        // Keys in sorted order — the DOM path serializes from a BTreeMap.
+        w.key("per_modality")?;
+        w.value(&self.per_modality_json())?;
+        w.key("records")?;
+        w.begin_array()?;
+        for r in &self.records {
+            w.value(&r.to_json())?;
+        }
+        w.end_array()?;
+        w.key("tp_busy_gpu_seconds")?;
+        w.num(self.tp_busy_gpu_seconds)?;
+        w.key("tp_reconfigs")?;
+        w.num(self.tp_reconfigs as f64)?;
+        w.key("tp_timeline")?;
+        w.begin_array()?;
+        for e in &self.tp_timeline {
+            w.value(&e.to_json())?;
+        }
+        w.end_array()?;
+        w.end_object()?;
+        let bytes = w.bytes_written();
+        w.finish()?;
+        Ok(bytes)
     }
 
     /// FNV-1a digest of [`Report::canonical_json`] — the per-run
@@ -571,6 +605,32 @@ mod tests {
         assert_eq!(rep.canonical_digest(), rep.clone().canonical_digest());
         let other = Report::new(vec![rec(0.0, 1.5, 2.0, 10, 5)]);
         assert_ne!(rep.canonical_digest(), other.canonical_digest());
+    }
+
+    #[test]
+    fn write_json_streams_identical_bytes() {
+        let mut rep = Report::new(vec![
+            rec(0.0, 1.0, 2.0, 10, 5),
+            rec(0.5, 1.5, 3.0, 20, 7),
+        ]);
+        rep.tp_reconfigs = 3;
+        rep.tp_busy_gpu_seconds = 0.75;
+        rep.tp_timeline.push(TpReconfig {
+            t: 1.0,
+            group: 0,
+            instance: 2,
+            tp_after: 4,
+            merge: false,
+        });
+        let mut buf = Vec::new();
+        let n = rep.write_json(&mut buf).unwrap();
+        assert_eq!(n as usize, buf.len());
+        assert_eq!(String::from_utf8(buf).unwrap(), rep.to_json().to_string());
+        // Empty report too (empty containers are the fiddly case).
+        let empty = Report::new(Vec::new());
+        let mut buf = Vec::new();
+        empty.write_json(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), empty.to_json().to_string());
     }
 
     #[test]

@@ -18,15 +18,30 @@
 //! instances are independent between arrivals (the coupled baselines).
 //! [`SimQueue::peek_next_time`] exposes the global horizon (earliest
 //! event of any kind) for systems with cross-instance coupling.
+//!
+//! Requests come from a [`TraceSource`] — a materialized slice
+//! ([`SliceSource`]), any iterator ([`IterSource`]), or a streaming
+//! [`TraceReader`](crate::workload::trace::TraceReader) over a file that
+//! never fits in memory. A bounded look-ahead heap of `lookahead`
+//! pending requests re-sorts arrivals locally, so the next-arrival
+//! horizon the fast-forward paths rely on stays *exact* for any source
+//! whose disorder fits inside the window: the true next arrival is
+//! always in the heap, hence `next_external_time` never under-reports.
+//! A request surfacing *behind* an already-injected arrival means the
+//! source was more disordered than the window — the driver returns an
+//! error instead of silently perturbing horizons.
 
 use crate::metrics::{Report, RequestRecord};
 use crate::sim::engine::EventQueue;
+use crate::util::error::Result;
 use crate::workload::Request;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Driver-level event wrapper. Arrival injection and periodic ticks are
 /// owned by the driver; `Sys` carries a system-specific event.
 enum DriverEv<E> {
-    Arrive(usize),
+    Arrive(Request),
     Tick,
     Sys(E),
 }
@@ -102,6 +117,153 @@ pub struct DriverStats {
     pub arrivals: u64,
     pub ticks: u64,
     pub sys_events: u64,
+}
+
+/// A pull-based supplier of trace requests, in (approximately) arrival
+/// order. The driver tolerates disorder up to its look-ahead window;
+/// see [`run_trace_source_with_stats`].
+pub trait TraceSource {
+    /// Pull the next request; `Ok(None)` = source exhausted.
+    fn next_request(&mut self) -> Result<Option<Request>>;
+
+    /// Total number of requests, when cheaply known upfront.
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// [`TraceSource`] over a materialized slice. Pre-sorts by arrival
+/// (stable by trace index for identical timestamps), so it replays in
+/// exactly the order the eager driver historically used.
+pub struct SliceSource<'a> {
+    trace: &'a [Request],
+    order: Vec<usize>,
+    next: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(trace: &'a [Request]) -> SliceSource<'a> {
+        let mut order: Vec<usize> = (0..trace.len()).collect();
+        order.sort_by(|&a, &b| trace[a].arrival.total_cmp(&trace[b].arrival));
+        SliceSource { trace, order, next: 0 }
+    }
+}
+
+impl TraceSource for SliceSource<'_> {
+    fn next_request(&mut self) -> Result<Option<Request>> {
+        let Some(&i) = self.order.get(self.next) else {
+            return Ok(None);
+        };
+        self.next += 1;
+        Ok(Some(self.trace[i].clone()))
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.trace.len())
+    }
+}
+
+/// [`TraceSource`] over any request iterator, yielded in iterator order
+/// (no pre-sorting — the driver's look-ahead window does the local
+/// reordering, and genuine disorder beyond it is reported as an error).
+pub struct IterSource<I>(pub I);
+
+impl<I: Iterator<Item = Request>> TraceSource for IterSource<I> {
+    fn next_request(&mut self) -> Result<Option<Request>> {
+        Ok(self.0.next())
+    }
+}
+
+/// Cap any [`TraceSource`] at `limit` requests (the `--trace-limit`
+/// CLI flag: smoke-test a prefix of a 100MB trace without reading it).
+pub struct Limited<S> {
+    inner: S,
+    remaining: usize,
+}
+
+impl<S> Limited<S> {
+    pub fn new(inner: S, limit: usize) -> Limited<S> {
+        Limited { inner, remaining: limit }
+    }
+}
+
+impl<S: TraceSource> TraceSource for Limited<S> {
+    fn next_request(&mut self) -> Result<Option<Request>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        let r = self.inner.next_request()?;
+        if r.is_some() {
+            self.remaining -= 1;
+        }
+        Ok(r)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        self.inner.size_hint().map(|n| n.min(self.remaining))
+    }
+}
+
+/// Streamed trace files plug straight into the driver: one request is
+/// decoded per pull, so a simulation over a 100MB trace holds only the
+/// look-ahead window plus in-flight requests.
+impl<R: std::io::Read> TraceSource for crate::workload::trace::TraceReader<R> {
+    fn next_request(&mut self) -> Result<Option<Request>> {
+        Ok(crate::workload::trace::TraceReader::next_request(self)?)
+    }
+}
+
+/// Default look-ahead window for streamed sources: big enough to absorb
+/// incidental local disorder, small enough to be memory-irrelevant.
+pub const DEFAULT_TRACE_LOOKAHEAD: usize = 64;
+
+/// One pending pulled-but-not-injected request in the look-ahead heap,
+/// min-ordered by (arrival, pull sequence) so ties replay in source
+/// order — exactly the stable sort the slice path uses.
+struct Pending {
+    arrival: f64,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Pending) -> bool {
+        self.arrival.total_cmp(&other.arrival).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Pending) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Pending) -> std::cmp::Ordering {
+        self.arrival.total_cmp(&other.arrival).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Top up the look-ahead heap to `lookahead` pending requests.
+fn fill_lookahead<T: TraceSource + ?Sized>(
+    heap: &mut BinaryHeap<Reverse<Pending>>,
+    src: &mut T,
+    seq: &mut u64,
+    exhausted: &mut bool,
+    lookahead: usize,
+) -> Result<()> {
+    while !*exhausted && heap.len() < lookahead {
+        match src.next_request()? {
+            Some(req) => {
+                heap.push(Reverse(Pending { arrival: req.arrival, seq: *seq, req }));
+                *seq += 1;
+            }
+            None => *exhausted = true,
+        }
+    }
+    Ok(())
 }
 
 /// A serving system that can be driven over a request trace by
@@ -194,29 +356,46 @@ fn stall_message<S: ServingSystem + ?Sized>(sys: &S, total: usize, detail: &str)
     msg
 }
 
-/// [`run_trace`] plus the dispatch counters (see [`DriverStats`]).
-pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
+/// The generic discrete-event loop over a pull-based [`TraceSource`]:
+/// keep a look-ahead heap of up to `lookahead` pending requests, inject
+/// the earliest lazily (next arrival queued *before* routing the current
+/// one, so every handler sees a complete horizon), arm the periodic
+/// tick, dispatch until every injected request finished.
+///
+/// Errors if the source fails mid-stream or surfaces a request earlier
+/// than one already injected (disorder beyond the look-ahead window —
+/// the horizon guarantee would silently break otherwise). Panics with a
+/// stall diagnostic if the event queue drains while requests are still
+/// outstanding — a scheduling-policy bug, never a workload property.
+pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?Sized>(
     sys: &mut S,
-    trace: &[Request],
-) -> (Report, DriverStats) {
+    src: &mut T,
+    lookahead: usize,
+) -> Result<(Report, DriverStats)> {
     // Consecutive ticks with an otherwise-empty queue and no completion
     // progress before we declare a stall. One idle tick is legitimate
     // (e.g. a role-flip cooldown can defer work to the next tick);
     // several in a row mean no event will ever fire again.
     const MAX_IDLE_TICKS: u32 = 3;
-    let total = trace.len();
+    let lookahead = lookahead.max(1);
     let mut q: EventQueue<DriverEv<S::Ev>> = EventQueue::new();
-    // Lazy arrival injection: requests enter the queue one at a time in
-    // arrival order (stable by trace index for identical timestamps, so
-    // replays match the eager-injection behaviour).
-    let mut order: Vec<usize> = (0..total).collect();
-    order.sort_by(|&a, &b| trace[a].arrival.total_cmp(&trace[b].arrival));
-    let mut next_arrival = 0usize;
+    let mut heap: BinaryHeap<Reverse<Pending>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut exhausted = false;
+    // Requests pushed into the event queue so far; the driver's running
+    // notion of "total". An injected-but-unrouted request cannot be
+    // completed, so `exhausted && heap empty && is_done(injected)`
+    // implies no Arrive event is still pending.
+    let mut injected = 0usize;
+    let mut last_injected = f64::NEG_INFINITY;
     let mut ext = ExternalTimes::default();
-    if let Some(&i) = order.first() {
-        q.push(trace[i].arrival, DriverEv::Arrive(i));
-        ext.arrival = Some(trace[i].arrival);
-        next_arrival = 1;
+    fill_lookahead(&mut heap, src, &mut seq, &mut exhausted, lookahead)?;
+    if let Some(Reverse(p)) = heap.pop() {
+        q.push(p.arrival, DriverEv::Arrive(p.req));
+        ext.arrival = Some(p.arrival);
+        last_injected = p.arrival;
+        injected += 1;
+        fill_lookahead(&mut heap, src, &mut seq, &mut exhausted, lookahead)?;
     }
     if let Some(dt) = sys.tick_interval() {
         q.push(dt, DriverEv::Tick);
@@ -224,25 +403,37 @@ pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
     }
     let mut stats = DriverStats::default();
     let mut idle_ticks = 0u32;
-    while !sys.is_done(total) {
+    while !(exhausted && heap.is_empty() && sys.is_done(injected)) {
         let Some((_, ev)) = q.pop() else {
-            panic!("{}", stall_message(sys, total, ""));
+            panic!("{}", stall_message(sys, injected, ""));
         };
         stats.events += 1;
         match ev {
-            DriverEv::Arrive(i) => {
+            DriverEv::Arrive(req) => {
                 stats.arrivals += 1;
                 idle_ticks = 0;
                 // Queue the next arrival *before* routing so every
                 // handler sees a complete horizon.
-                if let Some(&j) = order.get(next_arrival) {
-                    q.push(trace[j].arrival, DriverEv::Arrive(j));
-                    ext.arrival = Some(trace[j].arrival.max(q.now()));
-                    next_arrival += 1;
+                if let Some(Reverse(p)) = heap.pop() {
+                    if p.arrival < last_injected {
+                        crate::bail!(
+                            "trace not sorted within look-ahead horizon: arrival {} \
+                             surfaced after {} was already injected (window {}); sort \
+                             the trace or raise the look-ahead",
+                            p.arrival,
+                            last_injected,
+                            lookahead
+                        );
+                    }
+                    q.push(p.arrival, DriverEv::Arrive(p.req));
+                    ext.arrival = Some(p.arrival.max(q.now()));
+                    last_injected = p.arrival;
+                    injected += 1;
+                    fill_lookahead(&mut heap, src, &mut seq, &mut exhausted, lookahead)?;
                 } else {
                     ext.arrival = None;
                 }
-                sys.route(trace[i].clone(), &mut SimQueue { inner: &mut q, ext });
+                sys.route(req, &mut SimQueue { inner: &mut q, ext });
             }
             DriverEv::Sys(e) => {
                 stats.sys_events += 1;
@@ -257,9 +448,10 @@ pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
                 // coalescing horizons must stay truthful for any system
                 // that reads them from a tick path. A stale tick left
                 // behind by a run that completes inside `on_tick` is
-                // harmless: the loop exits on `is_done`.
+                // harmless: the loop exits on the done condition.
+                let done = exhausted && heap.is_empty() && sys.is_done(injected);
                 let rearmed = match sys.tick_interval() {
-                    Some(dt) if !sys.is_done(total) => {
+                    Some(dt) if !done => {
                         let t = q.now() + dt.max(0.0);
                         q.push(t, DriverEv::Tick);
                         ext.tick = Some(t);
@@ -284,7 +476,7 @@ pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
                                 "{}",
                                 stall_message(
                                     sys,
-                                    total,
+                                    injected,
                                     &format!(" ({idle_ticks} consecutive idle ticks)")
                                 )
                             );
@@ -298,7 +490,30 @@ pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
     }
     let mut report = Report::new(sys.drain_records());
     sys.annotate_report(&mut report);
-    (report, stats)
+    Ok((report, stats))
+}
+
+/// [`run_trace_source_with_stats`] without the counters.
+pub fn run_trace_source<S: ServingSystem + ?Sized, T: TraceSource + ?Sized>(
+    sys: &mut S,
+    src: &mut T,
+    lookahead: usize,
+) -> Result<Report> {
+    Ok(run_trace_source_with_stats(sys, src, lookahead)?.0)
+}
+
+/// [`run_trace`] plus the dispatch counters (see [`DriverStats`]).
+///
+/// Slice-backed wrapper over the source-based loop: [`SliceSource`]
+/// pre-sorts, so a look-ahead of 1 replays the exact historical
+/// injection order and no source error is possible.
+pub fn run_trace_with_stats<S: ServingSystem + ?Sized>(
+    sys: &mut S,
+    trace: &[Request],
+) -> (Report, DriverStats) {
+    let mut src = SliceSource::new(trace);
+    run_trace_source_with_stats(sys, &mut src, 1)
+        .expect("slice sources are pre-sorted and infallible")
 }
 
 /// The generic discrete-event loop: inject arrivals, arm the periodic
@@ -492,5 +707,63 @@ mod tests {
         sys.drop_all = true;
         sys.tick_every = Some(0.5);
         sys.run(&[req(0, 0.0)]);
+    }
+
+    // -- TraceSource paths ----------------------------------------------
+
+    #[test]
+    fn iterator_source_matches_slice_run() {
+        let trace: Vec<Request> = (0..20).map(|i| req(i, i as f64 * 0.3)).collect();
+        let slice_rep = Fifo::new().run(&trace);
+        for lookahead in [1, 4, DEFAULT_TRACE_LOOKAHEAD] {
+            let mut sys = Fifo::new();
+            let mut src = IterSource(trace.iter().cloned());
+            let (rep, stats) =
+                run_trace_source_with_stats(&mut sys, &mut src, lookahead).unwrap();
+            assert_eq!(rep.records.len(), slice_rep.records.len());
+            assert_eq!(stats.arrivals, 20);
+            for (a, b) in slice_rep.records.iter().zip(&rep.records) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.first_token, b.first_token);
+                assert_eq!(a.finish, b.finish);
+            }
+        }
+    }
+
+    #[test]
+    fn lookahead_absorbs_local_disorder() {
+        // Shuffled within a window of 3: a look-ahead of 4 must re-sort
+        // it into the same schedule as the pre-sorted slice path.
+        let shuffled = vec![req(1, 0.5), req(0, 0.2), req(2, 0.9), req(4, 2.0), req(3, 1.4)];
+        let slice_rep = Fifo::new().run(&shuffled);
+        let mut sys = Fifo::new();
+        let mut src = IterSource(shuffled.iter().cloned());
+        let rep = run_trace_source(&mut sys, &mut src, 4).unwrap();
+        for (a, b) in slice_rep.records.iter().zip(&rep.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish, b.finish);
+        }
+    }
+
+    #[test]
+    fn disorder_beyond_lookahead_errors() {
+        // With a window of 1 the driver injects 2.0 first, then sees 0.5
+        // — an order violation it must report, not silently absorb.
+        let trace = vec![req(0, 2.0), req(1, 0.5)];
+        let mut sys = Fifo::new();
+        let mut src = IterSource(trace.into_iter());
+        let err = run_trace_source(&mut sys, &mut src, 1)
+            .expect_err("disorder beyond the window must error");
+        assert!(err.to_string().contains("look-ahead"), "got: {err}");
+    }
+
+    #[test]
+    fn limited_source_caps_request_count() {
+        let trace: Vec<Request> = (0..10).map(|i| req(i, i as f64 * 0.1)).collect();
+        let mut sys = Fifo::new();
+        let mut src = Limited::new(SliceSource::new(&trace), 4);
+        assert_eq!(src.size_hint(), Some(4));
+        let rep = run_trace_source(&mut sys, &mut src, 8).unwrap();
+        assert_eq!(rep.records.len(), 4);
     }
 }

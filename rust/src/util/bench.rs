@@ -107,18 +107,34 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// committed baselines are deliberately conservative (documented in
 /// `BENCH_baseline.json`) — they catch order-of-magnitude regressions
 /// (an accidental O(n²) hot loop, allocation storms) without flaking on
-/// runner speed. `runs_per_sec` is the sweep engine's throughput floor.
-const FLOOR_KEYS: [&str; 4] =
-    ["events_per_sec_ff_on", "events_per_sec_ff_off", "speedup", "runs_per_sec"];
+/// runner speed. `runs_per_sec` is the sweep engine's throughput floor;
+/// the `*_mib_per_sec_streamed` pair and `streamed_vs_dom_read_speedup`
+/// are the trace-I/O bench's streaming-throughput floors.
+const FLOOR_KEYS: [&str; 7] = [
+    "events_per_sec_ff_on",
+    "events_per_sec_ff_off",
+    "speedup",
+    "runs_per_sec",
+    "read_mib_per_sec_streamed",
+    "write_mib_per_sec_streamed",
+    "streamed_vs_dom_read_speedup",
+];
 
 /// Per-system keys treated as **ceilings**: the measurement must stay
 /// under `baseline * (1 + tolerance)`. Event counts are deterministic
 /// for a fixed seed/trace, so a blowup here is a machine-independent
 /// algorithmic regression (e.g. the fast-forward predicate rotting to
 /// `false`, or coalescing silently disabled). `runs_total` /
-/// `events_total` are the sweep's deterministic aggregate counts.
-const CEILING_KEYS: [&str; 4] =
-    ["events_ff_on", "events_ff_off", "runs_total", "events_total"];
+/// `events_total` are the sweep's deterministic aggregate counts;
+/// `streamed_peak_buffered_bytes` is the streaming reader's
+/// constant-memory guarantee (deterministic for a fixed chunk size).
+const CEILING_KEYS: [&str; 5] = [
+    "events_ff_on",
+    "events_ff_off",
+    "runs_total",
+    "events_total",
+    "streamed_peak_buffered_bytes",
+];
 
 /// [`check_regression_section`] against the conventional `systems`
 /// section (the per-serving-system layout of `BENCH_sim.json`).

@@ -1,13 +1,38 @@
-//! Minimal JSON implementation (parse + serialize).
+//! Minimal JSON implementation (parse + serialize), DOM and streaming.
 //!
 //! The offline vendor set has no `serde`/`serde_json`, so configs, traces
 //! and benchmark result files go through this module. It supports the
 //! full JSON data model (objects, arrays, strings with escapes, numbers,
 //! bools, null) and pretty/compact output. Numbers are held as `f64`,
-//! which is sufficient for every config field we use.
+//! which is sufficient for every config field we use; 64-bit ids take
+//! the lossless [`Json::u64`] path (decimal string above 2^53).
+//!
+//! Two entry points share one scalar lexer (`decode_string_into` /
+//! `parse_number_bytes`), so they accept exactly the same language:
+//!
+//! * the DOM: [`Json::parse`] over a complete `&str`, built by the
+//!   recursive-descent `Parser`;
+//! * the stream: [`JsonReader`] over any `std::io::Read`, emitting
+//!   begin/end-container, key, and scalar [`JsonEvent`]s one at a time
+//!   with a bounded buffer — 100MB trace files never materialize.
+//!
+//! [`JsonWriter`] is the streaming dual: it produces byte-identical
+//! output to compact DOM serialization while holding only a small
+//! flush buffer.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
+
+/// Maximum container nesting accepted by [`Json::parse`] and
+/// [`JsonReader`]. Adversarial deeply-nested input errors cleanly at
+/// this depth instead of overflowing the parse stack.
+pub const MAX_DEPTH: usize = 512;
+
+/// Largest integer magnitude `f64` represents exactly (2^53). Ids above
+/// this lose low bits through the `f64` number path, so [`Json::u64`]
+/// switches to a decimal string beyond it.
+pub const MAX_SAFE_JSON_INT: u64 = 1 << 53;
 
 /// A JSON value. Object keys are ordered (BTreeMap) so serialization is
 /// deterministic — handy for golden-file tests.
@@ -57,7 +82,7 @@ impl Json {
     }
 
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        let mut p = Parser { b: s.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -65,6 +90,18 @@ impl Json {
             return Err(p.err("trailing data"));
         }
         Ok(v)
+    }
+
+    /// Parse a single JSON document from a byte stream through the
+    /// streaming [`JsonReader`] (bounded read memory; the differential
+    /// property tests pin it byte-for-byte to [`Json::parse`]).
+    pub fn from_reader<R: io::Read>(src: R) -> Result<Json, JsonError> {
+        let mut r = JsonReader::new(src);
+        let v = r.read_value()?;
+        match r.next_event()? {
+            None => Ok(v),
+            Some(_) => unreachable!("no events can follow the top-level value"),
+        }
     }
 
     // -- typed accessors -------------------------------------------------
@@ -76,8 +113,18 @@ impl Json {
         }
     }
 
+    /// Accepts both the `f64` number path and the decimal-string path
+    /// [`Json::u64`] uses for ids above 2^53, so old and new trace
+    /// files both load.
     pub fn as_u64(&self) -> Result<u64, JsonError> {
-        Ok(self.as_f64()?.round() as u64)
+        match self {
+            Json::Num(n) => Ok(n.round() as u64),
+            Json::Str(s) => s.parse::<u64>().map_err(|_| JsonError::Type {
+                expected: "u64 number or decimal string",
+                got: "string",
+            }),
+            other => Err(JsonError::Type { expected: "number", got: other.type_name() }),
+        }
     }
 
     pub fn as_usize(&self) -> Result<usize, JsonError> {
@@ -150,6 +197,17 @@ impl Json {
         Json::Num(n)
     }
 
+    /// Lossless u64: the plain number path while exactly representable
+    /// in `f64`, a decimal string above 2^53 (content hashes and ids use
+    /// the full 64 bits). [`Json::as_u64`] reads back both forms.
+    pub fn u64(x: u64) -> Json {
+        if x <= MAX_SAFE_JSON_INT {
+            Json::Num(x as f64)
+        } else {
+            Json::Str(x.to_string())
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -173,13 +231,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
+            Json::Num(n) => push_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -237,6 +289,17 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
+/// Canonical number formatting shared by DOM serialization and the
+/// streaming [`JsonWriter`]: integral values under 1e15 print as
+/// integers so id-bearing fields round-trip cleanly.
+fn push_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -253,9 +316,109 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+// -- shared scalar lexer -------------------------------------------------
+//
+// The DOM `Parser` and the streaming `JsonReader` drive the grammar
+// differently (slice recursion vs. a pull state machine), but a string
+// body or number span, once isolated, is decoded by exactly one piece of
+// code. That is what makes the reader-vs-DOM differential property test
+// meaningful: the drivers can disagree on structure, never on scalars.
+
+/// Read 4 hex digits from `b` at `i`; returns the code unit and the
+/// index past it. Error offset is relative to `b`.
+fn hex4(b: &[u8], i: usize) -> Result<(u32, usize), (usize, String)> {
+    let mut code = 0u32;
+    for k in 0..4 {
+        let Some(&c) = b.get(i + k) else {
+            return Err((i + k, "bad \\u escape".to_string()));
+        };
+        let Some(d) = (c as char).to_digit(16) else {
+            return Err((i + k, "bad hex in \\u".to_string()));
+        };
+        code = code * 16 + d;
+    }
+    Ok((code, i + 4))
+}
+
+/// Decode the body of a JSON string literal (the bytes between the
+/// quotes, escapes still encoded) into `out`. On error, returns the
+/// byte offset within `b` plus a message.
+fn decode_string_into(b: &[u8], out: &mut String) -> Result<(), (usize, String)> {
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\\' {
+            let Some(&e) = b.get(i + 1) else {
+                return Err((i, "bad escape".to_string()));
+            };
+            i += 2;
+            match e {
+                b'"' => out.push('"'),
+                b'\\' => out.push('\\'),
+                b'/' => out.push('/'),
+                b'n' => out.push('\n'),
+                b't' => out.push('\t'),
+                b'r' => out.push('\r'),
+                b'b' => out.push('\u{8}'),
+                b'f' => out.push('\u{c}'),
+                b'u' => {
+                    let (code, next) = hex4(b, i)?;
+                    i = next;
+                    // Surrogate pairs: a high surrogate must be followed
+                    // by an escaped low surrogate.
+                    let ch = if (0xD800..0xDC00).contains(&code) {
+                        if b.get(i) != Some(&b'\\') || b.get(i + 1) != Some(&b'u') {
+                            return Err((i, "unpaired surrogate".to_string()));
+                        }
+                        let (low, next) = hex4(b, i + 2)?;
+                        i = next;
+                        if !(0xDC00..0xE000).contains(&low) {
+                            return Err((i, "unpaired surrogate".to_string()));
+                        }
+                        0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
+                    } else {
+                        code
+                    };
+                    match char::from_u32(ch) {
+                        Some(ch) => out.push(ch),
+                        None => return Err((i, "bad codepoint".to_string())),
+                    }
+                }
+                _ => return Err((i - 2, "bad escape".to_string())),
+            }
+        } else if c < 0x80 {
+            out.push(c as char);
+            i += 1;
+        } else {
+            // Validate the UTF-8 sequence starting at this byte.
+            let len = match c {
+                0xC0..=0xDF => 2,
+                0xE0..=0xEF => 3,
+                0xF0..=0xF7 => 4,
+                _ => return Err((i, "bad utf-8".to_string())),
+            };
+            if i + len > b.len() {
+                return Err((i, "truncated utf-8".to_string()));
+            }
+            match std::str::from_utf8(&b[i..i + len]) {
+                Ok(s) => out.push_str(s),
+                Err(_) => return Err((i, "bad utf-8".to_string())),
+            }
+            i += len;
+        }
+    }
+    Ok(())
+}
+
+/// Parse a complete number span (as isolated by either grammar driver).
+fn parse_number_bytes(b: &[u8]) -> Option<f64> {
+    std::str::from_utf8(b).ok()?.parse::<f64>().ok()
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -299,6 +462,14 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting exceeds depth limit {MAX_DEPTH}")));
+        }
+        Ok(())
+    }
+
     fn value(&mut self) -> Result<Json, JsonError> {
         self.skip_ws();
         match self.peek() {
@@ -316,10 +487,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -332,7 +505,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => {
                     self.pos = self.pos.saturating_sub(1);
                     return Err(self.err("expected ',' or '}'"));
@@ -343,10 +519,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut arr = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(arr));
         }
         loop {
@@ -354,7 +532,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(arr)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(arr));
+                }
                 _ => {
                     self.pos = self.pos.saturating_sub(1);
                     return Err(self.err("expected ',' or ']'"));
@@ -365,73 +546,29 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        let start = self.pos;
+        // Scan to the closing quote (escape pairs skipped atomically),
+        // then decode the raw body through the shared lexer.
         loop {
-            match self.bump() {
-                Some(b'"') => return Ok(out),
-                Some(b'\\') => match self.bump() {
-                    Some(b'"') => out.push('"'),
-                    Some(b'\\') => out.push('\\'),
-                    Some(b'/') => out.push('/'),
-                    Some(b'n') => out.push('\n'),
-                    Some(b't') => out.push('\t'),
-                    Some(b'r') => out.push('\r'),
-                    Some(b'b') => out.push('\u{8}'),
-                    Some(b'f') => out.push('\u{c}'),
-                    Some(b'u') => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump().ok_or_else(|| self.err("bad \\u escape"))?;
-                            code = code * 16
-                                + (c as char)
-                                    .to_digit(16)
-                                    .ok_or_else(|| self.err("bad hex in \\u"))?;
-                        }
-                        // Surrogate pairs: if high surrogate, expect a low one.
-                        let ch = if (0xD800..0xDC00).contains(&code) {
-                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
-                                return Err(self.err("unpaired surrogate"));
-                            }
-                            let mut low = 0u32;
-                            for _ in 0..4 {
-                                let c =
-                                    self.bump().ok_or_else(|| self.err("bad \\u escape"))?;
-                                low = low * 16
-                                    + (c as char)
-                                        .to_digit(16)
-                                        .ok_or_else(|| self.err("bad hex in \\u"))?;
-                            }
-                            0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
-                        } else {
-                            code
-                        };
-                        out.push(
-                            char::from_u32(ch).ok_or_else(|| self.err("bad codepoint"))?,
-                        );
+            match self.b.get(self.pos) {
+                Some(b'"') => break,
+                Some(b'\\') => {
+                    if self.pos + 1 >= self.b.len() {
+                        self.pos = self.b.len();
+                        return Err(self.err("unterminated string"));
                     }
-                    _ => return Err(self.err("bad escape")),
-                },
-                Some(c) if c < 0x80 => out.push(c as char),
-                Some(c) => {
-                    // Re-decode the UTF-8 sequence starting at this byte.
-                    let start = self.pos - 1;
-                    let len = match c {
-                        0xC0..=0xDF => 2,
-                        0xE0..=0xEF => 3,
-                        0xF0..=0xF7 => 4,
-                        _ => return Err(self.err("bad utf-8")),
-                    };
-                    if start + len > self.b.len() {
-                        return Err(self.err("truncated utf-8"));
-                    }
-                    let s = std::str::from_utf8(&self.b[start..start + len])
-                        .map_err(|_| self.err("bad utf-8"))?;
-                    out.push_str(s);
-                    self.pos = start + len;
+                    self.pos += 2;
                 }
+                Some(_) => self.pos += 1,
                 None => return Err(self.err("unterminated string")),
             }
         }
+        let body = &self.b[start..self.pos];
+        self.pos += 1; // closing quote
+        let mut out = String::with_capacity(body.len());
+        decode_string_into(body, &mut out)
+            .map_err(|(off, msg)| JsonError::Parse { pos: start + off, msg })?;
+        Ok(out)
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -457,16 +594,680 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        s.parse::<f64>()
+        parse_number_bytes(&self.b[start..self.pos])
             .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+            .ok_or_else(|| self.err("bad number"))
+    }
+}
+
+// -- streaming reader ----------------------------------------------------
+
+/// One event from the streaming [`JsonReader`]. Borrowed payloads point
+/// into the reader's scratch storage and are valid until the next
+/// `next_event` call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JsonEvent<'a> {
+    BeginObject,
+    EndObject,
+    BeginArray,
+    EndArray,
+    /// Object key; the events that follow form its value.
+    Key(&'a str),
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(&'a str),
+}
+
+/// Container kind on the reader's (and writer's) explicit stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Frame {
+    Object,
+    Array,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReaderState {
+    /// Expecting the single top-level value.
+    Start,
+    /// Just after `{`: a key or `}`.
+    FirstKeyOrEnd,
+    /// Just after `,` inside an object: a key.
+    NextKey,
+    /// Just after `[`: a value or `]`.
+    FirstValueOrEnd,
+    /// Expecting a value (array element or object value after `:`).
+    Value,
+    /// A value just completed inside a container: `,` or the closer.
+    AfterValue,
+    /// Top-level value complete: only trailing whitespace allowed.
+    Eof,
+}
+
+const DEFAULT_CHUNK: usize = 64 * 1024;
+
+/// Pull-based streaming JSON reader over any [`io::Read`].
+///
+/// Drives the same grammar as the DOM parser but holds only a fixed
+/// read chunk plus the current token in memory, so arbitrarily large
+/// documents stream through it. [`JsonReader::peak_buffered`] reports
+/// the high-water mark of resident bytes — the constant-memory
+/// assertion in `benches/trace_io.rs` gates on it.
+pub struct JsonReader<R: io::Read> {
+    src: R,
+    buf: Vec<u8>,
+    /// Valid bytes in `buf`.
+    len: usize,
+    /// Next unread byte in `buf`.
+    pos: usize,
+    /// Bytes consumed from `src` before `buf[0]`.
+    base: u64,
+    at_eof: bool,
+    stack: Vec<Frame>,
+    state: ReaderState,
+    /// Raw bytes of the token being lexed (may span buffer refills).
+    scratch: Vec<u8>,
+    /// Decoded text of the last `Key`/`Str` event.
+    sval: String,
+    peak_buffered: usize,
+}
+
+impl<R: io::Read> JsonReader<R> {
+    pub fn new(src: R) -> JsonReader<R> {
+        JsonReader::with_chunk(src, DEFAULT_CHUNK)
+    }
+
+    /// Reader with an explicit read-chunk size (tests use 1-byte chunks
+    /// to stress token reassembly across refills).
+    pub fn with_chunk(src: R, chunk: usize) -> JsonReader<R> {
+        JsonReader {
+            src,
+            buf: vec![0; chunk.max(1)],
+            len: 0,
+            pos: 0,
+            base: 0,
+            at_eof: false,
+            stack: Vec::new(),
+            state: ReaderState::Start,
+            scratch: Vec::new(),
+            sval: String::new(),
+            peak_buffered: 0,
+        }
+    }
+
+    /// Total bytes consumed from the underlying reader so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.base + self.pos as u64
+    }
+
+    /// High-water mark of resident bytes (read chunk + token scratch +
+    /// decoded scalar) — the peak-RSS proxy for the constant-memory
+    /// assertion: it stays near the chunk size however large the input.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    fn position(&self) -> usize {
+        (self.base + self.pos as u64) as usize
+    }
+
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError::Parse { pos: self.position(), msg: msg.into() }
+    }
+
+    fn note_buffered(&mut self) {
+        let cur = self.len + self.scratch.len() + self.sval.len();
+        self.peak_buffered = self.peak_buffered.max(cur);
+    }
+
+    /// Refill the chunk buffer; `Ok(false)` = clean EOF.
+    fn refill(&mut self) -> Result<bool, JsonError> {
+        if self.at_eof {
+            return Ok(false);
+        }
+        debug_assert_eq!(self.pos, self.len);
+        self.base += self.len as u64;
+        self.pos = 0;
+        self.len = 0;
+        loop {
+            match self.src.read(&mut self.buf) {
+                Ok(0) => {
+                    self.at_eof = true;
+                    return Ok(false);
+                }
+                Ok(n) => {
+                    self.len = n;
+                    self.note_buffered();
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(self.err(format!("io error: {e}"))),
+            }
+        }
+    }
+
+    fn peek_byte(&mut self) -> Result<Option<u8>, JsonError> {
+        if self.pos == self.len && !self.refill()? {
+            return Ok(None);
+        }
+        Ok(Some(self.buf[self.pos]))
+    }
+
+    fn next_byte(&mut self) -> Result<Option<u8>, JsonError> {
+        let b = self.peek_byte()?;
+        if b.is_some() {
+            self.pos += 1;
+        }
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) -> Result<(), JsonError> {
+        loop {
+            while self.pos < self.len {
+                match self.buf[self.pos] {
+                    b' ' | b'\t' | b'\n' | b'\r' => self.pos += 1,
+                    _ => return Ok(()),
+                }
+            }
+            if !self.refill()? {
+                return Ok(());
+            }
+        }
+    }
+
+    fn expect_lit(&mut self, rest: &[u8], msg: &'static str) -> Result<(), JsonError> {
+        for &want in rest {
+            match self.next_byte()? {
+                Some(c) if c == want => {}
+                _ => return Err(self.err(msg)),
+            }
+        }
+        Ok(())
+    }
+
+    fn push_frame(&mut self, f: Frame) -> Result<(), JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.err(format!("nesting exceeds depth limit {MAX_DEPTH}")));
+        }
+        self.stack.push(f);
+        Ok(())
+    }
+
+    fn after_value_state(&self) -> ReaderState {
+        if self.stack.is_empty() {
+            ReaderState::Eof
+        } else {
+            ReaderState::AfterValue
+        }
+    }
+
+    /// Lex a string literal (opening quote already consumed) into
+    /// `self.sval`. Raw bytes accumulate in `scratch` across refills;
+    /// decoding goes through the shared lexer.
+    fn lex_string(&mut self) -> Result<(), JsonError> {
+        self.scratch.clear();
+        loop {
+            if self.pos == self.len && !self.refill()? {
+                return Err(self.err("unterminated string"));
+            }
+            let c = self.buf[self.pos];
+            if c == b'"' {
+                self.pos += 1;
+                break;
+            }
+            if c == b'\\' {
+                // Consume the escape pair atomically so a quote after a
+                // backslash is never mistaken for the terminator.
+                self.pos += 1;
+                self.scratch.push(b'\\');
+                match self.next_byte()? {
+                    Some(e) => self.scratch.push(e),
+                    None => return Err(self.err("unterminated string")),
+                }
+                continue;
+            }
+            // Plain run: copy up to the next quote/escape/buffer end.
+            let mut i = self.pos;
+            while i < self.len && self.buf[i] != b'"' && self.buf[i] != b'\\' {
+                i += 1;
+            }
+            self.scratch.extend_from_slice(&self.buf[self.pos..i]);
+            self.pos = i;
+        }
+        self.sval.clear();
+        let pos = self.position();
+        if let Err((_, msg)) = decode_string_into(&self.scratch, &mut self.sval) {
+            return Err(JsonError::Parse { pos, msg });
+        }
+        self.note_buffered();
+        Ok(())
+    }
+
+    fn take_digits(&mut self) -> Result<(), JsonError> {
+        while let Some(c) = self.peek_byte()? {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            self.scratch.push(c);
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Lex a number (same phase structure as the DOM scanner, so both
+    /// paths isolate identical spans).
+    fn lex_number(&mut self) -> Result<f64, JsonError> {
+        self.scratch.clear();
+        if self.peek_byte()? == Some(b'-') {
+            self.scratch.push(b'-');
+            self.pos += 1;
+        }
+        self.take_digits()?;
+        if self.peek_byte()? == Some(b'.') {
+            self.scratch.push(b'.');
+            self.pos += 1;
+            self.take_digits()?;
+        }
+        if matches!(self.peek_byte()?, Some(b'e' | b'E')) {
+            self.scratch.push(self.buf[self.pos]);
+            self.pos += 1;
+            if matches!(self.peek_byte()?, Some(b'+' | b'-')) {
+                self.scratch.push(self.buf[self.pos]);
+                self.pos += 1;
+            }
+            self.take_digits()?;
+        }
+        self.note_buffered();
+        parse_number_bytes(&self.scratch).ok_or_else(|| self.err("bad number"))
+    }
+
+    fn value_event(&mut self) -> Result<JsonEvent<'_>, JsonError> {
+        match self.peek_byte()? {
+            Some(b'{') => {
+                self.pos += 1;
+                self.push_frame(Frame::Object)?;
+                self.state = ReaderState::FirstKeyOrEnd;
+                Ok(JsonEvent::BeginObject)
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.push_frame(Frame::Array)?;
+                self.state = ReaderState::FirstValueOrEnd;
+                Ok(JsonEvent::BeginArray)
+            }
+            Some(b'"') => {
+                self.pos += 1;
+                self.lex_string()?;
+                self.state = self.after_value_state();
+                Ok(JsonEvent::Str(&self.sval))
+            }
+            Some(b't') => {
+                self.pos += 1;
+                self.expect_lit(b"rue", "expected 'true'")?;
+                self.state = self.after_value_state();
+                Ok(JsonEvent::Bool(true))
+            }
+            Some(b'f') => {
+                self.pos += 1;
+                self.expect_lit(b"alse", "expected 'false'")?;
+                self.state = self.after_value_state();
+                Ok(JsonEvent::Bool(false))
+            }
+            Some(b'n') => {
+                self.pos += 1;
+                self.expect_lit(b"ull", "expected 'null'")?;
+                self.state = self.after_value_state();
+                Ok(JsonEvent::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.lex_number()?;
+                self.state = self.after_value_state();
+                Ok(JsonEvent::Num(n))
+            }
+            Some(c) => Err(self.err(format!("unexpected byte '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn key_event(&mut self) -> Result<JsonEvent<'_>, JsonError> {
+        match self.peek_byte()? {
+            Some(b'"') => {}
+            Some(_) => return Err(self.err("expected object key string")),
+            None => return Err(self.err("unexpected end of input")),
+        }
+        self.pos += 1;
+        self.lex_string()?;
+        self.skip_ws()?;
+        match self.next_byte()? {
+            Some(b':') => {}
+            _ => return Err(self.err("expected ':'")),
+        }
+        self.state = ReaderState::Value;
+        Ok(JsonEvent::Key(&self.sval))
+    }
+
+    /// Pull the next event. `Ok(None)` = clean end of the document
+    /// (exactly one top-level value; trailing non-whitespace errors).
+    pub fn next_event(&mut self) -> Result<Option<JsonEvent<'_>>, JsonError> {
+        loop {
+            self.skip_ws()?;
+            match self.state {
+                ReaderState::Eof => {
+                    return match self.peek_byte()? {
+                        None => Ok(None),
+                        Some(_) => Err(self.err("trailing data")),
+                    };
+                }
+                ReaderState::Start | ReaderState::Value => {
+                    return self.value_event().map(Some);
+                }
+                ReaderState::FirstValueOrEnd => {
+                    if self.peek_byte()? == Some(b']') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.state = self.after_value_state();
+                        return Ok(Some(JsonEvent::EndArray));
+                    }
+                    return self.value_event().map(Some);
+                }
+                ReaderState::FirstKeyOrEnd => {
+                    if self.peek_byte()? == Some(b'}') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.state = self.after_value_state();
+                        return Ok(Some(JsonEvent::EndObject));
+                    }
+                    return self.key_event().map(Some);
+                }
+                ReaderState::NextKey => {
+                    return self.key_event().map(Some);
+                }
+                ReaderState::AfterValue => {
+                    let frame = *self.stack.last().expect("AfterValue implies a container");
+                    match self.peek_byte()? {
+                        Some(b',') => {
+                            self.pos += 1;
+                            self.state = match frame {
+                                Frame::Array => ReaderState::Value,
+                                Frame::Object => ReaderState::NextKey,
+                            };
+                            continue;
+                        }
+                        Some(b']') if frame == Frame::Array => {
+                            self.pos += 1;
+                            self.stack.pop();
+                            self.state = self.after_value_state();
+                            return Ok(Some(JsonEvent::EndArray));
+                        }
+                        Some(b'}') if frame == Frame::Object => {
+                            self.pos += 1;
+                            self.stack.pop();
+                            self.state = self.after_value_state();
+                            return Ok(Some(JsonEvent::EndObject));
+                        }
+                        _ => {
+                            return Err(self.err(match frame {
+                                Frame::Array => "expected ',' or ']'",
+                                Frame::Object => "expected ',' or '}'",
+                            }));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consume and discard the next complete value (used to skip unknown
+    /// fields without building a DOM).
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            let pos = self.position();
+            let Some(ev) = self.next_event()? else {
+                return Err(JsonError::Parse {
+                    pos,
+                    msg: "unexpected end of input".to_string(),
+                });
+            };
+            match ev {
+                JsonEvent::BeginObject | JsonEvent::BeginArray => depth += 1,
+                JsonEvent::EndObject | JsonEvent::EndArray => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                JsonEvent::Key(_) => {}
+                _ => {
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Build a DOM [`Json`] from the next complete value's events
+    /// (iterative — container depth is already bounded by the reader's
+    /// stack limit, but no parse recursion happens at all).
+    pub fn read_value(&mut self) -> Result<Json, JsonError> {
+        enum Ctx {
+            Arr(Vec<Json>),
+            Obj(BTreeMap<String, Json>, Option<String>),
+        }
+        let mut ctxs: Vec<Ctx> = Vec::new();
+        loop {
+            let pos = self.position();
+            let Some(ev) = self.next_event()? else {
+                return Err(JsonError::Parse {
+                    pos,
+                    msg: "unexpected end of input".to_string(),
+                });
+            };
+            let complete: Option<Json> = match ev {
+                JsonEvent::BeginArray => {
+                    ctxs.push(Ctx::Arr(Vec::new()));
+                    None
+                }
+                JsonEvent::BeginObject => {
+                    ctxs.push(Ctx::Obj(BTreeMap::new(), None));
+                    None
+                }
+                JsonEvent::EndArray => match ctxs.pop() {
+                    Some(Ctx::Arr(a)) => Some(Json::Arr(a)),
+                    _ => unreachable!("reader validated array nesting"),
+                },
+                JsonEvent::EndObject => match ctxs.pop() {
+                    Some(Ctx::Obj(m, _)) => Some(Json::Obj(m)),
+                    _ => unreachable!("reader validated object nesting"),
+                },
+                JsonEvent::Key(k) => {
+                    let key = k.to_string();
+                    match ctxs.last_mut() {
+                        Some(Ctx::Obj(_, pending)) => *pending = Some(key),
+                        _ => unreachable!("keys only occur inside objects"),
+                    }
+                    None
+                }
+                JsonEvent::Null => Some(Json::Null),
+                JsonEvent::Bool(b) => Some(Json::Bool(b)),
+                JsonEvent::Num(n) => Some(Json::Num(n)),
+                JsonEvent::Str(s) => Some(Json::Str(s.to_string())),
+            };
+            if let Some(v) = complete {
+                match ctxs.last_mut() {
+                    None => return Ok(v),
+                    Some(Ctx::Arr(a)) => a.push(v),
+                    Some(Ctx::Obj(m, pending)) => {
+                        let key = pending.take().expect("value inside object follows a key");
+                        m.insert(key, v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// -- streaming writer ----------------------------------------------------
+
+const FLUSH_AT: usize = 64 * 1024;
+
+/// Buffered streaming JSON writer: the compact-serialization dual of
+/// [`JsonReader`]. Output is byte-identical to `Json::to_string()` of
+/// the equivalent DOM (shared number formatting and string escaping),
+/// but only a small flush buffer is ever resident — a 100MB trace
+/// streams out in constant memory.
+pub struct JsonWriter<W: io::Write> {
+    out: W,
+    buf: String,
+    stack: Vec<(Frame, bool)>,
+    pending_key: bool,
+    flushed: u64,
+    flush_at: usize,
+}
+
+impl<W: io::Write> JsonWriter<W> {
+    pub fn new(out: W) -> JsonWriter<W> {
+        JsonWriter {
+            out,
+            buf: String::new(),
+            stack: Vec::new(),
+            pending_key: false,
+            flushed: 0,
+            flush_at: FLUSH_AT,
+        }
+    }
+
+    /// Bytes emitted so far (flushed plus still buffered).
+    pub fn bytes_written(&self) -> u64 {
+        self.flushed + self.buf.len() as u64
+    }
+
+    fn pre_value(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some((_, has_items)) = self.stack.last_mut() {
+            if *has_items {
+                self.buf.push(',');
+            }
+            *has_items = true;
+        }
+    }
+
+    fn maybe_flush(&mut self) -> io::Result<()> {
+        if self.buf.len() >= self.flush_at {
+            self.out.write_all(self.buf.as_bytes())?;
+            self.flushed += self.buf.len() as u64;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    pub fn begin_object(&mut self) -> io::Result<()> {
+        self.pre_value();
+        self.buf.push('{');
+        self.stack.push((Frame::Object, false));
+        self.maybe_flush()
+    }
+
+    pub fn end_object(&mut self) -> io::Result<()> {
+        let top = self.stack.pop();
+        debug_assert_eq!(top.map(|(f, _)| f), Some(Frame::Object));
+        self.buf.push('}');
+        self.maybe_flush()
+    }
+
+    pub fn begin_array(&mut self) -> io::Result<()> {
+        self.pre_value();
+        self.buf.push('[');
+        self.stack.push((Frame::Array, false));
+        self.maybe_flush()
+    }
+
+    pub fn end_array(&mut self) -> io::Result<()> {
+        let top = self.stack.pop();
+        debug_assert_eq!(top.map(|(f, _)| f), Some(Frame::Array));
+        self.buf.push(']');
+        self.maybe_flush()
+    }
+
+    /// Object key; the next value call completes the pair.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        if let Some((_, has_items)) = self.stack.last_mut() {
+            if *has_items {
+                self.buf.push(',');
+            }
+            *has_items = true;
+        }
+        write_escaped(&mut self.buf, k);
+        self.buf.push(':');
+        self.pending_key = true;
+        self.maybe_flush()
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.pre_value();
+        self.buf.push_str("null");
+        self.maybe_flush()
+    }
+
+    pub fn boolean(&mut self, b: bool) -> io::Result<()> {
+        self.pre_value();
+        self.buf.push_str(if b { "true" } else { "false" });
+        self.maybe_flush()
+    }
+
+    pub fn num(&mut self, n: f64) -> io::Result<()> {
+        self.pre_value();
+        push_num(&mut self.buf, n);
+        self.maybe_flush()
+    }
+
+    /// Lossless u64 (mirrors [`Json::u64`]: decimal string above 2^53).
+    pub fn num_u64(&mut self, x: u64) -> io::Result<()> {
+        self.pre_value();
+        if x <= MAX_SAFE_JSON_INT {
+            push_num(&mut self.buf, x as f64);
+        } else {
+            self.buf.push('"');
+            self.buf.push_str(&x.to_string());
+            self.buf.push('"');
+        }
+        self.maybe_flush()
+    }
+
+    pub fn string(&mut self, s: &str) -> io::Result<()> {
+        self.pre_value();
+        write_escaped(&mut self.buf, s);
+        self.maybe_flush()
+    }
+
+    /// Write a whole DOM subtree (compact form).
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        self.pre_value();
+        v.write(&mut self.buf, None, 0);
+        self.maybe_flush()
+    }
+
+    /// Flush remaining output and return the underlying writer. Panics
+    /// on an unclosed container — that is a serialization bug, never an
+    /// input property.
+    pub fn finish(mut self) -> io::Result<W> {
+        assert!(self.stack.is_empty(), "JsonWriter::finish with unclosed container");
+        self.out.write_all(self.buf.as_bytes())?;
+        self.flushed += self.buf.len() as u64;
+        self.buf.clear();
+        self.out.flush()?;
+        Ok(self.out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{check, Gen};
 
     #[test]
     fn roundtrip_scalars() {
@@ -535,5 +1336,323 @@ mod tests {
         assert_eq!(v.get_usize_or("missing", 7), 7);
         assert!(v.get_bool_or("b", false));
         assert!(v.get("missing").is_err());
+    }
+
+    // -- lossless u64 ids ------------------------------------------------
+
+    #[test]
+    fn u64_small_ids_keep_the_number_path() {
+        // Existing trace files serialize small ids as plain numbers; the
+        // lossless builder must not change those bytes.
+        assert_eq!(Json::u64(0).to_string(), "0");
+        assert_eq!(Json::u64(12345).to_string(), "12345");
+        assert_eq!(Json::u64(MAX_SAFE_JSON_INT).to_string(), "9007199254740992");
+        assert_eq!(Json::u64(42).as_u64().unwrap(), 42);
+    }
+
+    #[test]
+    fn u64_big_ids_roundtrip_losslessly() {
+        // Full-width content hashes: >53 significant bits would corrupt
+        // through f64 (0xDEAD_BEEF_CAFE_F00D rounds to a different id).
+        for x in [u64::MAX, 0xDEAD_BEEF_CAFE_F00D, MAX_SAFE_JSON_INT + 1] {
+            let j = Json::u64(x);
+            assert_eq!(j.as_u64().unwrap(), x);
+            let back = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(back.as_u64().unwrap(), x, "id {x:#x} corrupted in roundtrip");
+            // Sanity: the f64 path really would corrupt this.
+            if x > MAX_SAFE_JSON_INT + 1 {
+                assert_ne!((x as f64) as u64, x);
+            }
+        }
+    }
+
+    #[test]
+    fn as_u64_rejects_non_numeric_strings() {
+        assert!(Json::str("not-a-number").as_u64().is_err());
+        assert!(Json::str("-5").as_u64().is_err());
+        assert!(Json::Bool(true).as_u64().is_err());
+    }
+
+    // -- depth limit -----------------------------------------------------
+
+    #[test]
+    fn depth_limit_rejects_10k_deep_array() {
+        let mut s = String::new();
+        for _ in 0..10_000 {
+            s.push('[');
+        }
+        s.push('1');
+        for _ in 0..10_000 {
+            s.push(']');
+        }
+        let err = Json::parse(&s).unwrap_err();
+        assert!(err.to_string().contains("depth limit"), "DOM: {err}");
+        let err = Json::from_reader(s.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("depth limit"), "reader: {err}");
+    }
+
+    #[test]
+    fn depth_limit_allows_reasonable_nesting() {
+        let mut s = String::new();
+        for _ in 0..100 {
+            s.push('[');
+        }
+        s.push('0');
+        for _ in 0..100 {
+            s.push(']');
+        }
+        assert!(Json::parse(&s).is_ok());
+        assert!(Json::from_reader(s.as_bytes()).is_ok());
+    }
+
+    // -- streaming reader ------------------------------------------------
+
+    #[test]
+    fn reader_emits_expected_event_stream() {
+        let mut r = JsonReader::new(r#"{"a":[1,true,null],"b":"x"}"#.as_bytes());
+        let mut got = Vec::new();
+        while let Some(ev) = r.next_event().unwrap() {
+            got.push(format!("{ev:?}"));
+        }
+        let want = [
+            "BeginObject",
+            "Key(\"a\")",
+            "BeginArray",
+            "Num(1.0)",
+            "Bool(true)",
+            "Null",
+            "EndArray",
+            "Key(\"b\")",
+            "Str(\"x\")",
+            "EndObject",
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reader_matches_dom_on_tricky_inputs() {
+        let cases = [
+            r#""Aé𝄞""#, // ASCII, BMP, surrogate pair
+            r#""esc \\ \" \n \t \r \b \f \/ done""#,
+            "\"\\u0041\\u00e9\\u4e16\\ud834\\udd1e\"", // escaped ASCII/BMP/astral
+            r#"[1e3,-2.5E-2,0.0,-0,123456789012345,1.5e300]"#,
+            r#"{"nested":{"a":[{"b":[[]]},{}],"c":""},"d":[null]}"#,
+            "\"héllo 世界 😀\"",
+            "  [ 1 ,\t2 , {\n\"k\" : \"v\" } ]  ",
+            "[]",
+            "{}",
+            "\"\"",
+            "-0.5",
+            "9007199254740993",
+        ];
+        for s in cases {
+            let dom = Json::parse(s).unwrap_or_else(|e| panic!("DOM rejects {s:?}: {e}"));
+            let streamed = Json::from_reader(s.as_bytes())
+                .unwrap_or_else(|e| panic!("reader rejects {s:?}: {e}"));
+            assert_eq!(dom, streamed, "mismatch on {s:?}");
+            // And through 1-byte refills (tokens span every boundary).
+            let mut r = JsonReader::with_chunk(s.as_bytes(), 1);
+            let tiny = r.read_value().unwrap();
+            assert_eq!(dom, tiny, "1-byte-chunk mismatch on {s:?}");
+        }
+    }
+
+    #[test]
+    fn reader_rejects_what_dom_rejects() {
+        let cases = [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "tru",
+            "1.2.3",
+            "\"abc",
+            "[1] x",
+            "[1 2]",
+            "{\"a\" 1}",
+            "[,1]",
+            r#""\q""#,
+            r#""\ud834""#,
+        ];
+        for s in cases {
+            assert!(Json::parse(s).is_err(), "DOM should reject {s:?}");
+            assert!(Json::from_reader(s.as_bytes()).is_err(), "reader should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn reader_skip_value_steps_over_containers() {
+        let mut r = JsonReader::new(r#"{"skip":{"a":[1,2,{"b":3}]},"keep":7}"#.as_bytes());
+        assert!(matches!(r.next_event().unwrap(), Some(JsonEvent::BeginObject)));
+        assert!(matches!(r.next_event().unwrap(), Some(JsonEvent::Key("skip"))));
+        r.skip_value().unwrap();
+        assert!(matches!(r.next_event().unwrap(), Some(JsonEvent::Key("keep"))));
+        assert!(matches!(r.next_event().unwrap(), Some(JsonEvent::Num(n)) if n == 7.0));
+        assert!(matches!(r.next_event().unwrap(), Some(JsonEvent::EndObject)));
+        assert!(r.next_event().unwrap().is_none());
+    }
+
+    #[test]
+    fn reader_counts_bytes_and_bounds_buffering() {
+        let doc = Json::Arr((0..2000).map(|i| Json::Num(i as f64)).collect()).to_string();
+        let mut r = JsonReader::with_chunk(doc.as_bytes(), 64);
+        let v = r.read_value().unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 2000);
+        assert_eq!(r.bytes_read(), doc.len() as u64);
+        // The whole point: resident bytes stay near the chunk size.
+        assert!(r.peak_buffered() <= 64 + 32, "peak {} too high", r.peak_buffered());
+    }
+
+    /// Random-DOM differential property: serialize (compact and pretty),
+    /// then the event-driven reader must reconstruct the exact DOM that
+    /// `Json::parse` produces — across escapes, `\uXXXX`-range chars,
+    /// exponents, and nested containers, at default and 1-byte chunks.
+    #[test]
+    fn prop_reader_reconstructs_dom() {
+        fn gen_string(g: &mut Gen) -> String {
+            let pool = [
+                "a", "key", "\"", "\\", "\n", "\t", "\u{1}", "é", "世", "😀", " ", "/",
+                "\u{7f}", "\r",
+            ];
+            let n = g.len(8);
+            (0..n).map(|_| pool[g.usize_in(0, pool.len() - 1)]).collect()
+        }
+        fn gen_json(g: &mut Gen, depth: usize) -> Json {
+            let top = if depth >= 3 { 3 } else { 5 };
+            match g.usize_in(0, top) {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => match g.usize_in(0, 2) {
+                    0 => Json::Num(g.usize_in(0, 1_000_000) as f64),
+                    1 => Json::Num(g.f64_in(-1e6, 1e6)),
+                    _ => Json::Num(g.f64_in(-1.0, 1.0) * 1e-12),
+                },
+                3 => Json::Str(gen_string(g)),
+                4 => {
+                    let n = g.len(4);
+                    Json::Arr((0..n).map(|_| gen_json(g, depth + 1)).collect())
+                }
+                _ => {
+                    let n = g.len(4);
+                    Json::Obj(
+                        (0..n).map(|_| (gen_string(g), gen_json(g, depth + 1))).collect(),
+                    )
+                }
+            }
+        }
+        check(
+            0xA11CE,
+            150,
+            |g| gen_json(g, 0),
+            |doc| {
+                for text in [doc.to_string(), doc.to_pretty()] {
+                    let dom = Json::parse(&text)
+                        .map_err(|e| format!("DOM reparse failed: {e}"))?;
+                    let streamed = Json::from_reader(text.as_bytes())
+                        .map_err(|e| format!("reader failed: {e}"))?;
+                    if dom != streamed {
+                        return Err(format!("reader DOM mismatch on {text:?}"));
+                    }
+                    let mut tiny = JsonReader::with_chunk(text.as_bytes(), 1);
+                    let tiny_dom =
+                        tiny.read_value().map_err(|e| format!("1-byte reader: {e}"))?;
+                    if tiny_dom != dom {
+                        return Err(format!("1-byte-chunk mismatch on {text:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // -- streaming writer ------------------------------------------------
+
+    #[test]
+    fn writer_structural_api_produces_compact_bytes() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_object().unwrap();
+        w.key("a").unwrap();
+        w.begin_array().unwrap();
+        w.num(1.0).unwrap();
+        w.boolean(true).unwrap();
+        w.null().unwrap();
+        w.end_array().unwrap();
+        w.key("b").unwrap();
+        w.string("x\"y").unwrap();
+        w.key("id").unwrap();
+        w.num_u64(u64::MAX).unwrap();
+        w.end_object().unwrap();
+        let bytes = w.finish().unwrap();
+        assert_eq!(
+            String::from_utf8(bytes).unwrap(),
+            r#"{"a":[1,true,null],"b":"x\"y","id":"18446744073709551615"}"#
+        );
+    }
+
+    #[test]
+    fn writer_value_matches_dom_to_string() {
+        let doc = Json::obj(vec![
+            ("nums", Json::arr_f64(&[1.0, -2.5, 3e-12])),
+            ("s", Json::str("esc\"\n\\")),
+            ("deep", Json::obj(vec![("empty", Json::Arr(Vec::new()))])),
+        ]);
+        let mut w = JsonWriter::new(Vec::new());
+        w.value(&doc).unwrap();
+        let bytes = w.finish().unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), doc.to_string());
+    }
+
+    #[test]
+    fn writer_flushes_incrementally() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.flush_at = 8; // force mid-document flushes
+        w.begin_array().unwrap();
+        for i in 0..100 {
+            w.num(i as f64).unwrap();
+        }
+        w.end_array().unwrap();
+        assert_eq!(w.bytes_written(), {
+            let expect = Json::Arr((0..100).map(|i| Json::Num(i as f64)).collect());
+            expect.to_string().len() as u64
+        });
+        let bytes = w.finish().unwrap();
+        let expect = Json::Arr((0..100).map(|i| Json::Num(i as f64)).collect());
+        assert_eq!(String::from_utf8(bytes).unwrap(), expect.to_string());
+    }
+
+    /// Writer differential property: streaming a random DOM through
+    /// `JsonWriter::value` (with tiny flush thresholds) is byte-identical
+    /// to `Json::to_string`.
+    #[test]
+    fn prop_writer_matches_dom_serialization() {
+        check(
+            0xBEEF,
+            150,
+            |g| {
+                let n = g.len(6);
+                Json::Arr(
+                    (0..n)
+                        .map(|_| {
+                            Json::obj(vec![
+                                ("k", Json::Num(g.f64_in(-1e9, 1e9))),
+                                ("s", Json::str(if g.bool() { "a\"b" } else { "平" })),
+                            ])
+                        })
+                        .collect(),
+                )
+            },
+            |doc| {
+                let mut w = JsonWriter::new(Vec::new());
+                w.flush_at = 3;
+                w.value(doc).map_err(|e| e.to_string())?;
+                let bytes = w.finish().map_err(|e| e.to_string())?;
+                let streamed = String::from_utf8(bytes).map_err(|e| e.to_string())?;
+                if streamed == doc.to_string() {
+                    Ok(())
+                } else {
+                    Err(format!("writer bytes differ: {streamed:?}"))
+                }
+            },
+        );
     }
 }

@@ -1,13 +1,28 @@
 //! Trace serialization: request streams round-trip through JSON so
 //! experiments are replayable and shareable between the simulator, the
 //! real serving engine, and the bench harnesses.
+//!
+//! Two paths, one format:
+//!
+//! * the DOM path ([`trace_to_json`] / [`trace_from_json`]) materializes
+//!   the whole trace — fine for small fixtures;
+//! * the streaming path ([`TraceWriter`] / [`TraceReader`]) moves one
+//!   request at a time over the event-driven JSON layer, so 100MB
+//!   traces read and write in constant memory. The writer's output is
+//!   byte-identical to the DOM serialization (same key order, same
+//!   number formatting), which the tests pin down.
+//!
+//! Ids (`id`, `prefix_id`, `content_id`) are full 64-bit hashes and go
+//! through the lossless [`Json::u64`] path: plain numbers up to 2^53,
+//! decimal strings above — old traces stay readable, new ids stay exact.
 
 use super::{MediaPayload, MediaRef, Request};
-use crate::util::json::{Json, JsonError};
+use crate::util::json::{Json, JsonError, JsonEvent, JsonReader, JsonWriter};
+use std::io;
 use std::path::Path;
 
 fn media_to_json(m: &MediaRef) -> Json {
-    let mut fields = vec![("content_id", Json::num(m.content_id as f64))];
+    let mut fields = vec![("content_id", Json::u64(m.content_id))];
     match m.payload {
         MediaPayload::Image { width, height } => {
             fields.push(("kind", Json::str("image".to_string())));
@@ -54,12 +69,12 @@ fn media_from_json(j: &Json) -> Result<MediaRef, JsonError> {
 
 pub fn request_to_json(r: &Request) -> Json {
     Json::obj(vec![
-        ("id", Json::num(r.id as f64)),
+        ("id", Json::u64(r.id)),
         ("arrival", Json::num(r.arrival)),
         ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
         ("output_tokens", Json::num(r.output_tokens as f64)),
         ("media", Json::Arr(r.media.iter().map(media_to_json).collect())),
-        ("prefix_id", Json::num(r.prefix_id as f64)),
+        ("prefix_id", Json::u64(r.prefix_id)),
         ("prefix_tokens", Json::num(r.prefix_tokens as f64)),
     ])
 }
@@ -90,11 +105,431 @@ pub fn trace_from_json(j: &Json) -> Result<Vec<Request>, JsonError> {
     j.as_arr()?.iter().map(request_from_json).collect()
 }
 
+// -- streaming writer ----------------------------------------------------
+
+/// Streaming trace writer: emits the trace array one request at a time
+/// through the buffered [`JsonWriter`], byte-identical to
+/// `trace_to_json(..).to_string()` but without materializing either the
+/// DOM or the output string.
+///
+/// Keys are written in sorted order because the DOM path serializes
+/// from a `BTreeMap` — byte-identity is a test invariant, not luck.
+pub struct TraceWriter<W: io::Write> {
+    w: JsonWriter<W>,
+    count: usize,
+}
+
+impl<W: io::Write> TraceWriter<W> {
+    pub fn new(out: W) -> io::Result<TraceWriter<W>> {
+        let mut w = JsonWriter::new(out);
+        w.begin_array()?;
+        Ok(TraceWriter { w, count: 0 })
+    }
+
+    pub fn write_request(&mut self, r: &Request) -> io::Result<()> {
+        let w = &mut self.w;
+        w.begin_object()?;
+        w.key("arrival")?;
+        w.num(r.arrival)?;
+        w.key("id")?;
+        w.num_u64(r.id)?;
+        w.key("media")?;
+        w.begin_array()?;
+        for m in r.media.iter() {
+            w.begin_object()?;
+            w.key("content_id")?;
+            w.num_u64(m.content_id)?;
+            match m.payload {
+                MediaPayload::Image { width, height } => {
+                    w.key("h")?;
+                    w.num(height as f64)?;
+                    w.key("kind")?;
+                    w.string("image")?;
+                    w.key("w")?;
+                    w.num(width as f64)?;
+                }
+                MediaPayload::Video { width, height, frames } => {
+                    w.key("frames")?;
+                    w.num(frames as f64)?;
+                    w.key("h")?;
+                    w.num(height as f64)?;
+                    w.key("kind")?;
+                    w.string("video")?;
+                    w.key("w")?;
+                    w.num(width as f64)?;
+                }
+                MediaPayload::Audio { duration_ms, sample_hz } => {
+                    w.key("hz")?;
+                    w.num(sample_hz as f64)?;
+                    w.key("kind")?;
+                    w.string("audio")?;
+                    w.key("ms")?;
+                    w.num(duration_ms as f64)?;
+                }
+            }
+            w.end_object()?;
+        }
+        w.end_array()?;
+        w.key("output_tokens")?;
+        w.num(r.output_tokens as f64)?;
+        w.key("prefix_id")?;
+        w.num_u64(r.prefix_id)?;
+        w.key("prefix_tokens")?;
+        w.num(r.prefix_tokens as f64)?;
+        w.key("prompt_tokens")?;
+        w.num(r.prompt_tokens as f64)?;
+        w.end_object()?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Requests written so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Bytes emitted so far (flushed plus buffered).
+    pub fn bytes_written(&self) -> u64 {
+        self.w.bytes_written()
+    }
+
+    /// Close the trace array, flush, and return the underlying writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.end_array()?;
+        self.w.finish()
+    }
+}
+
+// -- streaming reader ----------------------------------------------------
+
+/// Request fields (anything unknown is skipped, so the format can grow).
+#[derive(Clone, Copy)]
+enum Field {
+    Id,
+    Arrival,
+    PromptTokens,
+    OutputTokens,
+    Media,
+    PrefixId,
+    PrefixTokens,
+    Unknown,
+}
+
+#[derive(Clone, Copy)]
+enum MediaField {
+    ContentId,
+    Kind,
+    W,
+    H,
+    Frames,
+    Ms,
+    Hz,
+    Unknown,
+}
+
+#[derive(Clone, Copy)]
+enum MediaKind {
+    Image,
+    Video,
+    Audio,
+}
+
+fn event_type_name(ev: JsonEvent<'_>) -> &'static str {
+    match ev {
+        JsonEvent::BeginObject | JsonEvent::EndObject => "object",
+        JsonEvent::BeginArray | JsonEvent::EndArray => "array",
+        JsonEvent::Key(_) => "key",
+        JsonEvent::Null => "null",
+        JsonEvent::Bool(_) => "bool",
+        JsonEvent::Num(_) => "number",
+        JsonEvent::Str(_) => "string",
+    }
+}
+
+fn missing(key: &str) -> JsonError {
+    JsonError::MissingKey(key.to_string())
+}
+
+/// Streaming trace reader: yields [`Request`]s one at a time from a
+/// JSON trace array over any [`io::Read`], without ever materializing
+/// the file, the DOM, or the request vector. Accepts exactly what
+/// [`load_trace`] accepts (shared scalar lexer, same field semantics)
+/// — the equivalence tests compare the two request-by-request.
+pub struct TraceReader<R: io::Read> {
+    r: JsonReader<R>,
+    started: bool,
+    done: bool,
+    count: usize,
+}
+
+impl<R: io::Read> TraceReader<R> {
+    pub fn new(src: R) -> TraceReader<R> {
+        TraceReader { r: JsonReader::new(src), started: false, done: false, count: 0 }
+    }
+
+    /// Requests yielded so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Bytes consumed from the underlying reader.
+    pub fn bytes_read(&self) -> u64 {
+        self.r.bytes_read()
+    }
+
+    /// High-water mark of resident bytes in the JSON layer — the
+    /// constant-memory evidence surfaced by `benches/trace_io.rs`.
+    pub fn peak_buffered(&self) -> usize {
+        self.r.peak_buffered()
+    }
+
+    fn expect_event(&mut self) -> Result<JsonEvent<'_>, JsonError> {
+        let pos = self.r.bytes_read() as usize;
+        match self.r.next_event()? {
+            Some(ev) => Ok(ev),
+            None => {
+                Err(JsonError::Parse { pos, msg: "unexpected end of input".to_string() })
+            }
+        }
+    }
+
+    fn read_u64_value(&mut self) -> Result<u64, JsonError> {
+        match self.expect_event()? {
+            JsonEvent::Num(n) => Ok(n.round() as u64),
+            JsonEvent::Str(s) => s.parse::<u64>().map_err(|_| JsonError::Type {
+                expected: "u64 number or decimal string",
+                got: "string",
+            }),
+            ev => Err(JsonError::Type { expected: "number", got: event_type_name(ev) }),
+        }
+    }
+
+    fn read_f64_value(&mut self) -> Result<f64, JsonError> {
+        match self.expect_event()? {
+            JsonEvent::Num(n) => Ok(n),
+            ev => Err(JsonError::Type { expected: "number", got: event_type_name(ev) }),
+        }
+    }
+
+    fn read_usize_value(&mut self) -> Result<usize, JsonError> {
+        Ok(self.read_f64_value()?.round() as usize)
+    }
+
+    fn read_media_object(&mut self) -> Result<MediaRef, JsonError> {
+        let mut content_id: Option<u64> = None;
+        let mut kind: Option<MediaKind> = None;
+        let (mut w, mut h, mut frames, mut ms, mut hz) = (None, None, None, None, None);
+        loop {
+            let field = match self.expect_event()? {
+                JsonEvent::Key(k) => match k {
+                    "content_id" => MediaField::ContentId,
+                    "kind" => MediaField::Kind,
+                    "w" => MediaField::W,
+                    "h" => MediaField::H,
+                    "frames" => MediaField::Frames,
+                    "ms" => MediaField::Ms,
+                    "hz" => MediaField::Hz,
+                    _ => MediaField::Unknown,
+                },
+                JsonEvent::EndObject => break,
+                ev => {
+                    return Err(JsonError::Type {
+                        expected: "media object key",
+                        got: event_type_name(ev),
+                    });
+                }
+            };
+            match field {
+                MediaField::ContentId => content_id = Some(self.read_u64_value()?),
+                MediaField::Kind => {
+                    kind = Some(match self.expect_event()? {
+                        JsonEvent::Str("image") => MediaKind::Image,
+                        JsonEvent::Str("video") => MediaKind::Video,
+                        JsonEvent::Str("audio") => MediaKind::Audio,
+                        _ => {
+                            return Err(JsonError::Type {
+                                expected: "media kind image|video|audio",
+                                got: "string",
+                            });
+                        }
+                    });
+                }
+                MediaField::W => w = Some(self.read_usize_value()?),
+                MediaField::H => h = Some(self.read_usize_value()?),
+                MediaField::Frames => frames = Some(self.read_usize_value()?),
+                MediaField::Ms => ms = Some(self.read_usize_value()?),
+                MediaField::Hz => hz = Some(self.read_usize_value()?),
+                MediaField::Unknown => self.r.skip_value()?,
+            }
+        }
+        let content_id = content_id.ok_or_else(|| missing("content_id"))?;
+        match kind.ok_or_else(|| missing("kind"))? {
+            MediaKind::Image => Ok(MediaRef::image(
+                w.ok_or_else(|| missing("w"))?,
+                h.ok_or_else(|| missing("h"))?,
+                content_id,
+            )),
+            MediaKind::Video => Ok(MediaRef::video(
+                w.ok_or_else(|| missing("w"))?,
+                h.ok_or_else(|| missing("h"))?,
+                frames.ok_or_else(|| missing("frames"))?,
+                content_id,
+            )),
+            MediaKind::Audio => Ok(MediaRef::audio(
+                ms.ok_or_else(|| missing("ms"))?,
+                hz.ok_or_else(|| missing("hz"))?,
+                content_id,
+            )),
+        }
+    }
+
+    fn read_media_array(&mut self) -> Result<Vec<MediaRef>, JsonError> {
+        match self.expect_event()? {
+            JsonEvent::BeginArray => {}
+            ev => {
+                return Err(JsonError::Type {
+                    expected: "array",
+                    got: event_type_name(ev),
+                });
+            }
+        }
+        let mut out = Vec::new();
+        loop {
+            match self.expect_event()? {
+                JsonEvent::BeginObject => out.push(self.read_media_object()?),
+                JsonEvent::EndArray => return Ok(out),
+                ev => {
+                    return Err(JsonError::Type {
+                        expected: "media object",
+                        got: event_type_name(ev),
+                    });
+                }
+            }
+        }
+    }
+
+    fn read_request_object(&mut self) -> Result<Request, JsonError> {
+        let mut id: Option<u64> = None;
+        let mut arrival: Option<f64> = None;
+        let mut prompt_tokens: Option<usize> = None;
+        let mut output_tokens: Option<usize> = None;
+        let mut media: Option<Vec<MediaRef>> = None;
+        let mut prefix_id: Option<u64> = None;
+        let mut prefix_tokens: Option<usize> = None;
+        loop {
+            let field = match self.expect_event()? {
+                JsonEvent::Key(k) => match k {
+                    "id" => Field::Id,
+                    "arrival" => Field::Arrival,
+                    "prompt_tokens" => Field::PromptTokens,
+                    "output_tokens" => Field::OutputTokens,
+                    "media" => Field::Media,
+                    "prefix_id" => Field::PrefixId,
+                    "prefix_tokens" => Field::PrefixTokens,
+                    _ => Field::Unknown,
+                },
+                JsonEvent::EndObject => break,
+                ev => {
+                    return Err(JsonError::Type {
+                        expected: "request object key",
+                        got: event_type_name(ev),
+                    });
+                }
+            };
+            match field {
+                Field::Id => id = Some(self.read_u64_value()?),
+                Field::Arrival => arrival = Some(self.read_f64_value()?),
+                Field::PromptTokens => prompt_tokens = Some(self.read_usize_value()?),
+                Field::OutputTokens => output_tokens = Some(self.read_usize_value()?),
+                Field::Media => media = Some(self.read_media_array()?),
+                Field::PrefixId => prefix_id = Some(self.read_u64_value()?),
+                Field::PrefixTokens => prefix_tokens = Some(self.read_usize_value()?),
+                Field::Unknown => self.r.skip_value()?,
+            }
+        }
+        Ok(Request {
+            id: id.ok_or_else(|| missing("id"))?,
+            arrival: arrival.ok_or_else(|| missing("arrival"))?,
+            prompt_tokens: prompt_tokens.ok_or_else(|| missing("prompt_tokens"))?,
+            output_tokens: output_tokens.ok_or_else(|| missing("output_tokens"))?,
+            media: media.ok_or_else(|| missing("media"))?.into(),
+            prefix_id: prefix_id.ok_or_else(|| missing("prefix_id"))?,
+            prefix_tokens: prefix_tokens.ok_or_else(|| missing("prefix_tokens"))?,
+        })
+    }
+
+    /// Pull the next request; `Ok(None)` once the trace array closes
+    /// cleanly (trailing non-whitespace after it is an error, matching
+    /// the DOM path's strictness).
+    pub fn next_request(&mut self) -> Result<Option<Request>, JsonError> {
+        if self.done {
+            return Ok(None);
+        }
+        if !self.started {
+            match self.expect_event()? {
+                JsonEvent::BeginArray => self.started = true,
+                ev => {
+                    return Err(JsonError::Type {
+                        expected: "array",
+                        got: event_type_name(ev),
+                    });
+                }
+            }
+        }
+        match self.expect_event()? {
+            JsonEvent::BeginObject => {
+                let r = self.read_request_object()?;
+                self.count += 1;
+                Ok(Some(r))
+            }
+            JsonEvent::EndArray => {
+                self.done = true;
+                // Drain the document tail: whitespace-only is a clean
+                // EOF, anything else is "trailing data".
+                match self.r.next_event()? {
+                    None => Ok(None),
+                    Some(_) => unreachable!("no events can follow the top-level array"),
+                }
+            }
+            ev => Err(JsonError::Type {
+                expected: "request object",
+                got: event_type_name(ev),
+            }),
+        }
+    }
+}
+
+impl<R: io::Read> Iterator for TraceReader<R> {
+    type Item = Result<Request, JsonError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_request().transpose()
+    }
+}
+
+// -- file I/O ------------------------------------------------------------
+
+/// Write a trace file streaming (constant memory; byte-identical to the
+/// old DOM-serialization output).
 pub fn save_trace(path: &Path, requests: &[Request]) -> crate::util::error::Result<()> {
-    std::fs::write(path, trace_to_json(requests).to_string())?;
+    let f = std::fs::File::create(path)?;
+    let mut w = TraceWriter::new(f)?;
+    for r in requests {
+        w.write_request(r)?;
+    }
+    w.finish()?;
     Ok(())
 }
 
+/// Open a trace file for streaming reads (the constant-memory dual of
+/// [`load_trace`]; `JsonReader` chunks its own reads, so the raw `File`
+/// needs no `BufReader`).
+pub fn open_trace(path: &Path) -> crate::util::error::Result<TraceReader<std::fs::File>> {
+    Ok(TraceReader::new(std::fs::File::open(path)?))
+}
+
+/// Materialize a whole trace file (DOM path — small fixtures only; use
+/// [`open_trace`] for anything big).
 pub fn load_trace(path: &Path) -> crate::util::error::Result<Vec<Request>> {
     let text = std::fs::read_to_string(path)?;
     Ok(trace_from_json(&Json::parse(&text)?)?)
@@ -107,24 +542,33 @@ mod tests {
     use crate::workload::arrival::poisson_arrivals;
     use crate::workload::datasets::DatasetSpec;
 
+    fn mixed_trace(seed: u64, n: usize) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, n);
+        poisson_arrivals(&mut rng, &mut reqs, 3.0);
+        reqs
+    }
+
+    fn assert_requests_eq(a: &Request, b: &Request) {
+        assert_eq!(a.id, b.id);
+        assert!((a.arrival - b.arrival).abs() < 1e-9);
+        assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert_eq!(a.media, b.media);
+        assert_eq!(a.prefix_id, b.prefix_id);
+        assert_eq!(a.prefix_tokens, b.prefix_tokens);
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
-        let mut rng = Rng::new(1);
         // Mixed-modality spec so image, video, and audio payloads all
         // round-trip.
-        let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, 300);
-        poisson_arrivals(&mut rng, &mut reqs, 3.0);
+        let reqs = mixed_trace(1, 300);
         let j = trace_to_json(&reqs);
         let back = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.len(), reqs.len());
         for (a, b) in reqs.iter().zip(&back) {
-            assert_eq!(a.id, b.id);
-            assert!((a.arrival - b.arrival).abs() < 1e-9);
-            assert_eq!(a.prompt_tokens, b.prompt_tokens);
-            assert_eq!(a.output_tokens, b.output_tokens);
-            assert_eq!(a.media, b.media);
-            assert_eq!(a.prefix_id, b.prefix_id);
-            assert_eq!(a.prefix_tokens, b.prefix_tokens);
+            assert_requests_eq(a, b);
         }
         // The sample must actually contain every media kind.
         let kinds: std::collections::HashSet<_> = reqs
@@ -145,5 +589,106 @@ mod tests {
         save_trace(&path, &reqs).unwrap();
         let back = load_trace(&path).unwrap();
         assert_eq!(back.len(), reqs.len());
+    }
+
+    #[test]
+    fn streaming_writer_bytes_match_dom_serialization() {
+        let reqs = mixed_trace(3, 200);
+        let dom = trace_to_json(&reqs).to_string();
+        let mut w = TraceWriter::new(Vec::new()).unwrap();
+        for r in &reqs {
+            w.write_request(r).unwrap();
+        }
+        assert_eq!(w.count(), reqs.len());
+        let bytes = w.finish().unwrap();
+        assert_eq!(bytes.len() as u64, dom.len() as u64);
+        assert_eq!(String::from_utf8(bytes).unwrap(), dom);
+    }
+
+    #[test]
+    fn streaming_reader_matches_dom_parse() {
+        let reqs = mixed_trace(4, 250);
+        let text = trace_to_json(&reqs).to_string();
+        let mut rd = TraceReader::new(text.as_bytes());
+        let mut streamed = Vec::new();
+        while let Some(r) = rd.next_request().unwrap() {
+            streamed.push(r);
+        }
+        assert_eq!(streamed.len(), reqs.len());
+        assert_eq!(rd.count(), reqs.len());
+        assert_eq!(rd.bytes_read(), text.len() as u64);
+        for (a, b) in reqs.iter().zip(&streamed) {
+            assert_requests_eq(a, b);
+        }
+        // Exhausted reader keeps returning None.
+        assert!(rd.next_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn full_width_ids_survive_both_paths() {
+        // >53 significant bits: the old f64 number path corrupted these.
+        let big = 0xDEAD_BEEF_CAFE_F00D_u64;
+        assert_ne!((big as f64) as u64, big, "test id must exceed f64 precision");
+        let mut reqs = mixed_trace(5, 4);
+        reqs[0].id = big;
+        reqs[1].prefix_id = u64::MAX;
+        reqs[2].media = vec![MediaRef::image(448, 448, big ^ 1)].into();
+        let text = trace_to_json(&reqs).to_string();
+        // DOM path.
+        let back = trace_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back[0].id, big);
+        assert_eq!(back[1].prefix_id, u64::MAX);
+        assert_eq!(back[2].media[0].content_id, big ^ 1);
+        // Streamed path over the same bytes.
+        let streamed: Vec<Request> = TraceReader::new(text.as_bytes())
+            .collect::<Result<_, _>>()
+            .unwrap();
+        assert_eq!(streamed[0].id, big);
+        assert_eq!(streamed[1].prefix_id, u64::MAX);
+        assert_eq!(streamed[2].media[0].content_id, big ^ 1);
+        // And through an actual file via the streaming writer.
+        let dir = std::env::temp_dir().join("elasticmm_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("big_ids.json");
+        save_trace(&path, &reqs).unwrap();
+        let from_file = load_trace(&path).unwrap();
+        assert_eq!(from_file[0].id, big);
+        assert_eq!(from_file[1].prefix_id, u64::MAX);
+    }
+
+    #[test]
+    fn streaming_reader_is_constant_memory() {
+        let reqs = mixed_trace(6, 500);
+        let text = trace_to_json(&reqs).to_string();
+        assert!(text.len() > 200_000, "trace too small to be meaningful");
+        let mut rd = TraceReader::new(text.as_bytes());
+        while rd.next_request().unwrap().is_some() {}
+        // Resident bytes stay near one 64 KiB read chunk no matter the
+        // trace size.
+        assert!(
+            rd.peak_buffered() < 80 * 1024,
+            "peak_buffered {} not constant-memory",
+            rd.peak_buffered()
+        );
+    }
+
+    #[test]
+    fn streaming_reader_skips_unknown_fields() {
+        let text = r#"[{"arrival":1.5,"id":7,"media":[{"content_id":9,"h":448,"kind":"image","w":448,"zzz_new":[1,{"a":2}]}],"note":"future","output_tokens":10,"prefix_id":0,"prefix_tokens":0,"prompt_tokens":20}]"#;
+        let reqs: Vec<Request> =
+            TraceReader::new(text.as_bytes()).collect::<Result<_, _>>().unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].id, 7);
+        assert_eq!(reqs[0].media.len(), 1);
+        assert_eq!(reqs[0].media[0].content_id, 9);
+    }
+
+    #[test]
+    fn streaming_reader_reports_missing_fields() {
+        let text = r#"[{"arrival":1.5,"id":7}]"#;
+        let err = TraceReader::new(text.as_bytes())
+            .next_request()
+            .expect_err("missing fields must error");
+        assert!(err.to_string().contains("missing key"), "got: {err}");
     }
 }

@@ -1,0 +1,262 @@
+//! Streamed trace input must be invisible: running a system from a
+//! trace file through the event-driven `TraceReader` + look-ahead
+//! driver has to produce **byte-identical** canonical `Report`s to the
+//! materialized slice path — for every serving system, with decode
+//! fast-forwarding on and off. The streamed path changes where requests
+//! come from, not what the simulator does with them.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::Report;
+use elasticmm::model::CostModel;
+use elasticmm::sim::driver::{
+    run_trace_source, IterSource, Limited, ServingSystem, DEFAULT_TRACE_LOOKAHEAD,
+};
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::trace::{load_trace, open_trace, request_to_json, save_trace};
+use elasticmm::workload::Request;
+use std::path::{Path, PathBuf};
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched(ff: bool) -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: ff, ..SchedulerConfig::default() }
+}
+
+fn mixed_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn temp_trace(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("elasticmm_test_{tag}.json"))
+}
+
+/// Run `sys` from the trace file via the streamed source.
+fn run_streamed<S: ServingSystem>(mut sys: S, path: &Path, lookahead: usize) -> Report {
+    let mut src = open_trace(path).expect("open trace");
+    run_trace_source(&mut sys, &mut src, lookahead).expect("streamed run")
+}
+
+/// One variant × fast-forward setting: assert the streamed run's
+/// canonical serialization is byte-equal to the materialized slice
+/// run's. (`ServingSystem` has an associated event type, so variants
+/// are dispatched statically through this generic helper rather than a
+/// trait object.)
+fn assert_stream_matches<S: ServingSystem>(
+    name: &str,
+    mk: impl Fn() -> S,
+    t: &[Request],
+    path: &Path,
+) {
+    let mut mat_sys = mk();
+    let materialized = mat_sys.run(t);
+    let streamed = run_streamed(mk(), path, DEFAULT_TRACE_LOOKAHEAD);
+    assert_eq!(streamed.records.len(), t.len(), "{name}: streamed run incomplete");
+    assert_eq!(
+        materialized.canonical_json().to_string(),
+        streamed.canonical_json().to_string(),
+        "{name}: streamed vs materialized canonical reports diverge"
+    );
+    assert_eq!(materialized.canonical_digest(), streamed.canonical_digest(), "{name}: digest");
+}
+
+/// The acceptance contract: for every system variant, fast-forward on
+/// and off, streamed == materialized byte-for-byte.
+#[test]
+fn streamed_run_matches_materialized_for_all_variants() {
+    let t = mixed_trace(120, 4.0, 0x51EA);
+    let path = temp_trace("stream_vs_slice");
+    save_trace(&path, &t).expect("save trace");
+    for ff in [false, true] {
+        let tag = |v: &str| format!("{v} ff={ff}");
+        assert_stream_matches(
+            &tag("vllm"),
+            || CoupledVllm::new(cost(), sched(ff), 8),
+            &t,
+            &path,
+        );
+        assert_stream_matches(
+            &tag("vllm-decouple"),
+            || DecoupledStatic::new(cost(), sched(ff), 8),
+            &t,
+            &path,
+        );
+        assert_stream_matches(
+            &tag("emp-full"),
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full(8)),
+            &t,
+            &path,
+        );
+        assert_stream_matches(
+            &tag("emp-static"),
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::static_split(4)),
+            &t,
+            &path,
+        );
+        assert_stream_matches(
+            &tag("emp-nway"),
+            || EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full_nway(8)),
+            &t,
+            &path,
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Two streamed passes over the same file give the same digest (the
+/// reader has no hidden state across opens).
+fn assert_stream_deterministic<S: ServingSystem>(name: &str, mk: impl Fn() -> S, path: &Path) {
+    let a = run_streamed(mk(), path, DEFAULT_TRACE_LOOKAHEAD);
+    let b = run_streamed(mk(), path, DEFAULT_TRACE_LOOKAHEAD);
+    assert_eq!(a.canonical_digest(), b.canonical_digest(), "{name}: nondeterministic");
+}
+
+#[test]
+fn streamed_run_is_deterministic_per_variant() {
+    let t = mixed_trace(90, 3.0, 0xD1CE);
+    let path = temp_trace("stream_determinism");
+    save_trace(&path, &t).expect("save trace");
+    assert_stream_deterministic("vllm", || CoupledVllm::new(cost(), sched(true), 8), &path);
+    assert_stream_deterministic(
+        "vllm-decouple",
+        || DecoupledStatic::new(cost(), sched(true), 8),
+        &path,
+    );
+    assert_stream_deterministic(
+        "emp-full",
+        || EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8)),
+        &path,
+    );
+    assert_stream_deterministic(
+        "emp-nway",
+        || EmpSystem::new(cost(), sched(true), 8, EmpOptions::full_nway(8)),
+        &path,
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The streamed reader decodes exactly what the DOM loader does, across
+/// every registered dataset (different media kinds, prefix sharing,
+/// token distributions).
+#[test]
+fn streamed_reader_matches_load_trace_across_datasets() {
+    for (i, name) in DatasetSpec::REGISTRY.iter().enumerate() {
+        let spec = DatasetSpec::by_name(name).expect("registered dataset");
+        let mut rng = Rng::new(0xFEED + i as u64);
+        let mut reqs = spec.generate(&mut rng, 60);
+        poisson_arrivals(&mut rng, &mut reqs, 5.0);
+        let path = temp_trace(&format!("dataset_{name}"));
+        save_trace(&path, &reqs).expect("save trace");
+        let dom = load_trace(&path).expect("load trace");
+        let streamed: Vec<Request> = open_trace(&path)
+            .expect("open trace")
+            .map(|r| r.expect("streamed request"))
+            .collect();
+        assert_eq!(dom.len(), reqs.len(), "{name}: DOM load dropped requests");
+        assert_eq!(streamed.len(), reqs.len(), "{name}: streamed read dropped requests");
+        for ((orig, d), s) in reqs.iter().zip(&dom).zip(&streamed) {
+            // Request has no PartialEq; the per-request JSON covers
+            // every field (ids, arrival bits via canonical formatting,
+            // media attachments, prefix identity).
+            let want = request_to_json(orig).to_string();
+            assert_eq!(want, request_to_json(d).to_string(), "{name}: DOM mismatch");
+            assert_eq!(want, request_to_json(s).to_string(), "{name}: streamed mismatch");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// S1 regression at the file level: ids above 2^53 — where `f64` loses
+/// integer precision — survive a save/load and a save/stream round
+/// trip bit-exactly on both the DOM and event paths.
+#[test]
+fn ids_above_53_bits_survive_file_roundtrip() {
+    let mut reqs = mixed_trace(24, 6.0, 0xB16);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        // A 64-bit hash-style id: > 2^53, distinct low bits that f64
+        // rounding would destroy.
+        r.id = 0xDEAD_BEEF_CAFE_F00D ^ (i as u64);
+        r.prefix_id = u64::MAX - i as u64;
+    }
+    let path = temp_trace("big_ids");
+    save_trace(&path, &reqs).expect("save trace");
+    let dom = load_trace(&path).expect("load trace");
+    let streamed: Vec<Request> = open_trace(&path)
+        .expect("open trace")
+        .map(|r| r.expect("streamed request"))
+        .collect();
+    for ((orig, d), s) in reqs.iter().zip(&dom).zip(&streamed) {
+        assert_eq!(orig.id, d.id, "DOM id corrupted");
+        assert_eq!(orig.id, s.id, "streamed id corrupted");
+        assert_eq!(orig.prefix_id, d.prefix_id, "DOM prefix_id corrupted");
+        assert_eq!(orig.prefix_id, s.prefix_id, "streamed prefix_id corrupted");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `--trace-limit`: a `Limited` wrapper over the file reader runs
+/// exactly the first N requests of the file.
+#[test]
+fn limited_streamed_run_matches_prefix_slice() {
+    let t = mixed_trace(80, 5.0, 0xCA9);
+    let path = temp_trace("limited_prefix");
+    save_trace(&path, &t).expect("save trace");
+    let limit = 30;
+    let mut mat = CoupledVllm::new(cost(), sched(true), 4);
+    let materialized = mat.run(&t[..limit]);
+    let mut sys = CoupledVllm::new(cost(), sched(true), 4);
+    let mut src = Limited::new(open_trace(&path).expect("open trace"), limit);
+    let streamed =
+        run_trace_source(&mut sys, &mut src, DEFAULT_TRACE_LOOKAHEAD).expect("streamed run");
+    assert_eq!(streamed.records.len(), limit);
+    assert_eq!(
+        materialized.canonical_json().to_string(),
+        streamed.canonical_json().to_string(),
+        "limited streamed run diverges from the slice prefix"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Local disorder inside the look-ahead window is re-sorted to the
+/// exact slice-path schedule; disorder beyond it is a loud error, not a
+/// silently corrupted report.
+#[test]
+fn lookahead_window_resorts_or_rejects() {
+    let t = mixed_trace(60, 8.0, 0xD15);
+    // Swap adjacent pairs: every request is at most 1 slot out of order.
+    let mut shuffled = t.clone();
+    for pair in shuffled.chunks_mut(2) {
+        pair.reverse();
+    }
+    let mut mat = CoupledVllm::new(cost(), sched(true), 4);
+    let materialized = mat.run(&t);
+    let mut sys = CoupledVllm::new(cost(), sched(true), 4);
+    let mut src = IterSource(shuffled.iter().cloned());
+    let streamed = run_trace_source(&mut sys, &mut src, 4).expect("windowed run");
+    assert_eq!(
+        materialized.canonical_json().to_string(),
+        streamed.canonical_json().to_string(),
+        "look-ahead window failed to absorb local disorder"
+    );
+    // Gross disorder (late request far out of window) must error.
+    let mut gross = t.clone();
+    let last = gross.len() - 1;
+    gross.swap(0, last);
+    let mut sys = CoupledVllm::new(cost(), sched(true), 4);
+    let mut src = IterSource(gross.into_iter());
+    let err = run_trace_source(&mut sys, &mut src, 2).unwrap_err();
+    assert!(
+        format!("{err}").contains("look-ahead"),
+        "expected a look-ahead ordering error, got: {err}"
+    );
+}
