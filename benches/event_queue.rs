@@ -1,0 +1,229 @@
+//! Event-queue micro-benchmark: the timing-wheel `EventQueue` against
+//! the retained `HeapQueue` oracle under the classic *hold model* —
+//! prime the queue to `n` pending events, then time pop-one/push-one
+//! steady-state cycles — at 1k / 100k / 1M pending events, under a
+//! Poisson arrival process and a flash-crowd process (tie storms at one
+//! timestamp plus heavy-tailed far-future outliers that force overflow
+//! cascades). Writes `BENCH_events.json` at the repo root.
+//!
+//!     cargo bench --bench event_queue              # full hold counts
+//!     cargo bench --bench event_queue -- --smoke   # CI-sized
+//!     cargo bench --bench event_queue -- --smoke --check  # + gate
+//!
+//! Both sides replay the *same* schedule: each runs its own RNG from
+//! the same seed, and because the wheel's pop sequence is identical to
+//! the heap's (the differential contract in
+//! `rust/tests/event_queue_differential.rs`), the interleaved draws
+//! stay in lockstep — a checksum over every popped (time, event) is
+//! asserted equal across the two sides, so the comparison is fair *and*
+//! the bench doubles as a large-scale equivalence check.
+//!
+//! The `--check` gate compares against the `events` section of the
+//! committed `BENCH_baseline.json` via
+//! `util::bench::check_regression_section`: conservative absolute
+//! ops/sec floors, plus a `wheel_vs_heap_speedup` floor calibrated so
+//! the effective bound at the default tolerance is ≥ 1.0 at the
+//! 100k/1M scales — the wheel must never be slower than the heap it
+//! replaced where scale matters. The 1k entries are reported but not
+//! gated on speedup: at tiny scales the heap's sift depth is small
+//! enough that the two structures are within noise of each other.
+
+use elasticmm::sim::engine::{EventQueue, HeapQueue};
+use elasticmm::util::cli::Args;
+use elasticmm::util::json::Json;
+use elasticmm::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// The common surface of the two queue implementations, so one driver
+/// times both.
+trait Queue {
+    fn push(&mut self, t: f64, v: u64);
+    fn pop(&mut self) -> Option<(f64, u64)>;
+    fn cascades(&self) -> u64;
+}
+
+impl Queue for EventQueue<u64> {
+    fn push(&mut self, t: f64, v: u64) {
+        EventQueue::push(self, t, v)
+    }
+    fn pop(&mut self) -> Option<(f64, u64)> {
+        EventQueue::pop(self)
+    }
+    fn cascades(&self) -> u64 {
+        self.telemetry().overflow_cascades
+    }
+}
+
+impl Queue for HeapQueue<u64> {
+    fn push(&mut self, t: f64, v: u64) {
+        HeapQueue::push(self, t, v)
+    }
+    fn pop(&mut self) -> Option<(f64, u64)> {
+        HeapQueue::pop(self)
+    }
+    fn cascades(&self) -> u64 {
+        0
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Dist {
+    Poisson,
+    Flash,
+}
+
+/// Inter-arrival gap while priming to `n` pending events.
+fn prime_gap(rng: &mut Rng, dist: Dist) -> f64 {
+    match dist {
+        // Unit-rate exponential gaps.
+        Dist::Poisson => rng.exp(1.0),
+        // Bursts: most arrivals share their burst's exact timestamp
+        // (tie storms exercising the seq tiebreak), bursts separated by
+        // heavy-tailed gaps.
+        Dist::Flash => {
+            if rng.chance(0.95) {
+                0.0
+            } else {
+                rng.lognormal(1.0, 2.0)
+            }
+        }
+    }
+}
+
+/// Future offset for the event re-inserted after each hold-cycle pop.
+/// Scaled to the pending span so the population stays in steady state.
+fn hold_gap(rng: &mut Rng, dist: Dist, n: usize) -> f64 {
+    match dist {
+        // Mean n: the reinserted event lands uniformly-ish across the
+        // span the n pending unit-gap events cover.
+        Dist::Poisson => rng.exp(1.0 / n as f64),
+        Dist::Flash => {
+            if rng.chance(0.90) {
+                // Tie storm at the current timestamp.
+                0.0
+            } else if rng.chance(0.5) {
+                rng.exp(1.0 / n as f64)
+            } else {
+                // Far-future outlier, well beyond any wheel window —
+                // forces overflow cascades on rollover.
+                n as f64 * rng.lognormal(1.0, 2.0)
+            }
+        }
+    }
+}
+
+/// Prime `q` to `n` pending events, then time `hold` pop-one/push-one
+/// cycles. Returns (hold wall seconds, pop-sequence checksum, cascades).
+fn run_side<Q: Queue>(q: &mut Q, seed: u64, dist: Dist, n: usize, hold: usize) -> (f64, u64, u64) {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    for i in 0..n {
+        t += prime_gap(&mut rng, dist);
+        q.push(t, i as u64);
+    }
+    let t0 = Instant::now();
+    let mut check = 0u64;
+    for i in 0..hold {
+        let (pt, v) = q.pop().expect("hold model keeps the queue non-empty");
+        check = check.wrapping_mul(0x100000001B3).wrapping_add(pt.to_bits() ^ v);
+        q.push(pt + hold_gap(&mut rng, dist, n), (n + i) as u64);
+    }
+    (t0.elapsed().as_secs_f64(), check, q.cascades())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let hold = args.get_usize("hold-ops", if smoke { 50_000 } else { 300_000 });
+    let seed = args.get_u64("seed", 42);
+    println!(
+        "=== event_queue: wheel vs heap hold model, {hold} hold cycles per point{} ===",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut entries: BTreeMap<String, Json> = BTreeMap::new();
+    for (dist, dname) in [(Dist::Poisson, "poisson"), (Dist::Flash, "flash")] {
+        for (n, sname) in [(1_000usize, "1k"), (100_000, "100k"), (1_000_000, "1m")] {
+            let mut wheel: EventQueue<u64> = EventQueue::new();
+            let (wall_w, chk_w, cascades) = run_side(&mut wheel, seed, dist, n, hold);
+            let mut heap: HeapQueue<u64> = HeapQueue::new();
+            let (wall_h, chk_h, _) = run_side(&mut heap, seed, dist, n, hold);
+            assert_eq!(
+                chk_w, chk_h,
+                "wheel and heap pop sequences diverged ({dname} {sname})"
+            );
+            // One hold cycle = one pop + one push.
+            let ops = (2 * hold) as f64;
+            let ops_w = ops / wall_w.max(1e-9);
+            let ops_h = ops / wall_h.max(1e-9);
+            let speedup = ops_w / ops_h.max(1e-9);
+            println!(
+                "{:<14} wheel {:>12.0} ops/s   heap {:>12.0} ops/s   speedup {speedup:>5.2}x   cascades {cascades}",
+                format!("{dname}_{sname}"),
+                ops_w,
+                ops_h
+            );
+            entries.insert(
+                format!("{dname}_{sname}"),
+                Json::obj(vec![
+                    ("pending_events", Json::num(n as f64)),
+                    ("hold_ops", Json::num(ops)),
+                    ("ops_per_sec_wheel", Json::num(ops_w)),
+                    ("ops_per_sec_heap", Json::num(ops_h)),
+                    ("wheel_vs_heap_speedup", Json::num(speedup)),
+                    ("wheel_overflow_cascades", Json::num(cascades as f64)),
+                ]),
+            );
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("event_queue".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("hold_ops_per_point", Json::num(hold as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("events", Json::Obj(entries)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_events.json");
+    std::fs::write(path, out.to_string()).expect("write BENCH_events.json");
+    println!("wrote {path}");
+
+    if args.has_flag("check") {
+        let baseline_path = args.get_or(
+            "baseline",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json"),
+        );
+        let text = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+        let baseline = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("parse baseline {baseline_path}: {e:?}"));
+        let tolerance = args.get_f64(
+            "tolerance",
+            baseline.opt("tolerance_default").and_then(|t| t.as_f64().ok()).unwrap_or(0.2),
+        );
+        match elasticmm::util::bench::check_regression_section(&baseline, &out, tolerance, "events")
+        {
+            Ok(checked) => {
+                println!(
+                    "event-queue bench gate PASSED ({} checks, tolerance {:.0}%):",
+                    checked.len(),
+                    tolerance * 100.0
+                );
+                for line in checked {
+                    println!("  {line}");
+                }
+            }
+            Err(failures) => {
+                eprintln!(
+                    "event-queue bench gate FAILED (tolerance {:.0}%):",
+                    tolerance * 100.0
+                );
+                for line in failures {
+                    eprintln!("  {line}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -13,7 +13,7 @@ use elasticmm::kvcache::runs::{RunKind, TokenRun};
 use elasticmm::kvcache::token_oracle::{TokenInterner, TokenRadixTree};
 use elasticmm::model::{CostModel, DecodeItem, PrefillItem};
 use elasticmm::ServingSystem;
-use elasticmm::sim::engine::EventQueue;
+use elasticmm::sim::engine::{EventQueue, HeapQueue};
 use elasticmm::util::bench::Bench;
 use elasticmm::util::rng::Rng;
 use elasticmm::workload::arrival::poisson_arrivals;
@@ -23,9 +23,23 @@ fn main() {
     let b = Bench::default();
     println!("=== L3 coordinator microbenchmarks ===");
 
-    // Event queue: push+pop churn at simulation scale.
-    let r = b.run("event_queue push/pop x1000", || {
+    // Event queue: push+pop churn at simulation scale — the timing
+    // wheel vs the retained heap oracle (benches/event_queue.rs has the
+    // full hold-model comparison at 1k/100k/1M pending).
+    let r = b.run("event_queue(wheel) push/pop x1000", || {
         let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..1000u64 {
+            q.push((i % 97) as f64, i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, e)) = q.pop() {
+            acc = acc.wrapping_add(e);
+        }
+        acc
+    });
+    println!("{}", r.line());
+    let r = b.run("event_queue(heap oracle) push/pop x1000", || {
+        let mut q: HeapQueue<u64> = HeapQueue::new();
         for i in 0..1000u64 {
             q.push((i % 97) as f64, i);
         }

@@ -73,6 +73,8 @@ struct Measurement {
     wall_s: f64,
     events: u64,
     tokens: u64,
+    peak_pending: usize,
+    cascades: u64,
 }
 
 fn measure<S: ServingSystem>(mut sys: S, trace: &[Request]) -> Measurement {
@@ -81,7 +83,13 @@ fn measure<S: ServingSystem>(mut sys: S, trace: &[Request]) -> Measurement {
     let wall_s = t0.elapsed().as_secs_f64();
     assert_eq!(rep.records.len(), trace.len(), "incomplete run");
     let tokens: u64 = rep.records.iter().map(|r| r.output_len as u64).sum();
-    Measurement { wall_s, events: stats.events, tokens }
+    Measurement {
+        wall_s,
+        events: stats.events,
+        tokens,
+        peak_pending: stats.peak_pending_events,
+        cascades: stats.overflow_cascades,
+    }
 }
 
 fn bench_system(
@@ -111,6 +119,11 @@ fn bench_system(
         ("wall_s_per_10k_requests_ff_on", Json::num(per_10k(&on))),
         ("output_tokens", Json::num(on.tokens as f64)),
         ("speedup", Json::num(speedup)),
+        // Event-queue pressure telemetry (descriptive, not gated):
+        // high-water pending events and timing-wheel overflow cascades
+        // for the ff-on run.
+        ("peak_pending_events_ff_on", Json::num(on.peak_pending as f64)),
+        ("overflow_cascades_ff_on", Json::num(on.cascades as f64)),
     ]);
     (j, speedup)
 }

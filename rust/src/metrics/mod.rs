@@ -14,6 +14,7 @@ use crate::sim::instance::SimRequest;
 use crate::util::json::{Json, JsonWriter};
 use crate::util::stats;
 use crate::workload::Modality;
+use std::cell::OnceCell;
 
 /// Timing record for one completed request.
 #[derive(Debug, Clone)]
@@ -105,7 +106,49 @@ impl TpReconfig {
     }
 }
 
+/// Record-order metric arrays plus span aggregates, computed once per
+/// report on first use. Every mean/throughput/SLO path reads these
+/// instead of re-collecting a fresh `Vec` per call — the profile-guided
+/// fix for `RunMetrics::from_report` and `per_modality_json`, which
+/// historically walked the (potentially million-record) list five-plus
+/// times per report.
+#[derive(Debug, Clone)]
+struct BaseCache {
+    /// Per-record TTFT, in record order (means sum in this order, so
+    /// cached results are bit-identical to the historical fresh-`Vec`
+    /// paths).
+    ttft: Vec<f64>,
+    norm_in: Vec<f64>,
+    norm_out: Vec<f64>,
+    /// Earliest arrival (`+inf` for an empty report; those callers
+    /// early-return before reading it).
+    start: f64,
+    /// Latest finish (`0.0` for an empty report — the seed
+    /// [`Report::makespan`] has always folded from).
+    end: f64,
+    /// Total output tokens.
+    output_tokens: f64,
+}
+
+/// Sorted copies of the [`BaseCache`] arrays for the percentile paths,
+/// sorted with the exact comparator `stats::percentile` uses so
+/// `percentile_sorted` over them is bit-identical to the historical
+/// sort-per-call results.
+#[derive(Debug, Clone)]
+struct SortedCache {
+    ttft: Vec<f64>,
+    norm_in: Vec<f64>,
+    norm_out: Vec<f64>,
+}
+
 /// Aggregate report over a run.
+///
+/// `records` is logically frozen once any derived metric has been read:
+/// the mean/percentile/throughput/SLO accessors share lazily computed
+/// arrays (see [`BaseCache`]), so mutating `records` afterwards would
+/// desynchronize them. Every producer in the repo builds reports via
+/// [`Report::new`] and only ever mutates the `tp_*` summary fields
+/// (which are not cached).
 #[derive(Debug, Clone)]
 pub struct Report {
     pub records: Vec<RequestRecord>,
@@ -116,6 +159,8 @@ pub struct Report {
     pub tp_busy_gpu_seconds: f64,
     /// Per-group TP reconfiguration timeline, in event order.
     pub tp_timeline: Vec<TpReconfig>,
+    base: OnceCell<BaseCache>,
+    sorted: OnceCell<SortedCache>,
 }
 
 impl Report {
@@ -125,37 +170,70 @@ impl Report {
             tp_reconfigs: 0,
             tp_busy_gpu_seconds: 0.0,
             tp_timeline: Vec::new(),
+            base: OnceCell::new(),
+            sorted: OnceCell::new(),
         }
     }
 
+    fn base(&self) -> &BaseCache {
+        self.base.get_or_init(|| {
+            let mut start = f64::INFINITY;
+            let mut end = 0.0f64;
+            let mut output_tokens = 0.0;
+            for r in &self.records {
+                start = start.min(r.arrival);
+                end = end.max(r.finish);
+                output_tokens += r.output_len as f64;
+            }
+            BaseCache {
+                ttft: self.records.iter().map(|r| r.ttft()).collect(),
+                norm_in: self.records.iter().map(|r| r.norm_input_latency()).collect(),
+                norm_out: self.records.iter().map(|r| r.norm_output_latency()).collect(),
+                start,
+                end,
+                output_tokens,
+            }
+        })
+    }
+
+    fn sorted(&self) -> &SortedCache {
+        let b = self.base();
+        self.sorted.get_or_init(|| {
+            let sort = |v: &[f64]| {
+                let mut v = v.to_vec();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v
+            };
+            SortedCache {
+                ttft: sort(&b.ttft),
+                norm_in: sort(&b.norm_in),
+                norm_out: sort(&b.norm_out),
+            }
+        })
+    }
+
     pub fn mean_norm_input_latency(&self) -> f64 {
-        stats::mean(&self.records.iter().map(|r| r.norm_input_latency()).collect::<Vec<_>>())
+        stats::mean(&self.base().norm_in)
     }
 
     pub fn mean_norm_output_latency(&self) -> f64 {
-        stats::mean(&self.records.iter().map(|r| r.norm_output_latency()).collect::<Vec<_>>())
+        stats::mean(&self.base().norm_out)
     }
 
     pub fn mean_ttft(&self) -> f64 {
-        stats::mean(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>())
+        stats::mean(&self.base().ttft)
     }
 
     pub fn p_ttft(&self, q: f64) -> f64 {
-        stats::percentile(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>(), q)
+        stats::percentile_sorted(&self.sorted().ttft, q)
     }
 
     pub fn p_norm_input(&self, q: f64) -> f64 {
-        stats::percentile(
-            &self.records.iter().map(|r| r.norm_input_latency()).collect::<Vec<_>>(),
-            q,
-        )
+        stats::percentile_sorted(&self.sorted().norm_in, q)
     }
 
     pub fn p_norm_output(&self, q: f64) -> f64 {
-        stats::percentile(
-            &self.records.iter().map(|r| r.norm_output_latency()).collect::<Vec<_>>(),
-            q,
-        )
+        stats::percentile_sorted(&self.sorted().norm_out, q)
     }
 
     /// Requests completed per second over the active span.
@@ -163,9 +241,8 @@ impl Report {
         if self.records.is_empty() {
             return 0.0;
         }
-        let start = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
-        let end = self.records.iter().map(|r| r.finish).fold(0.0, f64::max);
-        self.records.len() as f64 / (end - start).max(1e-9)
+        let b = self.base();
+        self.records.len() as f64 / (b.end - b.start).max(1e-9)
     }
 
     /// Output tokens per second.
@@ -173,10 +250,8 @@ impl Report {
         if self.records.is_empty() {
             return 0.0;
         }
-        let start = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
-        let end = self.records.iter().map(|r| r.finish).fold(0.0, f64::max);
-        self.records.iter().map(|r| r.output_len as f64).sum::<f64>()
-            / (end - start).max(1e-9)
+        let b = self.base();
+        b.output_tokens / (b.end - b.start).max(1e-9)
     }
 
     /// Fraction of requests meeting an SLO on *both* normalized input and
@@ -185,13 +260,12 @@ impl Report {
         if self.records.is_empty() {
             return 0.0;
         }
-        let ok = self
-            .records
+        let b = self.base();
+        let ok = b
+            .norm_in
             .iter()
-            .filter(|r| {
-                r.norm_input_latency() <= slo.norm_input_s
-                    && r.norm_output_latency() <= slo.norm_output_s
-            })
+            .zip(&b.norm_out)
+            .filter(|(i, o)| **i <= slo.norm_input_s && **o <= slo.norm_output_s)
             .count();
         ok as f64 / self.records.len() as f64
     }
@@ -328,7 +402,7 @@ impl Report {
     /// Simulated span from t=0 to the last completion (the GPU-hours
     /// denominator: every GPU is held for the whole run).
     pub fn makespan(&self) -> f64 {
-        self.records.iter().map(|r| r.finish).fold(0.0, f64::max)
+        self.base().end
     }
 
     /// Fraction of requests meeting their own modality's default SLO
@@ -339,13 +413,14 @@ impl Report {
         if self.records.is_empty() {
             return 0.0;
         }
+        let b = self.base();
         let ok = self
             .records
             .iter()
-            .filter(|r| {
+            .zip(b.norm_in.iter().zip(&b.norm_out))
+            .filter(|(r, (i, o))| {
                 let slo = Slo::default_for(r.modality);
-                r.norm_input_latency() <= slo.norm_input_s
-                    && r.norm_output_latency() <= slo.norm_output_s
+                **i <= slo.norm_input_s && **o <= slo.norm_output_s
             })
             .count();
         ok as f64 / self.records.len() as f64
@@ -581,6 +656,40 @@ mod tests {
         assert_eq!(tl.len(), 1);
         assert_eq!(tl[0].get("tp_after").unwrap().as_f64().unwrap(), 2.0);
         assert!(tl[0].get("merge").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn cached_metrics_match_fresh_computation() {
+        let recs = vec![
+            rec(0.0, 1.0, 2.0, 100, 11),
+            rec(0.5, 3.0, 9.0, 50, 21),
+            rec(1.0, 1.5, 4.0, 200, 5),
+            rec(1.0, 1.5, 4.0, 200, 1), // zero-output edge
+        ];
+        let rep = Report::new(recs.clone());
+        // Reference: the pre-cache fresh-Vec-per-call computations.
+        let ttft: Vec<f64> = recs.iter().map(|r| r.ttft()).collect();
+        let nin: Vec<f64> = recs.iter().map(|r| r.norm_input_latency()).collect();
+        let nout: Vec<f64> = recs.iter().map(|r| r.norm_output_latency()).collect();
+        assert_eq!(rep.mean_ttft().to_bits(), stats::mean(&ttft).to_bits());
+        assert_eq!(rep.mean_norm_input_latency().to_bits(), stats::mean(&nin).to_bits());
+        assert_eq!(rep.mean_norm_output_latency().to_bits(), stats::mean(&nout).to_bits());
+        for q in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(rep.p_ttft(q).to_bits(), stats::percentile(&ttft, q).to_bits());
+            assert_eq!(rep.p_norm_input(q).to_bits(), stats::percentile(&nin, q).to_bits());
+            assert_eq!(rep.p_norm_output(q).to_bits(), stats::percentile(&nout, q).to_bits());
+        }
+        let start = recs.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        let end = recs.iter().map(|r| r.finish).fold(0.0, f64::max);
+        let span = (end - start).max(1e-9);
+        assert_eq!(rep.throughput_rps().to_bits(), (recs.len() as f64 / span).to_bits());
+        let tokens: f64 = recs.iter().map(|r| r.output_len as f64).sum();
+        assert_eq!(rep.token_throughput().to_bits(), (tokens / span).to_bits());
+        assert_eq!(rep.makespan().to_bits(), end.to_bits());
+        // Repeated reads are stable, a clone carries the same answers,
+        // and reading metrics never perturbs canonical serialization.
+        assert_eq!(rep.mean_ttft().to_bits(), rep.clone().mean_ttft().to_bits());
+        assert_eq!(rep.canonical_digest(), Report::new(recs).canonical_digest());
     }
 
     #[test]

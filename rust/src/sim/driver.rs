@@ -32,7 +32,7 @@
 //! error instead of silently perturbing horizons.
 
 use crate::metrics::{Report, RequestRecord};
-use crate::sim::engine::EventQueue;
+use crate::sim::engine::{EventQueue, QueueTelemetry};
 use crate::util::error::Result;
 use crate::workload::Request;
 use std::cmp::Reverse;
@@ -117,6 +117,27 @@ pub struct DriverStats {
     pub arrivals: u64,
     pub ticks: u64,
     pub sys_events: u64,
+    /// Total pushes onto the event queue (dispatched events plus any
+    /// left pending, e.g. a stale re-armed tick).
+    pub queue_pushes: u64,
+    /// Total pops off the event queue (equals `events` by construction
+    /// — the loop dispatches exactly one event per pop).
+    pub queue_pops: u64,
+    /// High-water mark of events pending in the queue at once — the
+    /// queue-pressure number the timing wheel's bucket adaptation (and
+    /// `benches/event_queue.rs`'s scale axis) is about.
+    pub peak_pending_events: usize,
+    /// Timing-wheel overflow cascades (wheel re-anchors) during the run.
+    pub overflow_cascades: u64,
+}
+
+impl DriverStats {
+    fn absorb_queue(&mut self, qt: QueueTelemetry) {
+        self.queue_pushes = qt.pushes;
+        self.queue_pops = qt.pops;
+        self.peak_pending_events = qt.peak_pending;
+        self.overflow_cascades = qt.overflow_cascades;
+    }
 }
 
 /// A pull-based supplier of trace requests, in (approximately) arrival
@@ -338,7 +359,12 @@ pub trait ServingSystem {
     }
 }
 
-fn stall_message<S: ServingSystem + ?Sized>(sys: &S, total: usize, detail: &str) -> String {
+fn stall_message<S: ServingSystem + ?Sized>(
+    sys: &S,
+    total: usize,
+    detail: &str,
+    qt: QueueTelemetry,
+) -> String {
     let mut msg = format!(
         "simulation stalled: {}/{} requests finished{detail}",
         sys.completed(),
@@ -353,6 +379,12 @@ fn stall_message<S: ServingSystem + ?Sized>(sys: &S, total: usize, detail: &str)
             msg.push_str(&format!(" {name}={count}"));
         }
     }
+    // Event-queue pressure at the moment of the stall: a policy bug that
+    // stops scheduling shows up as pushes drying up, not as backlog.
+    msg.push_str(&format!(
+        "; event-queue pressure: pushes={} pops={} peak_pending={} cascades={}",
+        qt.pushes, qt.pops, qt.peak_pending, qt.overflow_cascades
+    ));
     msg
 }
 
@@ -405,7 +437,7 @@ pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?
     let mut idle_ticks = 0u32;
     while !(exhausted && heap.is_empty() && sys.is_done(injected)) {
         let Some((_, ev)) = q.pop() else {
-            panic!("{}", stall_message(sys, injected, ""));
+            panic!("{}", stall_message(sys, injected, "", q.telemetry()));
         };
         stats.events += 1;
         match ev {
@@ -477,7 +509,8 @@ pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?
                                 stall_message(
                                     sys,
                                     injected,
-                                    &format!(" ({idle_ticks} consecutive idle ticks)")
+                                    &format!(" ({idle_ticks} consecutive idle ticks)"),
+                                    q.telemetry()
                                 )
                             );
                         }
@@ -488,6 +521,7 @@ pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?
             }
         }
     }
+    stats.absorb_queue(q.telemetry());
     let mut report = Report::new(sys.drain_records());
     sys.annotate_report(&mut report);
     Ok((report, stats))
@@ -658,6 +692,11 @@ mod tests {
         assert_eq!(stats.arrivals, 4);
         assert_eq!(stats.sys_events, 4);
         assert_eq!(stats.events, stats.arrivals + stats.sys_events + stats.ticks);
+        // Queue telemetry: one pop per dispatched event, every pop was
+        // pushed first, and at least one event was ever pending.
+        assert_eq!(stats.queue_pops, stats.events);
+        assert!(stats.queue_pushes >= stats.queue_pops);
+        assert!(stats.peak_pending_events >= 1);
     }
 
     #[test]

@@ -1,6 +1,28 @@
 //! Discrete-event simulation core: a virtual clock and a deterministic
 //! priority event queue. All serving systems (ElasticMM and the
 //! baselines) run on this engine so their comparison is apples-to-apples.
+//!
+//! [`EventQueue`] is a two-level timing-wheel / calendar-queue hybrid
+//! (DESIGN.md §12): near-future events land in fixed-width buckets
+//! (width and bucket count adapted from the observed inter-event
+//! spacing at each re-anchor), far-future events in an overflow level
+//! that cascades down when the wheel rolls over, and the earliest
+//! active span is kept in a small min-heap so `pop` and the
+//! fast-forward hot call `peek_next_time` are O(1)-ish regardless of
+//! how many events are pending. Push and pop are O(1) amortized where
+//! the previous global `BinaryHeap` paid O(log n) per operation — the
+//! difference that dominates million-request trace replays.
+//!
+//! Pop order is **provably identical** to a global heap ordered by
+//! `(time via f64::total_cmp, insertion seq)`: bucket routing uses
+//! `floor((t - origin) / width)`, a weakly monotone function of `t`, so
+//! an entry in a lower-indexed bucket (or in the active heap, which
+//! only holds entries routed below the activation cursor) is strictly
+//! earlier than every entry in a higher-indexed bucket or the overflow
+//! level; within the active heap the full total order decides. The
+//! original heap implementation is retained verbatim as [`HeapQueue`],
+//! the differential-testing oracle
+//! (`rust/tests/event_queue_differential.rs`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -16,7 +38,7 @@ struct Entry<E> {
 
 impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
     }
 }
 impl<E> Eq for Entry<E> {}
@@ -28,19 +50,79 @@ impl<E> PartialOrd for Entry<E> {
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap behaviour on BinaryHeap (a max-heap).
+        // `f64::total_cmp` makes the order total by construction —
+        // no `partial_cmp(..).unwrap_or(Equal)` fallback relying on the
+        // push-time finiteness assert at a distance.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
-/// Deterministic min-priority event queue keyed on simulation time.
+/// Operation counters exposed by both queue implementations — the
+/// event-queue pressure telemetry surfaced through
+/// [`DriverStats`](crate::sim::driver::DriverStats), bench JSON, and
+/// the driver's stall-panic diagnostics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueTelemetry {
+    /// Total `push`/`push_after` calls.
+    pub pushes: u64,
+    /// Total successful `pop`s.
+    pub pops: u64,
+    /// High-water mark of pending events.
+    pub peak_pending: usize,
+    /// Overflow-level cascades (wheel re-anchors). Always 0 for the
+    /// heap oracle.
+    pub overflow_cascades: u64,
+}
+
+impl QueueTelemetry {
+    fn on_push(&mut self, len: usize) {
+        self.pushes += 1;
+        if len > self.peak_pending {
+            self.peak_pending = len;
+        }
+    }
+}
+
+/// Smallest wheel: when few events are pending, a big bucket array
+/// would make the activation cursor scan mostly empty buckets.
+const MIN_BUCKETS: usize = 16;
+/// Largest wheel: bounds cascade-time memory; beyond this the overflow
+/// level absorbs the tail and is rescanned once per rollover.
+const MAX_BUCKETS: usize = 1 << 16;
+/// Floor on the adapted bucket width (an all-ties overflow would
+/// otherwise yield width 0 and NaN bucket indices).
+const MIN_BUCKET_WIDTH: f64 = 1e-9;
+
+/// Deterministic min-priority event queue keyed on simulation time —
+/// the timing-wheel implementation (see module docs for the layout and
+/// the pop-order-identity argument).
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// Min-heap over the *active span*: every entry whose bucket index
+    /// (under the current era's `origin`/`width`) is below `cursor`.
+    /// Its top is always the global minimum when the queue is
+    /// non-empty, so `peek_next_time` never scans.
+    front: BinaryHeap<Entry<E>>,
+    /// Near-future wheel: bucket `i` holds entries with
+    /// `floor((t - origin) / width) == i`, unsorted until activation.
+    buckets: Vec<Vec<Entry<E>>>,
+    /// Next bucket to activate; buckets below it are empty (drained
+    /// into `front`). Only ever advances within an era.
+    cursor: usize,
+    /// Wheel window start (lower bound of bucket 0) for the current
+    /// era. `NEG_INFINITY` until the first cascade anchors it.
+    origin: f64,
+    /// Bucket width for the current era, adapted at each cascade to
+    /// ~2× the mean inter-event gap observed in the overflow level.
+    width: f64,
+    /// Far-future level: entries beyond the wheel window, unordered.
+    overflow: Vec<Entry<E>>,
+    len: usize,
     seq: u64,
     now: f64,
+    telemetry: QueueTelemetry,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -51,7 +133,18 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+        EventQueue {
+            front: BinaryHeap::new(),
+            buckets: Vec::new(),
+            cursor: 0,
+            origin: f64::NEG_INFINITY,
+            width: 1.0,
+            overflow: Vec::new(),
+            len: 0,
+            seq: 0,
+            now: 0.0,
+            telemetry: QueueTelemetry::default(),
+        }
     }
 
     /// Current simulation time (time of the last popped event).
@@ -59,20 +152,55 @@ impl<E> EventQueue<E> {
         self.now
     }
 
+    /// Operation counters (pushes, pops, peak pending, cascades).
+    pub fn telemetry(&self) -> QueueTelemetry {
+        self.telemetry
+    }
+
+    /// Bucket index of `t` under the current era, as f64 so the
+    /// unanchored (`-inf` origin ⇒ `+inf` index ⇒ overflow) and
+    /// pre-window (`t < origin` ⇒ negative ⇒ active heap) cases fall
+    /// out of the same comparison chain. Weakly monotone in `t` —
+    /// subtraction, division by a positive width, and `floor` each
+    /// preserve order under IEEE-754 rounding — which is what makes
+    /// bucket order imply time order.
+    #[inline]
+    fn bucket_of(&self, t: f64) -> f64 {
+        ((t - self.origin) / self.width).floor()
+    }
+
     /// Schedule `event` at absolute time `t` (clamped to now — events in
-    /// the past fire immediately-next). Panics on non-finite `t`:
-    /// `Entry::cmp` falls back to `Ordering::Equal` for incomparable
-    /// times, so a single NaN would silently corrupt heap ordering.
+    /// the past fire immediately-next). Panics on non-finite `t`: a
+    /// NaN/inf timestamp has no place on the wheel (and would break the
+    /// horizon guarantees even where `total_cmp` keeps the order total).
     pub fn push(&mut self, t: f64, event: E) {
         assert!(
             t.is_finite(),
             "EventQueue::push: non-finite event time {t} at sim time {} \
-             (a NaN/inf timestamp would corrupt heap ordering)",
+             (a NaN/inf timestamp would corrupt event ordering)",
             self.now
         );
         let t = if t < self.now { self.now } else { t };
-        self.heap.push(Entry { time: t, seq: self.seq, event });
+        let entry = Entry { time: t, seq: self.seq, event };
         self.seq += 1;
+        self.len += 1;
+        self.telemetry.on_push(self.len);
+        let idx = self.bucket_of(t);
+        if idx < self.cursor as f64 {
+            // At or before the active span: strictly earlier than every
+            // bucketed entry (floor monotonicity), so it belongs in the
+            // front heap, which orders it by (total_cmp time, seq).
+            self.front.push(entry);
+        } else if idx < self.buckets.len() as f64 {
+            self.buckets[idx as usize].push(entry);
+        } else {
+            self.overflow.push(entry);
+        }
+        if self.front.is_empty() {
+            // Keep the invariant "front non-empty whenever len > 0" so
+            // peek_next_time stays O(1).
+            self.refill_front();
+        }
     }
 
     /// Schedule `event` after a delay.
@@ -83,7 +211,163 @@ impl<E> EventQueue<E> {
 
     /// Time of the earliest queued event without popping it — the
     /// *horizon* used by decode fast-forwarding: nothing can change the
-    /// simulation state strictly before this time.
+    /// simulation state strictly before this time. O(1): the front
+    /// heap's top is the cached global minimum.
+    pub fn peek_next_time(&self) -> Option<f64> {
+        self.front.peek().map(|e| e.time)
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let e = self.front.pop()?;
+        debug_assert!(e.time >= self.now);
+        self.now = e.time;
+        self.len -= 1;
+        self.telemetry.pops += 1;
+        if self.front.is_empty() && self.len > 0 {
+            self.refill_front();
+        }
+        Some((e.time, e.event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Restore the front-heap invariant: activate the earliest
+    /// non-empty bucket (heapify it in O(k)), or — when the wheel is
+    /// exhausted — cascade the overflow level into a re-anchored wheel.
+    fn refill_front(&mut self) {
+        debug_assert!(self.front.is_empty());
+        loop {
+            while self.cursor < self.buckets.len() && self.buckets[self.cursor].is_empty() {
+                self.cursor += 1;
+            }
+            if self.cursor < self.buckets.len() {
+                let bucket = std::mem::take(&mut self.buckets[self.cursor]);
+                self.cursor += 1;
+                // In-place heapify reusing the bucket's allocation.
+                self.front = BinaryHeap::from(bucket);
+                return;
+            }
+            if self.overflow.is_empty() {
+                debug_assert_eq!(self.len, 0);
+                return;
+            }
+            self.cascade();
+        }
+    }
+
+    /// Wheel rollover: re-anchor the window at the earliest overflow
+    /// event and adapt bucket width (≈2× the mean inter-event gap) and
+    /// bucket count (≈ the overflow population, clamped) to the
+    /// observed spacing, then route every overflow entry that now falls
+    /// inside the window down into its bucket. Only called with the
+    /// front heap and every bucket empty, so re-anchoring cannot
+    /// reorder anything: all remaining events are in the overflow
+    /// level. Guaranteed progress: the minimum lands in bucket 0.
+    fn cascade(&mut self) {
+        debug_assert!(self.front.is_empty());
+        debug_assert!(self.buckets.iter().all(|b| b.is_empty()));
+        self.telemetry.overflow_cascades += 1;
+        let mut min_t = f64::INFINITY;
+        let mut max_t = f64::NEG_INFINITY;
+        for e in &self.overflow {
+            min_t = min_t.min(e.time);
+            max_t = max_t.max(e.time);
+        }
+        let n = self.overflow.len();
+        let mean_gap = (max_t - min_t) / n as f64;
+        // Calendar-queue rule of thumb: ~2 events per bucket in the
+        // uniform case; the whole overflow fits in one window whenever
+        // it holds no more than 2× the bucket count.
+        self.width = (2.0 * mean_gap).max(MIN_BUCKET_WIDTH);
+        self.origin = min_t;
+        self.cursor = 0;
+        let want = n.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        if self.buckets.len() != want {
+            self.buckets.resize_with(want, Vec::new);
+        }
+        let mut i = 0;
+        while i < self.overflow.len() {
+            let idx = self.bucket_of(self.overflow[i].time);
+            debug_assert!(idx >= 0.0);
+            if idx < self.buckets.len() as f64 {
+                let e = self.overflow.swap_remove(i);
+                self.buckets[idx as usize].push(e);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// The pre-timing-wheel implementation: one global `BinaryHeap` with
+/// O(log n) push/pop, retained verbatim (modulo the `Entry` ordering
+/// now being total by construction via `f64::total_cmp`) as the
+/// **differential-testing oracle** for [`EventQueue`]. Same public
+/// API, same clamping and non-finite panic, and — the contract
+/// `rust/tests/event_queue_differential.rs` proves — the exact same
+/// pop sequence for any schedule. Not used by the driver.
+pub struct HeapQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+    telemetry: QueueTelemetry,
+}
+
+impl<E> Default for HeapQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> HeapQueue<E> {
+    pub fn new() -> Self {
+        HeapQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            telemetry: QueueTelemetry::default(),
+        }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Operation counters (`overflow_cascades` is always 0 here).
+    pub fn telemetry(&self) -> QueueTelemetry {
+        self.telemetry
+    }
+
+    /// Schedule `event` at absolute time `t` (clamped to now). Panics
+    /// on non-finite `t`, mirroring [`EventQueue::push`].
+    pub fn push(&mut self, t: f64, event: E) {
+        assert!(
+            t.is_finite(),
+            "EventQueue::push: non-finite event time {t} at sim time {} \
+             (a NaN/inf timestamp would corrupt event ordering)",
+            self.now
+        );
+        let t = if t < self.now { self.now } else { t };
+        self.heap.push(Entry { time: t, seq: self.seq, event });
+        self.seq += 1;
+        self.telemetry.on_push(self.heap.len());
+    }
+
+    /// Schedule `event` after a delay.
+    pub fn push_after(&mut self, delay: f64, event: E) {
+        let now = self.now;
+        self.push(now + delay.max(0.0), event);
+    }
+
+    /// Time of the earliest queued event without popping it.
     pub fn peek_next_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.time)
     }
@@ -93,6 +377,7 @@ impl<E> EventQueue<E> {
         let e = self.heap.pop()?;
         debug_assert!(e.time >= self.now);
         self.now = e.time;
+        self.telemetry.pops += 1;
         Some((e.time, e.event))
     }
 
@@ -157,6 +442,21 @@ mod tests {
     }
 
     #[test]
+    fn peek_sees_later_push_below_current_minimum() {
+        // A push earlier than everything pending must surface through
+        // peek immediately (it routes into the active heap).
+        let mut q = EventQueue::new();
+        q.push(100.0, "far");
+        q.push(200.0, "farther");
+        assert_eq!(q.peek_next_time(), Some(100.0));
+        q.push(50.0, "near");
+        assert_eq!(q.peek_next_time(), Some(50.0));
+        assert_eq!(q.pop().unwrap().1, "near");
+        assert_eq!(q.pop().unwrap().1, "far");
+        assert_eq!(q.pop().unwrap().1, "farther");
+    }
+
+    #[test]
     #[should_panic(expected = "non-finite event time")]
     fn nan_time_panics_instead_of_corrupting_heap() {
         let mut q = EventQueue::new();
@@ -171,6 +471,13 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn heap_oracle_nan_time_panics_too() {
+        let mut q = HeapQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
     fn push_after_is_relative() {
         let mut q = EventQueue::new();
         q.push(2.0, "first");
@@ -178,5 +485,97 @@ mod tests {
         q.push_after(3.0, "second");
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 5.0);
+    }
+
+    #[test]
+    fn far_future_outliers_cascade_and_pop_in_order() {
+        // A near cluster plus outliers far beyond any initial window:
+        // the outliers sit in the overflow level until the wheel rolls
+        // over, then cascade down — order must be unaffected.
+        let mut q = EventQueue::new();
+        for i in 0..100u64 {
+            q.push(i as f64 * 0.01, i);
+        }
+        q.push(1.0e6, 1000);
+        q.push(2.0e6, 1001);
+        q.push(1.5e6, 1002);
+        let mut order = Vec::new();
+        while let Some((_, e)) = q.pop() {
+            order.push(e);
+        }
+        let mut expect: Vec<u64> = (0..100).collect();
+        expect.extend([1000, 1002, 1001]);
+        assert_eq!(order, expect);
+        assert!(q.telemetry().overflow_cascades >= 1, "{:?}", q.telemetry());
+    }
+
+    #[test]
+    fn telemetry_counts_ops_and_peak() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(i as f64, i);
+        }
+        q.pop();
+        q.pop();
+        q.push(100.0, 99);
+        let t = q.telemetry();
+        assert_eq!(t.pushes, 11);
+        assert_eq!(t.pops, 2);
+        assert_eq!(t.peak_pending, 10);
+        assert_eq!(q.len(), 9);
+        // The heap oracle exposes the same counters.
+        let mut h: HeapQueue<u64> = HeapQueue::new();
+        h.push(1.0, 1);
+        h.push(2.0, 2);
+        h.pop();
+        let t = h.telemetry();
+        assert_eq!((t.pushes, t.pops, t.peak_pending, t.overflow_cascades), (2, 1, 2, 0));
+    }
+
+    #[test]
+    fn wheel_matches_heap_on_interleaved_churn() {
+        // Quick in-module sanity check; the adversarial differential
+        // suite lives in rust/tests/event_queue_differential.rs.
+        let mut wheel = EventQueue::new();
+        let mut heap = HeapQueue::new();
+        let mut state = 0x9E37_79B9u64;
+        let mut tick = 0.0f64;
+        for i in 0..5_000u64 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let r = (state >> 33) as f64 / (1u64 << 31) as f64;
+            match state % 7 {
+                0 => tick += r * 3.0,
+                1 => {
+                    // Far-future outlier.
+                    wheel.push(tick + 1e5 * (1.0 + r), i);
+                    heap.push(tick + 1e5 * (1.0 + r), i);
+                }
+                2 | 3 => {
+                    let (a, b) = (wheel.pop(), heap.pop());
+                    assert_eq!(
+                        a.as_ref().map(|(t, e)| (t.to_bits(), *e)),
+                        b.as_ref().map(|(t, e)| (t.to_bits(), *e)),
+                    );
+                }
+                _ => {
+                    // Near push, sometimes an exact tie with `tick`.
+                    let t = if state % 2 == 0 { tick } else { tick + r * 0.5 };
+                    wheel.push(t, i);
+                    heap.push(t, i);
+                }
+            }
+            assert_eq!(wheel.peek_next_time(), heap.peek_next_time());
+            assert_eq!(wheel.len(), heap.len());
+        }
+        loop {
+            let (a, b) = (wheel.pop(), heap.pop());
+            assert_eq!(
+                a.as_ref().map(|(t, e)| (t.to_bits(), *e)),
+                b.as_ref().map(|(t, e)| (t.to_bits(), *e)),
+            );
+            if a.is_none() {
+                break;
+            }
+        }
     }
 }

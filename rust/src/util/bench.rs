@@ -109,8 +109,11 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// (an accidental O(n²) hot loop, allocation storms) without flaking on
 /// runner speed. `runs_per_sec` is the sweep engine's throughput floor;
 /// the `*_mib_per_sec_streamed` pair and `streamed_vs_dom_read_speedup`
-/// are the trace-I/O bench's streaming-throughput floors.
-const FLOOR_KEYS: [&str; 7] = [
+/// are the trace-I/O bench's streaming-throughput floors; the
+/// `ops_per_sec_*` pair and `wheel_vs_heap_speedup` are the event-queue
+/// micro-bench's floors (the speedup floor is the timing wheel's "never
+/// slower than the heap it replaced" contract at scale).
+const FLOOR_KEYS: [&str; 10] = [
     "events_per_sec_ff_on",
     "events_per_sec_ff_off",
     "speedup",
@@ -118,6 +121,9 @@ const FLOOR_KEYS: [&str; 7] = [
     "read_mib_per_sec_streamed",
     "write_mib_per_sec_streamed",
     "streamed_vs_dom_read_speedup",
+    "ops_per_sec_wheel",
+    "ops_per_sec_heap",
+    "wheel_vs_heap_speedup",
 ];
 
 /// Per-system keys treated as **ceilings**: the measurement must stay

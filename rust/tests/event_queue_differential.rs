@@ -1,0 +1,250 @@
+//! The timing wheel must be **invisible**: `EventQueue` (the calendar
+//! queue / timing-wheel hybrid) has to produce the exact pop sequence of
+//! the retained `HeapQueue` oracle — same `(time, event)` pairs, bit-for-
+//! bit times — for any schedule, and the full simulator stack driven by
+//! the wheel has to produce byte-identical canonical `Report`s for every
+//! serving-system variant with decode fast-forwarding on and off.
+//!
+//! The property test drives both queues through randomized op scripts
+//! covering the adversarial regimes the wheel's bucketing has to survive:
+//! tie storms at a single timestamp, sub-bucket-width spacing, past
+//! pushes (clamped to `now`), interleaved push/pop churn, exponential
+//! and bursty heavy-tailed gaps, and far-future outliers that force
+//! overflow cascades.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::model::CostModel;
+use elasticmm::sim::driver::ServingSystem;
+use elasticmm::sim::engine::{EventQueue, HeapQueue};
+use elasticmm::util::proptest::{check, Gen};
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Push(f64),
+    Pop,
+}
+
+/// Randomized op script. Push times are built from a forward-drifting
+/// cursor plus a gap drawn from a mixture of the adversarial regimes;
+/// past pushes deliberately aim below the cursor so the clamp path runs.
+fn gen_ops(g: &mut Gen) -> Vec<Op> {
+    let n = g.len(400).max(4);
+    let mut cursor = 0.0f64;
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        let roll = g.usize_in(0, 99);
+        if roll < 55 {
+            if g.bool() {
+                // Drift the cursor so schedules aren't one giant tie.
+                cursor += g.rng.exp(4.0);
+            }
+            let gap = match g.usize_in(0, 5) {
+                0 => 0.0,                               // exact tie storm
+                1 => g.f64_in(0.0, 1e-12),              // sub-bucket-width spacing
+                2 => g.rng.exp(1.0),                    // exponential gaps
+                3 => g.rng.lognormal(0.0, 3.0),         // bursty heavy tail
+                4 => 1e6 * (1.0 + g.f64_in(0.0, 10.0)), // far-future outlier → cascade
+                _ => g.f64_in(0.0, 2.0),
+            };
+            ops.push(Op::Push(cursor + gap));
+        } else if roll < 70 {
+            // Below (or at) the clock: exercises past-push clamping.
+            ops.push(Op::Push((cursor - g.f64_in(0.0, 5.0)).max(0.0)));
+        } else {
+            ops.push(Op::Pop);
+        }
+    }
+    ops
+}
+
+/// Replay one script against both queues, checking pop identity, peek
+/// identity, length, and clock after every op, then drain both.
+fn run_differential(ops: &[Op]) -> Result<(), String> {
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut heap: HeapQueue<u64> = HeapQueue::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Push(t) => {
+                wheel.push(t, i as u64);
+                heap.push(t, i as u64);
+            }
+            Op::Pop => {
+                let a = wheel.pop().map(|(t, v)| (t.to_bits(), v));
+                let b = heap.pop().map(|(t, v)| (t.to_bits(), v));
+                if a != b {
+                    return Err(format!("pop at op #{i}: wheel {a:?} != heap {b:?}"));
+                }
+            }
+        }
+        let pa = wheel.peek_next_time().map(f64::to_bits);
+        let pb = heap.peek_next_time().map(f64::to_bits);
+        if pa != pb {
+            return Err(format!("peek after op #{i}: wheel {pa:?} != heap {pb:?}"));
+        }
+        if wheel.len() != heap.len() {
+            return Err(format!(
+                "len after op #{i}: wheel {} != heap {}",
+                wheel.len(),
+                heap.len()
+            ));
+        }
+        if wheel.now().to_bits() != heap.now().to_bits() {
+            return Err(format!(
+                "clock after op #{i}: wheel {} != heap {}",
+                wheel.now(),
+                heap.now()
+            ));
+        }
+    }
+    loop {
+        let a = wheel.pop().map(|(t, v)| (t.to_bits(), v));
+        let b = heap.pop().map(|(t, v)| (t.to_bits(), v));
+        if a != b {
+            return Err(format!("drain: wheel {a:?} != heap {b:?}"));
+        }
+        if a.is_none() {
+            return Ok(());
+        }
+    }
+}
+
+#[test]
+fn wheel_pops_identically_to_heap_on_random_schedules() {
+    check(0xE1E7_0001, 300, gen_ops, |ops| run_differential(ops));
+}
+
+/// Deterministic large-scale stress: a long mixed workload with every
+/// regime at once, far beyond what a shrunk property case covers.
+#[test]
+fn wheel_matches_heap_on_large_mixed_workload() {
+    let mut rng = Rng::new(0x57E55);
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut heap: HeapQueue<u64> = HeapQueue::new();
+    let mut cursor = 0.0f64;
+    for i in 0..60_000u64 {
+        let r = rng.below(100);
+        if r < 60 {
+            let gap = match rng.below(5) {
+                0 => 0.0,
+                1 => 1e-13 * rng.f64(),
+                2 => rng.exp(2.0),
+                3 => rng.lognormal(0.0, 2.5),
+                _ => 1e7 * (1.0 + rng.f64()),
+            };
+            if rng.chance(0.5) {
+                cursor += rng.exp(8.0);
+            }
+            wheel.push(cursor + gap, i);
+            heap.push(cursor + gap, i);
+        } else if r < 70 {
+            let t = (cursor - rng.range_f64(0.0, 10.0)).max(0.0);
+            wheel.push(t, i);
+            heap.push(t, i);
+        } else {
+            let a = wheel.pop().map(|(t, v)| (t.to_bits(), v));
+            let b = heap.pop().map(|(t, v)| (t.to_bits(), v));
+            assert_eq!(a, b, "pop diverged at step {i}");
+        }
+        assert_eq!(
+            wheel.peek_next_time().map(f64::to_bits),
+            heap.peek_next_time().map(f64::to_bits),
+            "peek diverged at step {i}"
+        );
+    }
+    assert!(
+        wheel.telemetry().overflow_cascades > 0,
+        "workload was meant to force overflow cascades: {:?}",
+        wheel.telemetry()
+    );
+    loop {
+        let a = wheel.pop().map(|(t, v)| (t.to_bits(), v));
+        let b = heap.pop().map(|(t, v)| (t.to_bits(), v));
+        assert_eq!(a, b, "drain diverged");
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+/// A pure tie storm: thousands of events at one timestamp must pop in
+/// exact insertion order from both structures.
+#[test]
+fn tie_storm_pops_in_insertion_order() {
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut heap: HeapQueue<u64> = HeapQueue::new();
+    for i in 0..10_000u64 {
+        wheel.push(1.5, i);
+        heap.push(1.5, i);
+    }
+    for i in 0..10_000u64 {
+        let (tw, vw) = wheel.pop().unwrap();
+        let (th, vh) = heap.pop().unwrap();
+        assert_eq!((tw.to_bits(), vw), (th.to_bits(), vh));
+        assert_eq!(vw, i, "tie storm broke insertion order");
+    }
+    assert!(wheel.is_empty() && heap.is_empty());
+}
+
+// -- Full-system byte-identity with the wheel as the production queue --
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched(ff: bool) -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: ff, ..SchedulerConfig::default() }
+}
+
+fn mixed_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::mixed_modality().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+/// One variant: fast-forward on vs off must produce byte-identical
+/// canonical reports when driven by the timing wheel (fast-forwarding
+/// leans on `peek_next_time` every decode iteration, so this exercises
+/// the wheel's cached-minimum path through the whole stack).
+fn assert_ff_invariant<S: ServingSystem>(name: &str, mk: impl Fn(bool) -> S, t: &[Request]) {
+    let mut off_sys = mk(false);
+    let off = off_sys.run(t);
+    let mut on_sys = mk(true);
+    let on = on_sys.run(t);
+    assert_eq!(off.records.len(), t.len(), "{name}: incomplete ff-off run");
+    assert_eq!(
+        off.canonical_json().to_string(),
+        on.canonical_json().to_string(),
+        "{name}: fast-forward changed the canonical report under the wheel"
+    );
+    assert_eq!(off.canonical_digest(), on.canonical_digest(), "{name}: digest");
+}
+
+#[test]
+fn full_system_reports_byte_identical_across_variants_and_ff() {
+    let t = mixed_trace(120, 4.0, 0x17EE1);
+    assert_ff_invariant("vllm", |ff| CoupledVllm::new(cost(), sched(ff), 8), &t);
+    assert_ff_invariant("vllm-decouple", |ff| DecoupledStatic::new(cost(), sched(ff), 8), &t);
+    assert_ff_invariant(
+        "emp-full",
+        |ff| EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full(8)),
+        &t,
+    );
+    assert_ff_invariant(
+        "emp-static",
+        |ff| EmpSystem::new(cost(), sched(ff), 8, EmpOptions::static_split(4)),
+        &t,
+    );
+    assert_ff_invariant(
+        "emp-nway",
+        |ff| EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full_nway(8)),
+        &t,
+    );
+}
