@@ -1,0 +1,183 @@
+//! Flight-recorder overhead benchmark: the decode-heavy trace through
+//! the EMP system and the coupled baseline with tracing **off**, with
+//! the bounded in-memory recorder only (**ring**), and with the full
+//! Perfetto stream writing to `io::sink()` (**on**). Writes
+//! `BENCH_obs.json` at the repo root so the tracing tax is tracked
+//! per-PR.
+//!
+//!     cargo bench --bench trace_overhead            # full (6k requests)
+//!     cargo bench --bench trace_overhead -- --smoke # CI-sized trace
+//!
+//! ## Bench-regression gate (CI)
+//!
+//!     cargo bench --bench trace_overhead -- --smoke --check
+//!
+//! The gate compares against the `obs` section of the committed
+//! `BENCH_baseline.json` via `util::bench::check_regression_section`:
+//! events/sec floors for the off and on paths, plus ceilings on the
+//! traced overhead percentage and the deterministic recorded-event
+//! count (a blowup there means an instrumentation site started firing
+//! per token instead of per iteration).
+//!
+//! The "off path is free" claim is additionally carried by
+//! `rust/tests/tracelog_equivalence.rs`, which proves the disabled
+//! recorder cannot perturb a single scheduling decision — wall-clock
+//! floors here catch the residual dispatch cost, which is one enum
+//! discriminant test per hook.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::model::CostModel;
+use elasticmm::sim::driver::{run_trace_with_stats, ServingSystem};
+use elasticmm::sim::tracelog::TraceLog;
+use elasticmm::util::cli::Args;
+use elasticmm::util::json::Json;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::Request;
+use std::time::Instant;
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched() -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: true, ..SchedulerConfig::default() }
+}
+
+/// Same decode-heavy mix as `sim_throughput`: the regime where the
+/// tracing hooks on the per-iteration hot path matter most.
+fn decode_heavy_trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut spec = DatasetSpec::sharegpt4o();
+    spec.name = "decode-heavy".to_string();
+    spec.prompt_mu = 4.5;
+    spec.output_mu = 6.1;
+    spec.output_sigma = 0.5;
+    spec.multimodal_fraction = 0.35;
+    let mut rng = elasticmm::util::rng::Rng::new(seed);
+    let mut reqs = spec.generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+struct Measurement {
+    wall_s: f64,
+    sim_events: u64,
+    trace_events: u64,
+}
+
+fn measure<S: ServingSystem>(mut sys: S, tl: TraceLog, trace: &[Request]) -> Measurement {
+    sys.set_tracelog(tl.clone());
+    let t0 = Instant::now();
+    let (rep, stats) = run_trace_with_stats(&mut sys, trace);
+    tl.finish_perfetto().expect("trace sink");
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.records.len(), trace.len(), "incomplete run");
+    Measurement { wall_s, sim_events: stats.events, trace_events: tl.events_recorded() }
+}
+
+fn bench_system(
+    name: &str,
+    trace: &[Request],
+    run: impl Fn(TraceLog, &[Request]) -> Measurement,
+) -> Json {
+    let off = run(TraceLog::Off, trace);
+    let ring = run(TraceLog::recording(), trace);
+    let on = run(TraceLog::with_perfetto(Box::new(std::io::sink())), trace);
+    assert_eq!(off.sim_events, on.sim_events, "tracing changed the event schedule");
+    assert_eq!(ring.trace_events, on.trace_events, "ring and stream saw different events");
+    let overhead_pct = (on.wall_s / off.wall_s.max(1e-9) - 1.0) * 100.0;
+    let ring_pct = (ring.wall_s / off.wall_s.max(1e-9) - 1.0) * 100.0;
+    println!(
+        "{name:<10} off {:>8.3}s   ring {:>8.3}s ({ring_pct:>+6.1}%)   on {:>8.3}s ({overhead_pct:>+6.1}%)   {:>9} trace events",
+        off.wall_s, ring.wall_s, on.wall_s, on.trace_events
+    );
+    Json::obj(vec![
+        ("wall_s_off", Json::num(off.wall_s)),
+        ("wall_s_ring", Json::num(ring.wall_s)),
+        ("wall_s_on", Json::num(on.wall_s)),
+        ("events_per_sec_off", Json::num(off.sim_events as f64 / off.wall_s.max(1e-9))),
+        ("events_per_sec_on", Json::num(on.sim_events as f64 / on.wall_s.max(1e-9))),
+        ("traced_overhead_pct", Json::num(overhead_pct)),
+        ("ring_overhead_pct", Json::num(ring_pct)),
+        ("trace_events_total", Json::num(on.trace_events as f64)),
+        ("sim_events", Json::num(on.sim_events as f64)),
+        (
+            "trace_events_per_sim_event",
+            Json::num(on.trace_events as f64 / on.sim_events.max(1) as f64),
+        ),
+    ])
+}
+
+fn run_gate(args: &Args, measured: &Json) {
+    let baseline_path = args.get_or(
+        "baseline",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json"),
+    );
+    let text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+    let baseline = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("parse baseline {baseline_path}: {e:?}"));
+    let tolerance = args.get_f64(
+        "tolerance",
+        baseline.opt("tolerance_default").and_then(|t| t.as_f64().ok()).unwrap_or(0.2),
+    );
+    match elasticmm::util::bench::check_regression_section(&baseline, measured, tolerance, "obs")
+    {
+        Ok(checked) => {
+            println!(
+                "trace-overhead gate PASSED ({} checks, tolerance {:.0}%):",
+                checked.len(),
+                tolerance * 100.0
+            );
+            for line in checked {
+                println!("  {line}");
+            }
+        }
+        Err(failures) => {
+            eprintln!("trace-overhead gate FAILED (tolerance {:.0}%):", tolerance * 100.0);
+            for line in failures {
+                eprintln!("  {line}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let n = args.get_usize("requests", if smoke { 600 } else { 6_000 });
+    let qps = args.get_f64("qps", 3.0);
+    let gpus = args.get_usize("gpus", 4);
+    let seed = args.get_u64("seed", 11);
+    let trace = decode_heavy_trace(n, qps, seed);
+    println!(
+        "=== trace_overhead: {n} requests, qps {qps}, {gpus} GPUs{} ===",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let emp_json = bench_system("emp", &trace, |tl, t| {
+        measure(EmpSystem::new(cost(), sched(), gpus, EmpOptions::full(gpus)), tl, t)
+    });
+    let coupled_json = bench_system("coupled", &trace, |tl, t| {
+        measure(CoupledVllm::new(cost(), sched(), gpus), tl, t)
+    });
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("trace_overhead".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("requests", Json::num(n as f64)),
+        ("qps", Json::num(qps)),
+        ("gpus", Json::num(gpus as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("obs", Json::obj(vec![("emp", emp_json), ("coupled", coupled_json)])),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_obs.json");
+    std::fs::write(path, out.to_string()).expect("write BENCH_obs.json");
+    println!("wrote {path}");
+    if args.has_flag("check") {
+        run_gate(&args, &out);
+    }
+}

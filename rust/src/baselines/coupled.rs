@@ -35,6 +35,7 @@ use crate::model::{CostModel, DecodeItem, PrefillItem};
 use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
 use crate::sim::slab::{IdsPool, ReqIx, RequestSlab};
+use crate::sim::tracelog::{Mark, SpanKind, TraceLog, WindowKind};
 use crate::workload::Request;
 use std::collections::VecDeque;
 
@@ -69,6 +70,12 @@ pub struct CoupledVllm {
     /// elimination, mirrors `EmpSystem`).
     ids_pool: IdsPool,
     decode_scratch: Vec<DecodeItem>,
+    /// Flight-recorder sink (`Off` unless installed; no-op then).
+    pub(crate) tl: TraceLog,
+    /// Perfetto process id for this fleet's tracks. A standalone
+    /// coupled system is pid 0; `DecoupledStatic` gives its two fleets
+    /// distinct pids so their tracks don't collide.
+    pub(crate) trace_pid: u32,
 }
 
 impl CoupledVllm {
@@ -92,6 +99,8 @@ impl CoupledVllm {
             coalesced_steps: 0,
             ids_pool: IdsPool::default(),
             decode_scratch: Vec::new(),
+            tl: TraceLog::default(),
+            trace_pid: 0,
         }
     }
 
@@ -145,8 +154,11 @@ impl CoupledVllm {
             sr.phase = Phase::WaitPrefill;
         }
         let inst = self.pick_instance(&sr);
+        let rid = sr.req.id;
         let ix = self.requests.insert(sr);
         self.waiting[inst].push_back(ix);
+        self.tl.mark(q.now(), self.trace_pid, inst as u32, Mark::QueueEnter, rid);
+        self.sample_queue_depth(q.now());
         self.schedule(inst, q, wrap);
     }
 
@@ -165,6 +177,10 @@ impl CoupledVllm {
         let mut batch_ids: Vec<ReqIx> = Vec::new();
         let mut batch_items = Vec::new();
         let mut encode_s = 0.0;
+        // Per-admission [start, end) offsets into the serial inline
+        // encode prefix — request k's media finishes encoding at `now`
+        // plus the cumulative encode time through its own slot.
+        let mut enc_offsets: Vec<(f64, f64)> = Vec::new();
         let mut tokens = 0usize;
         while let Some(&ix) = self.waiting[inst].front() {
             let r = self.requests.get(ix);
@@ -181,9 +197,11 @@ impl CoupledVllm {
             let input_len = r.input_len;
             // Inline (blocking) encoding for every media attachment
             // (all of a video's chunks, serially — Fig 1a).
+            let enc_start = encode_s;
             for m in r.req.media.iter() {
                 encode_s += self.cost.media_encode_time(m, self.instances[inst].tp);
             }
+            enc_offsets.push((enc_start, encode_s));
             batch_items.push(PrefillItem {
                 new_tokens: input_len,
                 cached_tokens: 0,
@@ -195,13 +213,31 @@ impl CoupledVllm {
             self.waiting[inst].pop_front();
         }
         if !batch_ids.is_empty() {
-            for &ix in &batch_ids {
+            for (k, &ix) in batch_ids.iter().enumerate() {
                 let r = self.requests.get_mut(ix);
                 r.phase = Phase::Prefilling;
+                // Encode completes mid-iteration, at its slot in the
+                // serial encode prefix — stamped here at dispatch, not
+                // back-dated to the iteration end (which would charge
+                // the whole prefill to the encode stage). Text-only
+                // requests have an empty prefix: done immediately.
+                let rid = r.req.id;
+                if enc_offsets[k].1 > enc_offsets[k].0 {
+                    r.t_encode_done = now + enc_offsets[k].1;
+                    self.tl.ckpt_encode_start(now + enc_offsets[k].0, rid);
+                    self.tl.ckpt_encode_done(now + enc_offsets[k].1, rid);
+                } else {
+                    r.t_encode_done = now;
+                }
+                self.tl.mark(now, self.trace_pid, inst as u32, Mark::QueueExit, rid);
+                self.tl.ckpt_prefill_start(now + encode_s, rid);
             }
             let dur = encode_s
                 + self.cost.prefill_time(&batch_items, self.instances[inst].tp);
             let done = self.instances[inst].start_iteration(now, dur);
+            self.tl.span_begin(now, self.trace_pid, inst as u32, SpanKind::Prefill);
+            self.tl.busy(self.trace_pid, now, dur, self.instances[inst].tp);
+            self.sample_queue_depth(now);
             self.current[inst] = Some(Iter::Prefill(batch_ids));
             q.push(done, wrap(CoupledEv::IterDone(inst)));
             return;
@@ -218,8 +254,18 @@ impl CoupledVllm {
             );
             let dur = self.decode_batch_time(inst, &ids);
             let done = self.instances[inst].start_iteration(now, dur);
+            self.tl.span_begin(now, self.trace_pid, inst as u32, SpanKind::Decode);
+            self.tl.busy(self.trace_pid, now, dur, self.instances[inst].tp);
             self.current[inst] = Some(Iter::Decode(ids));
             q.push(done, wrap(CoupledEv::IterDone(inst)));
+        }
+    }
+
+    /// Fleet-wide waiting-queue depth sample on this fleet's pid track.
+    fn sample_queue_depth(&self, now: f64) {
+        if self.tl.is_on() {
+            let depth: usize = self.waiting.iter().map(|w| w.len()).sum();
+            self.tl.queue_depth(now, self.trace_pid, depth);
         }
     }
 
@@ -290,6 +336,11 @@ impl CoupledVllm {
         );
         self.decode_scratch = scratch;
         self.coalesced_steps += steps as u64;
+        // Coalesced run as one complete window; the span opened here is
+        // closed by the boundary step's completion handler.
+        self.tl.window(now, done - now, self.trace_pid, inst as u32, WindowKind::DecodeFastForward);
+        self.tl.span_begin(now, self.trace_pid, inst as u32, SpanKind::Decode);
+        self.tl.busy(self.trace_pid, now, done - now, self.instances[inst].tp);
         self.current[inst] = Some(Iter::Decode(ids));
         q.push(done, wrap(CoupledEv::IterDone(inst)));
     }
@@ -304,16 +355,21 @@ impl CoupledVllm {
         let iter = self.current[inst].take().expect("iteration in flight");
         match iter {
             Iter::Prefill(ids) => {
+                self.tl.span_end(now, self.trace_pid, inst as u32, SpanKind::Prefill);
                 for ix in ids {
                     let r = self.requests.get_mut(ix);
-                    r.t_encode_done = now;
+                    // Stamped at dispatch (see `schedule`); back-dating
+                    // it here would fold the prefill time into encode.
+                    debug_assert!(!r.t_encode_done.is_nan(), "encode-done stamp missing");
                     r.t_first_token = now;
                     r.prefill_done = r.prefill_target;
                     r.decoded = 1;
+                    self.tl.first_token(now, self.trace_pid, inst as u32, r.req.id);
                     if r.decoded >= r.req.output_tokens {
                         r.t_finish = now;
                         r.phase = Phase::Finished;
                         let id = r.req.id;
+                        self.tl.mark(now, self.trace_pid, inst as u32, Mark::Completion, id);
                         self.instances[inst].kv.release(id).expect("allocated");
                         self.finished.push(RequestRecord::from_sim(r));
                     } else {
@@ -324,6 +380,7 @@ impl CoupledVllm {
                 }
             }
             Iter::Decode(ids) => {
+                self.tl.span_end(now, self.trace_pid, inst as u32, SpanKind::Decode);
                 let mut any_completed = false;
                 for &ix in &ids {
                     let r = self.requests.get_mut(ix);
@@ -334,6 +391,7 @@ impl CoupledVllm {
                         r.t_finish = now;
                         r.phase = Phase::Finished;
                         let id = r.req.id;
+                        self.tl.mark(now, self.trace_pid, inst as u32, Mark::Completion, id);
                         self.instances[inst].kv.release(id).expect("allocated");
                         self.instances[inst].decoding.retain(|&d| d != ix);
                         self.finished.push(RequestRecord::from_sim(r));
@@ -390,6 +448,14 @@ impl ServingSystem for CoupledVllm {
 
     fn outstanding_by_phase(&self) -> Vec<(&'static str, usize)> {
         self.requests.phase_histogram()
+    }
+
+    fn set_tracelog(&mut self, tl: TraceLog) {
+        self.tl = tl;
+    }
+
+    fn tracelog(&self) -> TraceLog {
+        self.tl.clone()
     }
 }
 

@@ -16,6 +16,7 @@ use crate::config::SchedulerConfig;
 use crate::metrics::RequestRecord;
 use crate::model::CostModel;
 use crate::sim::driver::{ServingSystem, SimQueue};
+use crate::sim::tracelog::TraceLog;
 use crate::workload::{Modality, Request};
 
 use super::coupled::{CoupledEv, CoupledVllm};
@@ -47,10 +48,12 @@ impl DecoupledStatic {
         mm_gpus: usize,
     ) -> Self {
         assert!(text_gpus > 0 && mm_gpus > 0, "both groups need GPUs");
-        DecoupledStatic {
-            text: CoupledVllm::new(cost.clone(), sched.clone(), text_gpus),
-            multimodal: CoupledVllm::new(cost, sched, mm_gpus),
-        }
+        let text = CoupledVllm::new(cost.clone(), sched.clone(), text_gpus);
+        let mut multimodal = CoupledVllm::new(cost, sched, mm_gpus);
+        // Distinct Perfetto pids so the two fleets' tracks don't
+        // collide when one trace sink is shared (text stays pid 0).
+        multimodal.trace_pid = 1;
+        DecoupledStatic { text, multimodal }
     }
 }
 
@@ -108,6 +111,17 @@ impl ServingSystem for DecoupledStatic {
             slot.1 += count;
         }
         merged
+    }
+
+    fn set_tracelog(&mut self, tl: TraceLog) {
+        // One shared sink: both fleets record into the same log and
+        // trace file, distinguished by their pids.
+        self.text.tl = tl.clone();
+        self.multimodal.tl = tl;
+    }
+
+    fn tracelog(&self) -> TraceLog {
+        self.text.tl.clone()
     }
 }
 

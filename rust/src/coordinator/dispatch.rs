@@ -24,6 +24,7 @@ use crate::model::PrefillItem;
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
 use crate::sim::slab::ReqIx;
+use crate::sim::tracelog::{Mark, SpanKind};
 
 use super::scaling;
 use super::system::{gidx, EmpEv, EmpSystem, Iter};
@@ -53,8 +54,13 @@ pub(crate) fn schedule_encoders(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueu
             r.phase = Phase::Encoding;
         }
         let job = *r.encode_pending.last().expect("encode-queued request has pending jobs");
+        let rid = r.req.id;
         let dur = sys.cost.encode_job_time(&job, tp);
         let done = sys.instances[e].start_iteration(now, dur);
+        sys.tl.mark(now, gidx(g) as u32, e as u32, Mark::QueueExit, rid);
+        sys.tl.ckpt_encode_start(now, rid);
+        sys.tl.span_begin(now, gidx(g) as u32, e as u32, SpanKind::Encode);
+        sys.tl.busy(gidx(g) as u32, now, dur, tp);
         sys.current[e] = Some(Iter::Encode { ix });
         q.push(done, EmpEv::IterDone(e));
     }
@@ -184,15 +190,27 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     // chunks keep encoding on the encoder pool while this iteration
     // prefills the already-encoded tokens.
     let mut overlaps = 0u64;
+    // Inline encode runs serially in front of the iteration, in
+    // admission order: request k's jobs finish at `now` plus the
+    // cumulative encode time through its own slot. Track the per-slot
+    // [start, end) offsets so encode completion can be stamped *here*,
+    // at dispatch — not back-dated to the iteration end after the
+    // pending list is cleared.
+    let mut enc_cum = 0.0f64;
+    let mut enc_offsets: Vec<(f64, f64)> = Vec::with_capacity(ids.len());
     for &ix in &ids {
         let r = sys.requests.get(ix);
+        let enc_start = enc_cum;
         if r.inline_encode {
             for job in &r.encode_pending {
-                dur += sys.cost.encode_job_time(job, tp);
+                let t = sys.cost.encode_job_time(job, tp);
+                dur += t;
+                enc_cum += t;
             }
         } else if !r.encode_pending.is_empty() {
             overlaps += 1;
         }
+        enc_offsets.push((enc_start, enc_cum));
     }
     sys.stats.encode_overlap_prefills += overlaps;
     // KV shipping to the decode destinations (NVLink, overlapped
@@ -207,6 +225,16 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
         // Record that this iteration paid for the pending jobs, so the
         // completion handler may discard them (and only then).
         r.encode_charged_inline = r.inline_encode && !r.encode_pending.is_empty();
+        let rid = r.req.id;
+        if r.encode_charged_inline {
+            if r.t_encode_done.is_nan() {
+                r.t_encode_done = now + enc_offsets[k].1;
+            }
+            sys.tl.ckpt_encode_start(now + enc_offsets[k].0, rid);
+            sys.tl.ckpt_encode_done(now + enc_offsets[k].1, rid);
+        }
+        sys.tl.mark(now, gidx(g) as u32, u32::MAX, Mark::QueueExit, rid);
+        sys.tl.ckpt_prefill_start(now + enc_cum, rid);
     }
     if participants.len() > 1 {
         sys.stats.dp_prefill_iters += 1;
@@ -214,6 +242,11 @@ pub(crate) fn dispatch_prefill(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
     let leader = participants[0];
     for &p in &participants {
         sys.instances[p].start_iteration(now, dur);
+    }
+    if sys.tl.is_on() {
+        let gpus: usize = participants.iter().map(|&p| sys.instances[p].tp).sum();
+        sys.tl.span_begin(now, gidx(g) as u32, leader as u32, SpanKind::Prefill);
+        sys.tl.busy(gidx(g) as u32, now, dur, gpus);
     }
     sys.current[leader] = Some(Iter::Prefill { ids, participants: participants.clone() });
     q.push(now + dur, EmpEv::IterDone(leader));
@@ -239,6 +272,8 @@ pub(crate) fn schedule_decode(sys: &mut EmpSystem, inst: usize, q: &mut SimQueue
     );
     let dur = decode_batch_time(sys, g, inst, &ids);
     let done = sys.instances[inst].start_iteration(now, dur);
+    sys.tl.span_begin(now, gidx(g) as u32, inst as u32, SpanKind::Decode);
+    sys.tl.busy(gidx(g) as u32, now, dur, sys.instances[inst].tp);
     sys.current[inst] = Some(Iter::Decode { ids });
     q.push(done, EmpEv::IterDone(inst));
 }
@@ -276,6 +311,9 @@ pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
         let mut ids: Vec<ReqIx> = Vec::new();
         let mut items: Vec<PrefillItem> = Vec::new();
         let mut encode_s = 0.0;
+        // Per-admission [start, end) offsets into the serial inline
+        // encode prefix (see dispatch_prefill's matching block).
+        let mut enc_offsets: Vec<(f64, f64)> = Vec::new();
         let mut tokens = 0usize;
         let mut overlaps = 0u64;
         while let Some(&ix) = sys.groups[gidx(g)].wait_prefill.front() {
@@ -297,6 +335,7 @@ pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
                 cached_tokens: r.cached_prefix + r.prefill_done,
                 vision_tokens: r.vision_tokens,
             };
+            let enc_start = encode_s;
             if r.inline_encode {
                 for job in &r.encode_pending {
                     encode_s += sys.cost.encode_job_time(job, sys.instances[u].tp);
@@ -304,6 +343,7 @@ pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
             } else if !r.encode_pending.is_empty() {
                 overlaps += 1;
             }
+            enc_offsets.push((enc_start, encode_s));
             if home.is_none() {
                 sys.instances[u].kv.allocate(id, reserve).expect("checked");
             }
@@ -327,6 +367,16 @@ pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
                 // This iteration paid for the pending jobs (see
                 // dispatch_prefill's matching line).
                 r.encode_charged_inline = r.inline_encode && !r.encode_pending.is_empty();
+                let rid = r.req.id;
+                if r.encode_charged_inline {
+                    if r.t_encode_done.is_nan() {
+                        r.t_encode_done = now + enc_offsets[j].1;
+                    }
+                    sys.tl.ckpt_encode_start(now + enc_offsets[j].0, rid);
+                    sys.tl.ckpt_encode_done(now + enc_offsets[j].1, rid);
+                }
+                sys.tl.mark(now, gidx(g) as u32, u as u32, Mark::QueueExit, rid);
+                sys.tl.ckpt_prefill_start(now + encode_s, rid);
             }
             let cross = sys.group_serves_media(g);
             let dur = encode_s
@@ -334,6 +384,8 @@ pub(crate) fn schedule_unified(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue
                     .cost
                     .prefill_time_flags(&items, sys.instances[u].tp, cross);
             let done = sys.instances[u].start_iteration(now, dur);
+            sys.tl.span_begin(now, gidx(g) as u32, u as u32, SpanKind::Prefill);
+            sys.tl.busy(gidx(g) as u32, now, dur, sys.instances[u].tp);
             sys.current[u] = Some(Iter::Prefill { ids, participants: vec![u] });
             q.push(done, EmpEv::IterDone(u));
         } else {
@@ -356,6 +408,8 @@ pub(crate) fn schedule_decode_unified(sys: &mut EmpSystem, u: usize, q: &mut Sim
     ids.extend(sys.instances[u].decoding.iter().copied());
     let dur = decode_batch_time(sys, g, u, &ids);
     let done = sys.instances[u].start_iteration(now, dur);
+    sys.tl.span_begin(now, gidx(g) as u32, u as u32, SpanKind::Decode);
+    sys.tl.busy(gidx(g) as u32, now, dur, sys.instances[u].tp);
     sys.current[u] = Some(Iter::Decode { ids });
     q.push(done, EmpEv::IterDone(u));
 }

@@ -14,6 +14,7 @@
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
 use crate::sim::slab::ReqIx;
+use crate::sim::tracelog::WindowKind;
 
 use super::modality;
 use super::system::{gidx, EmpEv, EmpSystem};
@@ -70,6 +71,15 @@ pub(crate) fn migrate_seqs(
     let mig = sys.cost.migration_time(total_tokens);
     sys.stats.migrated_seqs += ids.len() as u64;
     for (dest, ids) in by_dest {
+        // One complete window per destination track: the KV transfer
+        // occupies [now, now+mig) on the receiving instance.
+        sys.tl.window(
+            q.now(),
+            mig,
+            gidx(sys.instances[dest].group) as u32,
+            dest as u32,
+            WindowKind::Migration,
+        );
         q.push_after(mig, EmpEv::MigrateDone { ids, dest });
     }
     true

@@ -26,6 +26,7 @@ use crate::model::{DecodeItem, PrefillItem};
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
 use crate::sim::slab::ReqIx;
+use crate::sim::tracelog::Mark;
 
 use super::gain_cost::{self, DecodeSet, PrefillSet};
 use super::migration;
@@ -203,9 +204,14 @@ fn try_tp_merge(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) ->
     true
 }
 
-pub(crate) fn note_flip(sys: &mut EmpSystem, g: GroupId, now: f64) {
+/// Record a role flip: cooldown clock, stats counter, and a trace mark
+/// on the flipped instance (`inst`, read *after* `set_role`, so the
+/// mark id carries the role it landed on).
+pub(crate) fn note_flip(sys: &mut EmpSystem, g: GroupId, inst: usize, now: f64) {
     sys.last_role_flip[gidx(g)] = now;
     sys.stats.role_flips += 1;
+    let role = sys.instances[inst].role;
+    sys.tl.mark(now, gidx(g) as u32, inst as u32, Mark::RoleFlip, role as u64);
 }
 
 /// Build the [`DecodeSet`] for an instance's resident sequences.
@@ -291,7 +297,7 @@ pub(crate) fn consider_prefill_preemption(
     }
     sys.set_role(emax, StageRole::Prefill);
     sys.stats.prefill_preemptions += 1;
-    note_flip(sys, g, now);
+    note_flip(sys, g, emax, now);
     Some(emax)
 }
 
@@ -321,7 +327,10 @@ pub(crate) fn try_decode_scale_up(
         if let Some(pick) = pick {
             sys.set_role(pick, StageRole::Decode);
             sys.stats.decode_scale_ups += 1;
+            // Emergency flip: bypasses note_flip on purpose (no
+            // cooldown stamp), so mark the trace directly.
             sys.stats.role_flips += 1;
+            sys.tl.mark(now, gidx(g) as u32, pick as u32, Mark::RoleFlip, StageRole::Decode as u64);
         }
         return;
     }
@@ -392,7 +401,7 @@ pub(crate) fn try_decode_scale_up(
     }
     sys.set_role(pick, StageRole::Decode);
     sys.stats.decode_scale_ups += 1;
-    note_flip(sys, g, now);
+    note_flip(sys, g, pick, now);
     // Rebalance: move half of hot's sequences to the new instance.
     let moved: Vec<ReqIx> = {
         let d = &sys.instances[hot].decoding;
@@ -424,7 +433,7 @@ pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
         {
             sys.set_role(d, StageRole::Prefill);
             sys.stats.decode_scale_downs += 1;
-            note_flip(sys, g, now);
+            note_flip(sys, g, d, now);
             break;
         }
     }
@@ -463,7 +472,7 @@ pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
                         && sys.instances[p].tp == sys.base_tp
                 }) {
                     sys.set_role(pick, StageRole::Encode);
-                    note_flip(sys, g, now);
+                    note_flip(sys, g, pick, now);
                 }
             }
         }
@@ -475,7 +484,7 @@ pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
                 .find(|&&e| sys.current[e].is_none())
             {
                 sys.set_role(pick, StageRole::Prefill);
-                note_flip(sys, g, now);
+                note_flip(sys, g, pick, now);
             }
         }
         std::cmp::Ordering::Equal => {}
@@ -485,7 +494,7 @@ pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
 /// Safety net: encode work queued but no encoder could be created
 /// (e.g. the only prefill instance is busy for a long iteration) —
 /// fall back to blocking encode inside the prefill iteration.
-pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId) {
+pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId, now: f64) {
     if sys.role_members(g, StageRole::Encode).is_empty()
         && !sys.groups[gidx(g)].wait_encode.is_empty()
     {
@@ -502,12 +511,15 @@ pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId) {
                 // prefill iteration; all remaining tokens become
                 // admissible at once.
                 r.inline_encode = true;
+                let rid = r.req.id;
+                sys.tl.mark(now, gidx(g) as u32, u32::MAX, Mark::QueueExit, rid);
                 // Requests already queued for prefill — or mid partial
                 // prefill — will pick the flag up at (re)admission.
                 if !r.in_wait_prefill && r.phase != Phase::Prefilling {
                     r.phase = Phase::WaitPrefill;
                     r.in_wait_prefill = true;
                     sys.groups[gidx(g)].wait_prefill.push_back(ix);
+                    sys.tl.mark(now, gidx(g) as u32, u32::MAX, Mark::QueueEnter, rid);
                 }
             }
         }

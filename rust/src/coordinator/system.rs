@@ -56,6 +56,7 @@ use crate::model::{CostModel, DecodeItem, PrefillItem};
 use crate::sim::driver::{ServingSystem, SimQueue};
 use crate::sim::instance::{GroupId, Instance, Phase, SimRequest, StageRole};
 use crate::sim::slab::{IdsPool, ReqIx, RequestSlab};
+use crate::sim::tracelog::{Mark, SpanKind, TraceLog, WindowKind};
 use crate::workload::{Modality, Request};
 
 use super::modality::LoadMonitor;
@@ -296,6 +297,9 @@ pub struct EmpSystem {
     pub(crate) ids_pool: IdsPool,
     /// Reusable `DecodeItem` buffer for decode cost queries.
     pub(crate) decode_scratch: Vec<DecodeItem>,
+    /// Flight-recorder sink (`Off` unless installed via
+    /// [`ServingSystem::set_tracelog`]; every emission is then a no-op).
+    pub(crate) tl: TraceLog,
 }
 
 pub(crate) fn gidx(g: GroupId) -> usize {
@@ -408,6 +412,7 @@ impl EmpSystem {
             group_media,
             ids_pool: IdsPool::default(),
             decode_scratch: Vec::new(),
+            tl: TraceLog::default(),
         };
         for i in 0..n_groups {
             sys.assign_initial_roles(GroupId(i as u8));
@@ -505,7 +510,20 @@ impl EmpSystem {
         self.instances[i].busy_until = now + d;
         self.current[i] = Some(Iter::Reshard);
         self.stats.tp_busy_gpu_seconds += d * new_tp as f64;
+        // Opens the reshard span (its end fires from the completion
+        // event) and attributes the shadow gpu-seconds.
+        self.tl.reshard_window(now, d, gidx(self.instances[i].group) as u32, i as u32, new_tp);
         q.push(now + d, EmpEv::IterDone(i));
+    }
+
+    /// Record a TP reconfiguration once for every consumer: the
+    /// report's `tp_timeline`, the per-group reshard cooldown clock,
+    /// and the flight recorder's unified timeline all see the same
+    /// event (one timeline representation, not three).
+    fn note_tp_reconfig(&mut self, e: TpReconfig) {
+        self.tl.tp_reconfig(&e);
+        self.last_tp_reconfig[e.group] = e.t;
+        self.stats.tp_timeline.push(e);
     }
 
     /// Merge instance `other` into `leader`'s TP group (both drained,
@@ -537,14 +555,13 @@ impl EmpSystem {
         self.begin_reshard(leader, old_tp, q);
         let g = self.instances[leader].group;
         self.stats.tp_merges += 1;
-        self.stats.tp_timeline.push(TpReconfig {
+        self.note_tp_reconfig(TpReconfig {
             t: now,
             group: gidx(g),
             instance: leader,
             tp_after: new_tp,
             merge: true,
         });
-        self.last_tp_reconfig[gidx(g)] = now;
         debug_assert!(self.check_invariants().is_ok(), "{:?}", self.check_invariants());
     }
 
@@ -577,14 +594,13 @@ impl EmpSystem {
         self.begin_reshard(leader, old_tp, q);
         self.begin_reshard(other, old_tp, q);
         self.stats.tp_splits += 1;
-        self.stats.tp_timeline.push(TpReconfig {
+        self.note_tp_reconfig(TpReconfig {
             t: now,
             group: gidx(g),
             instance: leader,
             tp_after: self.instances[leader].tp,
             merge: false,
         });
-        self.last_tp_reconfig[gidx(g)] = now;
         // Re-establish the group's stage-role invariants with the
         // revived member counted (e.g. a single-member Unified leader
         // becomes a prefill/decode pair).
@@ -700,7 +716,7 @@ impl EmpSystem {
     pub(crate) fn schedule_group(&mut self, g: GroupId, q: &mut SimQueue<'_, EmpEv>) {
         scaling::try_tp_reconfig(self, g, q);
         scaling::try_encoder_scaling(self, g, q.now());
-        scaling::drain_stuck_encode_queue(self, g);
+        scaling::drain_stuck_encode_queue(self, g, q.now());
         dispatch::schedule_encoders(self, g, q);
         dispatch::dispatch_prefill(self, g, q);
         // Index-walk over the cached decode list: schedule_decode never
@@ -712,6 +728,11 @@ impl EmpSystem {
             dispatch::schedule_decode(self, d, q);
         }
         dispatch::schedule_unified(self, g, q);
+        if self.tl.is_on() {
+            let gi = gidx(g);
+            let depth = self.groups[gi].wait_encode.len() + self.groups[gi].wait_prefill.len();
+            self.tl.queue_depth(q.now(), gi as u32, depth);
+        }
     }
 
     fn on_arrival(&mut self, req: Request, q: &mut SimQueue<'_, EmpEv>) {
@@ -725,8 +746,10 @@ impl EmpSystem {
         sr.encode_pending = std::mem::take(&mut outcome.media_to_encode);
         sr.cached_prefix = outcome.prefix_hit_tokens.min(sr.input_len.saturating_sub(1));
         sr.prefill_target = sr.input_len - sr.cached_prefix;
+        let rid = sr.req.id;
         if outcome.vision_tokens_cached > 0 {
             self.stats.encode_cache_hits += 1;
+            self.tl.mark(now, gidx(g) as u32, u32::MAX, Mark::CacheHit, rid);
         }
         self.stats.prefix_hit_tokens += sr.cached_prefix as u64;
         self.groups[gidx(g)].cache.release(&outcome);
@@ -755,6 +778,7 @@ impl EmpSystem {
             let ix = self.requests.insert(sr);
             self.groups[gidx(g)].wait_prefill.push_back(ix);
         }
+        self.tl.mark(now, gidx(g) as u32, u32::MAX, Mark::QueueEnter, rid);
         self.schedule_group(g, q);
     }
 
@@ -966,6 +990,12 @@ impl EmpSystem {
         );
         self.decode_scratch = scratch;
         self.stats.coalesced_steps += steps as u64;
+        // The coalesced run shows as one complete window; the span
+        // opened here is closed by the boundary step's Decode arm.
+        let gi = gidx(self.instances[inst].group) as u32;
+        self.tl.window(now, done - now, gi, inst as u32, WindowKind::DecodeFastForward);
+        self.tl.span_begin(now, gi, inst as u32, SpanKind::Decode);
+        self.tl.busy(gi, now, done - now, self.instances[inst].tp);
         self.current[inst] = Some(Iter::Decode { ids });
         q.push(done, EmpEv::IterDone(inst));
     }
@@ -982,11 +1012,13 @@ impl EmpSystem {
                 // pool. Requests may have been re-grouped meanwhile, so
                 // all queueing targets the instance's current group.
                 self.stats.media_chunks_encoded += 1;
+                self.tl.span_end(now, gidx(g) as u32, inst as u32, SpanKind::Encode);
                 let r = self.requests.get_mut(ix);
                 r.encode_pending.pop().expect("encode iteration had a job");
                 let all_done = r.encode_pending.is_empty();
                 if all_done {
                     r.t_encode_done = now;
+                    self.tl.ckpt_encode_done(now, r.req.id);
                 }
                 // A request already queued for prefill — or inside a
                 // partial prefill iteration right now — will pick the
@@ -1008,9 +1040,12 @@ impl EmpSystem {
                 }
                 if to_prefill {
                     self.groups[gidx(g)].wait_prefill.push_back(ix);
+                    let rid = self.requests.get(ix).req.id;
+                    self.tl.mark(now, gidx(g) as u32, inst as u32, Mark::QueueEnter, rid);
                 }
             }
             Iter::Prefill { ids, participants } => {
+                self.tl.span_end(now, gidx(g) as u32, inst as u32, SpanKind::Prefill);
                 for &ix in &ids {
                     let r = self.requests.get_mut(ix);
                     let nt = std::mem::take(&mut r.prefill_inflight);
@@ -1023,17 +1058,25 @@ impl EmpSystem {
                     if std::mem::take(&mut r.encode_charged_inline) {
                         r.encode_pending.clear(); // blocking path encoded inline
                     }
-                    if r.t_encode_done.is_nan() && r.encode_pending.is_empty() {
-                        r.t_encode_done = now;
-                    }
                     if r.prefill_done >= r.prefill_target {
+                        // Encode completion is stamped where it happens —
+                        // arrival (nothing to encode), the Encode arm
+                        // (pool path), or prefill dispatch (inline path)
+                        // — never back-dated to the iteration end.
+                        debug_assert!(
+                            !r.t_encode_done.is_nan(),
+                            "first token before encode-done stamp (req {})",
+                            r.req.id
+                        );
                         r.t_first_token = now;
                         r.decoded = 1;
+                        self.tl.first_token(now, gidx(g) as u32, inst as u32, r.req.id);
                         let home = r.home.expect("dest chosen at dispatch");
                         if r.decoded >= r.req.output_tokens {
                             r.t_finish = now;
                             r.phase = Phase::Finished;
                             let id = r.req.id;
+                            self.tl.mark(now, gidx(g) as u32, inst as u32, Mark::Completion, id);
                             self.instances[home].kv.release(id).expect("reserved");
                             self.finished.push(RequestRecord::from_sim(r));
                         } else {
@@ -1060,8 +1103,10 @@ impl EmpSystem {
                 // Weights are in place at the new degree; the instance
                 // resumes scheduling through the hooks below. The
                 // re-shard window itself did no work to account.
+                self.tl.span_end(now, gidx(g) as u32, inst as u32, SpanKind::Reshard);
             }
             Iter::Decode { ids } => {
+                self.tl.span_end(now, gidx(g) as u32, inst as u32, SpanKind::Decode);
                 let mut any_completed = false;
                 let mut all_resident = true;
                 for &ix in &ids {
@@ -1077,6 +1122,7 @@ impl EmpSystem {
                         r.t_finish = now;
                         r.phase = Phase::Finished;
                         let id = r.req.id;
+                        self.tl.mark(now, gidx(g) as u32, inst as u32, Mark::Completion, id);
                         self.instances[inst].kv.release(id).expect("resident");
                         self.instances[inst].decoding.retain(|&x| x != ix);
                         self.finished.push(RequestRecord::from_sim(r));
@@ -1211,5 +1257,13 @@ impl ServingSystem for EmpSystem {
         rep.tp_reconfigs = self.stats.tp_merges + self.stats.tp_splits;
         rep.tp_busy_gpu_seconds = self.stats.tp_busy_gpu_seconds;
         rep.tp_timeline = self.stats.tp_timeline.clone();
+    }
+
+    fn set_tracelog(&mut self, tl: TraceLog) {
+        self.tl = tl;
+    }
+
+    fn tracelog(&self) -> TraceLog {
+        self.tl.clone()
     }
 }

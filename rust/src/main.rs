@@ -35,6 +35,7 @@ use elasticmm::metrics::Report;
 use elasticmm::model::CostModel;
 use elasticmm::ServingSystem;
 use elasticmm::sim::driver::{run_trace_source, Limited, DEFAULT_TRACE_LOOKAHEAD};
+use elasticmm::sim::tracelog::{validate_perfetto, TraceLog};
 use elasticmm::sim::sweep::{SweepOutcome, SweepSpec};
 use elasticmm::util::bench;
 use elasticmm::util::cli::Args;
@@ -110,7 +111,8 @@ enum TraceInput {
 /// Drive `sys` over the input through the shared driver. The streamed
 /// path produces byte-identical canonical reports to the slice path
 /// (asserted by `tests/trace_stream_equivalence.rs`).
-fn run_input<S: ServingSystem>(mut sys: S, input: &TraceInput) -> Result<Report> {
+fn run_input<S: ServingSystem>(mut sys: S, input: &TraceInput, tl: TraceLog) -> Result<Report> {
+    sys.set_tracelog(tl);
     match input {
         TraceInput::Slice(t) => Ok(sys.run(t)),
         TraceInput::Stream { path, limit, lookahead } => {
@@ -183,14 +185,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             cost.min_tp()
         );
     }
+    // `--trace-out run.json` streams a Chrome trace-event / Perfetto
+    // file of the run (constant memory — events go straight to disk)
+    // and folds the aggregated samples into the report's
+    // `observability` section. Off by default: the recorder is then a
+    // no-op enum arm and reports are byte-identical to untraced runs.
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let tl = match &trace_out {
+        Some(p) => TraceLog::with_perfetto(Box::new(std::io::BufWriter::new(
+            std::fs::File::create(p)?,
+        ))),
+        None => TraceLog::Off,
+    };
     // Every system runs through the shared driver (sim::driver), so the
     // comparison is apples-to-apples.
     let report: Report = match system.as_str() {
-        "vllm" => run_input(CoupledVllm::new(cost, sched, gpus), &input)?,
-        "vllm-decouple" => run_input(DecoupledStatic::new(cost, sched, gpus), &input)?,
+        "vllm" => run_input(CoupledVllm::new(cost, sched, gpus), &input, tl.clone())?,
+        "vllm-decouple" => {
+            run_input(DecoupledStatic::new(cost, sched, gpus), &input, tl.clone())?
+        }
         "static" => {
             let text = args.get_usize("text-instances", gpus / 2);
-            run_input(EmpSystem::new(cost, sched, gpus, EmpOptions::static_split(text)), &input)?
+            run_input(
+                EmpSystem::new(cost, sched, gpus, EmpOptions::static_split(text)),
+                &input,
+                tl.clone(),
+            )?
         }
         "elasticmm" => {
             let opts = match groups {
@@ -198,12 +218,27 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 2 => EmpOptions::full(gpus),
                 other => elasticmm::bail!("--groups must be 2 or 4, got {other}"),
             };
-            run_input(EmpSystem::new(cost, sched, gpus, opts), &input)?
+            run_input(EmpSystem::new(cost, sched, gpus, opts), &input, tl.clone())?
         }
         other => elasticmm::bail!(
             "unknown system `{other}`; valid: elasticmm, vllm, vllm-decouple, static"
         ),
     };
+    if let Some(p) = &trace_out {
+        let events = tl.events_recorded();
+        let bytes = tl.finish_perfetto()?;
+        // Round-trip the emitted file so a malformed trace fails the
+        // run (the CI smoke relies on the non-zero exit).
+        let summary = match validate_perfetto(std::fs::File::open(p)?) {
+            Ok(s) => s,
+            Err(e) => elasticmm::bail!("trace file {p} failed validation: {e}"),
+        };
+        println!(
+            "wrote {events} trace events to {p} ({bytes} bytes: {} spans, {} windows, \
+             {} instants, {} counter samples)",
+            summary.spans, summary.windows, summary.instants, summary.counters
+        );
+    }
     println!("system={system} gpus={gpus} requests={}", report.records.len());
     if max_tp > 1 {
         println!(

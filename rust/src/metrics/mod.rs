@@ -79,32 +79,11 @@ impl RequestRecord {
 }
 
 /// One elastic-TP reconfiguration event — the per-group TP timeline the
-/// Fig 7-style allocation benches plot alongside instance counts.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct TpReconfig {
-    /// Sim time the re-shard began.
-    pub t: f64,
-    /// Modality-group index (registry order).
-    pub group: usize,
-    /// Leading instance id of the affected TP group.
-    pub instance: usize,
-    /// TP degree of the group after the reconfiguration.
-    pub tp_after: usize,
-    /// True for a merge (widening), false for a split.
-    pub merge: bool,
-}
-
-impl TpReconfig {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("t", Json::num(self.t)),
-            ("group", Json::num(self.group as f64)),
-            ("instance", Json::num(self.instance as f64)),
-            ("tp_after", Json::num(self.tp_after as f64)),
-            ("merge", Json::Bool(self.merge)),
-        ])
-    }
-}
+/// Fig 7-style allocation benches plot alongside instance counts. The
+/// definition lives in the unified timeline model
+/// ([`crate::sim::tracelog`]); re-exported here unchanged so report
+/// consumers and the serialized keys stay exactly as before.
+pub use crate::sim::tracelog::TpReconfig;
 
 /// Record-order metric arrays plus span aggregates, computed once per
 /// report on first use. Every mean/throughput/SLO path reads these
@@ -159,6 +138,13 @@ pub struct Report {
     pub tp_busy_gpu_seconds: f64,
     /// Per-group TP reconfiguration timeline, in event order.
     pub tp_timeline: Vec<TpReconfig>,
+    /// Flight-recorder aggregates (TTFT decomposition, per-group
+    /// GPU-busy and queue-depth time series, reshard-shadow
+    /// attribution), folded in by `TraceLog::fold_into_report` when
+    /// tracing is enabled. `None` with tracing off, and the section is
+    /// then omitted from every serialization — untraced reports stay
+    /// byte-identical to pre-recorder output.
+    pub observability: Option<Json>,
     base: OnceCell<BaseCache>,
     sorted: OnceCell<SortedCache>,
 }
@@ -170,6 +156,7 @@ impl Report {
             tp_reconfigs: 0,
             tp_busy_gpu_seconds: 0.0,
             tp_timeline: Vec::new(),
+            observability: None,
             base: OnceCell::new(),
             sorted: OnceCell::new(),
         }
@@ -331,13 +318,17 @@ impl Report {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("per_modality", self.per_modality_json()),
             ("tp_reconfigs", Json::num(self.tp_reconfigs as f64)),
             ("tp_busy_gpu_seconds", Json::num(self.tp_busy_gpu_seconds)),
             ("tp_timeline", Json::Arr(self.tp_timeline.iter().map(|e| e.to_json()).collect())),
             ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
-        ])
+        ];
+        if let Some(obs) = &self.observability {
+            pairs.push(("observability", obs.clone()));
+        }
+        Json::obj(pairs)
     }
 
     /// Canonical serialization for determinism checks: **only**
@@ -349,12 +340,20 @@ impl Report {
     /// configuration must produce byte-identical canonical JSON on any
     /// machine, at any worker count.
     pub fn canonical_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
             ("tp_reconfigs", Json::num(self.tp_reconfigs as f64)),
             ("tp_busy_gpu_seconds", Json::num(self.tp_busy_gpu_seconds)),
             ("tp_timeline", Json::Arr(self.tp_timeline.iter().map(|e| e.to_json()).collect())),
-        ])
+        ];
+        if let Some(obs) = &self.observability {
+            // Folded deterministically (BTreeMap-backed series, event
+            // counts — no wall-clock data), so including it keeps the
+            // canonical digest stable across machines and worker
+            // counts. Omitted entirely when tracing is off.
+            pairs.push(("observability", obs.clone()));
+        }
+        Json::obj(pairs)
     }
 
     /// Stream the full report JSON to `out` one record at a time —
@@ -367,6 +366,10 @@ impl Report {
         let mut w = JsonWriter::new(out);
         w.begin_object()?;
         // Keys in sorted order — the DOM path serializes from a BTreeMap.
+        if let Some(obs) = &self.observability {
+            w.key("observability")?;
+            w.value(obs)?;
+        }
         w.key("per_modality")?;
         w.value(&self.per_modality_json())?;
         w.key("records")?;
@@ -740,6 +743,27 @@ mod tests {
         let mut buf = Vec::new();
         empty.write_json(&mut buf).unwrap();
         assert_eq!(String::from_utf8(buf).unwrap(), empty.to_json().to_string());
+    }
+
+    #[test]
+    fn observability_section_is_optional_and_streams_identically() {
+        let mut rep = Report::new(vec![rec(0.0, 1.0, 2.0, 10, 5)]);
+        // Absent by default: canonical/full JSON carry no key, so
+        // untraced reports serialize exactly as before the recorder.
+        assert!(rep.to_json().get("observability").is_err());
+        assert!(rep.canonical_json().get("observability").is_err());
+        let untraced_digest = rep.canonical_digest();
+        rep.observability = Some(Json::obj(vec![("events", Json::u64(7))]));
+        assert!(rep.to_json().get("observability").is_ok());
+        assert!(rep.canonical_json().get("observability").is_ok());
+        assert_ne!(rep.canonical_digest(), untraced_digest);
+        // Streamed bytes still match the DOM serialization with the
+        // section present ("observability" sorts first).
+        let mut buf = Vec::new();
+        rep.write_json(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, rep.to_json().to_string());
+        assert!(text.starts_with("{\"observability\":"));
     }
 
     #[test]

@@ -33,6 +33,7 @@
 
 use crate::metrics::{Report, RequestRecord};
 use crate::sim::engine::{EventQueue, QueueTelemetry};
+use crate::sim::tracelog::{self, TraceLog};
 use crate::util::error::Result;
 use crate::workload::Request;
 use std::cmp::Reverse;
@@ -350,6 +351,19 @@ pub trait ServingSystem {
     /// completes; the default attaches nothing.
     fn annotate_report(&self, _rep: &mut Report) {}
 
+    /// Install a [`TraceLog`] sink for the run. Systems that emit
+    /// lifecycle events store the (cheaply cloned) handle; the default
+    /// drops it, which leaves the system untraced.
+    fn set_tracelog(&mut self, _tl: TraceLog) {}
+
+    /// The system's current [`TraceLog`] handle. The driver snapshots
+    /// this once per run to emit driver-owned events (arrivals) and the
+    /// stall-panic flight-recorder tail through the same sink. The
+    /// default is the no-op `Off` arm.
+    fn tracelog(&self) -> TraceLog {
+        TraceLog::Off
+    }
+
     /// Run a trace to completion through the shared driver.
     fn run(&mut self, trace: &[Request]) -> Report
     where
@@ -364,28 +378,16 @@ fn stall_message<S: ServingSystem + ?Sized>(
     total: usize,
     detail: &str,
     qt: QueueTelemetry,
+    tl: &TraceLog,
 ) -> String {
-    let mut msg = format!(
-        "simulation stalled: {}/{} requests finished{detail}",
+    tracelog::format_stall(
         sys.completed(),
-        total
-    );
-    let hist = sys.outstanding_by_phase();
-    if hist.is_empty() {
-        msg.push_str(" (no phase breakdown available)");
-    } else {
-        msg.push_str("; outstanding by phase:");
-        for (name, count) in hist {
-            msg.push_str(&format!(" {name}={count}"));
-        }
-    }
-    // Event-queue pressure at the moment of the stall: a policy bug that
-    // stops scheduling shows up as pushes drying up, not as backlog.
-    msg.push_str(&format!(
-        "; event-queue pressure: pushes={} pops={} peak_pending={} cascades={}",
-        qt.pushes, qt.pops, qt.peak_pending, qt.overflow_cascades
-    ));
-    msg
+        total,
+        detail,
+        &sys.outstanding_by_phase(),
+        &qt,
+        &tl.tail_lines(tracelog::STALL_TAIL),
+    )
 }
 
 /// The generic discrete-event loop over a pull-based [`TraceSource`]:
@@ -433,17 +435,23 @@ pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?
         q.push(dt, DriverEv::Tick);
         ext.tick = Some(dt);
     }
+    // One snapshot per run: the handle is a cheap clone sharing the
+    // system's recorder, and `Off` keeps every emission below a no-op.
+    let tl = sys.tracelog();
     let mut stats = DriverStats::default();
     let mut idle_ticks = 0u32;
     while !(exhausted && heap.is_empty() && sys.is_done(injected)) {
         let Some((_, ev)) = q.pop() else {
-            panic!("{}", stall_message(sys, injected, "", q.telemetry()));
+            panic!("{}", stall_message(sys, injected, "", q.telemetry(), &tl));
         };
         stats.events += 1;
         match ev {
             DriverEv::Arrive(req) => {
                 stats.arrivals += 1;
                 idle_ticks = 0;
+                // Driver-owned lifecycle point: the request enters the
+                // simulation (opens its TTFT decomposition checkpoint).
+                tl.arrival(q.now(), req.id);
                 // Queue the next arrival *before* routing so every
                 // handler sees a complete horizon.
                 if let Some(Reverse(p)) = heap.pop() {
@@ -510,7 +518,8 @@ pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?
                                     sys,
                                     injected,
                                     &format!(" ({idle_ticks} consecutive idle ticks)"),
-                                    q.telemetry()
+                                    q.telemetry(),
+                                    &tl
                                 )
                             );
                         }
@@ -524,6 +533,9 @@ pub fn run_trace_source_with_stats<S: ServingSystem + ?Sized, T: TraceSource + ?
     stats.absorb_queue(q.telemetry());
     let mut report = Report::new(sys.drain_records());
     sys.annotate_report(&mut report);
+    // Aggregated flight-recorder sections (TTFT decomposition, busy /
+    // queue-depth series, reshard attribution). No-op when untraced.
+    tl.fold_into_report(&mut report);
     Ok((report, stats))
 }
 

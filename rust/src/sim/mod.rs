@@ -11,3 +11,4 @@ pub mod engine;
 pub mod instance;
 pub mod slab;
 pub mod sweep;
+pub mod tracelog;

@@ -1,0 +1,1064 @@
+//! Simulator flight recorder: structured lifecycle tracing, Perfetto
+//! export, and utilization time-series (DESIGN.md §13).
+//!
+//! One [`TraceLog`] handle is threaded through the shared driver and
+//! every [`ServingSystem`](crate::sim::driver::ServingSystem) so all
+//! five variants emit the same typed lifecycle events: arrival,
+//! queue-enter/exit, encode/prefill/decode iteration spans, first
+//! token, decode fast-forward windows, KV migration, TP reshard busy
+//! windows, cache hits, role flips, and completion. The sink fans each
+//! event three ways:
+//!
+//! * a bounded **ring buffer** (last [`RING_CAP`] events) whose tail is
+//!   dumped into stall panics and readable on demand;
+//! * an optional **Chrome trace-event / Perfetto stream** through the
+//!   existing [`JsonWriter`] (`simulate --trace-out run.json`) —
+//!   constant memory, pid = modality group, tid = instance, `B`/`E`
+//!   spans, `X` complete events for fast-forward and migration windows,
+//!   `i` instants, `C` counter tracks for per-group queue depth;
+//! * bounded **aggregation state**: per-request TTFT checkpoints (a
+//!   `BTreeMap` pruned at first token — never the full request set at
+//!   once), per-group GPU-busy and queue-depth [`TimeSeries`] (≤
+//!   [`MAX_BUCKETS`] buckets, adaptively coarsened), and reshard-shadow
+//!   attribution, folded into `Report::observability` deterministically.
+//!
+//! **Zero-cost when off:** the disabled sink is a unit enum arm
+//! ([`TraceLog::Off`], the `Default`); every emission method matches on
+//! it and returns immediately, no state exists, and Reports are
+//! byte-identical to an untraced build
+//! (`tests/tracelog_equivalence.rs` asserts this across all variants ×
+//! fast-forward on/off; `benches/trace_overhead.rs` gates the
+//! wall-clock overhead).
+//!
+//! The module is also the home of the unified timeline model: the
+//! [`TpReconfig`] record (re-exported from `metrics` for
+//! compatibility) and the stall-panic formatting helper
+//! [`format_stall`] that merges the phase histogram, the
+//! [`QueueTelemetry`] pressure line, and the flight-recorder tail into
+//! one message.
+
+use crate::metrics::Report;
+use crate::sim::engine::QueueTelemetry;
+use crate::util::json::{Json, JsonEvent, JsonReader, JsonWriter};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io;
+use std::rc::Rc;
+
+/// One TP-reconfiguration event for the report's `tp_timeline`
+/// (merge/split audit trail, DESIGN.md §7). Lives here so the elastic-TP
+/// timeline, the flight recorder, and the Perfetto stream share one
+/// timeline model; `crate::metrics` re-exports it unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TpReconfig {
+    /// Sim time the reconfiguration began.
+    pub t: f64,
+    /// Modality-group index it happened in.
+    pub group: usize,
+    /// Leader instance id (the slot that stays live).
+    pub instance: usize,
+    /// TP degree after the reconfiguration.
+    pub tp_after: usize,
+    /// true = merge (widen), false = split (narrow).
+    pub merge: bool,
+}
+
+impl TpReconfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t", Json::num(self.t)),
+            ("group", Json::u64(self.group as u64)),
+            ("instance", Json::u64(self.instance as u64)),
+            ("tp_after", Json::u64(self.tp_after as u64)),
+            ("merge", Json::Bool(self.merge)),
+        ])
+    }
+}
+
+/// Ring-buffer capacity: enough context to reconstruct the last few
+/// scheduling rounds at every fleet size the simulator models, small
+/// enough that the recorder's memory is trivially bounded.
+pub const RING_CAP: usize = 256;
+/// How much of the ring a stall panic dumps.
+pub const STALL_TAIL: usize = 64;
+/// Time-series resolution bound: buckets double in width whenever a run
+/// outgrows this count, so memory stays O(64) per track at any horizon.
+pub const MAX_BUCKETS: usize = 64;
+
+/// Iteration span categories (`B`/`E` pairs on an instance track).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Encode,
+    Prefill,
+    Decode,
+    Reshard,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Encode => "encode",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::Reshard => "reshard",
+        }
+    }
+}
+
+/// Complete-window categories (`X` events: duration known at emission,
+/// no begin/end pairing — fast-forward coalesces many steps into one
+/// window, migration starts and lands on different tracks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowKind {
+    DecodeFastForward,
+    Migration,
+}
+
+impl WindowKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WindowKind::DecodeFastForward => "decode-ff",
+            WindowKind::Migration => "migration",
+        }
+    }
+}
+
+/// Instantaneous lifecycle marks (`i` events).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mark {
+    Arrival,
+    QueueEnter,
+    QueueExit,
+    FirstToken,
+    CacheHit,
+    Completion,
+    RoleFlip,
+    TpMerge,
+    TpSplit,
+}
+
+impl Mark {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mark::Arrival => "arrival",
+            Mark::QueueEnter => "queue-enter",
+            Mark::QueueExit => "queue-exit",
+            Mark::FirstToken => "first-token",
+            Mark::CacheHit => "cache-hit",
+            Mark::Completion => "completion",
+            Mark::RoleFlip => "role-flip",
+            Mark::TpMerge => "tp-merge",
+            Mark::TpSplit => "tp-split",
+        }
+    }
+}
+
+/// One recorded event (ring-buffer entry).
+#[derive(Debug, Clone, Copy)]
+pub struct Ev {
+    pub t: f64,
+    /// Perfetto pid: modality-group index (or fleet index for the
+    /// decoupled baseline).
+    pub pid: u32,
+    /// Perfetto tid: instance id within the cluster.
+    pub tid: u32,
+    pub kind: EvKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum EvKind {
+    Begin(SpanKind),
+    End(SpanKind),
+    /// Complete window with its duration in seconds.
+    Window(WindowKind, f64),
+    /// Mark with its payload (request id; role index for `RoleFlip`).
+    Mark(Mark, u64),
+    /// Queue-depth counter sample for the pid's group.
+    Counter(f64),
+}
+
+impl Ev {
+    /// Human-readable one-liner for stall panics and `tail_lines`.
+    pub fn line(&self) -> String {
+        let head = format!("t={:>10.4} g{}/i{} ", self.t, self.pid, self.tid);
+        match self.kind {
+            EvKind::Begin(k) => format!("{head}B {}", k.name()),
+            EvKind::End(k) => format!("{head}E {}", k.name()),
+            EvKind::Window(k, d) => format!("{head}X {} {:.4}s", k.name(), d),
+            EvKind::Mark(m, id) => format!("{head}{} id={id}", m.name()),
+            EvKind::Counter(v) => format!("{head}queue-depth={v}"),
+        }
+    }
+}
+
+/// Fixed-capacity ring of the most recent [`RING_CAP`] events.
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<Ev>,
+    /// Next write slot (== oldest entry once the ring is full).
+    next: usize,
+    total: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Ev) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+        }
+        self.next = (self.next + 1) % RING_CAP;
+        self.total += 1;
+    }
+
+    /// Last `n` events, oldest first.
+    fn tail(&self, n: usize) -> Vec<Ev> {
+        let take = n.min(self.buf.len());
+        (0..take)
+            .map(|k| self.buf[(self.next + RING_CAP - take + k) % RING_CAP])
+            .collect()
+    }
+}
+
+/// Bounded utilization time-series: the integral of a rate over time,
+/// bucketed; buckets double in width (adjacent pairs merge, preserving
+/// the integral) whenever the run outgrows [`MAX_BUCKETS`].
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    width: f64,
+    vals: Vec<f64>,
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        TimeSeries { width: 0.5, vals: Vec::new() }
+    }
+}
+
+impl TimeSeries {
+    pub fn bucket_width(&self) -> f64 {
+        self.width
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Total integral across all buckets.
+    pub fn total(&self) -> f64 {
+        self.vals.iter().sum()
+    }
+
+    fn coarsen(&mut self) {
+        let mut merged = Vec::with_capacity(self.vals.len().div_ceil(2));
+        let mut i = 0;
+        while i < self.vals.len() {
+            let b = if i + 1 < self.vals.len() { self.vals[i + 1] } else { 0.0 };
+            merged.push(self.vals[i] + b);
+            i += 2;
+        }
+        self.vals = merged;
+        self.width *= 2.0;
+    }
+
+    /// Accumulate `rate` over `[t0, t0 + dur)`, split across buckets.
+    pub fn add(&mut self, t0: f64, dur: f64, rate: f64) {
+        if !(t0.is_finite() && dur > 0.0) || rate == 0.0 {
+            return;
+        }
+        let t0 = t0.max(0.0);
+        let t1 = t0 + dur;
+        while t1 >= self.width * MAX_BUCKETS as f64 {
+            self.coarsen();
+        }
+        let mut a = t0;
+        while a < t1 {
+            let ix = ((a / self.width) as usize).min(MAX_BUCKETS - 1);
+            let end = t1.min((ix as f64 + 1.0) * self.width);
+            if self.vals.len() <= ix {
+                self.vals.resize(ix + 1, 0.0);
+            }
+            self.vals[ix] += (end - a) * rate;
+            if end <= a {
+                break; // fp guard: a sits exactly on a degenerate boundary
+            }
+            a = end;
+        }
+    }
+
+    fn to_json(&self, key: &str) -> Json {
+        Json::obj(vec![
+            ("bucket_s", Json::num(self.width)),
+            (key, Json::arr_f64(&self.vals)),
+        ])
+    }
+}
+
+/// Step-function sampler feeding a [`TimeSeries`]: each sample closes
+/// the segment `[last_t, t)` at the previous value.
+#[derive(Debug, Clone, Default)]
+struct StepSampler {
+    last_t: f64,
+    last_v: f64,
+    series: TimeSeries,
+}
+
+impl StepSampler {
+    fn sample(&mut self, t: f64, v: f64) {
+        if t > self.last_t {
+            self.series.add(self.last_t, t - self.last_t, self.last_v);
+            self.last_t = t;
+        }
+        self.last_v = v;
+    }
+}
+
+/// Per-request TTFT checkpoints (NaN = not reached). Pruned at first
+/// token, so the map never holds the whole trace.
+#[derive(Debug, Clone, Copy)]
+struct Ckpt {
+    arrival: f64,
+    enc_start: f64,
+    enc_done: f64,
+    pref_start: f64,
+}
+
+/// Per-request TTFT decomposition: `queue + encode + prefill` telescopes
+/// to `first_token - arrival` by construction (each checkpoint is
+/// clamped into the windows of its successors, so out-of-order or
+/// missing stamps degrade gracefully instead of going negative).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecompRec {
+    pub id: u64,
+    pub queue_s: f64,
+    pub encode_s: f64,
+    pub prefill_s: f64,
+    pub ttft_s: f64,
+}
+
+fn decompose(id: u64, ck: Ckpt, first_token: f64) -> DecompRec {
+    let a = ck.arrival;
+    let f = first_token.max(a);
+    let es = if ck.enc_start.is_nan() { a } else { ck.enc_start.clamp(a, f) };
+    let ed = if ck.enc_done.is_nan() { es } else { ck.enc_done.clamp(es, f) };
+    let ps = if ck.pref_start.is_nan() { f } else { ck.pref_start.clamp(ed, f) };
+    DecompRec {
+        id,
+        queue_s: (es - a) + (ps - ed),
+        encode_s: ed - es,
+        prefill_s: f - ps,
+        ttft_s: f - a,
+    }
+}
+
+/// Streaming Perfetto sink: the first I/O error is stashed and
+/// surfaced at [`TraceLog::finish_perfetto`] so emission sites stay
+/// infallible.
+struct Perfetto {
+    w: JsonWriter<Box<dyn io::Write>>,
+    err: Option<io::Error>,
+}
+
+impl Perfetto {
+    fn emit(&mut self, f: impl FnOnce(&mut JsonWriter<Box<dyn io::Write>>) -> io::Result<()>) {
+        if self.err.is_none() {
+            if let Err(e) = f(&mut self.w) {
+                self.err = Some(e);
+            }
+        }
+    }
+}
+
+/// The recorder behind an enabled [`TraceLog`].
+#[derive(Default)]
+pub struct TraceState {
+    ring: Ring,
+    perfetto: Option<Perfetto>,
+    ckpts: BTreeMap<u64, Ckpt>,
+    decomp: Vec<DecompRec>,
+    gpu_busy: BTreeMap<u32, TimeSeries>,
+    queue_depth: BTreeMap<u32, StepSampler>,
+    reshard_busy_gpu_s: f64,
+    reshard_windows: u64,
+    tp_events: u64,
+}
+
+impl TraceState {
+    fn record(&mut self, ev: Ev) {
+        if let Some(p) = self.perfetto.as_mut() {
+            write_perfetto_event(p, &ev);
+        }
+        self.ring.push(ev);
+    }
+}
+
+fn write_perfetto_event(p: &mut Perfetto, ev: &Ev) {
+    let ts = ev.t * 1e6; // Chrome trace-event timestamps are microseconds
+    let (pid, tid) = (ev.pid as f64, ev.tid as f64);
+    match ev.kind {
+        EvKind::Begin(k) | EvKind::End(k) => p.emit(|w| {
+            w.begin_object()?;
+            w.key("name")?;
+            w.string(k.name())?;
+            w.key("ph")?;
+            w.string(if matches!(ev.kind, EvKind::Begin(_)) { "B" } else { "E" })?;
+            w.key("pid")?;
+            w.num(pid)?;
+            w.key("tid")?;
+            w.num(tid)?;
+            w.key("ts")?;
+            w.num(ts)?;
+            w.end_object()
+        }),
+        EvKind::Window(k, dur) => p.emit(|w| {
+            w.begin_object()?;
+            w.key("name")?;
+            w.string(k.name())?;
+            w.key("ph")?;
+            w.string("X")?;
+            w.key("pid")?;
+            w.num(pid)?;
+            w.key("tid")?;
+            w.num(tid)?;
+            w.key("ts")?;
+            w.num(ts)?;
+            w.key("dur")?;
+            w.num(dur * 1e6)?;
+            w.end_object()
+        }),
+        EvKind::Mark(m, id) => p.emit(|w| {
+            w.begin_object()?;
+            w.key("name")?;
+            w.string(m.name())?;
+            w.key("ph")?;
+            w.string("i")?;
+            w.key("s")?;
+            w.string("t")?;
+            w.key("pid")?;
+            w.num(pid)?;
+            w.key("tid")?;
+            w.num(tid)?;
+            w.key("ts")?;
+            w.num(ts)?;
+            w.key("args")?;
+            w.begin_object()?;
+            w.key("id")?;
+            w.num_u64(id)?;
+            w.end_object()?;
+            w.end_object()
+        }),
+        EvKind::Counter(v) => {
+            p.emit(|w| w.counter_track("queue-depth", ev.pid as u64, ts, "depth", v))
+        }
+    }
+}
+
+/// The tracing sink handle. `Off` (the default) is a no-op unit arm —
+/// every emission method returns immediately without touching memory —
+/// so untraced runs pay one enum discriminant test per call site.
+/// Cloning shares the underlying recorder (the decoupled baseline
+/// clones one handle into both fleets; the simulator is
+/// single-threaded, so `Rc<RefCell<_>>` suffices).
+#[derive(Clone, Default)]
+pub enum TraceLog {
+    #[default]
+    Off,
+    On(Rc<RefCell<TraceState>>),
+}
+
+impl TraceLog {
+    /// Recording sink (ring buffer + aggregation) without a Perfetto
+    /// stream — what `annotate_report`-level observability needs.
+    pub fn recording() -> TraceLog {
+        TraceLog::On(Rc::new(RefCell::new(TraceState::default())))
+    }
+
+    /// Recording sink that additionally streams Chrome trace events to
+    /// `out` in constant memory. The stream is a single JSON array,
+    /// closed by [`TraceLog::finish_perfetto`].
+    pub fn with_perfetto(out: Box<dyn io::Write>) -> TraceLog {
+        let mut p = Perfetto { w: JsonWriter::new(out), err: None };
+        p.emit(|w| w.begin_array());
+        let st = TraceState { perfetto: Some(p), ..TraceState::default() };
+        TraceLog::On(Rc::new(RefCell::new(st)))
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceLog::On(_))
+    }
+
+    fn with(&self, f: impl FnOnce(&mut TraceState)) {
+        if let TraceLog::On(st) = self {
+            f(&mut st.borrow_mut());
+        }
+    }
+
+    // -- lifecycle emission ---------------------------------------------
+
+    pub fn arrival(&self, t: f64, id: u64) {
+        self.with(|st| {
+            st.ckpts.insert(
+                id,
+                Ckpt { arrival: t, enc_start: f64::NAN, enc_done: f64::NAN, pref_start: f64::NAN },
+            );
+            st.record(Ev { t, pid: 0, tid: 0, kind: EvKind::Mark(Mark::Arrival, id) });
+        });
+    }
+
+    pub fn mark(&self, t: f64, pid: u32, tid: u32, m: Mark, id: u64) {
+        self.with(|st| st.record(Ev { t, pid, tid, kind: EvKind::Mark(m, id) }));
+    }
+
+    pub fn span_begin(&self, t: f64, pid: u32, tid: u32, k: SpanKind) {
+        self.with(|st| st.record(Ev { t, pid, tid, kind: EvKind::Begin(k) }));
+    }
+
+    pub fn span_end(&self, t: f64, pid: u32, tid: u32, k: SpanKind) {
+        self.with(|st| st.record(Ev { t, pid, tid, kind: EvKind::End(k) }));
+    }
+
+    pub fn window(&self, t: f64, dur: f64, pid: u32, tid: u32, k: WindowKind) {
+        self.with(|st| st.record(Ev { t, pid, tid, kind: EvKind::Window(k, dur) }));
+    }
+
+    /// Queue-depth counter sample for group `pid` (feeds both the
+    /// Perfetto counter track and the bounded depth time-series).
+    pub fn queue_depth(&self, t: f64, pid: u32, depth: usize) {
+        self.with(|st| {
+            st.queue_depth.entry(pid).or_default().sample(t, depth as f64);
+            st.record(Ev { t, pid, tid: 0, kind: EvKind::Counter(depth as f64) });
+        });
+    }
+
+    /// Productive GPU-busy attribution: `gpus` busy for `dur` starting
+    /// at `t` in group `pid` (excludes reshard shadows — see
+    /// [`TraceLog::reshard_window`]).
+    pub fn busy(&self, pid: u32, t: f64, dur: f64, gpus: usize) {
+        self.with(|st| st.gpu_busy.entry(pid).or_default().add(t, dur, gpus as f64));
+    }
+
+    /// TP reshard busy window: opens the `Reshard` span (its `E` comes
+    /// from the reshard iteration completing) and attributes the shadow
+    /// (GPUs serving nothing while weights re-shard).
+    pub fn reshard_window(&self, t: f64, dur: f64, pid: u32, tid: u32, gpus: usize) {
+        self.with(|st| {
+            st.reshard_busy_gpu_s += dur * gpus as f64;
+            st.reshard_windows += 1;
+            st.record(Ev { t, pid, tid, kind: EvKind::Begin(SpanKind::Reshard) });
+        });
+    }
+
+    /// Unified-timeline entry for a TP merge/split (also mirrored into
+    /// the report's `tp_timeline` by the coordinator).
+    pub fn tp_reconfig(&self, e: &TpReconfig) {
+        self.with(|st| {
+            st.tp_events += 1;
+            let m = if e.merge { Mark::TpMerge } else { Mark::TpSplit };
+            st.record(Ev {
+                t: e.t,
+                pid: e.group as u32,
+                tid: e.instance as u32,
+                kind: EvKind::Mark(m, e.tp_after as u64),
+            });
+        });
+    }
+
+    // -- TTFT checkpoints ------------------------------------------------
+
+    pub fn ckpt_encode_start(&self, t: f64, id: u64) {
+        self.with(|st| {
+            if let Some(c) = st.ckpts.get_mut(&id) {
+                if c.enc_start.is_nan() {
+                    c.enc_start = t;
+                }
+            }
+        });
+    }
+
+    pub fn ckpt_encode_done(&self, t: f64, id: u64) {
+        self.with(|st| {
+            if let Some(c) = st.ckpts.get_mut(&id) {
+                if c.enc_done.is_nan() {
+                    c.enc_done = t;
+                }
+            }
+        });
+    }
+
+    pub fn ckpt_prefill_start(&self, t: f64, id: u64) {
+        self.with(|st| {
+            if let Some(c) = st.ckpts.get_mut(&id) {
+                if c.pref_start.is_nan() {
+                    c.pref_start = t;
+                }
+            }
+        });
+    }
+
+    /// First token: emits the mark and finalizes this request's TTFT
+    /// decomposition (checkpoints are pruned here).
+    pub fn first_token(&self, t: f64, pid: u32, tid: u32, id: u64) {
+        self.with(|st| {
+            if let Some(ck) = st.ckpts.remove(&id) {
+                st.decomp.push(decompose(id, ck, t));
+            }
+            st.record(Ev { t, pid, tid, kind: EvKind::Mark(Mark::FirstToken, id) });
+        });
+    }
+
+    // -- inspection ------------------------------------------------------
+
+    /// Total events recorded so far (including those rotated out of the
+    /// ring).
+    pub fn events_recorded(&self) -> u64 {
+        match self {
+            TraceLog::Off => 0,
+            TraceLog::On(st) => st.borrow().ring.total,
+        }
+    }
+
+    /// Last `n` ring events as human-readable one-liners, oldest first.
+    pub fn tail_lines(&self, n: usize) -> Vec<String> {
+        match self {
+            TraceLog::Off => Vec::new(),
+            TraceLog::On(st) => st.borrow().ring.tail(n).iter().map(Ev::line).collect(),
+        }
+    }
+
+    /// Finalized per-request TTFT decompositions (first-token order).
+    pub fn decomp_records(&self) -> Vec<DecompRec> {
+        match self {
+            TraceLog::Off => Vec::new(),
+            TraceLog::On(st) => st.borrow().decomp.clone(),
+        }
+    }
+
+    /// Fold the aggregated samples into `rep.observability`. A no-op on
+    /// `Off`, so untraced Reports stay byte-identical to pre-recorder
+    /// output. Deterministic: every map is a `BTreeMap` and the
+    /// decomposition vector follows first-token order.
+    pub fn fold_into_report(&self, rep: &mut Report) {
+        let TraceLog::On(st) = self else { return };
+        let st = st.borrow();
+        let n = st.decomp.len();
+        let (mut q, mut e, mut p) = (0.0, 0.0, 0.0);
+        for d in &st.decomp {
+            q += d.queue_s;
+            e += d.encode_s;
+            p += d.prefill_s;
+        }
+        let ttft_total = q + e + p;
+        let share = |x: f64| if ttft_total > 0.0 { x / ttft_total } else { 0.0 };
+        let series_map = |m: &BTreeMap<u32, TimeSeries>, key: &str| {
+            Json::Obj(
+                m.iter().map(|(g, ts)| (g.to_string(), ts.to_json(key))).collect(),
+            )
+        };
+        let depth_series: BTreeMap<u32, TimeSeries> =
+            st.queue_depth.iter().map(|(&g, s)| (g, s.series.clone())).collect();
+        rep.observability = Some(Json::obj(vec![
+            (
+                "ttft_decomposition",
+                Json::obj(vec![
+                    ("requests", Json::u64(n as u64)),
+                    ("queue_s", Json::num(q)),
+                    ("encode_s", Json::num(e)),
+                    ("prefill_s", Json::num(p)),
+                    ("queue_share", Json::num(share(q))),
+                    ("encode_share", Json::num(share(e))),
+                    ("prefill_share", Json::num(share(p))),
+                ]),
+            ),
+            ("gpu_busy", series_map(&st.gpu_busy, "gpu_seconds")),
+            ("queue_depth", series_map(&depth_series, "depth_seconds")),
+            (
+                "reshard",
+                Json::obj(vec![
+                    ("busy_gpu_seconds", Json::num(st.reshard_busy_gpu_s)),
+                    ("windows", Json::u64(st.reshard_windows)),
+                    ("timeline_events", Json::u64(st.tp_events)),
+                ]),
+            ),
+            ("events", Json::u64(st.ring.total)),
+        ]));
+    }
+
+    /// Close the Perfetto stream (ends the JSON array, flushes) and
+    /// return the bytes written. Errors stashed during emission surface
+    /// here. Idempotent: returns 0 if no stream was attached or it was
+    /// already finished.
+    pub fn finish_perfetto(&self) -> io::Result<u64> {
+        let TraceLog::On(st) = self else { return Ok(0) };
+        let Some(mut p) = st.borrow_mut().perfetto.take() else { return Ok(0) };
+        if let Some(e) = p.err.take() {
+            return Err(e);
+        }
+        p.w.end_array()?;
+        let bytes = p.w.bytes_written();
+        p.w.finish()?;
+        Ok(bytes)
+    }
+}
+
+// -- stall-panic formatting ----------------------------------------------
+
+/// One formatting helper for every stall diagnostic: the phase
+/// histogram, the event-queue pressure line, and (when a recorder is
+/// attached) the flight-recorder tail. The `"simulation stalled"` and
+/// `"outstanding by phase:"` prefixes are load-bearing — driver tests
+/// and downstream tooling match on them.
+pub fn format_stall(
+    finished: usize,
+    total: usize,
+    detail: &str,
+    phases: &[(&'static str, usize)],
+    qt: &QueueTelemetry,
+    tail: &[String],
+) -> String {
+    let mut msg = format!("simulation stalled: {finished}/{total} requests finished{detail}");
+    if phases.is_empty() {
+        msg.push_str(" (no phase breakdown available)");
+    } else {
+        msg.push_str("; outstanding by phase:");
+        for (name, count) in phases {
+            msg.push_str(&format!(" {name}={count}"));
+        }
+    }
+    msg.push_str(&format!(
+        "; event-queue pressure: pushes={} pops={} peak_pending={} cascades={}",
+        qt.pushes, qt.pops, qt.peak_pending, qt.overflow_cascades
+    ));
+    if !tail.is_empty() {
+        msg.push_str(&format!("; last {} trace events:", tail.len()));
+        for line in tail {
+            msg.push_str("\n  ");
+            msg.push_str(line);
+        }
+    }
+    msg
+}
+
+// -- Perfetto validation -------------------------------------------------
+
+/// Well-formedness summary returned by [`validate_perfetto`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PerfettoSummary {
+    pub events: u64,
+    pub spans: u64,
+    pub windows: u64,
+    pub instants: u64,
+    pub counters: u64,
+}
+
+/// Stream-validate a Chrome trace-event file through [`JsonReader`]
+/// (constant memory): every `B` has a matching same-name `E` on its
+/// (pid, tid) track with valid nesting, timestamps are monotone per
+/// track, and no span is left open at EOF. Returns per-phase counts.
+pub fn validate_perfetto<R: io::Read>(src: R) -> Result<PerfettoSummary, String> {
+    let mut r = JsonReader::new(src);
+    let jerr = |e: crate::util::json::JsonError| format!("trace parse: {e}");
+    match r.next_event().map_err(jerr)? {
+        Some(JsonEvent::BeginArray) => {}
+        other => return Err(format!("expected top-level array, got {other:?}")),
+    }
+    let mut sum = PerfettoSummary::default();
+    let mut open: BTreeMap<(u64, u64), Vec<&'static str>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let span_names: [&'static str; 4] = ["encode", "prefill", "decode", "reshard"];
+    loop {
+        match r.next_event().map_err(jerr)? {
+            Some(JsonEvent::EndArray) => break,
+            Some(JsonEvent::BeginObject) => {}
+            other => return Err(format!("expected trace event object, got {other:?}")),
+        }
+        let (mut ph, mut name) = (String::new(), String::new());
+        let (mut pid, mut tid, mut ts) = (0u64, 0u64, f64::NAN);
+        loop {
+            match r.next_event().map_err(jerr)? {
+                Some(JsonEvent::EndObject) => break,
+                Some(JsonEvent::Key(k)) => {
+                    let key = k.to_string();
+                    match key.as_str() {
+                        "ph" | "name" | "s" => {
+                            let Some(JsonEvent::Str(v)) = r.next_event().map_err(jerr)? else {
+                                return Err(format!("event key {key}: expected string"));
+                            };
+                            if key == "ph" {
+                                ph = v.to_string();
+                            } else if key == "name" {
+                                name = v.to_string();
+                            }
+                        }
+                        "pid" | "tid" | "ts" | "dur" => {
+                            let Some(JsonEvent::Num(v)) = r.next_event().map_err(jerr)? else {
+                                return Err(format!("event key {key}: expected number"));
+                            };
+                            match key.as_str() {
+                                "pid" => pid = v as u64,
+                                "tid" => tid = v as u64,
+                                "ts" => ts = v,
+                                _ => {}
+                            }
+                        }
+                        _ => r.skip_value().map_err(jerr)?,
+                    }
+                }
+                other => return Err(format!("expected key in trace event, got {other:?}")),
+            }
+        }
+        if !ts.is_finite() {
+            return Err(format!("event #{}: missing/invalid ts", sum.events));
+        }
+        sum.events += 1;
+        let track = (pid, tid);
+        if let Some(&prev) = last_ts.get(&track) {
+            if ts < prev {
+                return Err(format!(
+                    "track pid={pid}/tid={tid}: ts went backwards ({ts} after {prev})"
+                ));
+            }
+        }
+        last_ts.insert(track, ts);
+        match ph.as_str() {
+            "B" => {
+                let Some(&n) = span_names.iter().find(|&&n| n == name) else {
+                    return Err(format!("unknown span name `{name}`"));
+                };
+                open.entry(track).or_default().push(n);
+                sum.spans += 1;
+            }
+            "E" => match open.get_mut(&track).and_then(Vec::pop) {
+                Some(expect) if expect == name => {}
+                Some(expect) => {
+                    return Err(format!(
+                        "track pid={pid}/tid={tid}: E `{name}` closes open `{expect}`"
+                    ))
+                }
+                None => {
+                    return Err(format!("track pid={pid}/tid={tid}: E `{name}` with no open span"))
+                }
+            },
+            "X" => sum.windows += 1,
+            "i" => sum.instants += 1,
+            "C" => sum.counters += 1,
+            other => return Err(format!("unknown ph `{other}`")),
+        }
+    }
+    if r.next_event().map_err(jerr)?.is_some() {
+        return Err("trailing content after top-level array".to_string());
+    }
+    for ((pid, tid), stack) in &open {
+        if let Some(name) = stack.last() {
+            return Err(format!("track pid={pid}/tid={tid}: span `{name}` never closed"));
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_is_inert() {
+        let tl = TraceLog::default();
+        assert!(!tl.is_on());
+        tl.arrival(0.0, 1);
+        tl.span_begin(0.0, 0, 0, SpanKind::Prefill);
+        tl.queue_depth(0.0, 0, 3);
+        tl.first_token(1.0, 0, 0, 1);
+        assert_eq!(tl.events_recorded(), 0);
+        assert!(tl.tail_lines(8).is_empty());
+        assert!(tl.decomp_records().is_empty());
+        let mut rep = Report::new(Vec::new());
+        tl.fold_into_report(&mut rep);
+        assert!(rep.observability.is_none());
+        assert_eq!(tl.finish_perfetto().unwrap(), 0);
+    }
+
+    #[test]
+    fn ring_keeps_last_events_in_order() {
+        let tl = TraceLog::recording();
+        for i in 0..(RING_CAP as u64 + 10) {
+            tl.mark(i as f64, 0, 0, Mark::Arrival, i);
+        }
+        assert_eq!(tl.events_recorded(), RING_CAP as u64 + 10);
+        let tail = tl.tail_lines(4);
+        assert_eq!(tail.len(), 4);
+        // Oldest-first, ending at the newest event.
+        assert!(tail[0].contains(&format!("id={}", RING_CAP as u64 + 6)), "{tail:?}");
+        assert!(tail[3].contains(&format!("id={}", RING_CAP as u64 + 9)), "{tail:?}");
+    }
+
+    #[test]
+    fn time_series_coarsens_and_preserves_integral() {
+        let mut ts = TimeSeries::default();
+        // 10 gpu-seconds spread over [0, 5).
+        ts.add(0.0, 5.0, 2.0);
+        assert!((ts.total() - 10.0).abs() < 1e-9);
+        // Far beyond 64 buckets at the initial 0.5 s width: coarsens.
+        ts.add(1000.0, 1.0, 3.0);
+        assert!(ts.values().len() <= MAX_BUCKETS);
+        assert!((ts.total() - 13.0).abs() < 1e-9);
+        assert!(ts.bucket_width() > 0.5);
+    }
+
+    #[test]
+    fn decomposition_telescopes_to_ttft() {
+        let ck = Ckpt { arrival: 1.0, enc_start: 1.5, enc_done: 2.5, pref_start: 3.0 };
+        let d = decompose(7, ck, 4.0);
+        assert_eq!(d.ttft_s, 3.0);
+        assert!((d.queue_s - 1.0).abs() < 1e-12); // (1.5-1.0) + (3.0-2.5)
+        assert!((d.encode_s - 1.0).abs() < 1e-12);
+        assert!((d.prefill_s - 1.0).abs() < 1e-12);
+        let sum = d.queue_s + d.encode_s + d.prefill_s;
+        assert!((sum - d.ttft_s).abs() < 1e-9);
+        // Text request: no encode checkpoints — everything splits
+        // between queue and prefill.
+        let ck = Ckpt { arrival: 0.0, enc_start: f64::NAN, enc_done: f64::NAN, pref_start: 2.0 };
+        let d = decompose(8, ck, 5.0);
+        assert_eq!(d.encode_s, 0.0);
+        assert!((d.queue_s - 2.0).abs() < 1e-12);
+        assert!((d.prefill_s - 3.0).abs() < 1e-12);
+        // Out-of-order stamp (prefill recorded before encode done):
+        // clamping keeps every share non-negative and the sum exact.
+        let ck = Ckpt { arrival: 0.0, enc_start: 1.0, enc_done: 3.0, pref_start: 2.0 };
+        let d = decompose(9, ck, 4.0);
+        assert!(d.queue_s >= 0.0 && d.encode_s >= 0.0 && d.prefill_s >= 0.0);
+        assert!((d.queue_s + d.encode_s + d.prefill_s - d.ttft_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_token_finalizes_and_prunes_checkpoints() {
+        let tl = TraceLog::recording();
+        tl.arrival(1.0, 42);
+        tl.ckpt_encode_start(1.2, 42);
+        tl.ckpt_encode_done(1.8, 42);
+        tl.ckpt_prefill_start(2.0, 42);
+        tl.first_token(2.5, 0, 0, 42);
+        let recs = tl.decomp_records();
+        assert_eq!(recs.len(), 1);
+        assert!((recs[0].ttft_s - 1.5).abs() < 1e-12);
+        let sum = recs[0].queue_s + recs[0].encode_s + recs[0].prefill_s;
+        assert!((sum - recs[0].ttft_s).abs() < 1e-9);
+        // Second first-token for the same id: checkpoints already
+        // pruned, no duplicate record.
+        tl.first_token(3.0, 0, 0, 42);
+        assert_eq!(tl.decomp_records().len(), 1);
+    }
+
+    #[test]
+    fn fold_into_report_is_deterministic_and_sorted() {
+        let mk = || {
+            let tl = TraceLog::recording();
+            tl.arrival(0.0, 1);
+            tl.ckpt_prefill_start(1.0, 1);
+            tl.first_token(2.0, 0, 3, 1);
+            tl.busy(1, 0.0, 2.0, 4);
+            tl.queue_depth(0.0, 0, 2);
+            tl.queue_depth(1.5, 0, 0);
+            tl.reshard_window(0.5, 0.25, 1, 2, 2);
+            let mut rep = Report::new(Vec::new());
+            tl.fold_into_report(&mut rep);
+            rep
+        };
+        let (a, b) = (mk(), mk());
+        let obs = a.observability.as_ref().expect("observability folded");
+        assert_eq!(obs.to_string(), b.observability.as_ref().unwrap().to_string());
+        let reshard = obs.get("reshard").unwrap();
+        assert!((reshard.get("busy_gpu_seconds").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        let depth = obs.get("queue_depth").unwrap().get("0").unwrap();
+        // 2 requests deep for 1.5 s.
+        let total: f64 = depth
+            .get("depth_seconds")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .sum();
+        assert!((total - 3.0).abs() < 1e-9, "depth integral {total}");
+    }
+
+    #[test]
+    fn perfetto_stream_validates_and_is_deterministic() {
+        let emit = || {
+            let buf: Rc<RefCell<Vec<u8>>> = Rc::default();
+            struct Sink(Rc<RefCell<Vec<u8>>>);
+            impl io::Write for Sink {
+                fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+                    self.0.borrow_mut().extend_from_slice(b);
+                    Ok(b.len())
+                }
+                fn flush(&mut self) -> io::Result<()> {
+                    Ok(())
+                }
+            }
+            let tl = TraceLog::with_perfetto(Box::new(Sink(buf.clone())));
+            tl.arrival(0.0, 1);
+            tl.span_begin(0.1, 0, 2, SpanKind::Encode);
+            tl.span_end(0.2, 0, 2, SpanKind::Encode);
+            tl.span_begin(0.3, 0, 2, SpanKind::Prefill);
+            tl.span_end(0.5, 0, 2, SpanKind::Prefill);
+            tl.window(0.6, 0.3, 0, 2, WindowKind::DecodeFastForward);
+            tl.queue_depth(0.7, 0, 4);
+            tl.first_token(0.8, 0, 2, 1);
+            tl.finish_perfetto().unwrap();
+            let out = buf.borrow().clone();
+            out
+        };
+        let (a, b) = (emit(), emit());
+        assert_eq!(a, b, "same emission sequence must stream identical bytes");
+        let sum = validate_perfetto(&a[..]).unwrap();
+        assert_eq!(sum.spans, 2);
+        assert_eq!(sum.windows, 1);
+        assert_eq!(sum.counters, 1);
+        assert!(sum.instants >= 2);
+    }
+
+    #[test]
+    fn perfetto_validator_rejects_malformed_streams() {
+        // Unbalanced: B without E.
+        let s = br#"[{"name":"prefill","ph":"B","pid":0,"tid":1,"ts":0}]"#;
+        assert!(validate_perfetto(&s[..]).unwrap_err().contains("never closed"));
+        // E without B.
+        let s = br#"[{"name":"prefill","ph":"E","pid":0,"tid":1,"ts":0}]"#;
+        assert!(validate_perfetto(&s[..]).unwrap_err().contains("no open span"));
+        // Bad nesting: inner span closed with the outer's name.
+        let s = br#"[{"name":"prefill","ph":"B","pid":0,"tid":1,"ts":0},
+                     {"name":"encode","ph":"B","pid":0,"tid":1,"ts":1},
+                     {"name":"prefill","ph":"E","pid":0,"tid":1,"ts":2},
+                     {"name":"encode","ph":"E","pid":0,"tid":1,"ts":3}]"#;
+        assert!(validate_perfetto(&s[..]).unwrap_err().contains("closes open"));
+        // Non-monotone timestamps on one track.
+        let s = br#"[{"name":"decode","ph":"B","pid":0,"tid":1,"ts":5},
+                     {"name":"decode","ph":"E","pid":0,"tid":1,"ts":4}]"#;
+        assert!(validate_perfetto(&s[..]).unwrap_err().contains("backwards"));
+    }
+
+    #[test]
+    fn stall_formatting_keeps_pinned_text_and_appends_tail() {
+        let qt = QueueTelemetry { pushes: 10, pops: 9, peak_pending: 4, overflow_cascades: 1 };
+        // No phase breakdown, no tail — the legacy shape.
+        let msg = format_stall(3, 5, " (driver detail)", &[], &qt, &[]);
+        assert!(msg.contains("simulation stalled: 3/5 requests finished (driver detail)"));
+        assert!(msg.contains(" (no phase breakdown available)"));
+        assert!(msg.contains("event-queue pressure: pushes=10 pops=9 peak_pending=4 cascades=1"));
+        // Phase histogram + flight-recorder tail.
+        let tail = vec!["t=    1.0000 g0/i1 B prefill".to_string()];
+        let msg = format_stall(0, 2, "", &[("Dropped", 1), ("Decoding", 1)], &qt, &tail);
+        assert!(msg.contains("outstanding by phase: Dropped=1 Decoding=1"));
+        assert!(msg.contains("last 1 trace events:"));
+        assert!(msg.contains("\n  t=    1.0000 g0/i1 B prefill"));
+    }
+
+    #[test]
+    fn tp_reconfig_round_trips_through_json() {
+        let e = TpReconfig { t: 1.5, group: 2, instance: 3, tp_after: 4, merge: true };
+        let j = e.to_json();
+        assert_eq!(j.get("t").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(j.get("tp_after").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(j.get("merge").unwrap(), &Json::Bool(true));
+    }
+}

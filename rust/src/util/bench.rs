@@ -112,8 +112,10 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// are the trace-I/O bench's streaming-throughput floors; the
 /// `ops_per_sec_*` pair and `wheel_vs_heap_speedup` are the event-queue
 /// micro-bench's floors (the speedup floor is the timing wheel's "never
-/// slower than the heap it replaced" contract at scale).
-const FLOOR_KEYS: [&str; 10] = [
+/// slower than the heap it replaced" contract at scale); the
+/// `events_per_sec_off`/`_on` pair is the trace-overhead bench's
+/// floors for the flight recorder's disabled and fully-streaming paths.
+const FLOOR_KEYS: [&str; 12] = [
     "events_per_sec_ff_on",
     "events_per_sec_ff_off",
     "speedup",
@@ -124,6 +126,8 @@ const FLOOR_KEYS: [&str; 10] = [
     "ops_per_sec_wheel",
     "ops_per_sec_heap",
     "wheel_vs_heap_speedup",
+    "events_per_sec_off",
+    "events_per_sec_on",
 ];
 
 /// Per-system keys treated as **ceilings**: the measurement must stay
@@ -133,13 +137,19 @@ const FLOOR_KEYS: [&str; 10] = [
 /// `false`, or coalescing silently disabled). `runs_total` /
 /// `events_total` are the sweep's deterministic aggregate counts;
 /// `streamed_peak_buffered_bytes` is the streaming reader's
-/// constant-memory guarantee (deterministic for a fixed chunk size).
-const CEILING_KEYS: [&str; 5] = [
+/// constant-memory guarantee (deterministic for a fixed chunk size);
+/// `traced_overhead_pct` bounds the tracing tax and
+/// `trace_events_total` is the deterministic recorded-event count (a
+/// blowup means an instrumentation site started firing per token
+/// instead of per iteration).
+const CEILING_KEYS: [&str; 7] = [
     "events_ff_on",
     "events_ff_off",
     "runs_total",
     "events_total",
     "streamed_peak_buffered_bytes",
+    "traced_overhead_pct",
+    "trace_events_total",
 ];
 
 /// [`check_regression_section`] against the conventional `systems`

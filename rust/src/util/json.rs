@@ -1251,6 +1251,36 @@ impl<W: io::Write> JsonWriter<W> {
         self.maybe_flush()
     }
 
+    /// One Chrome trace-event counter-track sample (`"ph":"C"`): a
+    /// named per-pid series whose value Perfetto renders as a stacked
+    /// counter lane. Used by `sim::tracelog` for per-group queue-depth
+    /// tracks; lives here so the trace-event encoding stays next to the
+    /// writer whose byte format it depends on.
+    pub fn counter_track(
+        &mut self,
+        name: &str,
+        pid: u64,
+        ts_us: f64,
+        series: &str,
+        value: f64,
+    ) -> io::Result<()> {
+        self.begin_object()?;
+        self.key("name")?;
+        self.string(name)?;
+        self.key("ph")?;
+        self.string("C")?;
+        self.key("pid")?;
+        self.num_u64(pid)?;
+        self.key("ts")?;
+        self.num(ts_us)?;
+        self.key("args")?;
+        self.begin_object()?;
+        self.key(series)?;
+        self.num(value)?;
+        self.end_object()?;
+        self.end_object()
+    }
+
     /// Flush remaining output and return the underlying writer. Panics
     /// on an unclosed container — that is a serialization bug, never an
     /// input property.

@@ -1,0 +1,253 @@
+//! The flight recorder must be invisible when off and deterministic
+//! when on:
+//!
+//! 1. Tracing disabled ⇒ canonical Reports are byte-identical to a
+//!    traced run with the observability section stripped, for all five
+//!    variants × fast-forward on/off — instrumentation must not perturb
+//!    a single scheduling decision or timestamp.
+//! 2. Tracing enabled ⇒ the Perfetto stream is a deterministic function
+//!    of the seed (same trace ⇒ byte-identical file) and well-formed
+//!    (balanced begin/end per track, monotone timestamps — checked by
+//!    `validate_perfetto`).
+//! 3. The TTFT decomposition telescopes: queue + encode + prefill
+//!    equals measured TTFT per request, to float tolerance.
+//! 4. Regression (inline-encode timing): a coupled multimodal request
+//!    at light load must show *both* a positive encode share and a
+//!    positive prefill share — the old code stamped `t_encode_done` at
+//!    the end of the combined encode+prefill iteration, collapsing the
+//!    prefill share to zero.
+
+use elasticmm::baselines::coupled::CoupledVllm;
+use elasticmm::baselines::decoupled::DecoupledStatic;
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::metrics::Report;
+use elasticmm::model::CostModel;
+use elasticmm::sim::tracelog::{validate_perfetto, TraceLog};
+use elasticmm::util::rng::Rng;
+use elasticmm::workload::arrival::poisson_arrivals;
+use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::{Modality, Request};
+use elasticmm::ServingSystem;
+
+use std::cell::RefCell;
+use std::io;
+use std::rc::Rc;
+
+fn cost() -> CostModel {
+    CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g())
+}
+
+fn sched(ff: bool) -> SchedulerConfig {
+    SchedulerConfig { decode_fast_forward: ff, max_tp: 4, ..SchedulerConfig::default() }
+}
+
+fn trace(n: usize, qps: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = DatasetSpec::sharegpt4o().generate(&mut rng, n);
+    poisson_arrivals(&mut rng, &mut reqs, qps);
+    reqs
+}
+
+/// Object-safe shim over the bits of `ServingSystem` these tests need
+/// (the trait itself has an associated event type, so it can't be a
+/// trait object directly).
+trait AnySystem {
+    fn set_tl(&mut self, tl: TraceLog);
+    fn run_all(&mut self, trace: &[Request]) -> Report;
+}
+
+impl<S: ServingSystem> AnySystem for S {
+    fn set_tl(&mut self, tl: TraceLog) {
+        self.set_tracelog(tl);
+    }
+    fn run_all(&mut self, trace: &[Request]) -> Report {
+        self.run(trace)
+    }
+}
+
+/// The five variants behind one constructor, so every test sweeps them
+/// uniformly. `ff` toggles decode fast-forwarding.
+fn variants() -> Vec<(&'static str, fn(bool) -> Box<dyn AnySystem>)> {
+    vec![
+        ("emp-full", |ff| Box::new(EmpSystem::new(cost(), sched(ff), 8, EmpOptions::full(8)))),
+        ("emp-nway", |ff| {
+            Box::new(EmpSystem::new(cost(), sched(ff), 16, EmpOptions::full_nway(16)))
+        }),
+        ("emp-static", |ff| {
+            Box::new(EmpSystem::new(cost(), sched(ff), 8, EmpOptions::static_split(4)))
+        }),
+        ("vllm", |ff| Box::new(CoupledVllm::new(cost(), sched(ff), 8))),
+        ("vllm-decouple", |ff| Box::new(DecoupledStatic::new(cost(), sched(ff), 8))),
+    ]
+}
+
+/// In-memory `io::Write` sink sharing its buffer with the test.
+#[derive(Clone, Default)]
+struct SharedBuf(Rc<RefCell<Vec<u8>>>);
+
+impl io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.borrow_mut().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Run a variant with a recording + Perfetto recorder attached; return
+/// the report, the emitted trace bytes, and the recorder.
+fn run_traced(mut sys: Box<dyn AnySystem>, t: &[Request]) -> (Report, Vec<u8>, TraceLog) {
+    let buf = SharedBuf::default();
+    let tl = TraceLog::with_perfetto(Box::new(buf.clone()));
+    sys.set_tl(tl.clone());
+    let rep = sys.run_all(t);
+    tl.finish_perfetto().expect("perfetto stream close");
+    let bytes = buf.0.borrow().clone();
+    (rep, bytes, tl)
+}
+
+#[test]
+fn tracing_off_reports_byte_identical_across_variants() {
+    let t = trace(150, 4.0, 91);
+    for (name, mk) in variants() {
+        for ff in [false, true] {
+            let (mut traced, bytes, _tl) = run_traced(mk(ff), &t);
+            assert!(
+                traced.observability.is_some(),
+                "{name} ff={ff}: traced run must fold the observability section"
+            );
+            assert!(!bytes.is_empty(), "{name} ff={ff}: empty trace file");
+            // Strip the recorder's section: what remains must be
+            // exactly the untraced report, byte for byte.
+            traced.observability = None;
+            let untraced = mk(ff).run_all(&t);
+            assert!(
+                untraced.observability.is_none(),
+                "{name} ff={ff}: untraced run grew an observability section"
+            );
+            assert_eq!(
+                traced.canonical_json().to_string(),
+                untraced.canonical_json().to_string(),
+                "{name} ff={ff}: tracing perturbed the canonical report"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_stream_is_deterministic_and_well_formed() {
+    let t = trace(120, 3.0, 92);
+    for (name, mk) in variants() {
+        let (_, bytes_a, _) = run_traced(mk(true), &t);
+        let (_, bytes_b, _) = run_traced(mk(true), &t);
+        assert_eq!(bytes_a, bytes_b, "{name}: same seed must give a byte-identical trace file");
+        let summary = validate_perfetto(&bytes_a[..])
+            .unwrap_or_else(|e| panic!("{name}: malformed trace: {e}"));
+        assert!(summary.spans > 0, "{name}: no spans in trace");
+        assert!(summary.events > 0, "{name}: no events in trace");
+    }
+}
+
+#[test]
+fn emp_trace_has_counters_and_reshard_section() {
+    // A TP-4 video-heavy run must surface counter tracks (queue depth)
+    // and, once anything reshards, the reshard attribution.
+    let mut rng = Rng::new(81);
+    let mut reqs = DatasetSpec::video_chat().generate(&mut rng, 70);
+    poisson_arrivals(&mut rng, &mut reqs, 1.2);
+    let (rep, bytes, _tl) = run_traced(
+        Box::new(EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8))),
+        &reqs,
+    );
+    let summary = validate_perfetto(&bytes[..]).expect("valid trace");
+    assert!(summary.counters > 0, "no queue-depth counter samples");
+    let obs = rep.observability.as_ref().expect("observability folded");
+    let reshard = obs.get("reshard").expect("reshard section");
+    if rep.tp_reconfigs > 0 {
+        let events = reshard.get("timeline_events").unwrap().as_f64().unwrap();
+        assert!(events > 0.0, "TP reconfigs happened but the unified timeline saw none");
+        let busy = reshard.get("busy_gpu_seconds").unwrap().as_f64().unwrap();
+        assert!(busy > 0.0, "reshard windows happened but no shadow attributed");
+    }
+}
+
+#[test]
+fn ttft_decomposition_sums_to_measured_ttft() {
+    let t = trace(150, 4.0, 93);
+    for (name, mk) in variants() {
+        let (rep, _, tl) = run_traced(mk(true), &t);
+        let decomp = tl.decomp_records();
+        assert_eq!(
+            decomp.len(),
+            rep.records.len(),
+            "{name}: every finished request needs a decomposition"
+        );
+        for d in &decomp {
+            let rec = rep
+                .records
+                .iter()
+                .find(|r| r.id == d.id)
+                .unwrap_or_else(|| panic!("{name}: decomp for unknown request {}", d.id));
+            let ttft = rec.first_token - rec.arrival;
+            let sum = d.queue_s + d.encode_s + d.prefill_s;
+            assert!(
+                (sum - ttft).abs() < 1e-9,
+                "{name} req {}: decomposition {sum} != ttft {ttft} \
+                 (q={} e={} p={})",
+                d.id,
+                d.queue_s,
+                d.encode_s,
+                d.prefill_s
+            );
+            assert!(d.queue_s >= 0.0 && d.encode_s >= 0.0 && d.prefill_s >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn coupled_inline_encode_not_conflated_with_prefill() {
+    // Regression for the dispatch-time stamping fix: at light load a
+    // multimodal request on the coupled baseline runs encode + prefill
+    // in one iteration. Its decomposition must attribute time to BOTH
+    // stages — back-dating encode completion to the iteration end used
+    // to collapse the prefill share to zero.
+    let t = trace(80, 0.2, 94);
+    let (rep, _, tl) = run_traced(Box::new(CoupledVllm::new(cost(), sched(true), 8)), &t);
+    let media_ids: Vec<u64> = rep
+        .records
+        .iter()
+        .filter(|r| r.modality != Modality::Text)
+        .map(|r| r.id)
+        .collect();
+    assert!(!media_ids.is_empty(), "trace needs multimodal requests");
+    let decomp = tl.decomp_records();
+    let mut both = 0usize;
+    for d in decomp.iter().filter(|d| media_ids.contains(&d.id)) {
+        if d.encode_s > 0.0 && d.prefill_s > 0.0 {
+            both += 1;
+        }
+        assert!(d.encode_s > 0.0, "multimodal request {} shows zero encode time", d.id);
+    }
+    assert!(
+        both > 0,
+        "no multimodal request shows both encode and prefill time — \
+         encode completion is being back-dated again"
+    );
+}
+
+#[test]
+fn recording_without_perfetto_folds_observability() {
+    // The bounded recorder alone (no stream) must still aggregate.
+    let t = trace(100, 3.0, 95);
+    let tl = TraceLog::recording();
+    let mut sys = EmpSystem::new(cost(), sched(true), 8, EmpOptions::full(8));
+    sys.set_tracelog(tl.clone());
+    let rep = sys.run(&t);
+    let obs = rep.observability.as_ref().expect("observability folded");
+    let events = obs.get("events").unwrap().as_f64().unwrap();
+    assert!(events > 0.0, "recorder saw no events");
+    assert!(tl.events_recorded() > 0);
+    assert!(!tl.tail_lines(8).is_empty(), "flight-recorder tail empty");
+}
