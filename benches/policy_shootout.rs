@@ -1,0 +1,140 @@
+//! Scaling-policy shoot-out: reactive vs predictive vs oracle on the
+//! flash-crowd dataset (DESIGN.md §14). Runs the identical trace
+//! through an `EmpSystem` per policy and reports goodput, SLO
+//! attainment, and wall-clock; writes `BENCH_policy.json` at the repo
+//! root.
+//!
+//!     cargo bench --bench policy_shootout              # full size
+//!     cargo bench --bench policy_shootout -- --smoke   # CI-sized
+//!     cargo bench --bench policy_shootout -- --smoke --check  # + gate
+//!
+//! The interesting ordering is reactive ≤ predictive ≤ oracle: the
+//! predictor sees the flash crowd coming through the arrival-rate
+//! trend and pre-scales, the oracle reads the actual future arrivals
+//! (its `Foresight` is constructed here, at the explicitly-requested
+//! call site — never inside a serving policy). The `--check` gate
+//! compares the `policy` section against the committed
+//! `BENCH_baseline.json` via `util::bench::check_regression_section`:
+//! `goodput_ratio_predictive_vs_reactive` is a **floor** calibrated so
+//! the effective bound at the default tolerance is "predictive never
+//! loses goodput to reactive on a flash crowd" — the predictor must
+//! pay for its disabled decode fast-forward with real goodput.
+//! Everything else (absolute goodputs, the oracle ratio) is reported
+//! but not gated: the oracle's margin is workload-shaped and can
+//! legitimately shrink toward a tie.
+
+use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
+use elasticmm::coordinator::{policy, EmpOptions, EmpSystem, Foresight};
+use elasticmm::metrics::RunMetrics;
+use elasticmm::model::CostModel;
+use elasticmm::sim::driver::run_trace_with_stats;
+use elasticmm::util::cli::Args;
+use elasticmm::util::json::Json;
+use elasticmm::workload::datasets::DatasetSpec;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let requests = args.get_usize("requests", if smoke { 400 } else { 2000 });
+    let qps = args.get_f64("qps", 4.0);
+    let gpus = args.get_usize("gpus", 8);
+    let seed = args.get_u64("seed", 42);
+    let spec = DatasetSpec::flash_crowd();
+    let trace = spec.sample_trace(seed, 0, requests, qps);
+    println!(
+        "=== policy_shootout: {} requests, base {qps} qps, {gpus} GPUs{} ===",
+        trace.len(),
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let cost = || CostModel::new(presets::qwen25_vl_7b(), GpuSpec::a800_80g());
+    let mut goodputs: Vec<(&str, f64)> = Vec::new();
+    let mut entry: Vec<(&str, Json)> = Vec::new();
+    for name in policy::REGISTRY {
+        let mut sys =
+            EmpSystem::new(cost(), SchedulerConfig::default(), gpus, EmpOptions::full(gpus));
+        if name != "reactive" {
+            let foresight = (name == "oracle").then(|| Foresight::of_trace(&trace));
+            sys.set_policy(policy::by_name(name, foresight).expect("registry policy"));
+        }
+        let t0 = Instant::now();
+        let (rep, stats) = run_trace_with_stats(&mut sys, &trace);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(rep.records.len(), trace.len(), "{name}: incomplete run");
+        let m = RunMetrics::from_report(&rep, gpus);
+        println!(
+            "{name:<12} goodput {:>7.3} rps   slo {:>6.2}%   {:>9} events   wall {wall:>6.2}s",
+            m.goodput_rps,
+            rep.default_slo_attainment() * 100.0,
+            stats.events
+        );
+        goodputs.push((name, m.goodput_rps));
+        entry.push((name, Json::num(m.goodput_rps)));
+    }
+    let by_name = |n: &str| goodputs.iter().find(|(p, _)| *p == n).unwrap().1;
+    let (reactive, predictive, oracle) =
+        (by_name("reactive"), by_name("predictive"), by_name("oracle"));
+    let ratio_pred = predictive / reactive.max(1e-9);
+    let ratio_oracle = oracle / reactive.max(1e-9);
+    println!("predictive/reactive goodput ratio: {ratio_pred:.3} (oracle: {ratio_oracle:.3})");
+
+    let mut flash: Vec<(&str, Json)> = vec![
+        ("goodput_ratio_predictive_vs_reactive", Json::num(ratio_pred)),
+        ("goodput_ratio_oracle_vs_reactive", Json::num(ratio_oracle)),
+    ];
+    for (name, j) in entry {
+        flash.push(match name {
+            "reactive" => ("goodput_rps_reactive", j),
+            "predictive" => ("goodput_rps_predictive", j),
+            _ => ("goodput_rps_oracle", j),
+        });
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::str("policy_shootout")),
+        ("smoke", Json::Bool(smoke)),
+        ("requests", Json::num(requests as f64)),
+        ("base_qps", Json::num(qps)),
+        ("gpus", Json::num(gpus as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("policy", Json::obj(vec![("flash_crowd", Json::obj(flash))])),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_policy.json");
+    std::fs::write(path, out.to_pretty()).expect("write BENCH_policy.json");
+    println!("wrote {path}");
+
+    if args.has_flag("check") {
+        let baseline_path = args.get_or(
+            "baseline",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json"),
+        );
+        let text = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+        let baseline = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("parse baseline {baseline_path}: {e:?}"));
+        let tolerance = args.get_f64(
+            "tolerance",
+            baseline.opt("tolerance_default").and_then(|t| t.as_f64().ok()).unwrap_or(0.2),
+        );
+        match elasticmm::util::bench::check_regression_section(&baseline, &out, tolerance, "policy")
+        {
+            Ok(checked) => {
+                println!(
+                    "policy shoot-out gate PASSED ({} checks, tolerance {:.0}%):",
+                    checked.len(),
+                    tolerance * 100.0
+                );
+                for line in checked {
+                    println!("  {line}");
+                }
+            }
+            Err(failures) => {
+                eprintln!("policy shoot-out gate FAILED (tolerance {:.0}%):", tolerance * 100.0);
+                for line in failures {
+                    eprintln!("  {line}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

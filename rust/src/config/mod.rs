@@ -328,6 +328,15 @@ pub struct SchedulerConfig {
     /// `tests/fast_forward_equivalence.rs`); the toggle exists for that
     /// equivalence check and for debugging.
     pub decode_fast_forward: bool,
+    /// Minimum demand-forecast horizon for the predictive/oracle
+    /// scaling policies (seconds). The effective horizon is the larger
+    /// of this floor and the modeled TP-reshard round-trip, so a
+    /// forecast always outlives the cost of acting on it.
+    pub forecast_horizon_floor_s: f64,
+    /// Deadband around 1.0 for the predicted/current demand ratio γ:
+    /// inside it the predictive and oracle policies behave exactly
+    /// reactively, so forecast noise cannot thrash decisions.
+    pub forecast_deadband: f64,
 }
 
 impl Default for SchedulerConfig {
@@ -348,6 +357,8 @@ impl Default for SchedulerConfig {
             max_tp: 1,
             tp_reconfig_s: 0.5,
             decode_fast_forward: true,
+            forecast_horizon_floor_s: 2.0,
+            forecast_deadband: 0.3,
         }
     }
 }

@@ -56,11 +56,57 @@ impl DecodeSet {
     }
 }
 
-/// Eq. 2 — should prefill preempt decode instance `e_max`?
+/// Inputs to the Eq. 2 verdict — should prefill preempt decode
+/// instance `e_max`? Named fields so policies cannot transpose the
+/// positional `f64`/`usize` runs the original free function took.
 ///
-/// `r_p`: pending prefill batch; `e_p`: current prefill DP width;
-/// `victim`: the batch resident on `e_max` (its sequences migrate to the
-/// surviving decode instances, whose merged batch is `merged_after`).
+/// `pending`: the prefill batch R_p; `prefill_width`: its current DP
+/// width; `victim`: the batch resident on `e_max` (its sequences
+/// migrate to the surviving decode instances, whose merged batch is
+/// `merged_after`).
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptPrefillInputs<'a> {
+    pub cost: &'a CostModel,
+    pub pending: &'a PrefillSet,
+    pub prefill_width: usize,
+    pub victim: &'a DecodeSet,
+    pub merged_after: &'a [DecodeItem],
+    pub merged_before: &'a [DecodeItem],
+    pub tp: usize,
+    pub penalty_w: f64,
+}
+
+impl PreemptPrefillInputs<'_> {
+    pub fn evaluate(&self) -> GainCost {
+        let (cost, r_p, e_p) = (self.cost, self.pending, self.prefill_width);
+        let (victim, w) = (self.victim, self.penalty_w);
+        // Gain: batch-level speedup, normalized by total input length.
+        let t_now = cost.prefill_time_dp(&r_p.items, e_p.max(1), self.tp);
+        let t_more = cost.prefill_time_dp(&r_p.items, e_p + 1, self.tp);
+        let speedup = (t_now - t_more).max(0.0);
+        let gain = r_p
+            .items
+            .iter()
+            .map(|it| speedup / (it.new_tokens + it.cached_tokens).max(1) as f64)
+            .sum::<f64>();
+
+        // Cost: migration of e_max's KV + slowdown L of the preempted
+        // computation over its remaining horizon.
+        let m = cost.migration_time(victim.resident_tokens());
+        let step_before = cost.decode_step_time(self.merged_before, self.tp);
+        let step_after = cost.decode_step_time(self.merged_after, self.tp);
+        let l = (step_after - step_before).max(0.0) * victim.avg_remaining();
+        let c = victim
+            .remaining_out
+            .iter()
+            .map(|&out| (m + w * l) / out.max(1) as f64)
+            .sum::<f64>();
+        GainCost { gain, cost: c }
+    }
+}
+
+/// Eq. 2 — positional-argument shim over [`PreemptPrefillInputs`].
+#[deprecated(note = "build a `PreemptPrefillInputs` and call `.evaluate()`")]
 #[allow(clippy::too_many_arguments)]
 pub fn prefill_preemption(
     cost: &CostModel,
@@ -72,36 +118,76 @@ pub fn prefill_preemption(
     tp: usize,
     w: f64,
 ) -> GainCost {
-    // Gain: batch-level speedup, normalized by total input length.
-    let t_now = cost.prefill_time_dp(&r_p.items, e_p.max(1), tp);
-    let t_more = cost.prefill_time_dp(&r_p.items, e_p + 1, tp);
-    let speedup = (t_now - t_more).max(0.0);
-    let gain = r_p
-        .items
-        .iter()
-        .map(|it| speedup / (it.new_tokens + it.cached_tokens).max(1) as f64)
-        .sum::<f64>();
-
-    // Cost: migration of e_max's KV + slowdown L of the preempted
-    // computation over its remaining horizon.
-    let m = cost.migration_time(victim.resident_tokens());
-    let step_before = cost.decode_step_time(merged_before, tp);
-    let step_after = cost.decode_step_time(merged_after, tp);
-    let l = (step_after - step_before).max(0.0) * victim.avg_remaining();
-    let c = victim
-        .remaining_out
-        .iter()
-        .map(|&out| (m + w * l) / out.max(1) as f64)
-        .sum::<f64>();
-    GainCost { gain, cost: c }
+    PreemptPrefillInputs {
+        cost,
+        pending: r_p,
+        prefill_width: e_p,
+        victim,
+        merged_after,
+        merged_before,
+        tp,
+        penalty_w: w,
+    }
+    .evaluate()
 }
 
-/// Eq. 3 — should decode scale up by taking `e_max` from prefill?
+/// Inputs to the Eq. 3 verdict — should decode scale up by taking
+/// `e_max` from prefill?
 ///
-/// `b_d`: the bottlenecked decode batch; `avg_lat_d`: its current
-/// per-step latency; `e_d`: current decode width (the candidate joins
-/// it); `r_p_remaining`: prefill work that loses an instance (width
-/// `e_p` → `e_p - 1`).
+/// `bottleneck`: the bottlenecked decode batch B_d; `step_latency`: its
+/// current per-step latency; `decode_width`: current decode width (the
+/// candidate joins it); `pending`: prefill work that loses an instance
+/// (width `prefill_width` → `prefill_width - 1`).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeScaleUpInputs<'a> {
+    pub cost: &'a CostModel,
+    pub bottleneck: &'a DecodeSet,
+    pub step_latency: f64,
+    pub decode_width: usize,
+    pub pending: &'a PrefillSet,
+    pub prefill_width: usize,
+    pub tp: usize,
+    pub penalty_w: f64,
+}
+
+impl DecodeScaleUpInputs<'_> {
+    pub fn evaluate(&self) -> GainCost {
+        let (cost, b_d, e_d) = (self.cost, self.bottleneck, self.decode_width);
+        let (r_p_remaining, e_p, w) = (self.pending, self.prefill_width, self.penalty_w);
+        // Gain: splitting the decode batch over e_d+1 instances.
+        let split: Vec<DecodeItem> = {
+            // Model post-scale batch: e_max takes 1/(e_d+1) of the
+            // sequences.
+            let keep = b_d.items.len() - b_d.items.len() / (e_d + 1);
+            b_d.items.iter().take(keep.max(1)).copied().collect()
+        };
+        let t_after = cost.decode_step_time(&split, self.tp);
+        let speedup = (self.step_latency - t_after).max(0.0) * b_d.avg_remaining();
+        let gain = b_d
+            .remaining_out
+            .iter()
+            .map(|&out| speedup / out.max(1) as f64)
+            .sum::<f64>();
+
+        // Cost: migration of the moved share + prefill slowdown.
+        let moved = b_d.items.len() / (e_d + 1);
+        let moved_tokens: usize =
+            b_d.items.iter().rev().take(moved).map(|i| i.context_len).sum();
+        let m = cost.migration_time(moved_tokens);
+        let t_now = cost.prefill_time_dp(&r_p_remaining.items, e_p.max(1), self.tp);
+        let t_less = cost.prefill_time_dp(&r_p_remaining.items, (e_p - 1).max(1), self.tp);
+        let l = (t_less - t_now).max(0.0);
+        let c = r_p_remaining
+            .items
+            .iter()
+            .map(|it| (m + w * l) / (it.new_tokens + it.cached_tokens).max(1) as f64)
+            .sum::<f64>();
+        GainCost { gain, cost: c }
+    }
+}
+
+/// Eq. 3 — positional-argument shim over [`DecodeScaleUpInputs`].
+#[deprecated(note = "build a `DecodeScaleUpInputs` and call `.evaluate()`")]
 #[allow(clippy::too_many_arguments)]
 pub fn decode_scale_up(
     cost: &CostModel,
@@ -113,34 +199,17 @@ pub fn decode_scale_up(
     tp: usize,
     w: f64,
 ) -> GainCost {
-    // Gain: splitting the decode batch over e_d+1 instances.
-    let split: Vec<DecodeItem> = {
-        // Model post-scale batch: e_max takes 1/(e_d+1) of the sequences.
-        let keep = b_d.items.len() - b_d.items.len() / (e_d + 1);
-        b_d.items.iter().take(keep.max(1)).copied().collect()
-    };
-    let t_after = cost.decode_step_time(&split, tp);
-    let speedup = (avg_lat_d - t_after).max(0.0) * b_d.avg_remaining();
-    let gain = b_d
-        .remaining_out
-        .iter()
-        .map(|&out| speedup / out.max(1) as f64)
-        .sum::<f64>();
-
-    // Cost: migration of the moved share + prefill slowdown.
-    let moved = b_d.items.len() / (e_d + 1);
-    let moved_tokens: usize =
-        b_d.items.iter().rev().take(moved).map(|i| i.context_len).sum();
-    let m = cost.migration_time(moved_tokens);
-    let t_now = cost.prefill_time_dp(&r_p_remaining.items, e_p.max(1), tp);
-    let t_less = cost.prefill_time_dp(&r_p_remaining.items, (e_p - 1).max(1), tp);
-    let l = (t_less - t_now).max(0.0);
-    let c = r_p_remaining
-        .items
-        .iter()
-        .map(|it| (m + w * l) / (it.new_tokens + it.cached_tokens).max(1) as f64)
-        .sum::<f64>();
-    GainCost { gain, cost: c }
+    DecodeScaleUpInputs {
+        cost,
+        bottleneck: b_d,
+        step_latency: avg_lat_d,
+        decode_width: e_d,
+        pending: r_p_remaining,
+        prefill_width: e_p,
+        tp,
+        penalty_w: w,
+    }
+    .evaluate()
 }
 
 /// Eq. 3 extended to the TP dimension — should two idle prefill
@@ -162,6 +231,28 @@ pub fn decode_scale_up(
 /// kept in plain seconds.) A batch of many short requests never merges
 /// (DP already splits it perfectly); a batch dominated by one long
 /// multimodal prefill does.
+/// Inputs to the TP-widening verdict (fields as described above).
+#[derive(Debug, Clone, Copy)]
+pub struct TpWidenInputs<'a> {
+    pub cost: &'a CostModel,
+    pub pending: &'a PrefillSet,
+    pub tps_now: &'a [usize],
+    pub tps_after: &'a [usize],
+    pub reshard_s: f64,
+    pub penalty_w: f64,
+}
+
+impl TpWidenInputs<'_> {
+    pub fn evaluate(&self) -> GainCost {
+        let t_now = self.cost.prefill_time_hetero(&self.pending.items, self.tps_now);
+        let t_after = self.cost.prefill_time_hetero(&self.pending.items, self.tps_after);
+        let speedup = (t_now - t_after).max(0.0);
+        GainCost { gain: speedup, cost: self.penalty_w * self.reshard_s }
+    }
+}
+
+/// TP widening — positional-argument shim over [`TpWidenInputs`].
+#[deprecated(note = "build a `TpWidenInputs` and call `.evaluate()`")]
 pub fn tp_widen(
     cost: &CostModel,
     r_p: &PrefillSet,
@@ -170,10 +261,7 @@ pub fn tp_widen(
     reshard_s: f64,
     w: f64,
 ) -> GainCost {
-    let t_now = cost.prefill_time_hetero(&r_p.items, tps_now);
-    let t_after = cost.prefill_time_hetero(&r_p.items, tps_after);
-    let speedup = (t_now - t_after).max(0.0);
-    GainCost { gain: speedup, cost: w * reshard_s }
+    TpWidenInputs { cost, pending: r_p, tps_now, tps_after, reshard_s, penalty_w: w }.evaluate()
 }
 
 /// A gain/cost verdict.
@@ -223,6 +311,47 @@ mod tests {
         }
     }
 
+    fn preempt<'a>(
+        c: &'a CostModel,
+        rp: &'a PrefillSet,
+        e_p: usize,
+        victim: &'a DecodeSet,
+        after: &'a [DecodeItem],
+        before: &'a [DecodeItem],
+        w: f64,
+    ) -> GainCost {
+        PreemptPrefillInputs {
+            cost: c,
+            pending: rp,
+            prefill_width: e_p,
+            victim,
+            merged_after: after,
+            merged_before: before,
+            tp: 1,
+            penalty_w: w,
+        }
+        .evaluate()
+    }
+
+    fn widen(
+        c: &CostModel,
+        rp: &PrefillSet,
+        now: &[usize],
+        after: &[usize],
+        reshard: f64,
+        w: f64,
+    ) -> GainCost {
+        TpWidenInputs {
+            cost: c,
+            pending: rp,
+            tps_now: now,
+            tps_after: after,
+            reshard_s: reshard,
+            penalty_w: w,
+        }
+        .evaluate()
+    }
+
     #[test]
     fn big_prefill_backlog_justifies_preemption() {
         let c = cost();
@@ -232,7 +361,7 @@ mod tests {
         let before: Vec<DecodeItem> = decode_set(8, 512, 32).items;
         let mut after = before.clone();
         after.extend(&victim.items);
-        let gc = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 1.0);
+        let gc = preempt(&c, &rp, 1, &victim, &after, &before, 1.0);
         assert!(gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
     }
 
@@ -244,7 +373,7 @@ mod tests {
         let before: Vec<DecodeItem> = decode_set(64, 2048, 512).items;
         let mut after = before.clone();
         after.extend(&victim.items);
-        let gc = prefill_preemption(&c, &rp, 2, &victim, &after, &before, 1, 1.0);
+        let gc = preempt(&c, &rp, 2, &victim, &after, &before, 1.0);
         assert!(!gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
     }
 
@@ -256,8 +385,8 @@ mod tests {
         let before: Vec<DecodeItem> = decode_set(32, 1024, 64).items;
         let mut after = before.clone();
         after.extend(&victim.items);
-        let low_w = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 0.1);
-        let high_w = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 10.0);
+        let low_w = preempt(&c, &rp, 1, &victim, &after, &before, 0.1);
+        let high_w = preempt(&c, &rp, 1, &victim, &after, &before, 10.0);
         assert!(low_w.net() > high_w.net());
     }
 
@@ -269,7 +398,17 @@ mod tests {
         let bd = decode_set(256, 2048, 256);
         let step = c.decode_step_time(&bd.items, 1);
         let rp = prefill_set(1, 128);
-        let gc = decode_scale_up(&c, &bd, step, 1, &rp, 3, 1, 1.0);
+        let gc = DecodeScaleUpInputs {
+            cost: &c,
+            bottleneck: &bd,
+            step_latency: step,
+            decode_width: 1,
+            pending: &rp,
+            prefill_width: 3,
+            tp: 1,
+            penalty_w: 1.0,
+        }
+        .evaluate();
         assert!(gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
     }
 
@@ -279,7 +418,17 @@ mod tests {
         let bd = decode_set(2, 128, 4);
         let step = c.decode_step_time(&bd.items, 1);
         let rp = prefill_set(8, 8192);
-        let gc = decode_scale_up(&c, &bd, step, 1, &rp, 2, 1, 1.0);
+        let gc = DecodeScaleUpInputs {
+            cost: &c,
+            bottleneck: &bd,
+            step_latency: step,
+            decode_width: 1,
+            pending: &rp,
+            prefill_width: 2,
+            tp: 1,
+            penalty_w: 1.0,
+        }
+        .evaluate();
         assert!(!gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
     }
 
@@ -289,16 +438,16 @@ mod tests {
         // One 16k-token multimodal prefill dominating the queue: DP
         // cannot split it, TP-2 halves it — worth a 0.5s re-shard.
         let long = prefill_set(1, 16_384);
-        let gc = tp_widen(&c, &long, &[1, 1], &[2], 0.5, 1.0);
+        let gc = widen(&c, &long, &[1, 1], &[2], 0.5, 1.0);
         assert!(gc.beneficial(), "gain={} cost={}", gc.gain, gc.cost);
         // Short text prefills: the speedup cannot pay for the re-shard.
         let short = prefill_set(2, 512);
-        let gc2 = tp_widen(&c, &short, &[1, 1], &[2], 0.5, 1.0);
+        let gc2 = widen(&c, &short, &[1, 1], &[2], 0.5, 1.0);
         assert!(!gc2.beneficial(), "gain={} cost={}", gc2.gain, gc2.cost);
         // Many medium prefills: DP already splits them, merging loses
         // width — speedup is ~0 and the verdict must be negative.
         let many = prefill_set(8, 2048);
-        let gc3 = tp_widen(&c, &many, &[1, 1, 1, 1], &[2, 1, 1], 0.5, 1.0);
+        let gc3 = widen(&c, &many, &[1, 1, 1, 1], &[2, 1, 1], 0.5, 1.0);
         assert!(!gc3.beneficial(), "gain={} cost={}", gc3.gain, gc3.cost);
     }
 
@@ -306,12 +455,44 @@ mod tests {
     fn tp_widen_penalty_and_reshard_dampen() {
         let c = cost();
         let long = prefill_set(1, 16_384);
-        let cheap = tp_widen(&c, &long, &[1, 1], &[2], 0.1, 1.0);
-        let pricey = tp_widen(&c, &long, &[1, 1], &[2], 5.0, 1.0);
+        let cheap = widen(&c, &long, &[1, 1], &[2], 0.1, 1.0);
+        let pricey = widen(&c, &long, &[1, 1], &[2], 5.0, 1.0);
         assert!(cheap.net() > pricey.net());
-        let low_w = tp_widen(&c, &long, &[1, 1], &[2], 0.5, 0.1);
-        let high_w = tp_widen(&c, &long, &[1, 1], &[2], 0.5, 10.0);
+        let low_w = widen(&c, &long, &[1, 1], &[2], 0.5, 0.1);
+        let high_w = widen(&c, &long, &[1, 1], &[2], 0.5, 10.0);
         assert!(low_w.net() > high_w.net());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_struct_api() {
+        let c = cost();
+        let rp = prefill_set(4, 4096);
+        let victim = decode_set(16, 1024, 64);
+        let before: Vec<DecodeItem> = decode_set(32, 1024, 64).items;
+        let mut after = before.clone();
+        after.extend(&victim.items);
+        let a = prefill_preemption(&c, &rp, 1, &victim, &after, &before, 1, 1.0);
+        let b = preempt(&c, &rp, 1, &victim, &after, &before, 1.0);
+        assert_eq!((a.gain, a.cost), (b.gain, b.cost));
+        let bd = decode_set(64, 1024, 64);
+        let step = c.decode_step_time(&bd.items, 1);
+        let a = decode_scale_up(&c, &bd, step, 1, &rp, 2, 1, 1.0);
+        let b = DecodeScaleUpInputs {
+            cost: &c,
+            bottleneck: &bd,
+            step_latency: step,
+            decode_width: 1,
+            pending: &rp,
+            prefill_width: 2,
+            tp: 1,
+            penalty_w: 1.0,
+        }
+        .evaluate();
+        assert_eq!((a.gain, a.cost), (b.gain, b.cost));
+        let a = tp_widen(&c, &rp, &[1, 1], &[2], 0.5, 1.0);
+        let b = widen(&c, &rp, &[1, 1], &[2], 0.5, 1.0);
+        assert_eq!((a.gain, a.cost), (b.gain, b.cost));
     }
 
     #[test]

@@ -3,16 +3,20 @@
 //!
 //! * [`modality`] — modality-aware load balancing (Eq. 1, §3.1),
 //! * [`gain_cost`] — the Eq. 2 / Eq. 3 preemption economics (§3.2),
+//! * [`policy`] — the pluggable scaling-policy API: reactive (the
+//!   paper's logic), predictive (forecast-aware), and oracle
+//!   (clairvoyant upper bound) decisions over a read-only view,
 //! * [`dispatch`] — FCFS request dispatch bounded by KV slots and the
 //!   memory→compute tipping point,
-//! * [`scaling`] — elastic instance allocation (Eq. 2) and decode
-//!   auto-scaling (Eq. 3),
+//! * [`scaling`] — the actuator: validates and applies policy actions
+//!   (reservation safety, cooldowns, the GPU-partition invariant),
 //! * [`migration`] — inter-group preemption and KV migration,
 //! * [`system`] — the thin composition root wiring the policies to the
 //!   shared trace driver ([`crate::sim::driver`]).
 
 pub mod gain_cost;
 pub mod modality;
+pub mod policy;
 pub mod system;
 
 pub(crate) mod dispatch;
@@ -22,4 +26,8 @@ pub(crate) mod scaling;
 #[cfg(test)]
 mod system_tests;
 
+pub use policy::{
+    Foresight, OraclePolicy, PolicyCtx, PredictivePolicy, ReactivePolicy, ScalingAction,
+    ScalingPolicy, Trigger,
+};
 pub use system::{EmpEv, EmpOptions, EmpStats, EmpSystem};

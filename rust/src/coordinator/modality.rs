@@ -33,6 +33,23 @@ impl LoadMonitor {
     }
 
     pub fn record_arrival(&mut self, now: f64, work_s: f64) {
+        // Cold-start seed: the rate EWMA otherwise reports ~0 for the
+        // whole first window after t=0 regardless of actual arrivals
+        // (the first `tick` averages over the full window span), which
+        // would make a forecast-driven policy under-allocate at trace
+        // start. Seed it from the first observed inter-arrival gap.
+        // Only the *rate* EWMA is seeded: `demand` feeds the reactive
+        // Eq. 1 allocation path (`avg_instances_needed`), and seeding
+        // it would perturb decisions the reactive policy must make
+        // byte-identically to the pre-policy coordinator.
+        if !self.rate.is_seeded() {
+            if let Some(&(prev, _)) = self.window.back() {
+                let gap = now - prev;
+                if gap > 1e-9 {
+                    self.rate.update(1.0 / gap);
+                }
+            }
+        }
         self.window.push_back((now, work_s));
         self.expire(now);
     }
@@ -56,6 +73,24 @@ impl LoadMonitor {
         self.rate.update(rate);
         self.demand.update(demand);
         self.last_update = now;
+    }
+
+    /// Un-smoothed arrival rate over the live window (req/s) — the
+    /// forecasters' "current demand" observation; unlike the EWMAs it
+    /// needs no `tick` cadence to be fresh.
+    pub fn windowed_rate(&self, now: f64) -> f64 {
+        self.window.len() as f64 / self.window_s.min(now.max(1e-9))
+    }
+
+    /// Number of arrivals in the live window (forecast evidence gate).
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// The live window's (arrival time, work estimate) samples,
+    /// ascending time — regression input for demand forecasting.
+    pub fn samples(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.window.iter().copied()
     }
 
     /// Average instance demand N_avg: GPU-seconds of arriving work per
@@ -151,6 +186,29 @@ mod tests {
         // 5 arrivals/s * 0.1 inst-s each = 0.5 instances needed.
         assert!((m.avg_instances_needed() - 0.5).abs() < 0.1);
         assert!(m.peak_instances_needed() >= m.avg_instances_needed());
+    }
+
+    #[test]
+    fn monitor_cold_start_seeds_rate_from_first_gap() {
+        // Before the fix the rate EWMA reported ~0 for the whole first
+        // window after t=0 no matter how fast arrivals came. The first
+        // observed inter-arrival gap (0.5s → 2 req/s) now seeds it.
+        let mut m = LoadMonitor::new(20.0, 0.3);
+        m.record_arrival(0.0, 0.5);
+        assert!(!m.rate.is_seeded(), "one arrival defines no gap");
+        m.record_arrival(0.5, 0.5);
+        assert!((m.rate.get() - 2.0).abs() < 1e-12, "rate={}", m.rate.get());
+        // A later arrival must not re-seed (the EWMA now evolves only
+        // through `tick`).
+        m.record_arrival(1.5, 0.5);
+        assert!((m.rate.get() - 2.0).abs() < 1e-12);
+        // The demand EWMA stays unseeded: it drives the reactive Eq. 1
+        // path and must be byte-identical to the pre-seed behavior.
+        assert_eq!(m.demand.get(), 0.0);
+        // Windowed-rate accessor: 3 arrivals over min(20, 1.5)s.
+        assert!((m.windowed_rate(1.5) - 2.0).abs() < 1e-12);
+        assert_eq!(m.window_len(), 3);
+        assert_eq!(m.samples().count(), 3);
     }
 
     #[test]

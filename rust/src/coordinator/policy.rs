@@ -1,0 +1,1106 @@
+//! Pluggable scaling policies (ROADMAP item 5): the *decision* half of
+//! the Eq. 2 / Eq. 3 stage elasticity, split from the *actuation* half
+//! that stays in [`super::scaling`].
+//!
+//! A [`ScalingPolicy`] sees the cluster only through a read-only
+//! [`PolicyCtx`] view and answers every trigger with a typed
+//! [`ScalingAction`]. It can *propose* anything; it can *do* nothing.
+//! The actuator validates each action against the safety invariants the
+//! policies must not be able to violate — reservation safety
+//! (`kv.num_seqs() == 0` before a decode instance flips away), the
+//! GPU-partition invariant, and the role-flip / TP-reconfig cooldowns —
+//! and silently rejects what fails (counted in
+//! `EmpStats::policy_rejections`). That split is what makes the
+//! policies below safe to write in ~50 lines each.
+//!
+//! Three policies ship:
+//! * [`ReactivePolicy`] — the pre-refactor logic, verbatim: decisions
+//!   are a pure function of the instantaneous queue state. This is the
+//!   only policy whose triggers `EmpSystem::can_fast_forward` mirrors,
+//!   so it is the only one that runs with decode fast-forward on;
+//!   byte-identical Reports to the pre-policy coordinator are asserted
+//!   by `tests/policy_contract.rs`.
+//! * [`PredictivePolicy`] — forecasts each group's arrival rate over
+//!   the reconfiguration payoff horizon (EWMA slope blended with a
+//!   windowed linear regression over the [`LoadMonitor`] history) and
+//!   scales the Eq. 3 gain terms by the predicted/current demand ratio
+//!   γ: rising demand triggers scale-ups and TP merges *earlier* and
+//!   holds scale-downs; falling demand does the reverse. Abstains
+//!   (γ = 1, exactly reactive) until the window holds
+//!   [`FORECAST_MIN_EVIDENCE`] arrivals.
+//! * [`OraclePolicy`] — the clairvoyant upper bound: the same γ
+//!   shaping, but the "forecast" is the *actual* future arrival count
+//!   read from the trace through a [`Foresight`] handle. `Foresight`
+//!   has exactly one constructor, [`Foresight::of_trace`], and only
+//!   oracle runs build one — no other policy can smuggle in future
+//!   knowledge.
+
+use std::collections::VecDeque;
+
+use crate::config::SchedulerConfig;
+use crate::model::{CostModel, DecodeItem, PrefillItem};
+use crate::sim::instance::{GroupId, StageRole};
+use crate::util::json::Json;
+use crate::util::stats::Ewma;
+use crate::workload::{Modality, Request};
+
+use super::gain_cost::{
+    DecodeScaleUpInputs, DecodeSet, PreemptPrefillInputs, PrefillSet, TpWidenInputs,
+};
+use super::modality::LoadMonitor;
+use super::system::{gidx, EmpSystem};
+
+/// Read-only view of one [`EmpSystem`] at decision time. Everything a
+/// policy may look at goes through an accessor here; nothing is `&mut`.
+pub struct PolicyCtx<'a> {
+    sys: &'a EmpSystem,
+    pub now: f64,
+}
+
+impl<'a> PolicyCtx<'a> {
+    pub(crate) fn new(sys: &'a EmpSystem, now: f64) -> Self {
+        PolicyCtx { sys, now }
+    }
+
+    // --- configuration / inventory -------------------------------------
+
+    pub fn sched(&self) -> &SchedulerConfig {
+        &self.sys.sched
+    }
+
+    pub fn cost(&self) -> &CostModel {
+        &self.sys.cost
+    }
+
+    pub fn base_tp(&self) -> usize {
+        self.sys.base_tp
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.sys.num_groups()
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.sys.instances.len()
+    }
+
+    pub fn group_serves_media(&self, g: GroupId) -> bool {
+        self.sys.group_serves_media(g)
+    }
+
+    pub fn non_blocking_encode(&self) -> bool {
+        self.sys.opts.non_blocking_encode
+    }
+
+    /// Modality → group routing (exact match, else first media group).
+    pub fn group_for(&self, m: Modality) -> GroupId {
+        self.sys.modality_group[m.index()]
+    }
+
+    // --- membership ----------------------------------------------------
+
+    pub fn members(&self, g: GroupId) -> &[usize] {
+        self.sys.members(g)
+    }
+
+    pub fn role_members(&self, g: GroupId, role: StageRole) -> &[usize] {
+        self.sys.role_members(g, role)
+    }
+
+    pub fn role_of(&self, i: usize) -> StageRole {
+        self.sys.instances[i].role
+    }
+
+    pub fn group_of(&self, i: usize) -> GroupId {
+        self.sys.instances[i].group
+    }
+
+    // --- per-instance state --------------------------------------------
+
+    pub fn tp_of(&self, i: usize) -> usize {
+        self.sys.instances[i].tp
+    }
+
+    pub fn is_idle(&self, i: usize) -> bool {
+        self.sys.instances[i].idle_at(self.now)
+    }
+
+    /// Whether the instance has an iteration booked (`current` slot).
+    pub fn is_booked(&self, i: usize) -> bool {
+        self.sys.current[i].is_some()
+    }
+
+    /// Whether the instance is a merged TP group (has absorbed peers).
+    pub fn is_merged(&self, i: usize) -> bool {
+        !self.sys.instances[i].absorbed.is_empty()
+    }
+
+    /// TP degree the most recently absorbed peer would come back at if
+    /// the group split now.
+    pub fn revived_tp(&self, i: usize) -> usize {
+        self.sys.instances[i].absorbed.last().map_or(self.sys.base_tp, |&(_, n)| n)
+    }
+
+    pub fn decoding_len(&self, i: usize) -> usize {
+        self.sys.instances[i].decoding.len()
+    }
+
+    pub fn kv_num_seqs(&self, i: usize) -> usize {
+        self.sys.instances[i].kv.num_seqs()
+    }
+
+    pub fn kv_free_tokens(&self, i: usize) -> usize {
+        self.sys.instances[i].kv_free_tokens()
+    }
+
+    // --- queues --------------------------------------------------------
+
+    pub fn wait_prefill_len(&self, g: GroupId) -> usize {
+        self.sys.groups[gidx(g)].wait_prefill.len()
+    }
+
+    pub fn wait_encode_len(&self, g: GroupId) -> usize {
+        self.sys.groups[gidx(g)].wait_encode.len()
+    }
+
+    /// Whether the head of the prefill queue (first `16`) holds a
+    /// request long enough to beat chunking — the long-prefill-regime
+    /// test both TP directions share.
+    pub fn long_prefill_queued(&self, g: GroupId) -> bool {
+        self.sys.groups[gidx(g)].wait_prefill.iter().take(16).any(|&ix| {
+            self.sys.requests.get(ix).prefill_remaining()
+                >= self.sys.sched.chunked_prefill_tokens
+        })
+    }
+
+    /// Queued prefill demand as *outstanding* tokens (a video whose
+    /// later chunks are still encoding counts in full).
+    pub fn queued_prefill_outstanding(&self, g: GroupId, cap: usize) -> Vec<PrefillItem> {
+        self.sys.groups[gidx(g)]
+            .wait_prefill
+            .iter()
+            .take(cap)
+            .map(|&ix| {
+                let r = self.sys.requests.get(ix);
+                PrefillItem {
+                    new_tokens: r.prefill_remaining(),
+                    cached_tokens: r.cached_prefix + r.prefill_done,
+                    vision_tokens: r.vision_tokens,
+                }
+            })
+            .collect()
+    }
+
+    /// Queued prefill demand as currently *admissible* tokens (encode
+    /// still pending on the rest).
+    pub fn queued_prefill_admissible(&self, g: GroupId, cap: usize) -> Vec<PrefillItem> {
+        self.sys.groups[gidx(g)]
+            .wait_prefill
+            .iter()
+            .take(cap)
+            .map(|&ix| {
+                let r = self.sys.requests.get(ix);
+                PrefillItem {
+                    new_tokens: r.prefill_admissible(),
+                    cached_tokens: r.cached_prefix + r.prefill_done,
+                    vision_tokens: r.vision_tokens,
+                }
+            })
+            .collect()
+    }
+
+    /// The [`DecodeSet`] resident on an instance.
+    pub fn decode_set(&self, inst: usize) -> DecodeSet {
+        let decoding = &self.sys.instances[inst].decoding;
+        DecodeSet {
+            items: decoding
+                .iter()
+                .map(|&ix| {
+                    let r = self.sys.requests.get(ix);
+                    DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+                })
+                .collect(),
+            remaining_out: decoding
+                .iter()
+                .map(|&ix| {
+                    let r = self.sys.requests.get(ix);
+                    r.req.output_tokens.saturating_sub(r.decoded).max(1)
+                })
+                .collect(),
+        }
+    }
+
+    /// Flattened decode items over several instances (merged-batch view
+    /// for the Eq. 2 survivor cost).
+    pub fn decode_items(&self, insts: &[usize]) -> Vec<DecodeItem> {
+        insts
+            .iter()
+            .flat_map(|&d| self.sys.instances[d].decoding.iter())
+            .map(|&ix| {
+                let r = self.sys.requests.get(ix);
+                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
+            })
+            .collect()
+    }
+
+    // --- load ----------------------------------------------------------
+
+    pub fn monitor(&self, g: GroupId) -> &LoadMonitor {
+        &self.sys.groups[gidx(g)].monitor
+    }
+}
+
+/// Why the coordinator is asking for a decision.
+#[derive(Debug)]
+pub enum Trigger<'a> {
+    /// Scheduling pass: should the group's prefill TP layout change?
+    TpReconfig,
+    /// A prefill batch (`items`, on `e_p` instances) wants to borrow a
+    /// decode instance (Eq. 2).
+    PrefillPreemption { items: &'a [PrefillItem], e_p: usize },
+    /// Decode pressure check after an iteration (`forced` when prefill
+    /// dispatch was blocked on KV space).
+    DecodeScaleUp { forced: bool },
+    /// Idle-decode check after an iteration.
+    DecodeScaleDown,
+    /// Encoder-pool sizing check.
+    EncoderScaling,
+}
+
+/// A typed scaling decision. The actuator validates every field against
+/// the live system before acting; an action referencing a stale or
+/// unsafe instance is rejected, never partially applied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingAction {
+    NoOp,
+    /// Flip `inst` to `role` (emergency decode bootstrap when
+    /// `role == Decode`; decode scale-down when `role == Prefill`).
+    FlipRole { inst: usize, role: StageRole },
+    /// Scale decode up around bottleneck `hot`: flip `pick` to decode
+    /// and rebalance, or fall back to inter-group reactive scaling
+    /// (§3.1) when `pick` is `None`.
+    ScaleDecode { hot: usize, pick: Option<usize> },
+    /// Eq. 2: prefill borrows decode instance `victim` (its sequences
+    /// migrate to the surviving decode set first).
+    PreemptPrefill { victim: usize },
+    /// Merge prefill instances `leader` and `other` into one TP group
+    /// of twice the degree.
+    MergeTp { leader: usize, other: usize },
+    /// Split merged group `leader`; the revived instance joins `role`.
+    SplitTp { leader: usize, role: StageRole },
+    /// Grow (`promote`) or shrink the encoder pool by flipping `inst`.
+    ScaleEncoder { inst: usize, promote: bool },
+}
+
+/// A scaling policy: pure decisions over a read-only view.
+///
+/// Implementations must not assume their actions are applied — the
+/// actuator may reject any of them — and must not carry state that
+/// would diverge if one is.
+pub trait ScalingPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Whether `EmpSystem::can_fast_forward`'s trigger mirror is exact
+    /// for this policy. Only [`ReactivePolicy`] returns true; any other
+    /// policy forces exact step-by-step decode so its (differently
+    /// timed) decisions cannot be skipped over.
+    fn mirrors_fast_forward(&self) -> bool {
+        false
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>, g: GroupId, trigger: Trigger<'_>) -> ScalingAction;
+
+    /// Per-policy observability folded into `Report::policy`.
+    fn report(&self) -> Json;
+}
+
+/// Per-variant decision tally (every non-NoOp action a policy returned,
+/// whether or not the actuator accepted it).
+#[derive(Debug, Default, Clone)]
+pub struct DecisionCounts {
+    pub noop: u64,
+    pub flip_role: u64,
+    pub scale_decode: u64,
+    pub preempt_prefill: u64,
+    pub merge_tp: u64,
+    pub split_tp: u64,
+    pub scale_encoder: u64,
+}
+
+impl DecisionCounts {
+    pub fn tally(&mut self, a: &ScalingAction) {
+        match a {
+            ScalingAction::NoOp => self.noop += 1,
+            ScalingAction::FlipRole { .. } => self.flip_role += 1,
+            ScalingAction::ScaleDecode { .. } => self.scale_decode += 1,
+            ScalingAction::PreemptPrefill { .. } => self.preempt_prefill += 1,
+            ScalingAction::MergeTp { .. } => self.merge_tp += 1,
+            ScalingAction::SplitTp { .. } => self.split_tp += 1,
+            ScalingAction::ScaleEncoder { .. } => self.scale_encoder += 1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("noop", Json::u64(self.noop)),
+            ("flip_role", Json::u64(self.flip_role)),
+            ("scale_decode", Json::u64(self.scale_decode)),
+            ("preempt_prefill", Json::u64(self.preempt_prefill)),
+            ("merge_tp", Json::u64(self.merge_tp)),
+            ("split_tp", Json::u64(self.split_tp)),
+            ("scale_encoder", Json::u64(self.scale_encoder)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared decision logic
+// ---------------------------------------------------------------------
+//
+// The functions below are the pre-refactor `scaling.rs` decision bodies,
+// verbatim, parameterized by a demand factor γ that scales the *gain*
+// side of each Eq. 3 comparison (and the decode-hot batch test). At
+// γ = 1.0 every comparison reduces to the original float-for-float
+// (`x * 1.0 == x` exactly in IEEE 754), which is what makes
+// `ReactivePolicy` byte-identical to the pre-policy coordinator.
+// Cooldowns and `max_tp` gating are deliberately *absent* here — they
+// live in the actuator.
+
+/// TP split-or-merge decision for group `g` (split wins when both are
+/// possible, matching the pre-refactor `try_tp_split` → `try_tp_merge`
+/// order).
+pub fn decide_tp_reconfig(ctx: &PolicyCtx<'_>, g: GroupId, gamma: f64) -> ScalingAction {
+    // Split: a drained, idle merged leader (any stage role — a shrunken
+    // group may have left it Unified).
+    let leader = ctx.members(g).iter().copied().find(|&m| {
+        ctx.tp_of(m) > ctx.base_tp()
+            && ctx.is_merged(m)
+            && ctx.is_idle(m)
+            && !ctx.is_booked(m)
+            && ctx.decoding_len(m) == 0
+            && ctx.kv_num_seqs(m) == 0
+    });
+    let long_queued = ctx.long_prefill_queued(g);
+    let hot_batch = ctx
+        .role_members(g, StageRole::Decode)
+        .iter()
+        .map(|&d| ctx.decoding_len(d))
+        .max()
+        .unwrap_or(0);
+    // γ shapes the decode-hot test the same way it shapes the scale-up
+    // batch test: predicted-rising demand treats a nearly-hot decode
+    // pool as hot already.
+    let decode_hot = (hot_batch as f64) * gamma >= ctx.sched().decode_scale_up_batch as f64;
+    if let Some(leader) = leader {
+        // Keep the width only while the queue still holds a prefill
+        // long enough to use it and decode is not starved.
+        if !(long_queued && !decode_hot) {
+            // Back toward data parallelism: the revived instance joins
+            // decode when decode is the bottleneck — but only if it
+            // comes back at base TP (wide groups never serve decode).
+            let role = if decode_hot && ctx.revived_tp(leader) == ctx.base_tp() {
+                StageRole::Decode
+            } else {
+                StageRole::Prefill
+            };
+            return ScalingAction::SplitTp { leader, role };
+        }
+    }
+    // Merge: cheap demand precheck — merging can only win when the
+    // queue holds a prefill a single instance serves slowly.
+    if !long_queued {
+        return ScalingAction::NoOp;
+    }
+    // Idle, drained, un-booked prefill instances, ascending id.
+    let idle: Vec<usize> = ctx
+        .role_members(g, StageRole::Prefill)
+        .iter()
+        .copied()
+        .filter(|&p| {
+            ctx.is_idle(p)
+                && !ctx.is_booked(p)
+                && ctx.decoding_len(p) == 0
+                && ctx.kv_num_seqs(p) == 0
+        })
+        .collect();
+    // First equal-degree pair within the ceiling (lowest ids win, so
+    // repeated merges are deterministic: 1+1→2, later 2+2→4).
+    let mut pair = None;
+    'outer: for i in 0..idle.len() {
+        let t = ctx.tp_of(idle[i]);
+        if t * 2 > ctx.sched().max_tp {
+            continue;
+        }
+        for j in (i + 1)..idle.len() {
+            if ctx.tp_of(idle[j]) == t {
+                pair = Some((i, j));
+                break 'outer;
+            }
+        }
+    }
+    let Some((a, b)) = pair else { return ScalingAction::NoOp };
+    let items = ctx.queued_prefill_outstanding(g, 16);
+    let tps_now: Vec<usize> = idle.iter().map(|&p| ctx.tp_of(p)).collect();
+    let mut tps_after = tps_now.clone();
+    tps_after[a] *= 2;
+    tps_after.remove(b);
+    let t = tps_now[a];
+    let reshard = ctx.sched().tp_reconfig_s + ctx.cost().tp_reshard_time(t, 2 * t);
+    let rp = PrefillSet { items };
+    let gc = TpWidenInputs {
+        cost: ctx.cost(),
+        pending: &rp,
+        tps_now: &tps_now,
+        tps_after: &tps_after,
+        reshard_s: reshard,
+        penalty_w: ctx.sched().preempt_penalty_w,
+    }
+    .evaluate();
+    if gc.gain * gamma > gc.cost {
+        ScalingAction::MergeTp { leader: idle[a], other: idle[b] }
+    } else {
+        ScalingAction::NoOp
+    }
+}
+
+/// Eq. 2: should the prefill batch (`items`, width `e_p`) borrow a
+/// decode instance?
+pub fn decide_prefill_preemption(
+    ctx: &PolicyCtx<'_>,
+    g: GroupId,
+    items: &[PrefillItem],
+    e_p: usize,
+) -> ScalingAction {
+    let decode = ctx.role_members(g, StageRole::Decode);
+    // e_max: maximum unused KV slots.
+    let Some(&emax) = decode.iter().max_by_key(|&&d| ctx.kv_free_tokens(d)) else {
+        return ScalingAction::NoOp;
+    };
+    if !ctx.is_idle(emax) || ctx.is_booked(emax) {
+        return ScalingAction::NoOp;
+    }
+    // Reservation safety: every sequence in e_max's pool must be a
+    // migratable decoding resident — a mid-prefill reservation cannot
+    // move and would strand on a prefill-role instance.
+    if ctx.kv_num_seqs(emax) != ctx.decoding_len(emax) {
+        return ScalingAction::NoOp;
+    }
+    let victim = ctx.decode_set(emax);
+    let survivors: Vec<usize> = decode.iter().copied().filter(|&d| d != emax).collect();
+    let merged_before = ctx.decode_items(&survivors);
+    let mut merged_after = merged_before.clone();
+    merged_after.extend(victim.items.iter().copied());
+    let rp = PrefillSet { items: items.to_vec() };
+    let gc = PreemptPrefillInputs {
+        cost: ctx.cost(),
+        pending: &rp,
+        prefill_width: e_p,
+        victim: &victim,
+        merged_after: &merged_after,
+        merged_before: &merged_before,
+        tp: ctx.tp_of(emax),
+        penalty_w: ctx.sched().preempt_penalty_w,
+    }
+    .evaluate();
+    if gc.beneficial() {
+        ScalingAction::PreemptPrefill { victim: emax }
+    } else {
+        ScalingAction::NoOp
+    }
+}
+
+/// Eq. 3: scale decode up when a bottleneck is detected.
+pub fn decide_decode_scale_up(
+    ctx: &PolicyCtx<'_>,
+    g: GroupId,
+    forced: bool,
+    gamma: f64,
+) -> ScalingAction {
+    let decode = ctx.role_members(g, StageRole::Decode);
+    if decode.is_empty() {
+        // No decode instance at all (can happen transiently): flip an
+        // idle prefill instance immediately — a base-TP one if any
+        // exists; a merged wide group only as a true last resort.
+        let idle = |p: usize| ctx.is_idle(p) && !ctx.is_booked(p);
+        let prefill = ctx.role_members(g, StageRole::Prefill);
+        let pick = prefill
+            .iter()
+            .copied()
+            .find(|&p| idle(p) && ctx.tp_of(p) == ctx.base_tp())
+            .or_else(|| prefill.iter().copied().find(|&p| idle(p)));
+        return match pick {
+            Some(pick) => ScalingAction::FlipRole { inst: pick, role: StageRole::Decode },
+            None => ScalingAction::NoOp,
+        };
+    }
+    // Detect the bottleneck: biggest decode batch beyond threshold, or
+    // KV-forced. γ scales the observed batch toward its predicted size.
+    let &hot = decode.iter().max_by_key(|&&d| ctx.decoding_len(d)).unwrap();
+    let batch_len = ctx.decoding_len(hot);
+    if !forced && (batch_len as f64) * gamma < ctx.sched().decode_scale_up_batch as f64 {
+        return ScalingAction::NoOp;
+    }
+    // Prefer an idle *base-TP* prefill instance in-group; merged wide
+    // TP groups are never flipped to decode (§3.2).
+    let prefill = ctx.role_members(g, StageRole::Prefill);
+    let prefill_len = prefill.len();
+    if prefill_len <= 1 {
+        // Last resort: inter-group reactive scaling (§3.1).
+        return ScalingAction::ScaleDecode { hot, pick: None };
+    }
+    let Some(&pick) = prefill
+        .iter()
+        .find(|&&p| ctx.is_idle(p) && !ctx.is_booked(p) && ctx.tp_of(p) == ctx.base_tp())
+    else {
+        return ScalingAction::NoOp;
+    };
+    // Eq. 3 gain/cost.
+    let decode_len = decode.len();
+    let b_d = ctx.decode_set(hot);
+    let tp = ctx.tp_of(hot);
+    let avg_lat = ctx.cost().decode_step_time(&b_d.items, tp);
+    let rp_rest = PrefillSet { items: ctx.queued_prefill_admissible(g, 16) };
+    let gc = DecodeScaleUpInputs {
+        cost: ctx.cost(),
+        bottleneck: &b_d,
+        step_latency: avg_lat,
+        decode_width: decode_len,
+        pending: &rp_rest,
+        prefill_width: prefill_len,
+        tp,
+        penalty_w: ctx.sched().preempt_penalty_w,
+    }
+    .evaluate();
+    if !forced && gc.gain * gamma <= gc.cost {
+        return ScalingAction::NoOp;
+    }
+    ScalingAction::ScaleDecode { hot, pick: Some(pick) }
+}
+
+/// Shrink decode to minimum parallelism when idle. A policy expecting
+/// demand to rise (γ > 1.25) holds the instance on decode instead.
+pub fn decide_decode_scale_down(ctx: &PolicyCtx<'_>, g: GroupId, gamma: f64) -> ScalingAction {
+    if gamma > 1.25 {
+        return ScalingAction::NoOp;
+    }
+    let flip = ctx
+        .role_members(g, StageRole::Decode)
+        .iter()
+        .copied()
+        .find(|&d| ctx.decoding_len(d) == 0 && ctx.kv_num_seqs(d) == 0 && !ctx.is_booked(d));
+    match flip {
+        Some(d) => ScalingAction::FlipRole { inst: d, role: StageRole::Prefill },
+        None => ScalingAction::NoOp,
+    }
+}
+
+/// Elastic encoder-pool sizing: scale the Encode-role count with the
+/// encode backlog.
+pub fn decide_encoder_scaling(ctx: &PolicyCtx<'_>, g: GroupId) -> ScalingAction {
+    let n = ctx.members(g).len();
+    let backlog = ctx.wait_encode_len(g);
+    let current = ctx.role_members(g, StageRole::Encode).len();
+    let desired = (backlog.div_ceil(2)).clamp(0, n - 2);
+    match desired.cmp(&current) {
+        std::cmp::Ordering::Greater => {
+            // Promote an idle base-TP prefill instance (keep >=1
+            // prefill; merged wide groups stay on prefill).
+            let prefill = ctx.role_members(g, StageRole::Prefill);
+            if prefill.len() > 1 {
+                if let Some(&pick) = prefill.iter().find(|&&p| {
+                    !ctx.is_booked(p) && ctx.decoding_len(p) == 0 && ctx.tp_of(p) == ctx.base_tp()
+                }) {
+                    return ScalingAction::ScaleEncoder { inst: pick, promote: true };
+                }
+            }
+            ScalingAction::NoOp
+        }
+        std::cmp::Ordering::Less => {
+            // Demote an idle encoder back to prefill.
+            match ctx
+                .role_members(g, StageRole::Encode)
+                .iter()
+                .find(|&&e| !ctx.is_booked(e))
+            {
+                Some(&pick) => ScalingAction::ScaleEncoder { inst: pick, promote: false },
+                None => ScalingAction::NoOp,
+            }
+        }
+        std::cmp::Ordering::Equal => ScalingAction::NoOp,
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReactivePolicy
+// ---------------------------------------------------------------------
+
+/// The pre-refactor scaling logic behind the trait: every decision at
+/// γ = 1.0, a pure function of the instantaneous queue state.
+#[derive(Debug, Default)]
+pub struct ReactivePolicy {
+    counts: DecisionCounts,
+}
+
+impl ReactivePolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ScalingPolicy for ReactivePolicy {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn mirrors_fast_forward(&self) -> bool {
+        true
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>, g: GroupId, trigger: Trigger<'_>) -> ScalingAction {
+        let a = match trigger {
+            Trigger::TpReconfig => decide_tp_reconfig(ctx, g, 1.0),
+            Trigger::PrefillPreemption { items, e_p } => {
+                decide_prefill_preemption(ctx, g, items, e_p)
+            }
+            Trigger::DecodeScaleUp { forced } => decide_decode_scale_up(ctx, g, forced, 1.0),
+            Trigger::DecodeScaleDown => decide_decode_scale_down(ctx, g, 1.0),
+            Trigger::EncoderScaling => decide_encoder_scaling(ctx, g),
+        };
+        self.counts.tally(&a);
+        a
+    }
+
+    fn report(&self) -> Json {
+        self.counts.to_json()
+    }
+}
+
+// ---------------------------------------------------------------------
+// PredictivePolicy
+// ---------------------------------------------------------------------
+
+/// Minimum arrivals the monitor window must hold before the forecaster
+/// trusts a slope; below this it abstains (γ = 1, exactly reactive).
+pub const FORECAST_MIN_EVIDENCE: usize = 12;
+
+/// Per-group forecaster state.
+#[derive(Debug)]
+struct GroupForecast {
+    /// EWMA of the instantaneous rate slope (req/s per s).
+    slope_ewma: Ewma,
+    /// Last (time, windowed rate) observation the slope EWMA saw.
+    last_rate: Option<(f64, f64)>,
+    /// Outstanding forecasts: (due time, predicted rate) — matured
+    /// entries are scored against the then-observed rate.
+    pending: VecDeque<(f64, f64)>,
+}
+
+impl GroupForecast {
+    fn new() -> Self {
+        GroupForecast { slope_ewma: Ewma::new(0.3), last_rate: None, pending: VecDeque::new() }
+    }
+}
+
+/// Forecast-aware autoscaling: Eq. 3 gains are scaled by the ratio of
+/// *predicted* demand over the reconfiguration payoff horizon to
+/// current demand.
+pub struct PredictivePolicy {
+    groups: Vec<GroupForecast>,
+    counts: DecisionCounts,
+    forecasts: u64,
+    abstained: u64,
+    err_sum: f64,
+    err_samples: u64,
+}
+
+impl PredictivePolicy {
+    pub fn new() -> Self {
+        PredictivePolicy {
+            groups: Vec::new(),
+            counts: DecisionCounts::default(),
+            forecasts: 0,
+            abstained: 0,
+            err_sum: 0.0,
+            err_samples: 0,
+        }
+    }
+
+    /// Demand factor for group `g`: predicted/current arrival rate over
+    /// the payoff horizon, clamped and deadbanded by [`shape_gamma`].
+    fn gamma(&mut self, ctx: &PolicyCtx<'_>, g: GroupId) -> f64 {
+        let gi = gidx(g);
+        while self.groups.len() <= gi {
+            self.groups.push(GroupForecast::new());
+        }
+        let now = ctx.now;
+        let mon = ctx.monitor(g);
+        let cur = mon.windowed_rate(now);
+        let n = mon.window_len();
+        // Score matured forecasts against the rate actually observed.
+        while let Some(&(due, pred)) = self.groups[gi].pending.front() {
+            if due > now {
+                break;
+            }
+            self.groups[gi].pending.pop_front();
+            self.err_sum += (pred - cur).abs();
+            self.err_samples += 1;
+        }
+        // Slope EWMA over successive windowed-rate observations.
+        if let Some((t0, r0)) = self.groups[gi].last_rate {
+            let dt = now - t0;
+            if dt > 1e-9 {
+                self.groups[gi].slope_ewma.update((cur - r0) / dt);
+            }
+        }
+        self.groups[gi].last_rate = Some((now, cur));
+        // Horizon: the forecast must outlive the cost of acting on it —
+        // a TP reshard round-trip at minimum.
+        let h = ctx.sched().forecast_horizon_floor_s.max(
+            ctx.sched().tp_reconfig_s
+                + ctx.cost().tp_reshard_time(ctx.base_tp(), ctx.base_tp() * 2),
+        );
+        if n < FORECAST_MIN_EVIDENCE || cur <= 1e-9 {
+            self.abstained += 1;
+            return 1.0;
+        }
+        // Blend the regression slope (robust to single-gap noise) with
+        // the EWMA slope (responsive to the latest trend).
+        let slope = 0.5 * (regression_slope(mon.samples()) + self.groups[gi].slope_ewma.get());
+        let predicted = (cur + slope * h).max(0.0);
+        if self.groups[gi].pending.len() < 64 {
+            self.groups[gi].pending.push_back((now + h, predicted));
+        }
+        self.forecasts += 1;
+        shape_gamma(predicted, cur, ctx.sched().forecast_deadband)
+    }
+}
+
+impl Default for PredictivePolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScalingPolicy for PredictivePolicy {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>, g: GroupId, trigger: Trigger<'_>) -> ScalingAction {
+        let a = match trigger {
+            Trigger::TpReconfig => {
+                let gamma = self.gamma(ctx, g);
+                decide_tp_reconfig(ctx, g, gamma)
+            }
+            Trigger::PrefillPreemption { items, e_p } => {
+                decide_prefill_preemption(ctx, g, items, e_p)
+            }
+            Trigger::DecodeScaleUp { forced } => {
+                let gamma = self.gamma(ctx, g);
+                decide_decode_scale_up(ctx, g, forced, gamma)
+            }
+            Trigger::DecodeScaleDown => {
+                let gamma = self.gamma(ctx, g);
+                decide_decode_scale_down(ctx, g, gamma)
+            }
+            Trigger::EncoderScaling => decide_encoder_scaling(ctx, g),
+        };
+        self.counts.tally(&a);
+        a
+    }
+
+    fn report(&self) -> Json {
+        Json::obj(vec![
+            ("decisions", self.counts.to_json()),
+            (
+                "forecast",
+                Json::obj(vec![
+                    ("forecasts", Json::u64(self.forecasts)),
+                    ("abstained", Json::u64(self.abstained)),
+                    (
+                        "mean_abs_error",
+                        Json::num(if self.err_samples > 0 {
+                            self.err_sum / self.err_samples as f64
+                        } else {
+                            0.0
+                        }),
+                    ),
+                    ("error_samples", Json::u64(self.err_samples)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Least-squares slope (req/s per s) over 1-second bucket counts of the
+/// arrival timestamps in `samples`. Returns 0 when the window spans
+/// fewer than two buckets.
+pub fn regression_slope(samples: impl Iterator<Item = (f64, f64)>) -> f64 {
+    let ts: Vec<f64> = samples.map(|(t, _)| t).collect();
+    let Some(&t0) = ts.first() else { return 0.0 };
+    let mut buckets: Vec<f64> = Vec::new();
+    for &t in &ts {
+        let idx = (t - t0).floor().max(0.0) as usize;
+        if idx >= buckets.len() {
+            buckets.resize(idx + 1, 0.0);
+        }
+        buckets[idx] += 1.0;
+    }
+    let n = buckets.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // x = bucket index, y = arrivals in that second.
+    let nf = n as f64;
+    let sx = (0..n).map(|i| i as f64).sum::<f64>();
+    let sy: f64 = buckets.iter().sum();
+    let sxx = (0..n).map(|i| (i * i) as f64).sum::<f64>();
+    let sxy = buckets.iter().enumerate().map(|(i, &y)| i as f64 * y).sum::<f64>();
+    let denom = nf * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return 0.0;
+    }
+    (nf * sxy - sx * sy) / denom
+}
+
+/// Shape a predicted/current demand ratio into the γ factor: clamped to
+/// [0.5, 2.0] so a wild forecast cannot more than double or halve any
+/// gain term, and snapped to 1.0 inside the deadband so small forecast
+/// noise keeps the policy exactly reactive.
+pub fn shape_gamma(predicted: f64, current: f64, deadband: f64) -> f64 {
+    let g = (predicted / current).clamp(0.5, 2.0);
+    if (g - 1.0).abs() < deadband {
+        1.0
+    } else {
+        g
+    }
+}
+
+// ---------------------------------------------------------------------
+// OraclePolicy
+// ---------------------------------------------------------------------
+
+/// Clairvoyant view of a trace's future arrivals. The *only*
+/// constructor is [`Foresight::of_trace`], and the only call site that
+/// may invoke it is an explicitly-requested oracle run (CLI
+/// `--policy oracle`, the sweep's oracle axis, the shoot-out bench) —
+/// never a serving policy's own code path. That construction rule is
+/// what keeps the oracle an upper *bound* rather than a leak.
+pub struct Foresight {
+    /// (arrival time, modality), ascending time.
+    arrivals: Vec<(f64, Modality)>,
+}
+
+impl Foresight {
+    pub fn of_trace(trace: &[Request]) -> Foresight {
+        let mut arrivals: Vec<(f64, Modality)> =
+            trace.iter().map(|r| (r.arrival, r.modality())).collect();
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Foresight { arrivals }
+    }
+
+    /// Arrivals in `(now, now + horizon]` that `route` maps into the
+    /// target group.
+    fn future_count(&self, now: f64, horizon: f64, route: impl Fn(Modality) -> bool) -> usize {
+        let lo = self.arrivals.partition_point(|&(t, _)| t <= now);
+        let hi = self.arrivals.partition_point(|&(t, _)| t <= now + horizon);
+        self.arrivals[lo..hi].iter().filter(|&&(_, m)| route(m)).count()
+    }
+}
+
+/// The clairvoyant upper bound: γ from the *actual* future arrival rate
+/// instead of a forecast.
+pub struct OraclePolicy {
+    foresight: Foresight,
+    counts: DecisionCounts,
+    lookups: u64,
+    abstained: u64,
+}
+
+impl OraclePolicy {
+    pub fn new(foresight: Foresight) -> Self {
+        OraclePolicy { foresight, counts: DecisionCounts::default(), lookups: 0, abstained: 0 }
+    }
+
+    fn gamma(&mut self, ctx: &PolicyCtx<'_>, g: GroupId) -> f64 {
+        let now = ctx.now;
+        let cur = ctx.monitor(g).windowed_rate(now);
+        let h = ctx.sched().forecast_horizon_floor_s.max(
+            ctx.sched().tp_reconfig_s
+                + ctx.cost().tp_reshard_time(ctx.base_tp(), ctx.base_tp() * 2),
+        );
+        let count = self.foresight.future_count(now, h, |m| ctx.group_for(m) == g);
+        // Same abstain rule as the forecaster (on *future* evidence):
+        // at the trace tail or in a lull the oracle stays reactive.
+        if count < FORECAST_MIN_EVIDENCE || cur <= 1e-9 {
+            self.abstained += 1;
+            return 1.0;
+        }
+        self.lookups += 1;
+        shape_gamma(count as f64 / h, cur, ctx.sched().forecast_deadband)
+    }
+}
+
+impl ScalingPolicy for OraclePolicy {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>, g: GroupId, trigger: Trigger<'_>) -> ScalingAction {
+        let a = match trigger {
+            Trigger::TpReconfig => {
+                let gamma = self.gamma(ctx, g);
+                decide_tp_reconfig(ctx, g, gamma)
+            }
+            Trigger::PrefillPreemption { items, e_p } => {
+                decide_prefill_preemption(ctx, g, items, e_p)
+            }
+            Trigger::DecodeScaleUp { forced } => {
+                let gamma = self.gamma(ctx, g);
+                decide_decode_scale_up(ctx, g, forced, gamma)
+            }
+            Trigger::DecodeScaleDown => {
+                let gamma = self.gamma(ctx, g);
+                decide_decode_scale_down(ctx, g, gamma)
+            }
+            Trigger::EncoderScaling => decide_encoder_scaling(ctx, g),
+        };
+        self.counts.tally(&a);
+        a
+    }
+
+    fn report(&self) -> Json {
+        Json::obj(vec![
+            ("decisions", self.counts.to_json()),
+            (
+                "oracle",
+                Json::obj(vec![
+                    ("lookups", Json::u64(self.lookups)),
+                    ("abstained", Json::u64(self.abstained)),
+                ]),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Policy names the CLI / sweep accept, in shoot-out order.
+pub const REGISTRY: [&str; 3] = ["reactive", "predictive", "oracle"];
+
+/// Construct a policy by name. `foresight` is required for (and only
+/// consumed by) the oracle — see the [`Foresight`] construction rule.
+pub fn by_name(
+    name: &str,
+    foresight: Option<Foresight>,
+) -> Result<Box<dyn ScalingPolicy>, String> {
+    match name {
+        "reactive" => Ok(Box::new(ReactivePolicy::new())),
+        "predictive" => Ok(Box::new(PredictivePolicy::new())),
+        "oracle" => match foresight {
+            Some(f) => Ok(Box::new(OraclePolicy::new(f))),
+            None => Err(
+                "oracle policy requires trace foresight (a materialized trace; \
+                 streamed --trace input cannot provide it)"
+                    .into(),
+            ),
+        },
+        other => Err(format!("unknown policy '{other}' (known: {})", REGISTRY.join(", "))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regression_slope_recovers_linear_ramp() {
+        // 1, 2, 3, 4, 5 arrivals in successive seconds: slope 1 req/s/s.
+        let mut ts = Vec::new();
+        for sec in 0..5u32 {
+            for k in 0..=sec {
+                ts.push((sec as f64 + k as f64 / 8.0, 0.0));
+            }
+        }
+        let slope = regression_slope(ts.into_iter());
+        assert!((slope - 1.0).abs() < 1e-9, "slope={slope}");
+    }
+
+    #[test]
+    fn regression_slope_flat_and_degenerate() {
+        // Constant rate: slope 0.
+        let flat: Vec<(f64, f64)> = (0..40).map(|i| (i as f64 * 0.25, 0.0)).collect();
+        assert!(regression_slope(flat.into_iter()).abs() < 1e-9);
+        // Empty and single-bucket windows: 0, not NaN.
+        assert_eq!(regression_slope(std::iter::empty()), 0.0);
+        let one = vec![(0.1, 0.0), (0.2, 0.0)];
+        assert_eq!(regression_slope(one.into_iter()), 0.0);
+    }
+
+    #[test]
+    fn shape_gamma_clamps_and_deadbands() {
+        // Inside the deadband: exactly 1 (reactive).
+        assert_eq!(shape_gamma(1.1, 1.0, 0.3), 1.0);
+        assert_eq!(shape_gamma(0.8, 1.0, 0.3), 1.0);
+        // Outside: the raw ratio.
+        assert!((shape_gamma(1.5, 1.0, 0.3) - 1.5).abs() < 1e-12);
+        // Clamped to [0.5, 2.0] however wild the forecast.
+        assert_eq!(shape_gamma(100.0, 1.0, 0.3), 2.0);
+        assert_eq!(shape_gamma(0.0, 1.0, 0.3), 0.5);
+    }
+
+    #[test]
+    fn foresight_counts_future_window_only() {
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request {
+                id: i,
+                arrival: i as f64,
+                prompt_tokens: 10,
+                output_tokens: 5,
+                media: Vec::new().into(),
+                prefix_id: 0,
+                prefix_tokens: 0,
+            })
+            .collect();
+        let f = Foresight::of_trace(&reqs);
+        // (2, 5] → arrivals at 3, 4, 5.
+        assert_eq!(f.future_count(2.0, 3.0, |_| true), 3);
+        // Exclusive of `now` itself.
+        assert_eq!(f.future_count(9.0, 100.0, |_| true), 0);
+        // Routing filter applies.
+        assert_eq!(f.future_count(2.0, 3.0, |_| false), 0);
+    }
+
+    #[test]
+    fn decision_counts_tally_and_json() {
+        let mut c = DecisionCounts::default();
+        c.tally(&ScalingAction::NoOp);
+        c.tally(&ScalingAction::MergeTp { leader: 0, other: 1 });
+        c.tally(&ScalingAction::ScaleDecode { hot: 0, pick: None });
+        c.tally(&ScalingAction::ScaleDecode { hot: 0, pick: Some(1) });
+        assert_eq!(c.noop, 1);
+        assert_eq!(c.merge_tp, 1);
+        assert_eq!(c.scale_decode, 2);
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"scale_decode\":2"), "{j}");
+    }
+
+    #[test]
+    fn registry_resolves_names_and_guards_oracle() {
+        for name in REGISTRY {
+            if name == "oracle" {
+                assert!(by_name(name, None).is_err(), "oracle without foresight must fail");
+                assert!(by_name(name, Some(Foresight::of_trace(&[]))).is_ok());
+            } else {
+                let p = by_name(name, None).unwrap();
+                assert_eq!(p.name(), name);
+            }
+        }
+        assert!(by_name("nope", None).is_err());
+        // Only the reactive policy may run under decode fast-forward.
+        assert!(by_name("reactive", None).unwrap().mirrors_fast_forward());
+        assert!(!by_name("predictive", None).unwrap().mirrors_fast_forward());
+    }
+}

@@ -1,35 +1,48 @@
-//! Intra-group stage elasticity (§3.2): elastic instance allocation
-//! (Eq. 2), elastic auto-scaling of decode (Eq. 3), demand-driven
-//! encoder-pool sizing, and the role-flip cooldown that keeps the two
-//! equations from fighting over the same instance. All decisions are
-//! evaluated through the [`super::gain_cost`] economics; the physical
-//! act of moving sequences lives in [`super::migration`]. Role flips go
-//! through `EmpSystem::set_role` so the cached membership lists stay in
-//! sync.
+//! The scaling *actuator* (§3.2): validates and applies the typed
+//! [`ScalingAction`]s a [`super::policy::ScalingPolicy`] returns.
 //!
-//! **Reservation safety:** chunked non-blocking encoding means a
-//! request can hold a KV reservation on its decode destination across
-//! *several* partial prefill iterations before its sequence lands
-//! there. An instance is therefore only flipped away from decode duty
-//! when its KV pool holds no sequences at all (`kv.num_seqs() == 0`,
-//! not merely an empty `decoding` list) — otherwise a reserved request
-//! would land on a non-decode instance and strand.
+//! Since the policy API split, this module makes no scaling decisions
+//! of its own — the Eq. 2 / Eq. 3 decision bodies live in
+//! [`super::policy`] — but every safety invariant is enforced *here*,
+//! after the decision, so no policy (however buggy or adversarial) can
+//! violate one:
 //!
-//! **Fast-forward coupling:** the trigger conditions of the functions
-//! in this module are mirrored by `EmpSystem::can_fast_forward` (the
-//! decode-coalescing exactness predicate). When changing when a
-//! function here mutates state, update the matching predicate block —
+//! * **Reservation safety:** chunked non-blocking encoding means a
+//!   request can hold a KV reservation on its decode destination across
+//!   *several* partial prefill iterations before its sequence lands
+//!   there. An instance is therefore only flipped away from decode duty
+//!   when its KV pool holds no sequences at all (`kv.num_seqs() == 0`,
+//!   not merely an empty `decoding` list) — otherwise a reserved
+//!   request would land on a non-decode instance and strand.
+//! * **Cooldowns:** the role-flip and TP-reconfig rate limiters are
+//!   checked in [`apply_action`], not in the policies, so no policy can
+//!   thrash roles or re-shard faster than the physical model allows.
+//! * **GPU-partition invariant:** merges/splits only go through
+//!   `EmpSystem::merge_tp` / `split_tp`, on drained equal-degree
+//!   instances within `sched.max_tp`.
+//!
+//! A failed validation rejects the action without any partial state
+//! change (counted in `EmpStats::policy_rejections`); KV migrations are
+//! plan-then-execute ([`super::migration::migrate_seqs`]), so even a
+//! mid-action placement failure leaves the system untouched.
+//!
+//! **Fast-forward coupling:** the trigger conditions of the entry
+//! points here are mirrored by `EmpSystem::can_fast_forward` (the
+//! decode-coalescing exactness predicate) for the reactive policy only
+//! — any other installed policy disables fast-forward wholesale (see
+//! `EmpSystem::policy_mirrors_ff`). When changing when an entry point
+//! mutates state, update the matching predicate block —
 //! `tests/fast_forward_equivalence.rs` will catch a mismatch as a
 //! report divergence.
 
-use crate::model::{DecodeItem, PrefillItem};
+use crate::model::PrefillItem;
 use crate::sim::driver::SimQueue;
 use crate::sim::instance::{GroupId, Phase, StageRole};
 use crate::sim::slab::ReqIx;
 use crate::sim::tracelog::Mark;
 
-use super::gain_cost::{self, DecodeSet, PrefillSet};
 use super::migration;
+use super::policy::{PolicyCtx, ScalingAction, Trigger};
 use super::system::{gidx, EmpEv, EmpSystem};
 
 /// Role-flip rate limiter (see `EmpSystem::last_role_flip`).
@@ -44,15 +57,236 @@ fn tp_reconfig_allowed(sys: &EmpSystem, g: GroupId, now: f64) -> bool {
     now - sys.last_tp_reconfig[gidx(g)] >= sys.tp_cooldown_s
 }
 
+/// Ask the installed policy for a decision. The policy box is taken out
+/// for the call and restored *before* any action is applied, so apply
+/// paths that recurse into scheduling (e.g. an inter-group transfer
+/// re-entering `schedule_group`) still find a policy installed.
+fn decide(sys: &mut EmpSystem, g: GroupId, now: f64, trigger: Trigger<'_>) -> ScalingAction {
+    let Some(mut policy) = sys.policy.take() else {
+        return ScalingAction::NoOp;
+    };
+    let action = policy.decide(&PolicyCtx::new(sys, now), g, trigger);
+    sys.policy = Some(policy);
+    action
+}
+
+/// Validate and apply one [`ScalingAction`]. Returns whether the action
+/// was applied; a rejected action leaves the system untouched and bumps
+/// `EmpStats::policy_rejections`. `q` is required for actions that
+/// schedule events (migrations, re-shards); actions that need it are
+/// rejected when the trigger context cannot provide one.
+pub(crate) fn apply_action(
+    sys: &mut EmpSystem,
+    g: GroupId,
+    action: ScalingAction,
+    now: f64,
+    q: Option<&mut SimQueue<'_, EmpEv>>,
+) -> bool {
+    let applied = match action {
+        ScalingAction::NoOp => return true,
+        ScalingAction::FlipRole { inst, role: StageRole::Decode } => {
+            // Emergency decode bootstrap: only legal while the group
+            // has no decode instance at all, from an idle un-booked
+            // prefill member. Bypasses note_flip on purpose (no
+            // cooldown stamp — the group *must* get decode capacity),
+            // so the trace is marked directly.
+            let valid = sys.role_members(g, StageRole::Decode).is_empty()
+                && sys.role_members(g, StageRole::Prefill).contains(&inst)
+                && sys.instances[inst].idle_at(now)
+                && sys.current[inst].is_none();
+            if valid {
+                sys.set_role(inst, StageRole::Decode);
+                sys.stats.decode_scale_ups += 1;
+                sys.stats.role_flips += 1;
+                sys.tl.mark(
+                    now,
+                    gidx(g) as u32,
+                    inst as u32,
+                    Mark::RoleFlip,
+                    StageRole::Decode as u64,
+                );
+            }
+            valid
+        }
+        ScalingAction::FlipRole { inst, role: StageRole::Prefill } => {
+            // Decode scale-down. Reservation safety: the KV pool must
+            // be completely empty, not merely the `decoding` list.
+            let valid = sys.role_members(g, StageRole::Decode).len() > 1
+                && sys.role_members(g, StageRole::Decode).contains(&inst)
+                && flip_allowed(sys, g, now)
+                && sys.instances[inst].decoding.is_empty()
+                && sys.instances[inst].kv.num_seqs() == 0
+                && sys.current[inst].is_none();
+            if valid {
+                sys.set_role(inst, StageRole::Prefill);
+                sys.stats.decode_scale_downs += 1;
+                note_flip(sys, g, inst, now);
+            }
+            valid
+        }
+        // No policy may flip an instance to Encode/Unified directly;
+        // encoder sizing goes through `ScaleEncoder`.
+        ScalingAction::FlipRole { .. } => false,
+        ScalingAction::ScaleDecode { hot: _, pick: None } => {
+            // Last resort with no in-group candidate: inter-group
+            // reactive scaling (§3.1). Best-effort — reaching the
+            // fallback is the applied action; whether a donor exists is
+            // its own (internally safe) decision.
+            match q {
+                Some(q) if flip_allowed(sys, g, now) => {
+                    migration::reactive_inter_group(sys, g, q);
+                    true
+                }
+                _ => false,
+            }
+        }
+        ScalingAction::ScaleDecode { hot, pick: Some(pick) } => {
+            let valid = flip_allowed(sys, g, now)
+                && sys.role_members(g, StageRole::Decode).contains(&hot)
+                && sys.role_members(g, StageRole::Prefill).contains(&pick)
+                && sys.role_members(g, StageRole::Prefill).len() > 1
+                && sys.instances[pick].idle_at(now)
+                && sys.current[pick].is_none()
+                && sys.instances[pick].tp == sys.base_tp;
+            match q {
+                Some(q) if valid => {
+                    sys.set_role(pick, StageRole::Decode);
+                    sys.stats.decode_scale_ups += 1;
+                    note_flip(sys, g, pick, now);
+                    // Rebalance: move half of hot's sequences to the
+                    // new instance.
+                    let moved: Vec<ReqIx> = {
+                        let d = &sys.instances[hot].decoding;
+                        d.iter().skip(d.len() / 2).copied().collect()
+                    };
+                    if !moved.is_empty() {
+                        migration::migrate_seqs(sys, hot, &[pick], moved, q);
+                    }
+                    true
+                }
+                _ => false,
+            }
+        }
+        ScalingAction::PreemptPrefill { victim } => {
+            // Eq. 2 acquisition. Reservation safety: every sequence in
+            // the victim's pool must be a migratable decoding resident
+            // — a mid-prefill reservation cannot move and would strand
+            // on a prefill-role instance.
+            let valid = sys.role_members(g, StageRole::Decode).len() >= 2
+                && sys.role_members(g, StageRole::Decode).contains(&victim)
+                && flip_allowed(sys, g, now)
+                && sys.instances[victim].idle_at(now)
+                && sys.current[victim].is_none()
+                && sys.instances[victim].kv.num_seqs() == sys.instances[victim].decoding.len();
+            match q {
+                Some(q) if valid => {
+                    let victim_ids: Vec<ReqIx> = sys.instances[victim].decoding.clone();
+                    let survivors: Vec<usize> = sys
+                        .role_members(g, StageRole::Decode)
+                        .iter()
+                        .copied()
+                        .filter(|&d| d != victim)
+                        .collect();
+                    // Plan-then-execute: a placement failure migrates
+                    // nothing and rejects the whole action.
+                    if !victim_ids.is_empty()
+                        && !migration::migrate_seqs(sys, victim, &survivors, victim_ids, q)
+                    {
+                        false
+                    } else {
+                        sys.set_role(victim, StageRole::Prefill);
+                        sys.stats.prefill_preemptions += 1;
+                        note_flip(sys, g, victim, now);
+                        true
+                    }
+                }
+                _ => false,
+            }
+        }
+        ScalingAction::MergeTp { leader, other } => {
+            let drained = |i: usize| {
+                sys.instances[i].idle_at(now)
+                    && sys.current[i].is_none()
+                    && sys.instances[i].decoding.is_empty()
+                    && sys.instances[i].kv.num_seqs() == 0
+            };
+            let valid = sys.sched.max_tp > sys.base_tp
+                && tp_reconfig_allowed(sys, g, now)
+                && leader != other
+                && sys.role_members(g, StageRole::Prefill).contains(&leader)
+                && sys.role_members(g, StageRole::Prefill).contains(&other)
+                && drained(leader)
+                && drained(other)
+                && sys.instances[leader].tp == sys.instances[other].tp
+                && sys.instances[leader].tp * 2 <= sys.sched.max_tp;
+            match q {
+                Some(q) if valid => {
+                    sys.merge_tp(leader, other, q);
+                    true
+                }
+                _ => false,
+            }
+        }
+        ScalingAction::SplitTp { leader, role } => {
+            let revived =
+                sys.instances[leader].absorbed.last().map_or(sys.base_tp, |&(_, n)| n);
+            let valid = tp_reconfig_allowed(sys, g, now)
+                && sys.members(g).contains(&leader)
+                && sys.instances[leader].tp > sys.base_tp
+                && !sys.instances[leader].absorbed.is_empty()
+                && sys.instances[leader].idle_at(now)
+                && sys.current[leader].is_none()
+                && sys.instances[leader].decoding.is_empty()
+                && sys.instances[leader].kv.num_seqs() == 0
+                && matches!(role, StageRole::Prefill | StageRole::Decode)
+                // Wide groups never serve decode (§3.2): the revived
+                // instance may only join decode at base TP.
+                && (role != StageRole::Decode || revived == sys.base_tp);
+            match q {
+                Some(q) if valid => {
+                    sys.split_tp(leader, role, q);
+                    true
+                }
+                _ => false,
+            }
+        }
+        ScalingAction::ScaleEncoder { inst, promote } => {
+            let gate = sys.group_serves_media(g)
+                && sys.opts.non_blocking_encode
+                && sys.members(g).len() >= 3
+                && flip_allowed(sys, g, now);
+            if promote {
+                let valid = gate
+                    && sys.role_members(g, StageRole::Prefill).contains(&inst)
+                    && sys.role_members(g, StageRole::Prefill).len() > 1
+                    && sys.current[inst].is_none()
+                    && sys.instances[inst].decoding.is_empty()
+                    && sys.instances[inst].tp == sys.base_tp;
+                if valid {
+                    sys.set_role(inst, StageRole::Encode);
+                    note_flip(sys, g, inst, now);
+                }
+                valid
+            } else {
+                let valid = gate
+                    && sys.role_members(g, StageRole::Encode).contains(&inst)
+                    && sys.current[inst].is_none();
+                if valid {
+                    sys.set_role(inst, StageRole::Prefill);
+                    note_flip(sys, g, inst, now);
+                }
+                valid
+            }
+        }
+    };
+    if !applied {
+        sys.stats.policy_rejections += 1;
+    }
+    applied
+}
+
 /// Elastic TP reconfiguration — Eq. 3 extended to the parallelism
-/// dimension. Prefill instances of a group *merge* into a wider TP
-/// group when the queue holds long multimodal prefills that DP cannot
-/// split (verdict from [`gain_cost::tp_widen`]), and *split* back into
-/// narrow data-parallel instances when the bottleneck shifts (queue
-/// holds no long prefill, or decode is starved for width). Both
-/// directions reuse PR 4's reservation-safety rule: only instances with
-/// `kv.num_seqs() == 0` may reconfigure, so no in-flight reservation
-/// can strand on a re-sharding slot. No-op unless
+/// dimension (policy trigger [`Trigger::TpReconfig`]). No-op unless
 /// `sched.max_tp > base_tp` — the static-TP path is byte-identical.
 ///
 /// Trigger conditions are mirrored by `EmpSystem::can_fast_forward`;
@@ -65,143 +299,8 @@ pub(crate) fn try_tp_reconfig(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<
     if !tp_reconfig_allowed(sys, g, now) {
         return;
     }
-    // Split first: a drained wide group with nothing long to prefill is
-    // worth more as DP / decode width than as idle TP.
-    if try_tp_split(sys, g, q) {
-        return;
-    }
-    try_tp_merge(sys, g, q);
-}
-
-/// Split the most recently merged TP group of `g` back into two
-/// instances when the long-prefill regime has passed or decode is the
-/// bottleneck. Returns whether a split happened.
-fn try_tp_split(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) -> bool {
-    let now = q.now();
-    // A drained, idle merged leader (any stage role — a shrunken group
-    // may have left it Unified).
-    let Some(leader) = sys.members(g).iter().copied().find(|&m| {
-        sys.instances[m].tp > sys.base_tp
-            && !sys.instances[m].absorbed.is_empty()
-            && sys.instances[m].idle_at(now)
-            && sys.current[m].is_none()
-            && sys.instances[m].decoding.is_empty()
-            && sys.instances[m].kv.num_seqs() == 0
-    }) else {
-        return false;
-    };
-    // Keep the width only while the queue still holds a prefill long
-    // enough to use it (outstanding tokens, matching the merge test)
-    // and decode is not starved.
-    let long_queued = sys.groups[gidx(g)].wait_prefill.iter().take(16).any(|&ix| {
-        sys.requests.get(ix).prefill_remaining() >= sys.sched.chunked_prefill_tokens
-    });
-    let hot_batch = sys
-        .role_members(g, StageRole::Decode)
-        .iter()
-        .map(|&d| sys.instances[d].decoding.len())
-        .max()
-        .unwrap_or(0);
-    let decode_hot = hot_batch >= sys.sched.decode_scale_up_batch;
-    if long_queued && !decode_hot {
-        return false;
-    }
-    // Back toward data parallelism: the revived instance joins decode
-    // when decode is the bottleneck — but only if it comes back at base
-    // TP. A nested merge (2+2→4) revives a still-wide TP-2 group, and
-    // wide groups never serve decode (§3.2); it stays on prefill until
-    // it splits further.
-    let revived_tp = sys.instances[leader].absorbed.last().map_or(sys.base_tp, |&(_, n)| n);
-    let role = if decode_hot && revived_tp == sys.base_tp {
-        StageRole::Decode
-    } else {
-        StageRole::Prefill
-    };
-    sys.split_tp(leader, role, q);
-    true
-}
-
-/// Merge the two lowest-id idle drained prefill instances of equal
-/// degree into one group of twice the degree when the queued prefill
-/// demand justifies the re-shard downtime. Returns whether a merge
-/// happened.
-fn try_tp_merge(sys: &mut EmpSystem, g: GroupId, q: &mut SimQueue<'_, EmpEv>) -> bool {
-    let now = q.now();
-    // Cheap demand precheck (allocation-free — this runs on every
-    // scheduling pass): merging can only win when the queue holds a
-    // prefill a single instance serves slowly, the same bar
-    // `try_tp_split` uses for the reverse direction. Short-prefill
-    // regimes skip the candidate scan and LPT/gain evaluation entirely.
-    let long_queued = sys.groups[gidx(g)].wait_prefill.iter().take(16).any(|&ix| {
-        sys.requests.get(ix).prefill_remaining() >= sys.sched.chunked_prefill_tokens
-    });
-    if !long_queued {
-        return false;
-    }
-    // Idle, drained, un-booked prefill instances, ascending id.
-    let idle: Vec<usize> = sys
-        .role_members(g, StageRole::Prefill)
-        .iter()
-        .copied()
-        .filter(|&p| {
-            sys.instances[p].idle_at(now)
-                && sys.current[p].is_none()
-                && sys.instances[p].decoding.is_empty()
-                && sys.instances[p].kv.num_seqs() == 0
-        })
-        .collect();
-    // First equal-degree pair within the ceiling (lowest ids win, so
-    // repeated merges are deterministic: 1+1→2, later 2+2→4).
-    let mut pair = None;
-    'outer: for i in 0..idle.len() {
-        let t = sys.instances[idle[i]].tp;
-        if t * 2 > sys.sched.max_tp {
-            continue;
-        }
-        for j in (i + 1)..idle.len() {
-            if sys.instances[idle[j]].tp == t {
-                pair = Some((i, j));
-                break 'outer;
-            }
-        }
-    }
-    let Some((a, b)) = pair else { return false };
-    // Demand = the queued requests' *outstanding* prefill tokens — a
-    // video whose later chunks are still encoding counts in full; the
-    // merge serves the long-prefill regime, not one iteration.
-    let items: Vec<PrefillItem> = sys.groups[gidx(g)]
-        .wait_prefill
-        .iter()
-        .take(16)
-        .map(|&ix| {
-            let r = sys.requests.get(ix);
-            PrefillItem {
-                new_tokens: r.prefill_remaining(),
-                cached_tokens: r.cached_prefix + r.prefill_done,
-                vision_tokens: r.vision_tokens,
-            }
-        })
-        .collect();
-    let tps_now: Vec<usize> = idle.iter().map(|&p| sys.instances[p].tp).collect();
-    let mut tps_after = tps_now.clone();
-    tps_after[a] *= 2;
-    tps_after.remove(b);
-    let t = tps_now[a];
-    let reshard = sys.sched.tp_reconfig_s + sys.cost.tp_reshard_time(t, 2 * t);
-    let rp = PrefillSet { items };
-    let gc = gain_cost::tp_widen(
-        &sys.cost,
-        &rp,
-        &tps_now,
-        &tps_after,
-        reshard,
-        sys.sched.preempt_penalty_w,
-    );
-    if !gc.beneficial() {
-        return false;
-    }
-    sys.merge_tp(idle[a], idle[b], q);
-    true
+    let action = decide(sys, g, now, Trigger::TpReconfig);
+    apply_action(sys, g, action, now, Some(q));
 }
 
 /// Record a role flip: cooldown clock, stats counter, and a trace mark
@@ -214,29 +313,9 @@ pub(crate) fn note_flip(sys: &mut EmpSystem, g: GroupId, inst: usize, now: f64) 
     sys.tl.mark(now, gidx(g) as u32, inst as u32, Mark::RoleFlip, role as u64);
 }
 
-/// Build the [`DecodeSet`] for an instance's resident sequences.
-fn decode_set(sys: &EmpSystem, inst: usize) -> DecodeSet {
-    let decoding = &sys.instances[inst].decoding;
-    DecodeSet {
-        items: decoding
-            .iter()
-            .map(|&ix| {
-                let r = sys.requests.get(ix);
-                DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-            })
-            .collect(),
-        remaining_out: decoding
-            .iter()
-            .map(|&ix| {
-                let r = sys.requests.get(ix);
-                r.req.output_tokens.saturating_sub(r.decoded).max(1)
-            })
-            .collect(),
-    }
-}
-
-/// Eq. 2 evaluation: returns a decode instance to borrow for the
-/// prefill iteration, migrating its sequences away first.
+/// Eq. 2 evaluation (policy trigger [`Trigger::PrefillPreemption`]):
+/// returns a decode instance to borrow for the prefill iteration,
+/// migrating its sequences away first.
 pub(crate) fn consider_prefill_preemption(
     sys: &mut EmpSystem,
     g: GroupId,
@@ -245,64 +324,20 @@ pub(crate) fn consider_prefill_preemption(
     now: f64,
     q: &mut SimQueue<'_, EmpEv>,
 ) -> Option<usize> {
-    let decode = sys.role_members(g, StageRole::Decode);
-    if decode.len() < 2 || !flip_allowed(sys, g, now) {
+    if sys.role_members(g, StageRole::Decode).len() < 2 || !flip_allowed(sys, g, now) {
         return None; // keep at least one decode instance
     }
-    // e_max: maximum unused KV slots.
-    let &emax = decode
-        .iter()
-        .max_by_key(|&&d| sys.instances[d].kv_free_tokens())?;
-    if !sys.instances[emax].idle_at(now) || sys.current[emax].is_some() {
-        return None;
+    let action = decide(sys, g, now, Trigger::PrefillPreemption { items, e_p });
+    let applied = apply_action(sys, g, action, now, Some(q));
+    match action {
+        ScalingAction::PreemptPrefill { victim } if applied => Some(victim),
+        _ => None,
     }
-    let victim_ids: Vec<ReqIx> = sys.instances[emax].decoding.clone();
-    // Reservation safety: every sequence in e_max's pool must be a
-    // migratable decoding resident — a mid-prefill reservation cannot
-    // move and would strand on a prefill-role instance.
-    if sys.instances[emax].kv.num_seqs() != victim_ids.len() {
-        return None;
-    }
-    let victim = decode_set(sys, emax);
-    // Merged decode batch on the survivors.
-    let survivors: Vec<usize> = decode.iter().copied().filter(|&d| d != emax).collect();
-    let merged_before: Vec<DecodeItem> = survivors
-        .iter()
-        .flat_map(|&d| sys.instances[d].decoding.iter())
-        .map(|&ix| {
-            let r = sys.requests.get(ix);
-            DecodeItem { context_len: r.context_len(), vision_tokens: r.vision_tokens }
-        })
-        .collect();
-    let mut merged_after = merged_before.clone();
-    merged_after.extend(victim.items.iter().copied());
-    let tp = sys.instances[emax].tp;
-    let rp = PrefillSet { items: items.to_vec() };
-    let gc = gain_cost::prefill_preemption(
-        &sys.cost,
-        &rp,
-        e_p,
-        &victim,
-        &merged_after,
-        &merged_before,
-        tp,
-        sys.sched.preempt_penalty_w,
-    );
-    if !gc.beneficial() {
-        return None;
-    }
-    // Migrate e_max's sequences to the survivor with most room.
-    if !victim_ids.is_empty() && !migration::migrate_seqs(sys, emax, &survivors, victim_ids, q) {
-        return None;
-    }
-    sys.set_role(emax, StageRole::Prefill);
-    sys.stats.prefill_preemptions += 1;
-    note_flip(sys, g, emax, now);
-    Some(emax)
 }
 
-/// Eq. 3 — scale decode up when a bottleneck is detected. `forced`
-/// is set when prefill dispatch was blocked on KV space.
+/// Eq. 3 — scale decode up when a bottleneck is detected (policy
+/// trigger [`Trigger::DecodeScaleUp`]). `forced` is set when prefill
+/// dispatch was blocked on KV space.
 pub(crate) fn try_decode_scale_up(
     sys: &mut EmpSystem,
     g: GroupId,
@@ -310,190 +345,42 @@ pub(crate) fn try_decode_scale_up(
     forced: bool,
 ) {
     let now = q.now();
-    let decode = sys.role_members(g, StageRole::Decode);
-    if decode.is_empty() {
-        // No decode instance at all (can happen transiently): flip an
-        // idle prefill instance immediately — a base-TP one if any
-        // exists; a merged wide group only as a true last resort
-        // (decode scales poorly with TP, and a wide group stuck on
-        // decode cannot split until it drains).
-        let idle = |p: usize| sys.instances[p].idle_at(now) && sys.current[p].is_none();
-        let prefill = sys.role_members(g, StageRole::Prefill);
-        let pick = prefill
-            .iter()
-            .copied()
-            .find(|&p| idle(p) && sys.instances[p].tp == sys.base_tp)
-            .or_else(|| prefill.iter().copied().find(|&p| idle(p)));
-        if let Some(pick) = pick {
-            sys.set_role(pick, StageRole::Decode);
-            sys.stats.decode_scale_ups += 1;
-            // Emergency flip: bypasses note_flip on purpose (no
-            // cooldown stamp), so mark the trace directly.
-            sys.stats.role_flips += 1;
-            sys.tl.mark(now, gidx(g) as u32, pick as u32, Mark::RoleFlip, StageRole::Decode as u64);
-        }
-        return;
-    }
-    // Detect the bottleneck: biggest decode batch beyond threshold,
-    // or KV-forced.
-    let &hot = decode
-        .iter()
-        .max_by_key(|&&d| sys.instances[d].decoding.len())
-        .unwrap();
-    let batch_len = sys.instances[hot].decoding.len();
-    if !forced && batch_len < sys.sched.decode_scale_up_batch {
-        return;
-    }
-    if !flip_allowed(sys, g, now) {
-        return;
-    }
-    // Prefer an idle *base-TP* prefill instance in-group (cheap: no
-    // Eq. 3 cost beyond losing DP width — still evaluated). Merged
-    // wide TP groups are never flipped to decode: decode is weight-read
-    // bound and scales poorly with TP (§3.2), so their GPUs are worth
-    // more as prefill width until they split.
-    let prefill = sys.role_members(g, StageRole::Prefill);
-    let prefill_len = prefill.len();
-    if prefill_len <= 1 {
-        // Last resort: inter-group reactive scaling (§3.1).
-        migration::reactive_inter_group(sys, g, q);
-        return;
-    }
-    let Some(&pick) = prefill.iter().find(|&&p| {
-        sys.instances[p].idle_at(now)
-            && sys.current[p].is_none()
-            && sys.instances[p].tp == sys.base_tp
-    }) else {
-        return;
-    };
-    // Eq. 3 gain/cost.
-    let decode_len = sys.role_members(g, StageRole::Decode).len();
-    let b_d = decode_set(sys, hot);
-    let tp = sys.instances[hot].tp;
-    let avg_lat = sys.cost.decode_step_time(&b_d.items, tp);
-    let rp_rest = PrefillSet {
-        items: sys.groups[gidx(g)]
-            .wait_prefill
-            .iter()
-            .take(16)
-            .map(|&ix| {
-                let r = sys.requests.get(ix);
-                PrefillItem {
-                    new_tokens: r.prefill_admissible(),
-                    cached_tokens: r.cached_prefix + r.prefill_done,
-                    vision_tokens: r.vision_tokens,
-                }
-            })
-            .collect(),
-    };
-    let gc = gain_cost::decode_scale_up(
-        &sys.cost,
-        &b_d,
-        avg_lat,
-        decode_len,
-        &rp_rest,
-        prefill_len,
-        tp,
-        sys.sched.preempt_penalty_w,
-    );
-    if !forced && !gc.beneficial() {
-        return;
-    }
-    sys.set_role(pick, StageRole::Decode);
-    sys.stats.decode_scale_ups += 1;
-    note_flip(sys, g, pick, now);
-    // Rebalance: move half of hot's sequences to the new instance.
-    let moved: Vec<ReqIx> = {
-        let d = &sys.instances[hot].decoding;
-        d.iter().skip(d.len() / 2).copied().collect()
-    };
-    if !moved.is_empty() {
-        migration::migrate_seqs(sys, hot, &[pick], moved, q);
-    }
+    let action = decide(sys, g, now, Trigger::DecodeScaleUp { forced });
+    apply_action(sys, g, action, now, Some(q));
 }
 
-/// Shrink decode to minimum parallelism when idle (§3.2 "we shrink
-/// it to the minimum parallelism"). Only instances whose KV pool is
-/// completely empty may flip — an empty `decoding` list is not enough,
-/// because mid-prefill requests may hold reservations here (module
-/// docs, *Reservation safety*).
+/// Shrink decode to minimum parallelism when idle (§3.2, policy
+/// trigger [`Trigger::DecodeScaleDown`]).
 pub(crate) fn try_decode_scale_down(sys: &mut EmpSystem, g: GroupId, now: f64) {
     if sys.role_members(g, StageRole::Decode).len() <= 1 || !flip_allowed(sys, g, now) {
         return;
     }
-    // Index-walk: the list is only mutated right before `break`.
-    let mut k = 0;
-    loop {
-        let Some(&d) = sys.role_members(g, StageRole::Decode).get(k) else { break };
-        k += 1;
-        if sys.instances[d].decoding.is_empty()
-            && sys.instances[d].kv.num_seqs() == 0
-            && sys.current[d].is_none()
-            && sys.role_members(g, StageRole::Decode).len() > 1
-        {
-            sys.set_role(d, StageRole::Prefill);
-            sys.stats.decode_scale_downs += 1;
-            note_flip(sys, g, d, now);
-            break;
-        }
-    }
+    let action = decide(sys, g, now, Trigger::DecodeScaleDown);
+    apply_action(sys, g, action, now, None);
 }
 
-/// Elastic encoder pool sizing: scale the number of Encode-role
-/// instances with the encode backlog (the encode stage "has higher
-/// computational complexity ... initially allocated more resources",
-/// Fig 4 discussion). Fully demand-driven — zero encoders when the
-/// queue is empty (the instance is worth more as prefill DP width) —
-/// and capped so prefill+decode keep at least one instance each.
+/// Elastic encoder pool sizing (policy trigger
+/// [`Trigger::EncoderScaling`]): scale the number of Encode-role
+/// instances with the encode backlog.
 pub(crate) fn try_encoder_scaling(sys: &mut EmpSystem, g: GroupId, now: f64) {
     if !sys.group_serves_media(g) || !sys.opts.non_blocking_encode {
         return;
     }
-    let n = sys.members(g).len();
-    if n < 3 {
+    if sys.members(g).len() < 3 {
         return;
     }
     if !flip_allowed(sys, g, now) {
         return;
     }
-    let backlog = sys.groups[gidx(g)].wait_encode.len();
-    let current = sys.role_members(g, StageRole::Encode).len();
-    let desired = (backlog.div_ceil(2)).clamp(0, n - 2);
-    match desired.cmp(&current) {
-        std::cmp::Ordering::Greater => {
-            // Promote idle base-TP prefill instances (keep >=1 prefill;
-            // merged wide groups stay on prefill — that is what they
-            // were widened for).
-            let prefill = sys.role_members(g, StageRole::Prefill);
-            if prefill.len() > 1 {
-                if let Some(&pick) = prefill.iter().find(|&&p| {
-                    sys.current[p].is_none()
-                        && sys.instances[p].decoding.is_empty()
-                        && sys.instances[p].tp == sys.base_tp
-                }) {
-                    sys.set_role(pick, StageRole::Encode);
-                    note_flip(sys, g, pick, now);
-                }
-            }
-        }
-        std::cmp::Ordering::Less => {
-            // Demote an idle encoder back to prefill.
-            if let Some(&pick) = sys
-                .role_members(g, StageRole::Encode)
-                .iter()
-                .find(|&&e| sys.current[e].is_none())
-            {
-                sys.set_role(pick, StageRole::Prefill);
-                note_flip(sys, g, pick, now);
-            }
-        }
-        std::cmp::Ordering::Equal => {}
-    }
+    let action = decide(sys, g, now, Trigger::EncoderScaling);
+    apply_action(sys, g, action, now, None);
 }
 
 /// Safety net: encode work queued but no encoder could be created
 /// (e.g. the only prefill instance is busy for a long iteration) —
-/// fall back to blocking encode inside the prefill iteration.
+/// fall back to blocking encode inside the prefill iteration. Not a
+/// policy decision: this is a liveness guarantee, so it stays
+/// unconditional in the actuator.
 pub(crate) fn drain_stuck_encode_queue(sys: &mut EmpSystem, g: GroupId, now: f64) {
     if sys.role_members(g, StageRole::Encode).is_empty()
         && !sys.groups[gidx(g)].wait_encode.is_empty()

@@ -59,7 +59,10 @@ use crate::sim::slab::{IdsPool, ReqIx, RequestSlab};
 use crate::sim::tracelog::{Mark, SpanKind, TraceLog, WindowKind};
 use crate::workload::{Modality, Request};
 
+use crate::util::json::Json;
+
 use super::modality::LoadMonitor;
+use super::policy::{ReactivePolicy, ScalingPolicy};
 use super::{dispatch, migration, scaling};
 
 use std::collections::VecDeque;
@@ -204,6 +207,9 @@ pub struct EmpStats {
     /// Per-group TP reconfiguration timeline (event order), exported
     /// into `Report::tp_timeline` for the Fig 7 allocation bench.
     pub tp_timeline: Vec<TpReconfig>,
+    /// Policy actions the actuator rejected as unsafe or rate-limited
+    /// (`scaling::apply_action` validation failures).
+    pub policy_rejections: u64,
 }
 
 /// Incrementally-maintained membership lists: which instances belong to
@@ -300,6 +306,13 @@ pub struct EmpSystem {
     /// Flight-recorder sink (`Off` unless installed via
     /// [`ServingSystem::set_tracelog`]; every emission is then a no-op).
     pub(crate) tl: TraceLog,
+    /// The installed scaling policy ([`ReactivePolicy`] by default).
+    /// `None` only transiently while `scaling::decide` holds the box
+    /// for a decision call.
+    pub(crate) policy: Option<Box<dyn ScalingPolicy>>,
+    /// Cached `policy.mirrors_fast_forward()` — consulted on the decode
+    /// fast-forward hot path without touching the box.
+    pub(crate) policy_mirrors_ff: bool,
 }
 
 pub(crate) fn gidx(g: GroupId) -> usize {
@@ -413,11 +426,28 @@ impl EmpSystem {
             ids_pool: IdsPool::default(),
             decode_scratch: Vec::new(),
             tl: TraceLog::default(),
+            policy: Some(Box::new(ReactivePolicy::new())),
+            policy_mirrors_ff: true,
         };
         for i in 0..n_groups {
             sys.assign_initial_roles(GroupId(i as u8));
         }
         sys
+    }
+
+    /// Install a scaling policy (replacing the default
+    /// [`ReactivePolicy`]). Any policy whose triggers
+    /// `can_fast_forward` does not mirror disables decode fast-forward
+    /// wholesale — exact step-by-step decode — so its decisions cannot
+    /// be skipped over by coalesced windows.
+    pub fn set_policy(&mut self, p: Box<dyn ScalingPolicy>) {
+        self.policy_mirrors_ff = p.mirrors_fast_forward();
+        self.policy = Some(p);
+    }
+
+    /// Name of the installed policy (for reports / assertions).
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.as_ref().map_or("none", |p| p.name())
     }
 
     // --- group / role helpers ------------------------------------------
@@ -807,6 +837,12 @@ impl EmpSystem {
     /// from the step-by-step path on its traces.
     fn can_fast_forward(&self, inst: usize, now: f64) -> bool {
         if !self.sched.decode_fast_forward {
+            return false;
+        }
+        // The blocks below mirror the *reactive* policy's triggers; a
+        // predictive/oracle policy times its decisions differently, so
+        // coalescing would skip over them — run exact instead.
+        if !self.policy_mirrors_ff {
             return false;
         }
         let me = &self.instances[inst];
@@ -1257,6 +1293,13 @@ impl ServingSystem for EmpSystem {
         rep.tp_reconfigs = self.stats.tp_merges + self.stats.tp_splits;
         rep.tp_busy_gpu_seconds = self.stats.tp_busy_gpu_seconds;
         rep.tp_timeline = self.stats.tp_timeline.clone();
+        if let Some(p) = &self.policy {
+            rep.policy = Some(Json::obj(vec![
+                ("name", Json::str(p.name())),
+                ("decisions", p.report()),
+                ("rejections", Json::u64(self.stats.policy_rejections)),
+            ]));
+        }
     }
 
     fn set_tracelog(&mut self, tl: TraceLog) {

@@ -7,10 +7,12 @@
 //!   simulate   — run a serving-system simulation on the A800 cluster
 //!                model (systems: elasticmm | vllm | vllm-decouple | static;
 //!                datasets: sharegpt | vwi | video-chat | voice-assistant |
-//!                mixed-modal; `--groups 4` = N-way modality groups)
-//!   sweep      — fan a {variant × dataset × load × seed} grid across
-//!                threads (`--threads 0` = all cores; `--smoke` = the
-//!                16-run CI grid; `--check` = bench-regression gate);
+//!                mixed-modal | flash-crowd; `--groups 4` = N-way modality
+//!                groups; `--policy {reactive|predictive|oracle}` = the
+//!                scaling policy, elasticmm only)
+//!   sweep      — fan a {variant × policy × dataset × load × seed} grid
+//!                across threads (`--threads 0` = all cores; `--smoke` =
+//!                the 32-run CI grid; `--check` = bench-regression gate);
 //!                writes BENCH_sweep.json
 //!   gen-trace  — generate a workload trace JSON (`--target-mb N` streams
 //!                a size-targeted trace in constant memory)
@@ -20,6 +22,7 @@
 //!   elasticmm simulate --system elasticmm --model qwen --dataset sharegpt \
 //!       --qps 8 --requests 400 --gpus 8
 //!   elasticmm simulate --system elasticmm --dataset mixed-modal --groups 4
+//!   elasticmm simulate --system elasticmm --dataset flash-crowd --policy predictive
 //!   elasticmm simulate --system elasticmm --trace trace.json --trace-limit 500
 //!   elasticmm sweep --threads 0 --variants emp,emp-tp4,vllm --seeds 3
 //!   elasticmm sweep --smoke --threads 2 --check
@@ -30,7 +33,7 @@
 use elasticmm::baselines::coupled::CoupledVllm;
 use elasticmm::baselines::decoupled::DecoupledStatic;
 use elasticmm::config::{presets, GpuSpec, SchedulerConfig};
-use elasticmm::coordinator::{EmpOptions, EmpSystem};
+use elasticmm::coordinator::{policy, EmpOptions, EmpSystem, Foresight};
 use elasticmm::metrics::Report;
 use elasticmm::model::CostModel;
 use elasticmm::ServingSystem;
@@ -43,8 +46,8 @@ use elasticmm::util::error::Result;
 use elasticmm::util::json::Json;
 use elasticmm::util::rng::Rng;
 use elasticmm::util::stats::render_table;
-use elasticmm::workload::arrival::poisson_arrivals;
-use elasticmm::workload::datasets::DatasetSpec;
+use elasticmm::workload::arrival::{poisson_arrivals, ArrivalProcess, FlashCrowdProcess};
+use elasticmm::workload::datasets::{ArrivalKind, DatasetSpec};
 use elasticmm::workload::trace;
 use elasticmm::workload::Request;
 
@@ -96,8 +99,22 @@ fn make_trace(args: &Args) -> Result<Vec<Request>> {
     let mut rng = Rng::new(args.get_u64("seed", 42));
     let n = args.get_usize("requests", 300);
     let qps = args.get_f64("qps", 6.0);
-    let mut reqs = dataset(args)?.generate(&mut rng, n);
-    poisson_arrivals(&mut rng, &mut reqs, qps);
+    let spec = dataset(args)?;
+    let mut reqs = spec.generate(&mut rng, n);
+    // Arrival shape follows the dataset spec; the Poisson arm keeps the
+    // exact historical rng stream (stamps are byte-identical).
+    match spec.arrival {
+        ArrivalKind::Poisson => poisson_arrivals(&mut rng, &mut reqs, qps),
+        ArrivalKind::FlashCrowd { start_s, duration_s, multiplier } => {
+            let p = FlashCrowdProcess {
+                base_qps: qps,
+                crowd_qps: qps * multiplier,
+                start_s,
+                duration_s,
+            };
+            p.stamp_arrivals(&mut rng, &mut reqs);
+        }
+    }
     Ok(reqs)
 }
 
@@ -174,6 +191,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if max_tp != 1 && system != "elasticmm" {
         elasticmm::bail!("--max-tp only applies to --system elasticmm (got `{system}`)");
     }
+    // `--policy {reactive|predictive|oracle}` selects the scaling
+    // policy driving the coordinator's elastic decisions (DESIGN.md
+    // §14). Only `elasticmm` has the decision surface — reject the
+    // flag elsewhere rather than silently ignoring it.
+    let policy_name = args.get_or("policy", "reactive");
+    if args.get("policy").is_some() && system != "elasticmm" {
+        elasticmm::bail!("--policy only applies to --system elasticmm (got `{system}`)");
+    }
     // Each group keeps >=1 *instance*; an instance spans the model's
     // minimum tensor-parallel degree worth of GPUs, so validate
     // instances, not raw GPUs (a 72B model needs tp>1 per instance).
@@ -218,7 +243,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 2 => EmpOptions::full(gpus),
                 other => elasticmm::bail!("--groups must be 2 or 4, got {other}"),
             };
-            run_input(EmpSystem::new(cost, sched, gpus, opts), &input, tl.clone())?
+            let mut sys = EmpSystem::new(cost, sched, gpus, opts);
+            if policy_name != "reactive" {
+                // The oracle reads the full future arrival schedule, so
+                // it needs a materialized trace; streamed `--trace`
+                // input is consumed request-by-request and cannot
+                // provide foresight.
+                let foresight = match (policy_name.as_str(), &input) {
+                    ("oracle", TraceInput::Slice(t)) => Some(Foresight::of_trace(t)),
+                    ("oracle", TraceInput::Stream { .. }) => elasticmm::bail!(
+                        "--policy oracle cannot be combined with a streamed --trace \
+                         (foresight needs the materialized trace)"
+                    ),
+                    _ => None,
+                };
+                match policy::by_name(&policy_name, foresight) {
+                    Ok(p) => sys.set_policy(p),
+                    Err(e) => elasticmm::bail!("--policy: {e}"),
+                }
+            }
+            run_input(sys, &input, tl.clone())?
         }
         other => elasticmm::bail!(
             "unknown system `{other}`; valid: elasticmm, vllm, vllm-decouple, static"
@@ -240,6 +284,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     println!("system={system} gpus={gpus} requests={}", report.records.len());
+    if let Some(pol) = &report.policy {
+        println!("policy: {pol}");
+    }
     if max_tp > 1 {
         println!(
             "elastic-tp: max_tp={max_tp} tp_reconfigs={} tp_busy_gpu_seconds={:.3}",
@@ -311,6 +358,9 @@ fn sweep_spec(args: &Args) -> Result<SweepSpec> {
     }
     if let Some(list) = args.get("variants") {
         spec.variants = split_list(list);
+    }
+    if let Some(list) = args.get("policies") {
+        spec.policies = split_list(list);
     }
     if let Some(list) = args.get("qps-scales") {
         spec.qps_scales.clear();
@@ -389,6 +439,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             vec![
                 format!("{i}"),
                 r.point.variant.clone(),
+                r.point.policy.clone(),
                 r.point.dataset.clone(),
                 format!("{:.1}", r.point.qps),
                 format!("{:.2}", r.metrics.goodput_rps),
@@ -402,7 +453,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     println!(
         "{}",
         render_table(
-            &["run", "variant", "dataset", "qps", "goodput rps", "slo", "p99 ttft", "gpu-h"],
+            &[
+                "run", "variant", "policy", "dataset", "qps", "goodput rps", "slo",
+                "p99 ttft", "gpu-h",
+            ],
             &rows
         )
     );

@@ -145,6 +145,13 @@ pub struct Report {
     /// then omitted from every serialization — untraced reports stay
     /// byte-identical to pre-recorder output.
     pub observability: Option<Json>,
+    /// Scaling-policy section (policy name, per-action decision counts,
+    /// actuator rejections, forecast-error stats), folded in by the
+    /// coordinator's `annotate_report`. `None` for systems without a
+    /// pluggable policy. Excluded from the canonical digest: decision
+    /// *counts* legitimately differ between fast-forwarded and exact
+    /// stepping even when the request records are byte-identical.
+    pub policy: Option<Json>,
     base: OnceCell<BaseCache>,
     sorted: OnceCell<SortedCache>,
 }
@@ -157,6 +164,7 @@ impl Report {
             tp_busy_gpu_seconds: 0.0,
             tp_timeline: Vec::new(),
             observability: None,
+            policy: None,
             base: OnceCell::new(),
             sorted: OnceCell::new(),
         }
@@ -328,6 +336,9 @@ impl Report {
         if let Some(obs) = &self.observability {
             pairs.push(("observability", obs.clone()));
         }
+        if let Some(p) = &self.policy {
+            pairs.push(("policy", p.clone()));
+        }
         Json::obj(pairs)
     }
 
@@ -335,7 +346,9 @@ impl Report {
     /// simulation-derived state (request records and TP-reconfiguration
     /// stats), with deterministic key order. Deliberately excludes
     /// wall-clock / host-dependent data and the derived summary
-    /// sections (`per_modality`), which may grow new fields without
+    /// sections (`per_modality`) and the `policy` section (decision
+    /// counts differ between fast-forwarded and exact stepping), which
+    /// may grow new fields without
     /// breaking stored equivalence digests. Two runs of the same
     /// configuration must produce byte-identical canonical JSON on any
     /// machine, at any worker count.
@@ -372,6 +385,10 @@ impl Report {
         }
         w.key("per_modality")?;
         w.value(&self.per_modality_json())?;
+        if let Some(p) = &self.policy {
+            w.key("policy")?;
+            w.value(p)?;
+        }
         w.key("records")?;
         w.begin_array()?;
         for r in &self.records {
@@ -764,6 +781,29 @@ mod tests {
         let text = String::from_utf8(buf).unwrap();
         assert_eq!(text, rep.to_json().to_string());
         assert!(text.starts_with("{\"observability\":"));
+    }
+
+    #[test]
+    fn policy_section_is_optional_and_outside_the_canonical_digest() {
+        let mut rep = Report::new(vec![rec(0.0, 1.0, 2.0, 10, 5)]);
+        assert!(rep.to_json().get("policy").is_err());
+        let bare_digest = rep.canonical_digest();
+        rep.policy = Some(Json::obj(vec![("name", Json::str("reactive"))]));
+        assert!(rep.to_json().get("policy").is_ok());
+        // Decision counts vary with fast-forwarding even when records
+        // are byte-identical, so the section must not move the digest.
+        assert!(rep.canonical_json().get("policy").is_err());
+        assert_eq!(rep.canonical_digest(), bare_digest);
+        // Streamed bytes still match the DOM serialization, with the
+        // key in sorted position (after "per_modality").
+        let mut buf = Vec::new();
+        rep.write_json(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, rep.to_json().to_string());
+        let pm = text.find("\"per_modality\"").unwrap();
+        let pol = text.find("\"policy\"").unwrap();
+        let recs = text.find("\"records\"").unwrap();
+        assert!(pm < pol && pol < recs);
     }
 
     #[test]

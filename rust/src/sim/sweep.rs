@@ -6,8 +6,8 @@
 //! hundreds of runs. This module turns the simulator's *per-run*
 //! determinism (the shared [`crate::sim::driver`] event loop) into
 //! *wall-clock* throughput: a [`SweepSpec`] describes a cartesian grid of
-//! {system variant × dataset × arrival scale × seed}, the grid is
-//! pre-expanded into self-contained [`RunPoint`]s, and `std::thread`
+//! {system variant × scaling policy × dataset × arrival scale × seed},
+//! the grid is pre-expanded into self-contained [`RunPoint`]s, and `std::thread`
 //! workers drain an atomic-index work queue, each constructing its own
 //! [`ServingSystem`](crate::sim::driver::ServingSystem) + trace so
 //! nothing is shared mutably.
@@ -21,14 +21,15 @@
 //! `rust/tests/sweep_determinism.rs`).
 //!
 //! **Paired comparisons**: the trace stream id depends only on
-//! `(dataset, qps_scale, seed)` — *not* on the variant — so every system
-//! variant at a grid point replays the identical trace (common random
-//! numbers), which slashes the variance of cross-variant deltas.
+//! `(dataset, qps_scale, seed)` — *not* on the variant or policy — so
+//! every system variant and scaling policy at a grid point replays the
+//! identical trace (common random numbers), which slashes the variance
+//! of cross-variant deltas.
 
 use crate::baselines::coupled::CoupledVllm;
 use crate::baselines::decoupled::DecoupledStatic;
 use crate::config::{presets, GpuSpec, SchedulerConfig};
-use crate::coordinator::{EmpOptions, EmpSystem};
+use crate::coordinator::{policy, EmpOptions, EmpSystem, Foresight};
 use crate::metrics::{pareto_frontier, RunMetrics};
 use crate::model::CostModel;
 use crate::sim::driver::run_trace_with_stats;
@@ -36,6 +37,7 @@ use crate::util::bench::fnv1a64;
 use crate::util::json::Json;
 use crate::util::rng::stream_seed;
 use crate::workload::datasets::DatasetSpec;
+use crate::workload::Request;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -96,6 +98,11 @@ pub struct SweepSpec {
     pub datasets: Vec<String>,
     /// Variant registry names ([`Variant::REGISTRY`]).
     pub variants: Vec<String>,
+    /// Scaling-policy registry names
+    /// ([`crate::coordinator::policy::REGISTRY`]). Applied to the
+    /// EMP-family variants; the vLLM baselines have no policy surface
+    /// and replay identically under every policy value.
+    pub policies: Vec<String>,
     /// Arrival-rate multipliers applied to `base_qps`.
     pub qps_scales: Vec<f64>,
     pub base_qps: f64,
@@ -106,15 +113,18 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
-    /// CI-sized grid: 2 variants × 2 datasets × 2 load levels × 2 seeds
-    /// = 16 runs, small enough to finish in seconds yet wide enough to
-    /// exercise every aggregation path.
+    /// CI-sized grid: 2 variants × 2 policies × 2 datasets × 2 load
+    /// levels × 2 seeds = 32 runs, small enough to finish in seconds
+    /// yet wide enough to exercise every aggregation path (the oracle
+    /// is excluded here and exercised by the full grid and the policy
+    /// shoot-out bench).
     pub fn smoke() -> SweepSpec {
         SweepSpec {
             master_seed: 42,
             seeds: 2,
             datasets: vec!["sharegpt".to_string(), "mixed-modal".to_string()],
             variants: vec!["emp".to_string(), "vllm".to_string()],
+            policies: vec!["reactive".to_string(), "predictive".to_string()],
             qps_scales: vec![1.0, 2.0],
             base_qps: 4.0,
             requests: 120,
@@ -122,19 +132,31 @@ impl SweepSpec {
         }
     }
 
-    /// Default exploration grid: 5 variants × 3 datasets × 3 load levels
-    /// × 3 seeds = 135 runs — a Fig 6/7-style sweep.
+    /// Default exploration grid: 5 variants × 3 policies × 4 datasets ×
+    /// 3 load levels × 3 seeds = 540 runs — a Fig 6/7-style sweep plus
+    /// the policy shoot-out axes (flash-crowd dataset, all three
+    /// scaling policies).
     pub fn default_grid() -> SweepSpec {
         SweepSpec {
             master_seed: 42,
             seeds: 3,
-            datasets: vec!["sharegpt".to_string(), "vwi".to_string(), "mixed-modal".to_string()],
+            datasets: vec![
+                "sharegpt".to_string(),
+                "vwi".to_string(),
+                "mixed-modal".to_string(),
+                "flash-crowd".to_string(),
+            ],
             variants: vec![
                 "emp".to_string(),
                 "emp-tp4".to_string(),
                 "static".to_string(),
                 "vllm".to_string(),
                 "vllm-decouple".to_string(),
+            ],
+            policies: vec![
+                "reactive".to_string(),
+                "predictive".to_string(),
+                "oracle".to_string(),
             ],
             qps_scales: vec![0.5, 1.0, 2.0],
             base_qps: 6.0,
@@ -173,6 +195,17 @@ impl SweepSpec {
                 ));
             }
         }
+        if self.policies.is_empty() {
+            return Err("at least one policy required".to_string());
+        }
+        for p in &self.policies {
+            if !policy::REGISTRY.contains(&p.as_str()) {
+                return Err(format!(
+                    "unknown policy `{p}`; valid: {}",
+                    policy::REGISTRY.join(", ")
+                ));
+            }
+        }
         if self.qps_scales.is_empty() {
             return Err("at least one qps scale required".to_string());
         }
@@ -204,32 +237,48 @@ impl SweepSpec {
         Ok(())
     }
 
-    /// Expand the grid into self-contained run points, variant-major:
-    /// `for variant { for dataset { for qps_scale { for seed } } }`.
+    /// Expand the grid into self-contained run points, variant-major
+    /// then policy-major:
+    /// `for variant { for policy { for dataset { for qps { for seed } } } }`.
     /// The trace stream id is a pure function of
-    /// `(dataset, qps_scale, seed)` so all variants at a grid point
-    /// share one trace (paired comparisons).
+    /// `(dataset, qps_scale, seed)` so all variants and policies at a
+    /// grid point share one trace (paired comparisons).
     pub fn expand(&self) -> Vec<RunPoint> {
         let mut points = Vec::new();
         for variant in &self.variants {
-            for (di, dataset) in self.datasets.iter().enumerate() {
-                for (qi, &scale) in self.qps_scales.iter().enumerate() {
-                    for si in 0..self.seeds {
-                        let stream = (si + self.seeds * (qi + self.qps_scales.len() * di)) as u64;
-                        points.push(RunPoint {
-                            index: points.len(),
-                            variant: variant.clone(),
-                            dataset: dataset.clone(),
-                            qps_scale: scale,
-                            qps: self.base_qps * scale,
-                            seed_stream: stream,
-                            seed: stream_seed(self.master_seed, stream),
-                        });
+            for pol in &self.policies {
+                for (di, dataset) in self.datasets.iter().enumerate() {
+                    for (qi, &scale) in self.qps_scales.iter().enumerate() {
+                        for si in 0..self.seeds {
+                            let stream =
+                                (si + self.seeds * (qi + self.qps_scales.len() * di)) as u64;
+                            points.push(RunPoint {
+                                index: points.len(),
+                                variant: variant.clone(),
+                                policy: pol.clone(),
+                                dataset: dataset.clone(),
+                                qps_scale: scale,
+                                qps: self.base_qps * scale,
+                                seed_stream: stream,
+                                seed: stream_seed(self.master_seed, stream),
+                            });
+                        }
                     }
                 }
             }
         }
         points
+    }
+
+    /// Install the point's scaling policy on an EMP-family system. The
+    /// reactive default is left in place untouched — it *is* the
+    /// pre-policy coordinator logic and keeps fast-forward eligibility.
+    fn install_policy(&self, sys: &mut EmpSystem, point: &RunPoint, trace: &[Request]) {
+        if point.policy == "reactive" {
+            return;
+        }
+        let foresight = (point.policy == "oracle").then(|| Foresight::of_trace(trace));
+        sys.set_policy(policy::by_name(&point.policy, foresight).expect("validated policy"));
     }
 
     /// Execute one grid point to completion on the calling thread.
@@ -249,11 +298,15 @@ impl SweepSpec {
                 } else {
                     EmpOptions::full(self.gpus)
                 };
-                run_trace_with_stats(&mut EmpSystem::new(cost, sched, self.gpus, opts), &trace)
+                let mut sys = EmpSystem::new(cost, sched, self.gpus, opts);
+                self.install_policy(&mut sys, point, &trace);
+                run_trace_with_stats(&mut sys, &trace)
             }
             Variant::StaticSplit => {
                 let opts = EmpOptions::static_split(self.gpus / 2);
-                run_trace_with_stats(&mut EmpSystem::new(cost, sched, self.gpus, opts), &trace)
+                let mut sys = EmpSystem::new(cost, sched, self.gpus, opts);
+                self.install_policy(&mut sys, point, &trace);
+                run_trace_with_stats(&mut sys, &trace)
             }
             Variant::Coupled => {
                 run_trace_with_stats(&mut CoupledVllm::new(cost, sched, self.gpus), &trace)
@@ -327,6 +380,7 @@ impl SweepSpec {
             ("seeds", Json::num(self.seeds as f64)),
             ("datasets", Json::Arr(self.datasets.iter().map(|d| Json::str(d.clone())).collect())),
             ("variants", Json::Arr(self.variants.iter().map(|v| Json::str(v.clone())).collect())),
+            ("policies", Json::Arr(self.policies.iter().map(|p| Json::str(p.clone())).collect())),
             ("qps_scales", Json::Arr(self.qps_scales.iter().map(|&q| Json::num(q)).collect())),
             ("base_qps", Json::num(self.base_qps)),
             ("requests", Json::num(self.requests as f64)),
@@ -355,6 +409,9 @@ pub struct RunPoint {
     /// lands in, and its id in the aggregate JSON.
     pub index: usize,
     pub variant: String,
+    /// Scaling-policy registry name (EMP-family variants only; the
+    /// vLLM baselines ignore it).
+    pub policy: String,
     pub dataset: String,
     pub qps_scale: f64,
     /// `base_qps * qps_scale`, precomputed.
@@ -385,6 +442,7 @@ impl RunResult {
         Json::obj(vec![
             ("index", Json::num(self.point.index as f64)),
             ("variant", Json::str(self.point.variant.clone())),
+            ("policy", Json::str(self.point.policy.clone())),
             ("dataset", Json::str(self.point.dataset.clone())),
             ("qps_scale", Json::num(self.point.qps_scale)),
             ("qps", Json::num(self.point.qps)),
@@ -454,6 +512,7 @@ impl SweepOutcome {
     pub fn marginals(&self) -> Json {
         Json::obj(vec![
             ("variant", self.axis_marginal(|r| r.point.variant.clone())),
+            ("policy", self.axis_marginal(|r| r.point.policy.clone())),
             ("dataset", self.axis_marginal(|r| r.point.dataset.clone())),
             ("qps_scale", self.axis_marginal(|r| r.point.qps_scale.to_string())),
             ("seed_stream", self.axis_marginal(|r| r.point.seed_stream.to_string())),
@@ -546,8 +605,8 @@ mod tests {
     fn smoke_and_default_specs_validate() {
         assert_eq!(SweepSpec::smoke().validate(), Ok(()));
         assert_eq!(SweepSpec::default_grid().validate(), Ok(()));
-        assert_eq!(SweepSpec::smoke().expand().len(), 16);
-        assert_eq!(SweepSpec::default_grid().expand().len(), 135);
+        assert_eq!(SweepSpec::smoke().expand().len(), 32);
+        assert_eq!(SweepSpec::default_grid().expand().len(), 540);
     }
 
     #[test]
@@ -562,6 +621,12 @@ mod tests {
         s.qps_scales = vec![0.0];
         assert!(s.validate().unwrap_err().contains("positive"));
         let mut s = SweepSpec::smoke();
+        s.policies = vec!["clairvoyant".to_string()];
+        assert!(s.validate().unwrap_err().contains("unknown policy"));
+        let mut s = SweepSpec::smoke();
+        s.policies.clear();
+        assert!(s.validate().unwrap_err().contains("policy"));
+        let mut s = SweepSpec::smoke();
         s.seeds = 0;
         assert!(s.validate().is_err());
         let mut s = SweepSpec::smoke();
@@ -571,31 +636,41 @@ mod tests {
     }
 
     #[test]
-    fn expansion_is_variant_major_with_shared_trace_streams() {
+    fn expansion_is_variant_then_policy_major_with_shared_trace_streams() {
         let spec = SweepSpec::smoke();
         let points = spec.expand();
-        assert_eq!(points.len(), 16);
+        assert_eq!(points.len(), 32);
         for (i, p) in points.iter().enumerate() {
             assert_eq!(p.index, i, "slot index mismatch");
             assert_eq!(p.seed, stream_seed(spec.master_seed, p.seed_stream));
             assert!((p.qps - spec.base_qps * p.qps_scale).abs() < 1e-12);
         }
-        // First half is variant 0, second half variant 1 (variant-major),
-        // and the trace stream id is variant-independent: run i and run
-        // i+8 replay the same (dataset, qps, seed) trace.
-        let half = points.len() / 2;
-        for i in 0..half {
+        // Blocks of datasets × qps_scales × seeds = 8 runs per
+        // (variant, policy) pair, variant-major then policy-major, and
+        // the trace stream id is (variant, policy)-independent: run i
+        // and run i + k*8 replay the same (dataset, qps, seed) trace.
+        let block = spec.datasets.len() * spec.qps_scales.len() * spec.seeds;
+        assert_eq!(block, 8);
+        for i in 0..block {
             assert_eq!(points[i].variant, "emp");
-            assert_eq!(points[i + half].variant, "vllm");
-            assert_eq!(points[i].seed_stream, points[i + half].seed_stream);
-            assert_eq!(points[i].seed, points[i + half].seed);
-            assert_eq!(points[i].dataset, points[i + half].dataset);
+            assert_eq!(points[i].policy, "reactive");
+            assert_eq!(points[i + block].variant, "emp");
+            assert_eq!(points[i + block].policy, "predictive");
+            assert_eq!(points[i + 2 * block].variant, "vllm");
+            assert_eq!(points[i + 2 * block].policy, "reactive");
+            assert_eq!(points[i + 3 * block].variant, "vllm");
+            assert_eq!(points[i + 3 * block].policy, "predictive");
+            for k in 1..4 {
+                assert_eq!(points[i].seed_stream, points[i + k * block].seed_stream);
+                assert_eq!(points[i].seed, points[i + k * block].seed);
+                assert_eq!(points[i].dataset, points[i + k * block].dataset);
+            }
         }
         // Distinct (dataset, qps, seed) points get distinct streams.
-        let mut streams: Vec<u64> = points[..half].iter().map(|p| p.seed_stream).collect();
+        let mut streams: Vec<u64> = points[..block].iter().map(|p| p.seed_stream).collect();
         streams.sort_unstable();
         streams.dedup();
-        assert_eq!(streams.len(), half, "stream ids must be unique per trace point");
+        assert_eq!(streams.len(), block, "stream ids must be unique per trace point");
     }
 
     #[test]
@@ -611,6 +686,7 @@ mod tests {
             point: RunPoint {
                 index,
                 variant: variant.to_string(),
+                policy: "reactive".to_string(),
                 dataset: "sharegpt".to_string(),
                 qps_scale: 1.0,
                 qps: 4.0,

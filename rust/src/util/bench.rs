@@ -114,8 +114,12 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// micro-bench's floors (the speedup floor is the timing wheel's "never
 /// slower than the heap it replaced" contract at scale); the
 /// `events_per_sec_off`/`_on` pair is the trace-overhead bench's
-/// floors for the flight recorder's disabled and fully-streaming paths.
-const FLOOR_KEYS: [&str; 12] = [
+/// floors for the flight recorder's disabled and fully-streaming paths;
+/// `goodput_ratio_predictive_vs_reactive` is the policy shoot-out's
+/// quality floor (predictive autoscaling must not lose goodput to
+/// reactive on the flash-crowd workload — a *simulated-outcome* floor,
+/// so it is wall-clock independent and deterministic for a fixed seed).
+const FLOOR_KEYS: [&str; 13] = [
     "events_per_sec_ff_on",
     "events_per_sec_ff_off",
     "speedup",
@@ -128,6 +132,7 @@ const FLOOR_KEYS: [&str; 12] = [
     "wheel_vs_heap_speedup",
     "events_per_sec_off",
     "events_per_sec_on",
+    "goodput_ratio_predictive_vs_reactive",
 ];
 
 /// Per-system keys treated as **ceilings**: the measurement must stay

@@ -149,6 +149,12 @@ impl Ewma {
     pub fn get(&self) -> f64 {
         self.value.unwrap_or(0.0)
     }
+
+    /// Whether the average has seen at least one observation (before
+    /// that, [`Ewma::get`] reports a placeholder 0.0).
+    pub fn is_seeded(&self) -> bool {
+        self.value.is_some()
+    }
 }
 
 /// Render a paper-style table: header row + aligned columns, printed with

@@ -18,13 +18,29 @@
 //! redundancy (repeated images/clips, shared system prompts) is present
 //! for the unified-prefix-cache experiments.
 
+use super::arrival::{ArrivalProcess, FlashCrowdProcess};
 use super::{MediaRef, Request};
 use crate::util::rng::Rng;
+
+/// Arrival-time shape stamped by [`DatasetSpec::sample_trace`]. The
+/// historical presets are all `Poisson`, and that arm reproduces the
+/// old hard-coded path stream-for-stream, so their traces (and the
+/// driver-contract digests pinned on them) are unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Constant-rate Poisson at the trace's target QPS.
+    Poisson,
+    /// `multiplier`× the target QPS inside
+    /// `[start_s, start_s + duration_s)`, target QPS elsewhere.
+    FlashCrowd { start_s: f64, duration_s: f64, multiplier: f64 },
+}
 
 /// Distributional description of a dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
     pub name: String,
+    /// Arrival shape used when sampling complete traces.
+    pub arrival: ArrivalKind,
     /// Fraction of requests that carry >=1 media attachment.
     pub multimodal_fraction: f64,
     /// Text prompt length ~ LogNormal(mu, sigma), clamped.
@@ -85,6 +101,7 @@ impl DatasetSpec {
         let (vf, af, vmu, vsig, vmax, vpool, amu, asig, amax, apool) = Self::no_av();
         DatasetSpec {
             name: "ShareGPT-4o".to_string(),
+            arrival: ArrivalKind::Poisson,
             multimodal_fraction: 0.55,
             prompt_mu: 5.0,
             prompt_sigma: 0.9,
@@ -227,6 +244,22 @@ impl DatasetSpec {
         }
     }
 
+    /// Mixed-modality content under a flash-crowd arrival shape: 5× the
+    /// target QPS for a 20 s window starting at t=10 s. The policy
+    /// shoot-out workload — reactive scaling pays the full queue-build
+    /// cost before responding, a forecaster can move first.
+    pub fn flash_crowd() -> DatasetSpec {
+        DatasetSpec {
+            name: "FlashCrowd".to_string(),
+            arrival: ArrivalKind::FlashCrowd {
+                start_s: 10.0,
+                duration_s: 20.0,
+                multiplier: 5.0,
+            },
+            ..Self::mixed_modality()
+        }
+    }
+
     /// 50/50 mixture used by the Fig 8 ablation ("sampling from a mixed
     /// dataset composed of two distinct sources").
     pub fn mixed() -> (DatasetSpec, DatasetSpec) {
@@ -242,13 +275,14 @@ impl DatasetSpec {
             "video-chat" | "videochat" => Some(Self::video_chat()),
             "voice-assistant" | "voice" => Some(Self::voice_assistant()),
             "mixed-modal" | "mixed" => Some(Self::mixed_modality()),
+            "flash-crowd" | "flashcrowd" => Some(Self::flash_crowd()),
             _ => None,
         }
     }
 
     /// Canonical registry names (one per preset), for error messages.
-    pub const REGISTRY: [&'static str; 5] =
-        ["sharegpt", "vwi", "video-chat", "voice-assistant", "mixed-modal"];
+    pub const REGISTRY: [&'static str; 6] =
+        ["sharegpt", "vwi", "video-chat", "voice-assistant", "mixed-modal", "flash-crowd"];
 
     fn sample_len(rng: &mut Rng, mu: f64, sigma: f64, max: usize) -> usize {
         (rng.lognormal(mu, sigma).round() as usize).clamp(4, max)
@@ -347,12 +381,13 @@ impl DatasetSpec {
         (0..n).map(|i| self.sample(rng, i as u64)).collect()
     }
 
-    /// Generate a complete trace — `n` requests with Poisson arrivals at
-    /// `qps` — from the SplitMix64-forked seed stream
-    /// `(master_seed, stream_id)` (see [`Rng::fork_stream`]). Distinct
-    /// stream ids yield statistically independent traces; the same pair
-    /// reproduces the same trace, so sweep runs can be re-executed
-    /// individually and compared bit-for-bit against a parallel run.
+    /// Generate a complete trace — `n` requests with arrivals at target
+    /// rate `qps` under the spec's [`ArrivalKind`] — from the
+    /// SplitMix64-forked seed stream `(master_seed, stream_id)` (see
+    /// [`Rng::fork_stream`]). Distinct stream ids yield statistically
+    /// independent traces; the same pair reproduces the same trace, so
+    /// sweep runs can be re-executed individually and compared
+    /// bit-for-bit against a parallel run.
     pub fn sample_trace(
         &self,
         master_seed: u64,
@@ -362,7 +397,20 @@ impl DatasetSpec {
     ) -> Vec<Request> {
         let mut rng = Rng::fork_stream(master_seed, stream_id);
         let mut reqs = self.generate(&mut rng, n);
-        super::arrival::poisson_arrivals(&mut rng, &mut reqs, qps);
+        match self.arrival {
+            ArrivalKind::Poisson => {
+                super::arrival::poisson_arrivals(&mut rng, &mut reqs, qps);
+            }
+            ArrivalKind::FlashCrowd { start_s, duration_s, multiplier } => {
+                let p = FlashCrowdProcess {
+                    base_qps: qps,
+                    crowd_qps: qps * multiplier,
+                    start_s,
+                    duration_s,
+                };
+                p.stamp_arrivals(&mut rng, &mut reqs);
+            }
+        }
         reqs
     }
 }
@@ -602,5 +650,27 @@ mod tests {
         }
         assert!(DatasetSpec::by_name("sharegpt4o").is_some(), "alias");
         assert!(DatasetSpec::by_name("not-a-dataset").is_none());
+    }
+
+    #[test]
+    fn flash_crowd_trace_spikes_inside_window() {
+        let spec = DatasetSpec::flash_crowd();
+        assert!(matches!(spec.arrival, ArrivalKind::FlashCrowd { .. }));
+        // Every other preset keeps the Poisson shape (and therefore the
+        // historical trace streams).
+        for name in ["sharegpt", "vwi", "video-chat", "voice-assistant", "mixed-modal"] {
+            assert_eq!(DatasetSpec::by_name(name).unwrap().arrival, ArrivalKind::Poisson);
+        }
+        let trace = spec.sample_trace(42, 0, 2000, 4.0);
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        // 5x multiplier on a 4 qps base: ~20 qps inside [10, 30).
+        let n_in = trace
+            .iter()
+            .filter(|r| (10.0..30.0).contains(&r.arrival))
+            .count() as f64;
+        assert!((n_in / 20.0 - 20.0).abs() < 5.0, "crowd rate {}", n_in / 20.0);
+        // Reproducible: same (seed, stream) pair gives identical stamps.
+        let again = spec.sample_trace(42, 0, 2000, 4.0);
+        assert!(trace.iter().zip(&again).all(|(a, b)| a.arrival == b.arrival));
     }
 }

@@ -19,15 +19,16 @@ use elasticmm::sim::sweep::SweepSpec;
 use elasticmm::util::rng::stream_seed;
 use elasticmm::workload::datasets::DatasetSpec;
 
-/// 2 variants × 1 dataset × 2 load levels × 2 seeds = 8 runs, sized so
-/// the whole file stays in test-suite budget while still spanning
-/// multiple workers, variants, and trace streams.
+/// 2 variants × 1 policy × 1 dataset × 2 load levels × 2 seeds = 8
+/// runs, sized so the whole file stays in test-suite budget while still
+/// spanning multiple workers, variants, and trace streams.
 fn tiny_spec() -> SweepSpec {
     SweepSpec {
         master_seed: 7,
         seeds: 2,
         datasets: vec!["sharegpt".to_string()],
         variants: vec!["emp".to_string(), "vllm".to_string()],
+        policies: vec!["reactive".to_string()],
         qps_scales: vec![1.0, 2.5],
         base_qps: 3.0,
         requests: 60,
